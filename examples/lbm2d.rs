@@ -1,0 +1,282 @@
+//! Lattice-Boltzmann D2Q9 channel flow (paper Fig. 15) with real
+//! numerics: a full BGK collision + pull-streaming step expressed
+//! entirely in DistNumPy ufuncs over distributed arrays, on a four-rank
+//! simulated cluster.
+//!
+//! Collision is aligned elementwise work (no communication); streaming
+//! shifts each population along its lattice velocity, and shifts with a
+//! component along the distributed dimension cross block boundaries —
+//! the halo traffic the latency-hiding scheduler overlaps (the paper
+//! measures 19% → 13% waiting at 16 ranks for this app).
+//!
+//! The demo runs the same flow on one rank and on four ranks and checks
+//! the fields agree, then prints the channel's velocity profile and the
+//! mass drift.
+//!
+//! Run: `cargo run --release --example lbm2d`
+
+use distnumpy::array::ClusterStore;
+use distnumpy::cluster::MachineSpec;
+use distnumpy::exec::NativeBackend;
+use distnumpy::lazy::Context;
+use distnumpy::layout::ViewSpec;
+use distnumpy::metrics::RunReport;
+use distnumpy::sched::{Policy, SchedCfg};
+use distnumpy::ufunc::Kernel;
+
+const NX: u64 = 256; // channel length (distributed dim)
+const NY: u64 = 64; //  channel height
+const BR: u64 = 64; //  block size: one row-block per rank at P=4
+const STEPS: u32 = 20;
+const OMEGA: f32 = 0.8; // BGK relaxation
+
+/// D2Q9 velocity set and weights.
+const C: [(i64, i64); 9] = [
+    (0, 0),
+    (1, 0),
+    (0, 1),
+    (-1, 0),
+    (0, -1),
+    (1, 1),
+    (-1, 1),
+    (-1, -1),
+    (1, -1),
+];
+const W: [f32; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+struct Lbm {
+    f: Vec<ViewSpec>,
+    rho: ViewSpec,
+    ux: ViewSpec,
+    uy: ViewSpec,
+    usq: ViewSpec,
+    cu: ViewSpec,
+    cusq: ViewSpec,
+    poly: ViewSpec,
+    feq: ViewSpec,
+    scratch: ViewSpec,
+    one: ViewSpec,
+}
+
+fn setup(ctx: &mut Context) -> Lbm {
+    let shape = [NX, NY];
+    // Populations at rest-fluid equilibrium (rho = 1, u = 0): f_i = w_i.
+    let f: Vec<ViewSpec> = W
+        .iter()
+        .map(|&w| {
+            let data = vec![w; (NX * NY) as usize];
+            ctx.array(&shape, BR, &data)
+        })
+        .collect();
+    let ones = vec![1.0f32; (NX * NY) as usize];
+    Lbm {
+        f,
+        rho: ctx.zeros(&shape, BR),
+        ux: ctx.zeros(&shape, BR),
+        uy: ctx.zeros(&shape, BR),
+        usq: ctx.zeros(&shape, BR),
+        cu: ctx.zeros(&shape, BR),
+        cusq: ctx.zeros(&shape, BR),
+        poly: ctx.zeros(&shape, BR),
+        feq: ctx.zeros(&shape, BR),
+        scratch: ctx.zeros(&shape, BR),
+        one: ctx.array(&shape, BR, &ones),
+    }
+}
+
+/// cu = c_x*ux + c_y*uy for one direction, via copy/scale/axpy chains.
+fn dot_cu(ctx: &mut Context, l: &Lbm, cx: i64, cy: i64) {
+    match (cx, cy) {
+        (1, 0) => ctx.copy(&l.cu, &l.ux),
+        (0, 1) => ctx.copy(&l.cu, &l.uy),
+        (-1, 0) => ctx.ufunc(Kernel::Scale(-1.0), &l.cu, &[&l.ux]),
+        (0, -1) => ctx.ufunc(Kernel::Scale(-1.0), &l.cu, &[&l.uy]),
+        (sx, sy) => {
+            // Diagonal: cu = sx*ux + sy*uy.
+            ctx.ufunc(Kernel::Scale(sx as f32), &l.cu, &[&l.ux]);
+            ctx.ufunc(Kernel::Axpy(sy as f32), &l.cu, &[&l.cu, &l.uy]);
+        }
+    }
+}
+
+/// One BGK collision: moments, equilibrium, relaxation. All aligned
+/// elementwise ufuncs — compute-only, exactly the paper's collision mix.
+fn collide(ctx: &mut Context, l: &Lbm) {
+    // rho = sum_i f_i
+    ctx.copy(&l.rho, &l.f[0]);
+    for fi in &l.f[1..] {
+        ctx.add(&l.rho, &l.rho, fi);
+    }
+    // Momentum: ux = (f1 + f5 + f8 - f3 - f6 - f7) / rho.
+    ctx.add(&l.ux, &l.f[1], &l.f[5]);
+    ctx.add(&l.ux, &l.ux, &l.f[8]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[3]]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[6]]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[7]]);
+    ctx.ufunc(Kernel::Div, &l.ux, &[&l.ux, &l.rho]);
+    // uy = (f2 + f5 + f6 - f4 - f7 - f8) / rho.
+    ctx.add(&l.uy, &l.f[2], &l.f[5]);
+    ctx.add(&l.uy, &l.uy, &l.f[6]);
+    ctx.ufunc(Kernel::Sub, &l.uy, &[&l.uy, &l.f[4]]);
+    ctx.ufunc(Kernel::Sub, &l.uy, &[&l.uy, &l.f[7]]);
+    ctx.ufunc(Kernel::Sub, &l.uy, &[&l.uy, &l.f[8]]);
+    ctx.ufunc(Kernel::Div, &l.uy, &[&l.uy, &l.rho]);
+    // usq = ux^2 + uy^2.
+    ctx.ufunc(Kernel::Mul, &l.usq, &[&l.ux, &l.ux]);
+    ctx.ufunc(Kernel::Mul, &l.scratch, &[&l.uy, &l.uy]);
+    ctx.add(&l.usq, &l.usq, &l.scratch);
+
+    for (i, (&(cx, cy), &w)) in C.iter().zip(&W).enumerate() {
+        // poly = 1 + 3cu + 4.5cu^2 - 1.5usq  (cu = 0 for the rest dir).
+        if cx == 0 && cy == 0 {
+            ctx.ufunc(Kernel::Axpy(-1.5), &l.poly, &[&l.one, &l.usq]);
+        } else {
+            dot_cu(ctx, l, cx, cy);
+            ctx.ufunc(Kernel::Mul, &l.cusq, &[&l.cu, &l.cu]);
+            ctx.ufunc(Kernel::Axpy(3.0), &l.poly, &[&l.one, &l.cu]);
+            ctx.ufunc(Kernel::Axpy(4.5), &l.poly, &[&l.poly, &l.cusq]);
+            ctx.ufunc(Kernel::Axpy(-1.5), &l.poly, &[&l.poly, &l.usq]);
+        }
+        // feq = w * rho * poly;  f_i += omega * (feq - f_i).
+        ctx.ufunc(Kernel::Mul, &l.feq, &[&l.rho, &l.poly]);
+        ctx.ufunc(Kernel::Scale(w), &l.feq, &[&l.feq]);
+        ctx.ufunc(Kernel::Sub, &l.scratch, &[&l.feq, &l.f[i]]);
+        ctx.ufunc(Kernel::Axpy(OMEGA), &l.f[i], &[&l.f[i], &l.scratch]);
+    }
+}
+
+/// Pull streaming: interior sites take the value their velocity carries
+/// in. Shifts with c_x != 0 cross row-blocks => halo communication.
+fn stream(ctx: &mut Context, l: &Lbm) {
+    for (i, &(cx, cy)) in C.iter().enumerate().skip(1) {
+        ctx.copy(&l.scratch, &l.f[i]);
+        let rr = |d: i64| match d {
+            1 => (0, NX - 2),
+            -1 => (2, NX),
+            _ => (1, NX - 1),
+        };
+        let cc = |d: i64| match d {
+            1 => (0, NY - 2),
+            -1 => (2, NY),
+            _ => (1, NY - 1),
+        };
+        let dst = l.f[i].slice(&[(1, NX - 1), (1, NY - 1)]);
+        let src = l.scratch.slice(&[rr(cx), cc(cy)]);
+        ctx.copy(&dst, &src);
+    }
+}
+
+struct FlowRun {
+    rho: Vec<f32>,
+    ux: Vec<f32>,
+    mass: Vec<f64>,
+    report: RunReport,
+}
+
+fn run(p: u32, policy: Policy) -> FlowRun {
+    let cfg = SchedCfg::new(MachineSpec::paper(), p);
+    let backend = NativeBackend::new(ClusterStore::new(p));
+    let mut ctx = Context::new(cfg, policy, Box::new(backend));
+    let l = setup(&mut ctx);
+
+    let mut mass = Vec::new();
+    for _ in 0..STEPS {
+        // Inflow forcing: accelerate the east-moving population in the
+        // inlet band (a crude body force driving the channel).
+        let inlet = l.f[1].slice(&[(0, NX), (0, 2)]);
+        ctx.ufunc(Kernel::Scale(1.05), &inlet, &[&inlet]);
+        collide(&mut ctx, &l);
+        stream(&mut ctx, &l);
+        // Mass monitor: read -> flush trigger 1, once per step.
+        mass.push(ctx.sum(&l.rho));
+    }
+    ctx.flush();
+    collide_moments_only(&mut ctx, &l);
+    let rho = ctx.gather(l.rho.base).expect("data backend");
+    let ux = ctx.gather(l.ux.base).expect("data backend");
+    let report = ctx.finish().expect("no deadlock");
+    FlowRun {
+        rho,
+        ux,
+        mass,
+        report,
+    }
+}
+
+/// Refresh the rho/ux fields from the final populations (post-stream).
+fn collide_moments_only(ctx: &mut Context, l: &Lbm) {
+    ctx.copy(&l.rho, &l.f[0]);
+    for fi in &l.f[1..] {
+        ctx.add(&l.rho, &l.rho, fi);
+    }
+    ctx.add(&l.ux, &l.f[1], &l.f[5]);
+    ctx.add(&l.ux, &l.ux, &l.f[8]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[3]]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[6]]);
+    ctx.ufunc(Kernel::Sub, &l.ux, &[&l.ux, &l.f[7]]);
+    ctx.ufunc(Kernel::Div, &l.ux, &[&l.ux, &l.rho]);
+    ctx.flush();
+}
+
+fn main() {
+    println!(
+        "LBM D2Q9 channel flow — {NX}x{NY} lattice, {STEPS} steps, omega={OMEGA}\n"
+    );
+
+    let four = run(4, Policy::LatencyHiding);
+    let one = run(1, Policy::LatencyHiding);
+
+    // Distributed result must match the single-rank run.
+    let err = four
+        .ux
+        .iter()
+        .zip(&one.ux)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |ux(P=4) - ux(P=1)| = {err:.2e}");
+    assert!(err < 1e-5, "distribution must not change the physics");
+
+    // Mass drift: collision conserves mass exactly; only the open
+    // boundary and inflow forcing move it.
+    let drift = (four.mass.last().unwrap() / four.mass[0] - 1.0) * 100.0;
+    println!(
+        "mass: {:.1} -> {:.1} ({drift:+.2}% over {STEPS} steps)",
+        four.mass[0],
+        four.mass.last().unwrap()
+    );
+    assert!(drift.abs() < 10.0, "mass must stay near-conserved");
+
+    // Velocity profile across the channel at mid-length.
+    let mid = (NX / 2) as usize;
+    let prof: Vec<f32> = (0..NY as usize)
+        .map(|c| four.ux[mid * NY as usize + c])
+        .collect();
+    let vmax = prof.iter().cloned().fold(0.0f32, f32::max).max(1e-9);
+    println!("\nux profile at x = {mid} (each * = flow speed):");
+    for c in (0..NY as usize).step_by(8) {
+        let bar = "*".repeat(((prof[c] / vmax) * 40.0).max(0.0) as usize);
+        println!("  y={c:3} {:>9.5} {bar}", prof[c]);
+    }
+    assert!(vmax > 0.0, "the inflow forcing must drive a flow");
+
+    println!(
+        "\nscheduling: {} ops, {} transfers, wait {:.1}% (P=4, latency-hiding)",
+        four.report.ops_executed,
+        four.report.n_comm,
+        four.report.wait_pct()
+    );
+    println!(
+        "average density {:.4} (initial 1.0)",
+        four.rho.iter().sum::<f32>() / four.rho.len() as f32
+    );
+}

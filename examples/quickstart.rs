@@ -1,0 +1,93 @@
+//! Quickstart: the paper's Figure 3 three-point stencil, executed with
+//! real numerics on a two-rank simulated cluster.
+//!
+//! ```text
+//! M = numpy.array([1,2,3,4,5,6], dist=True)
+//! N = numpy.empty((6), dist=True)
+//! A = M[2:]
+//! B = M[0:4]
+//! C = N[1:5]
+//! C = A + B
+//! ```
+//!
+//! Demonstrates the core ideas end to end:
+//! * lazy recording — `C = A + B` executes nothing until a flush;
+//! * view-blocks vs sub-view-blocks — `A`/`B` are non-aligned views, so
+//!   the single ufunc fragments into local and remote pieces;
+//! * latency-hiding vs blocking — same program, same numerics, less
+//!   waiting.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use distnumpy::array::ClusterStore;
+use distnumpy::cluster::MachineSpec;
+use distnumpy::exec::NativeBackend;
+use distnumpy::lazy::Context;
+use distnumpy::sched::{Policy, SchedCfg};
+
+fn run(policy: Policy) -> (Vec<f32>, distnumpy::metrics::RunReport) {
+    const P: u32 = 2;
+    let cfg = SchedCfg::new(MachineSpec::paper(), P);
+    let backend = NativeBackend::new(ClusterStore::new(P));
+    let mut ctx = Context::new(cfg, policy, Box::new(backend));
+
+    // Distributed arrays, block size 3: one base-block per rank (Fig. 4).
+    let m = ctx.array(&[6], 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let n = ctx.zeros(&[6], 3);
+
+    // Three non-aligned array-views of the two bases.
+    let a = m.slice(&[(2, 6)]); // M[2:]
+    let b = m.slice(&[(0, 4)]); // M[0:4]
+    let c = n.slice(&[(1, 5)]); // N[1:5]
+
+    // Record C = A + B. Nothing executes yet (lazy evaluation, §5.6).
+    ctx.add(&c, &a, &b);
+    let recorded = ctx.builder.n_recorded();
+    println!(
+        "  recorded {recorded} fragment operations, flushes so far: {}",
+        ctx.flushes
+    );
+
+    // Trigger 3: end of program.
+    ctx.flush();
+    let result = ctx.gather(n.base).expect("native backend materializes data");
+    let report = ctx.finish().expect("no deadlock under this policy");
+    (result, report)
+}
+
+fn main() {
+    println!("DistNumPy quickstart — 3-point stencil of paper Fig. 3\n");
+
+    println!("latency-hiding schedule:");
+    let (lh_result, lh) = run(Policy::LatencyHiding);
+    println!("blocking schedule:");
+    let (bl_result, bl) = run(Policy::Blocking);
+
+    println!("\n  N = {lh_result:?}");
+    assert_eq!(lh_result, vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0]);
+    assert_eq!(lh_result, bl_result, "numerics are schedule-independent");
+
+    println!("\n  {:22} {:>14} {:>14}", "", "latency-hiding", "blocking");
+    println!(
+        "  {:22} {:>14} {:>14}",
+        "operations", lh.ops_executed, bl.ops_executed
+    );
+    println!("  {:22} {:>14} {:>14}", "transfers", lh.n_comm, bl.n_comm);
+    println!(
+        "  {:22} {:>14} {:>14}",
+        "bytes moved", lh.bytes_inter, bl.bytes_inter
+    );
+    println!(
+        "  {:22} {:>13.1}µs {:>13.1}µs",
+        "virtual makespan",
+        lh.makespan * 1e6,
+        bl.makespan * 1e6
+    );
+    println!(
+        "  {:22} {:>13.1}% {:>13.1}%",
+        "time waiting on comm",
+        lh.wait_pct(),
+        bl.wait_pct()
+    );
+    println!("\nSame program, same result — communication hidden behind compute.");
+}

@@ -1,0 +1,53 @@
+//! Mini strong-scaling report: the paper's headline comparison (Figs. 17
+//! & 18 plus the Section 6.1.1 waiting-time table) on a reduced problem,
+//! regenerated in a few seconds of wall-clock on the simulated Table-1
+//! cluster.
+//!
+//! For the full sweeps behind every figure, run `cargo bench` (see
+//! `rust/benches/figures.rs`) or the CLI:
+//! `cargo run --release -- sweep --app jacobi_stencil`.
+//!
+//! Run: `cargo run --release --example scaling_report`
+
+use distnumpy::apps::{AppId, AppParams};
+use distnumpy::cluster::MachineSpec;
+use distnumpy::harness;
+
+fn main() {
+    let spec = MachineSpec::paper();
+    let params = AppParams {
+        scale: 0.5,
+        iters: 5,
+    };
+    let ps = [1, 2, 4, 8, 16, 32];
+
+    println!("Strong scaling on the simulated Table-1 cluster (scale=0.5, 5 iters)\n");
+    for app in [AppId::Jacobi, AppId::JacobiStencil] {
+        let fig = harness::figure(app, &ps, &spec, &params);
+        println!("{}", fig.render_table());
+        let p16 = fig.points.iter().find(|pt| pt.p == 16).unwrap();
+        assert!(
+            p16.lh.speedup > p16.blocking.speedup,
+            "{}: latency-hiding must win at 16 ranks",
+            app.name()
+        );
+    }
+
+    println!("Waiting-time table at 16 ranks (paper Section 6.1.1):\n");
+    println!(
+        "  {:16} {:>10} {:>16} {:>8}",
+        "app", "blocking", "latency-hiding", "factor"
+    );
+    for (app, blk, lh) in harness::wait_table(16, &spec, &params) {
+        println!(
+            "  {:16} {:>9.1}% {:>15.1}% {:>7.1}x",
+            app.name(),
+            blk,
+            lh,
+            blk / lh.max(0.1)
+        );
+    }
+    println!(
+        "\npaper @16: lbm2d 19%->13%, lbm3d 16%->9%, jacobi 54%->2%, jacobi_stencil 62%->9%"
+    );
+}

@@ -1,0 +1,83 @@
+# AOT: lower every L2 graph to HLO *text* under artifacts/.
+#
+# HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with
+# 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+# rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids, so
+# text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+#
+# Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+# A manifest.json records name -> input/output shapes so the Rust
+# runtime can validate its literals against the artifact contract.
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple/to_tuple1 uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(name: str, out_dir: str) -> dict:
+    fn, args = model.ARTIFACTS[name]
+    lowered = model.lower(name)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    del fn
+    out_tree = lowered.out_info if hasattr(lowered, "out_info") else ()
+    import jax
+    out_info = [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in jax.tree_util.tree_leaves(out_tree)
+    ]
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"shape": list(a.shape), "dtype": a.dtype.name} for a in args],
+        "outputs": out_info,
+        "bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower L2 graphs to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    # Back-compat single-file mode used by early Makefile drafts.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = args.only or list(model.ARTIFACTS)
+    manifest = []
+    for name in names:
+        info = emit(name, out_dir)
+        manifest.append(info)
+        print(f"  {name:16s} -> {info['file']} ({info['bytes']} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Marker consumed by the Makefile's up-to-date check.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(i["file"] for i in manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

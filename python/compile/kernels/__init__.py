@@ -1,0 +1,14 @@
+# L1: Pallas kernels for DistNumPy's block-level compute hot-spots.
+# One module per kernel family; `ref` holds the pure-jnp oracles.
+
+from . import (  # noqa: F401
+    black_scholes,
+    fractal,
+    knn,
+    lbm,
+    matmul_block,
+    nbody,
+    ref,
+    stencil,
+    ufunc_binary,
+)

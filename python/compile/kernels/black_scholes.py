@@ -1,0 +1,58 @@
+# L1 Pallas kernel: Black-Scholes European option pricing (paper Fig. 9).
+#
+# Embarrassingly parallel per element; the paper uses it to show that
+# latency-hiding neither helps nor hurts when communication is absent.
+# One fused kernel evaluates the full closed form in a single VMEM pass
+# (the NumPy original materializes ~10 temporaries).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT2 = 1.4142135623730951
+
+
+def _erf(x):
+    # Abramowitz & Stegun 7.1.26 (|error| <= 1.5e-7), spelled in
+    # primitive ops: recent XLA lowers `jax.lax.erf` to a first-class
+    # `erf` HLO opcode that the xla_extension-0.5.1 text parser (the
+    # Rust runtime's loader) does not know. Mirrors the Rust native
+    # kernel (rust/src/exec/kernels.rs::erf) formula exactly.
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = (
+        (((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736
+    ) * t + 0.254829592
+    return sign * (1.0 - poly * t * jnp.exp(-ax * ax))
+
+
+def _cnd(x):
+    return 0.5 * (1.0 + _erf(x / _SQRT2))
+
+
+def _bs_kernel(r, v, call, s_ref, x_ref, t_ref, o_ref):
+    s = s_ref[...]
+    x = x_ref[...]
+    t = t_ref[...]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (r + v * v / 2.0) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    disc = jnp.exp(-r * t)
+    if call:
+        o_ref[...] = s * _cnd(d1) - x * disc * _cnd(d2)
+    else:
+        o_ref[...] = x * disc * _cnd(-d2) - s * _cnd(-d1)
+
+
+def black_scholes(s, x, t, r, v, call=True):
+    """Price a block of European options. s, x, t: same-shape f32 arrays;
+    r, v: python scalars baked into the kernel (they are constants in the
+    paper's benchmark)."""
+    return pl.pallas_call(
+        functools.partial(_bs_kernel, float(r), float(v), bool(call)),
+        out_shape=jax.ShapeDtypeStruct(s.shape, s.dtype),
+        interpret=True,
+    )(s, x, t)

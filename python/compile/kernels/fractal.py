@@ -1,0 +1,38 @@
+# L1 Pallas kernel: Mandelbrot escape-time block (paper Fig. 11).
+#
+# Embarrassingly parallel; included because the paper uses it as the
+# no-communication control. The iteration loop is fixed-trip (the NumPy
+# tutorial form) so it lowers to a static HLO graph.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fractal_kernel(max_iter, cre_ref, cim_ref, o_ref):
+    cre = cre_ref[...]
+    cim = cim_ref[...]
+    zre = jnp.zeros_like(cre)
+    zim = jnp.zeros_like(cim)
+    count = jnp.zeros(cre.shape, dtype=jnp.float32)
+    for _ in range(max_iter):
+        zre2 = zre * zre
+        zim2 = zim * zim
+        alive = (zre2 + zim2) <= 4.0
+        count = count + alive.astype(jnp.float32)
+        new_zim = 2.0 * zre * zim + cim
+        new_zre = zre2 - zim2 + cre
+        zre = jnp.where(alive, new_zre, zre)
+        zim = jnp.where(alive, new_zim, zim)
+    o_ref[...] = count
+
+
+def fractal_iters(cre, cim, max_iter=32):
+    """Iteration counts for one block of the complex plane."""
+    return pl.pallas_call(
+        functools.partial(_fractal_kernel, int(max_iter)),
+        out_shape=jax.ShapeDtypeStruct(cre.shape, jnp.float32),
+        interpret=True,
+    )(cre, cim)

@@ -1,0 +1,29 @@
+# L1 Pallas kernel: kNN squared-distance tile (paper Fig. 14).
+#
+# The naive kNN computes all query-point distances; the coordinator
+# schedules one (n queries) x (m points) tile per sub-view-block pair
+# and keeps a running top-k on the Rust side.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _knn_kernel(q_ref, p_ref, o_ref):
+    q = q_ref[...]
+    p = p_ref[...]
+    qq = (q * q).sum(axis=1)[:, None]
+    pp = (p * p).sum(axis=1)[None, :]
+    # The q @ p.T contraction is the MXU-friendly part on a real TPU.
+    o_ref[...] = qq + pp - 2.0 * jnp.dot(q, p.T)
+
+
+def knn_dist2(q, p):
+    """Squared distances between q:(n,d) and p:(m,d) -> (n,m)."""
+    n = q.shape[0]
+    m = p.shape[0]
+    return pl.pallas_call(
+        _knn_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), q.dtype),
+        interpret=True,
+    )(q, p)

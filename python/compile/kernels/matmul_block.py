@@ -1,0 +1,46 @@
+# L1 Pallas kernel: SUMMA rank-k panel update (paper ref [26]).
+#
+# N-body (and the Jacobi row form) reduce to distributed matmul via
+# SUMMA; each step broadcasts an A column-panel and a B row-panel and
+# every rank performs C += A_panel @ B_panel locally. This kernel is
+# that local update, tiled so an MXU-shaped (128-multiple) block streams
+# through VMEM with the C tile kept resident.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MXU_TILE = 128
+
+
+def _matmul_kernel(c_ref, a_ref, b_ref, o_ref):
+    # bf16 inputs would target the MXU directly on TPU; the benchmarks use
+    # f32 to match the paper's numerics.
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul_block(c, a_panel, b_panel):
+    """C += A_panel @ B_panel. c:(n,m), a_panel:(n,k), b_panel:(k,m)."""
+    n, m = c.shape
+    k = a_panel.shape[1]
+    if n % MXU_TILE == 0 and m % MXU_TILE == 0:
+        # Grid over C tiles; the full k-panel streams per tile.
+        grid = (n // MXU_TILE, m // MXU_TILE)
+        return pl.pallas_call(
+            _matmul_kernel,
+            out_shape=jax.ShapeDtypeStruct((n, m), c.dtype),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((MXU_TILE, MXU_TILE), lambda i, j: (i, j)),
+                pl.BlockSpec((MXU_TILE, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, MXU_TILE), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((MXU_TILE, MXU_TILE), lambda i, j: (i, j)),
+            interpret=True,
+        )(c, a_panel, b_panel)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), c.dtype),
+        interpret=True,
+    )(c, a_panel, b_panel)

@@ -1,0 +1,47 @@
+# L1 Pallas kernel: N-body force tile (paper Fig. 13).
+#
+# The paper's N-body is dominated by matrix-multiply-like all-pairs
+# interactions executed through SUMMA. This kernel computes one
+# (n receivers) x (m sources) tile of the interaction matrix and reduces
+# over sources — the block task the coordinator schedules per
+# sub-view-block pair.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nbody_kernel(eps, xi_ref, yi_ref, zi_ref, mi_ref,
+                  xj_ref, yj_ref, zj_ref, mj_ref,
+                  fx_ref, fy_ref, fz_ref):
+    xi = xi_ref[...]
+    yi = yi_ref[...]
+    zi = zi_ref[...]
+    mi = mi_ref[...]
+    xj = xj_ref[...]
+    yj = yj_ref[...]
+    zj = zj_ref[...]
+    mj = mj_ref[...]
+    dx = xj[None, :] - xi[:, None]
+    dy = yj[None, :] - yi[:, None]
+    dz = zj[None, :] - zi[:, None]
+    r2 = dx * dx + dy * dy + dz * dz + eps
+    inv_r3 = r2 ** (-1.5)
+    w = mi[:, None] * mj[None, :] * inv_r3
+    fx_ref[...] = (w * dx).sum(axis=1)
+    fy_ref[...] = (w * dy).sum(axis=1)
+    fz_ref[...] = (w * dz).sum(axis=1)
+
+
+def nbody_forces(xi, yi, zi, mi, xj, yj, zj, mj, eps=1e-9):
+    """Tile of pairwise gravitational forces; returns (fx, fy, fz) over
+    the receiver index."""
+    n = xi.shape[0]
+    out = jax.ShapeDtypeStruct((n,), xi.dtype)
+    return pl.pallas_call(
+        functools.partial(_nbody_kernel, float(eps)),
+        out_shape=(out, out, out),
+        interpret=True,
+    )(xi, yi, zi, mi, xj, yj, zj, mj)

@@ -1,0 +1,174 @@
+# Pure-jnp correctness oracles for every Pallas kernel (L1).
+#
+# These are the ground truth the pytest suite compares the Pallas
+# kernels against, and they double as the readable spec of each
+# block-level computation the Rust coordinator schedules.
+#
+# All functions operate on a single *block* (possibly with halo), which
+# is the unit DistNumPy's runtime moves between ranks (a sub-view-block
+# in the paper's terminology, Section 5.2).
+
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+
+# ---------------------------------------------------------------------------
+# Elementwise ufuncs (paper Section 5.3)
+# ---------------------------------------------------------------------------
+
+def ufunc_add(a, b):
+    """out[i] = a[i] + b[i] — the canonical binary ufunc."""
+    return a + b
+
+
+def ufunc_sub(a, b):
+    return a - b
+
+
+def ufunc_mul(a, b):
+    return a * b
+
+
+def ufunc_axpy(a, b, alpha):
+    """out = a + alpha * b — the fused update used by the Jacobi apps."""
+    return a + alpha * b
+
+
+# ---------------------------------------------------------------------------
+# Stencils
+# ---------------------------------------------------------------------------
+
+def stencil3(a, b):
+    """The paper's Fig. 3 three-point stencil payload: C = A + B where A
+    and B are shifted views of the same base array. On a single block the
+    payload is a plain add; the *shifting* is the coordinator's job, so the
+    block kernel is ufunc_add with distinct halo offsets."""
+    return a + b
+
+
+def stencil5(center, up, down, left, right):
+    """Jacobi 5-point stencil (paper Fig. 10):
+    work = 0.2 * (cells + up + down + left + right)."""
+    return 0.2 * (center + up + down + left + right)
+
+
+def stencil5_halo(block):
+    """Same 5-point stencil expressed over a single (h+2, w+2) halo-padded
+    block — the form the AOT artifact uses so one PJRT input per block
+    suffices. Returns the (h, w) interior update."""
+    c = block[1:-1, 1:-1]
+    u = block[0:-2, 1:-1]
+    d = block[2:, 1:-1]
+    l = block[1:-1, 0:-2]
+    r = block[1:-1, 2:]
+    return 0.2 * (c + u + d + l + r)
+
+
+def jacobi_row(diag, off_row, x_block, b_block):
+    """One block-row of the classic Jacobi iteration
+    x' = (b - R x) / D, where `off_row` is the R panel for this block row
+    and `diag` the matching diagonal slice."""
+    return (b_block - off_row @ x_block) / diag
+
+
+# ---------------------------------------------------------------------------
+# Black-Scholes (paper Fig. 9)
+# ---------------------------------------------------------------------------
+
+def _cnd(x):
+    """Cumulative normal distribution via erf (matches scipy.stats.norm.cdf)."""
+    return 0.5 * (1.0 + erf(x / jnp.sqrt(2.0)))
+
+
+def black_scholes(s, x, t, r, v):
+    """European call price per element; the paper's Fig. 9 payload."""
+    d1 = (jnp.log(s / x) + (r + v * v / 2.0) * t) / (v * jnp.sqrt(t))
+    d2 = d1 - v * jnp.sqrt(t)
+    return s * _cnd(d1) - x * jnp.exp(-r * t) * _cnd(d2)
+
+
+def black_scholes_put(s, x, t, r, v):
+    d1 = (jnp.log(s / x) + (r + v * v / 2.0) * t) / (v * jnp.sqrt(t))
+    d2 = d1 - v * jnp.sqrt(t)
+    return x * jnp.exp(-r * t) * _cnd(-d2) - s * _cnd(-d1)
+
+
+# ---------------------------------------------------------------------------
+# N-body force tile (paper Section 6, Fig. 13)
+# ---------------------------------------------------------------------------
+
+def nbody_forces(xi, yi, zi, mi, xj, yj, zj, mj, eps=1e-9):
+    """Pairwise gravity between a tile of n receivers (i) and m sources (j).
+    Returns (fx, fy, fz) accumulated over j for each i — one SUMMA-style
+    tile of the O(n^2) interaction matrix."""
+    dx = xj[None, :] - xi[:, None]
+    dy = yj[None, :] - yi[:, None]
+    dz = zj[None, :] - zi[:, None]
+    r2 = dx * dx + dy * dy + dz * dz + eps
+    inv_r3 = r2 ** (-1.5)
+    w = mi[:, None] * mj[None, :] * inv_r3
+    return (w * dx).sum(axis=1), (w * dy).sum(axis=1), (w * dz).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# kNN distance tile (paper Fig. 14)
+# ---------------------------------------------------------------------------
+
+def knn_dist2(q, p):
+    """Squared euclidean distances between query tile q:(n,d) and point
+    tile p:(m,d) -> (n, m)."""
+    qq = (q * q).sum(axis=1)[:, None]
+    pp = (p * p).sum(axis=1)[None, :]
+    return qq + pp - 2.0 * (q @ p.T)
+
+
+# ---------------------------------------------------------------------------
+# Lattice Boltzmann D2Q9 collision (paper Fig. 15)
+# ---------------------------------------------------------------------------
+
+D2Q9_W = jnp.array([4 / 9, 1 / 9, 1 / 9, 1 / 9, 1 / 9,
+                    1 / 36, 1 / 36, 1 / 36, 1 / 36], dtype=jnp.float32)
+D2Q9_CX = jnp.array([0, 1, 0, -1, 0, 1, -1, -1, 1], dtype=jnp.float32)
+D2Q9_CY = jnp.array([0, 0, 1, 0, -1, 1, 1, -1, -1], dtype=jnp.float32)
+
+
+def lbm_d2q9_collide(f, omega):
+    """BGK collision on a block. f: (9, h, w). Returns post-collision f."""
+    rho = f.sum(axis=0)
+    ux = (D2Q9_CX[:, None, None] * f).sum(axis=0) / rho
+    uy = (D2Q9_CY[:, None, None] * f).sum(axis=0) / rho
+    cu = 3.0 * (D2Q9_CX[:, None, None] * ux[None] + D2Q9_CY[:, None, None] * uy[None])
+    usq = 1.5 * (ux * ux + uy * uy)
+    feq = D2Q9_W[:, None, None] * rho[None] * (1.0 + cu + 0.5 * cu * cu - usq[None])
+    return f - omega * (f - feq)
+
+
+# ---------------------------------------------------------------------------
+# SUMMA panel update (paper Section 6.1.1, ref [26])
+# ---------------------------------------------------------------------------
+
+def matmul_block(c, a_panel, b_panel):
+    """C += A_panel @ B_panel — one rank-k update of the SUMMA algorithm."""
+    return c + a_panel @ b_panel
+
+
+# ---------------------------------------------------------------------------
+# Mandelbrot iteration block (paper Fig. 11)
+# ---------------------------------------------------------------------------
+
+def fractal_iters(cre, cim, max_iter=32):
+    """Escape-time iteration count per element, vectorized the way the
+    NumPy tutorial code does it (fixed iteration loop, mask updates)."""
+    zre = jnp.zeros_like(cre)
+    zim = jnp.zeros_like(cim)
+    count = jnp.zeros(cre.shape, dtype=jnp.float32)
+    for _ in range(max_iter):
+        zre2 = zre * zre
+        zim2 = zim * zim
+        alive = (zre2 + zim2) <= 4.0
+        count = count + alive.astype(jnp.float32)
+        new_zim = 2.0 * zre * zim + cim
+        new_zre = zre2 - zim2 + cre
+        zre = jnp.where(alive, new_zre, zre)
+        zim = jnp.where(alive, new_zim, zim)
+    return count

@@ -1,0 +1,70 @@
+# L1 Pallas kernels: binary/elementwise ufuncs.
+#
+# These are the per-sub-view-block payloads of the paper's Section 5.3
+# universal functions. Each kernel processes one VMEM-resident tile; the
+# BlockSpec grid expresses the HBM<->VMEM schedule that the paper's
+# runtime expressed as MPI block transfers.
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+# custom-calls, and interpret-mode lowers to plain HLO that the Rust
+# runtime executes unchanged.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape for the elementwise grid. 256*256 f32 = 256 KiB per operand:
+# three operands (a, b, out) double-buffered fit comfortably in a 16 MiB
+# VMEM budget (see DESIGN.md Section 8).
+TILE = 256
+
+
+def _binary_kernel(op, a_ref, b_ref, o_ref):
+    o_ref[...] = op(a_ref[...], b_ref[...])
+
+
+def _make_binary(op):
+    kern = functools.partial(_binary_kernel, op)
+
+    def call(a, b):
+        assert a.shape == b.shape and a.ndim in (1, 2)
+        if a.ndim == 1 or a.shape[0] < TILE or a.shape[1] < TILE \
+                or a.shape[0] % TILE or a.shape[1] % TILE:
+            # Small or ragged blocks: single-program grid.
+            return pl.pallas_call(
+                kern,
+                out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+                interpret=True,
+            )(a, b)
+        grid = (a.shape[0] // TILE, a.shape[1] // TILE)
+        spec = pl.BlockSpec((TILE, TILE), lambda i, j: (i, j))
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            interpret=True,
+        )(a, b)
+
+    return call
+
+
+add = _make_binary(jnp.add)
+sub = _make_binary(jnp.subtract)
+mul = _make_binary(jnp.multiply)
+
+
+def _axpy_kernel(alpha, a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + alpha * b_ref[...]
+
+
+def axpy(a, b, alpha):
+    """out = a + alpha * b (fused, one pass over memory)."""
+    return pl.pallas_call(
+        functools.partial(_axpy_kernel, alpha),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,128 @@
+# L2: the JAX compute graph per benchmark block task.
+#
+# Each entry in ARTIFACTS is one AOT unit: a jitted JAX function (calling
+# the L1 Pallas kernels) plus example arguments fixing the block shapes.
+# `aot.py` lowers every entry to HLO text under artifacts/, and the Rust
+# runtime compiles each once per process and executes it on the request
+# path. Python never runs at request time.
+#
+# Block-shape conventions (shared with rust/src/layout; see DESIGN.md):
+#   * 2-D grids use BS x BS blocks, BS = 64 for the AOT artifacts
+#     (the DES sweeps use the analytic cost model, so only the
+#     real-numerics paths need compiled shapes).
+#   * halo-padded stencil inputs are (BS+2, BS+2).
+#   * 1-D ufunc blocks are BS1 = 4096 elements.
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    black_scholes,
+    fractal,
+    knn,
+    lbm,
+    matmul_block,
+    nbody,
+    stencil,
+    ufunc_binary,
+)
+
+BS = 64          # 2-D block edge for AOT artifacts
+BS1 = 4096       # 1-D block length
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# L2 graph definitions (each returns a tuple — the AOT contract)
+# ---------------------------------------------------------------------------
+
+def g_add2d(a, b):
+    return (ufunc_binary.add(a, b),)
+
+
+def g_mul2d(a, b):
+    return (ufunc_binary.mul(a, b),)
+
+
+def g_sub2d(a, b):
+    return (ufunc_binary.sub(a, b),)
+
+
+def g_add1d(a, b):
+    return (ufunc_binary.add(a, b),)
+
+
+def g_axpy1d(a, b):
+    return (ufunc_binary.axpy(a, b, 0.2),)
+
+
+def g_stencil5(blk):
+    return (stencil.stencil5_halo(blk),)
+
+
+def g_stencil5v(c, u, d, l, r):
+    return (stencil.stencil5(c, u, d, l, r),)
+
+
+def g_stencil3(a, b):
+    return (stencil.stencil3(a, b),)
+
+
+def g_jacobi_row(diag, off, x, b):
+    return (stencil.jacobi_row(diag, off, x, b),)
+
+
+def g_black_scholes(s, x, t):
+    # r, v constants match the paper-era benchmark settings.
+    return (black_scholes.black_scholes(s, x, t, r=0.02, v=0.3),)
+
+
+def g_nbody(xi, yi, zi, mi, xj, yj, zj, mj):
+    return nbody.nbody_forces(xi, yi, zi, mi, xj, yj, zj, mj)
+
+
+def g_knn(q, p):
+    return (knn.knn_dist2(q, p),)
+
+
+def g_lbm_d2q9(f):
+    return (lbm.lbm_d2q9_collide(f, omega=1.0),)
+
+
+def g_matmul(c, a, b):
+    return (matmul_block.matmul_block(c, a, b),)
+
+
+def g_fractal(cre, cim):
+    return (fractal.fractal_iters(cre, cim, max_iter=32),)
+
+
+# name -> (graph fn, example args). Shapes are the artifact's contract
+# with rust/src/runtime (mirrored in rust/src/runtime/artifacts.rs).
+ARTIFACTS = {
+    "add2d": (g_add2d, (_s(BS, BS), _s(BS, BS))),
+    "mul2d": (g_mul2d, (_s(BS, BS), _s(BS, BS))),
+    "sub2d": (g_sub2d, (_s(BS, BS), _s(BS, BS))),
+    "add1d": (g_add1d, (_s(BS1), _s(BS1))),
+    "axpy1d": (g_axpy1d, (_s(BS1), _s(BS1))),
+    "stencil5": (g_stencil5, (_s(BS + 2, BS + 2),)),
+    "stencil5v": (g_stencil5v, tuple(_s(BS, BS) for _ in range(5))),
+    "stencil3": (g_stencil3, (_s(BS), _s(BS))),
+    "jacobi_row": (g_jacobi_row, (_s(BS), _s(BS, BS), _s(BS), _s(BS))),
+    "black_scholes": (g_black_scholes, (_s(BS1), _s(BS1), _s(BS1))),
+    "nbody": (g_nbody, tuple(_s(BS) for _ in range(8))),
+    "knn": (g_knn, (_s(BS, 4), _s(BS, 4))),
+    "lbm_d2q9": (g_lbm_d2q9, (_s(9, BS, BS),)),
+    "matmul": (g_matmul, (_s(BS, BS), _s(BS, BS), _s(BS, BS))),
+    "fractal": (g_fractal, (_s(BS, BS), _s(BS, BS))),
+}
+
+
+def lower(name):
+    """Lower one artifact to a jax Lowered object."""
+    fn, args = ARTIFACTS[name]
+    return jax.jit(fn).lower(*args)

@@ -1,0 +1,344 @@
+# Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+#
+# Every L1 kernel is checked against kernels/ref.py across a hypothesis
+# sweep of shapes and value ranges. The kernels run in interpret mode
+# (plain HLO), so agreement here transfers directly to what the Rust
+# runtime executes.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    black_scholes as k_bs,
+    fractal as k_fractal,
+    knn as k_knn,
+    lbm as k_lbm,
+    matmul_block as k_mm,
+    nbody as k_nbody,
+    ref,
+    stencil as k_stencil,
+    ufunc_binary as k_ufunc,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+# hypothesis: keep deadlines off — interpret-mode pallas is slow.
+COMMON = dict(deadline=None, max_examples=15)
+
+
+def rng_array(seed, shape, lo=-10.0, hi=10.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+dims = st.integers(min_value=1, max_value=33)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise ufuncs
+# ---------------------------------------------------------------------------
+
+class TestUfuncBinary:
+    @settings(**COMMON)
+    @given(seed=seeds, h=dims, w=dims)
+    def test_add_2d(self, seed, h, w):
+        a = rng_array(seed, (h, w))
+        b = rng_array(seed + 1, (h, w))
+        np.testing.assert_allclose(k_ufunc.add(a, b), ref.ufunc_add(a, b),
+                                   rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 5000))
+    def test_add_1d(self, seed, n):
+        a = rng_array(seed, (n,))
+        b = rng_array(seed + 1, (n,))
+        np.testing.assert_allclose(k_ufunc.add(a, b), ref.ufunc_add(a, b),
+                                   rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, h=dims, w=dims)
+    def test_sub(self, seed, h, w):
+        a = rng_array(seed, (h, w))
+        b = rng_array(seed + 1, (h, w))
+        np.testing.assert_allclose(k_ufunc.sub(a, b), ref.ufunc_sub(a, b),
+                                   rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, h=dims, w=dims)
+    def test_mul(self, seed, h, w):
+        a = rng_array(seed, (h, w))
+        b = rng_array(seed + 1, (h, w))
+        np.testing.assert_allclose(k_ufunc.mul(a, b), ref.ufunc_mul(a, b),
+                                   rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 2048),
+           alpha=st.floats(-2.0, 2.0, allow_nan=False))
+    def test_axpy(self, seed, n, alpha):
+        a = rng_array(seed, (n,))
+        b = rng_array(seed + 1, (n,))
+        np.testing.assert_allclose(k_ufunc.axpy(a, b, alpha),
+                                   ref.ufunc_axpy(a, b, alpha),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_tiled_path_matches_small_path(self):
+        # 512x512 exercises the TILE-gridded BlockSpec path.
+        a = rng_array(7, (512, 512))
+        b = rng_array(8, (512, 512))
+        np.testing.assert_allclose(k_ufunc.add(a, b), ref.ufunc_add(a, b),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Stencils
+# ---------------------------------------------------------------------------
+
+class TestStencil:
+    @settings(**COMMON)
+    @given(seed=seeds, h=st.integers(1, 40), w=st.integers(1, 40))
+    def test_stencil5_halo(self, seed, h, w):
+        blk = rng_array(seed, (h + 2, w + 2))
+        got = k_stencil.stencil5_halo(blk)
+        want = ref.stencil5_halo(blk)
+        assert got.shape == (h, w)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, h=dims, w=dims)
+    def test_stencil5_views(self, seed, h, w):
+        vs = [rng_array(seed + i, (h, w)) for i in range(5)]
+        np.testing.assert_allclose(k_stencil.stencil5(*vs),
+                                   ref.stencil5(*vs), rtol=1e-6)
+
+    def test_stencil5_halo_equals_views_form(self):
+        # The halo form and the 5-views form are the same operator.
+        blk = rng_array(3, (34, 34))
+        got = k_stencil.stencil5_halo(blk)
+        want = ref.stencil5(blk[1:-1, 1:-1], blk[0:-2, 1:-1],
+                            blk[2:, 1:-1], blk[1:-1, 0:-2], blk[1:-1, 2:])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 512))
+    def test_stencil3(self, seed, n):
+        a = rng_array(seed, (n,))
+        b = rng_array(seed + 1, (n,))
+        np.testing.assert_allclose(k_stencil.stencil3(a, b),
+                                   ref.stencil3(a, b), rtol=1e-6)
+
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 48), m=st.integers(1, 48))
+    def test_jacobi_row(self, seed, n, m):
+        diag = rng_array(seed, (n,), lo=1.0, hi=10.0)  # away from zero
+        off = rng_array(seed + 1, (n, m))
+        x = rng_array(seed + 2, (m,))
+        b = rng_array(seed + 3, (n,))
+        np.testing.assert_allclose(k_stencil.jacobi_row(diag, off, x, b),
+                                   ref.jacobi_row(diag, off, x, b),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_stencil5_fixed_point(self):
+        # A constant field is a fixed point of the averaging stencil.
+        blk = jnp.ones((10, 10), jnp.float32) * 3.5
+        out = k_stencil.stencil5_halo(blk)
+        np.testing.assert_allclose(out, 3.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Black-Scholes
+# ---------------------------------------------------------------------------
+
+class TestBlackScholes:
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 1024),
+           r=st.floats(0.0, 0.1), v=st.floats(0.05, 0.9))
+    def test_call(self, seed, n, r, v):
+        s = rng_array(seed, (n,), lo=5.0, hi=100.0)
+        x = rng_array(seed + 1, (n,), lo=5.0, hi=100.0)
+        t = rng_array(seed + 2, (n,), lo=0.1, hi=5.0)
+        np.testing.assert_allclose(
+            k_bs.black_scholes(s, x, t, r, v, call=True),
+            ref.black_scholes(s, x, t, r, v), rtol=2e-4, atol=1e-4)
+
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 512))
+    def test_put(self, seed, n):
+        s = rng_array(seed, (n,), lo=5.0, hi=100.0)
+        x = rng_array(seed + 1, (n,), lo=5.0, hi=100.0)
+        t = rng_array(seed + 2, (n,), lo=0.1, hi=5.0)
+        np.testing.assert_allclose(
+            k_bs.black_scholes(s, x, t, 0.02, 0.3, call=False),
+            ref.black_scholes_put(s, x, t, 0.02, 0.3), rtol=2e-4, atol=1e-4)
+
+    def test_put_call_parity(self):
+        # C - P = S - X e^{-rT}: a structural identity, not a ref check.
+        s = rng_array(0, (256,), lo=20.0, hi=80.0)
+        x = rng_array(1, (256,), lo=20.0, hi=80.0)
+        t = rng_array(2, (256,), lo=0.2, hi=3.0)
+        r, v = 0.05, 0.25
+        c = k_bs.black_scholes(s, x, t, r, v, call=True)
+        p = k_bs.black_scholes(s, x, t, r, v, call=False)
+        np.testing.assert_allclose(c - p, s - x * np.exp(-r * t),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_deep_in_the_money(self):
+        # S >> X: call converges to S - X e^{-rT}.
+        s = jnp.full((8,), 1000.0, jnp.float32)
+        x = jnp.full((8,), 10.0, jnp.float32)
+        t = jnp.full((8,), 1.0, jnp.float32)
+        c = k_bs.black_scholes(s, x, t, 0.02, 0.3)
+        np.testing.assert_allclose(c, 1000.0 - 10.0 * np.exp(-0.02),
+                                   rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# N-body
+# ---------------------------------------------------------------------------
+
+class TestNbody:
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 40), m=st.integers(1, 40))
+    def test_forces_tile(self, seed, n, m):
+        gi = [rng_array(seed + i, (n,)) for i in range(3)]
+        mi = rng_array(seed + 3, (n,), lo=0.1, hi=2.0)
+        gj = [rng_array(seed + 10 + i, (m,)) for i in range(3)]
+        mj = rng_array(seed + 13, (m,), lo=0.1, hi=2.0)
+        got = k_nbody.nbody_forces(*gi, mi, *gj, mj)
+        want = ref.nbody_forces(*gi, mi, *gj, mj)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-4)
+
+    def test_newton_third_law(self):
+        # Force of tile (i<-j) equals minus transpose of (j<-i) summed.
+        n = 16
+        x = rng_array(0, (n,)); y = rng_array(1, (n,)); z = rng_array(2, (n,))
+        m = rng_array(3, (n,), lo=0.5, hi=1.5)
+        fx_ij, fy_ij, fz_ij = k_nbody.nbody_forces(x, y, z, m, x, y, z, m)
+        # Self-interaction (i==j) contributes ~0 because dx=dy=dz=0 and
+        # eps regularizes; total momentum change must be ~0.
+        np.testing.assert_allclose(jnp.sum(fx_ij), 0.0, atol=1e-3)
+        np.testing.assert_allclose(jnp.sum(fy_ij), 0.0, atol=1e-3)
+        np.testing.assert_allclose(jnp.sum(fz_ij), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# kNN
+# ---------------------------------------------------------------------------
+
+class TestKnn:
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 40), m=st.integers(1, 40),
+           d=st.integers(1, 8))
+    def test_dist2(self, seed, n, m, d):
+        q = rng_array(seed, (n, d))
+        p = rng_array(seed + 1, (m, d))
+        np.testing.assert_allclose(k_knn.knn_dist2(q, p), ref.knn_dist2(q, p),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_self_distance_zero(self):
+        q = rng_array(5, (12, 4))
+        d = np.asarray(k_knn.knn_dist2(q, q))
+        np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+    def test_nonnegative(self):
+        q = rng_array(6, (20, 3))
+        p = rng_array(7, (25, 3))
+        assert np.all(np.asarray(k_knn.knn_dist2(q, p)) >= -1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Lattice Boltzmann
+# ---------------------------------------------------------------------------
+
+class TestLbm:
+    @settings(**COMMON)
+    @given(seed=seeds, h=st.integers(1, 24), w=st.integers(1, 24),
+           omega=st.floats(0.5, 1.8))
+    def test_collide(self, seed, h, w, omega):
+        f = rng_array(seed, (9, h, w), lo=0.1, hi=1.0)
+        np.testing.assert_allclose(k_lbm.lbm_d2q9_collide(f, omega),
+                                   ref.lbm_d2q9_collide(f, omega),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_mass_conservation(self):
+        # BGK collision conserves density at every site.
+        f = rng_array(11, (9, 16, 16), lo=0.1, hi=1.0)
+        out = k_lbm.lbm_d2q9_collide(f, 1.2)
+        np.testing.assert_allclose(np.asarray(out).sum(axis=0),
+                                   np.asarray(f).sum(axis=0), rtol=1e-4)
+
+    def test_equilibrium_fixed_point(self):
+        # If f == feq, collision is the identity. Build feq for a uniform
+        # rho=1, u=0 field: feq_i = w_i.
+        w = np.array(k_lbm.W, dtype=np.float32)
+        f = jnp.asarray(np.broadcast_to(w[:, None, None], (9, 8, 8)).copy())
+        out = k_lbm.lbm_d2q9_collide(f, 1.5)
+        np.testing.assert_allclose(out, f, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SUMMA matmul block
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @settings(**COMMON)
+    @given(seed=seeds, n=st.integers(1, 40), k=st.integers(1, 40),
+           m=st.integers(1, 40))
+    def test_panel_update(self, seed, n, k, m):
+        c = rng_array(seed, (n, m))
+        a = rng_array(seed + 1, (n, k))
+        b = rng_array(seed + 2, (k, m))
+        np.testing.assert_allclose(k_mm.matmul_block(c, a, b),
+                                   ref.matmul_block(c, a, b),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_mxu_tiled_path(self):
+        # 256x256 C with k=64 exercises the MXU_TILE grid path.
+        c = rng_array(0, (256, 256))
+        a = rng_array(1, (256, 64))
+        b = rng_array(2, (64, 256))
+        np.testing.assert_allclose(k_mm.matmul_block(c, a, b),
+                                   ref.matmul_block(c, a, b),
+                                   rtol=1e-3, atol=1e-2)
+
+    def test_summa_accumulation_equals_full_matmul(self):
+        # Sum of rank-k panel updates == full matmul: the SUMMA identity
+        # the Rust coordinator relies on.
+        n = 32
+        a = rng_array(3, (n, n))
+        b = rng_array(4, (n, n))
+        c = jnp.zeros((n, n), jnp.float32)
+        for s in range(0, n, 8):
+            c = k_mm.matmul_block(c, a[:, s:s + 8], b[s:s + 8, :])
+        np.testing.assert_allclose(c, a @ b, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Fractal
+# ---------------------------------------------------------------------------
+
+class TestFractal:
+    @settings(deadline=None, max_examples=6)
+    @given(seed=seeds, h=st.integers(1, 16), w=st.integers(1, 16))
+    def test_iters(self, seed, h, w):
+        cre = rng_array(seed, (h, w), lo=-2.0, hi=1.0)
+        cim = rng_array(seed + 1, (h, w), lo=-1.5, hi=1.5)
+        np.testing.assert_allclose(k_fractal.fractal_iters(cre, cim, 16),
+                                   ref.fractal_iters(cre, cim, 16))
+
+    def test_interior_point_never_escapes(self):
+        cre = jnp.zeros((4, 4), jnp.float32)
+        cim = jnp.zeros((4, 4), jnp.float32)
+        out = k_fractal.fractal_iters(cre, cim, 32)
+        np.testing.assert_allclose(out, 32.0)
+
+    def test_far_point_escapes_immediately(self):
+        cre = jnp.full((4, 4), 10.0, jnp.float32)
+        cim = jnp.zeros((4, 4), jnp.float32)
+        out = k_fractal.fractal_iters(cre, cim, 32)
+        # First check passes (z=0), then z=c escapes.
+        np.testing.assert_allclose(out, 1.0)

@@ -1,0 +1,154 @@
+//! `cargo bench --bench hot_paths` — microbenchmarks of the L3 hot
+//! paths identified in DESIGN.md §8, used by the performance pass
+//! (EXPERIMENTS.md §Perf) to track before/after:
+//!
+//! * `record`   — ufunc recording: fragment split + op-node build;
+//! * `deps`     — heuristic dependency insertion (per op);
+//! * `flush`    — the full latency-hiding DES over a recorded batch;
+//! * `net`      — α–β network post throughput;
+//! * `e2e`      — record+flush of one Jacobi-stencil sweep (the paper's
+//!                headline app) at P = 16.
+
+use distnumpy::apps::{record, AppId, AppParams};
+use distnumpy::array::Registry;
+use distnumpy::cluster::{MachineSpec, Placement};
+use distnumpy::deps::{DepSystem, HeuristicDeps};
+use distnumpy::exec::SimBackend;
+use distnumpy::lazy::Context;
+use distnumpy::net::Network;
+use distnumpy::sched::{run_latency_hiding, Policy, SchedCfg};
+use distnumpy::types::{DType, Rank, Tag};
+use distnumpy::ufunc::{Kernel, OpBuilder, OpNode};
+use distnumpy::util::bench::Bench;
+
+/// One raw (un-drained) Jacobi-stencil sweep batch: n×n grid, n/256 row
+/// blocks — the same stream `apps::jacobi_stencil` records per sweep.
+fn stencil_batch(p: u32, n: u64) -> Vec<OpNode> {
+    let mut reg = Registry::new(p);
+    let br = (n / 256).max(1);
+    let g = reg.alloc(vec![n, n], br, DType::F32);
+    let w = reg.alloc(vec![n - 2, n - 2], br, DType::F32);
+    let gv = reg.full_view(g);
+    let wv = reg.full_view(w);
+    let c = gv.slice(&[(1, n - 1), (1, n - 1)]);
+    let u = gv.slice(&[(0, n - 2), (1, n - 1)]);
+    let d = gv.slice(&[(2, n), (1, n - 1)]);
+    let l = gv.slice(&[(1, n - 1), (0, n - 2)]);
+    let r = gv.slice(&[(1, n - 1), (2, n)]);
+    let mut bld = OpBuilder::new();
+    bld.ufunc(&reg, Kernel::Stencil5, &wv, &[&c, &u, &d, &l, &r]);
+    bld.reduce(&reg, Kernel::PartialAbsDiffSum, &[&wv, &c]);
+    bld.ufunc(&reg, Kernel::Copy, &c, &[&wv]);
+    bld.finish()
+}
+
+fn main() {
+    let bench = Bench::default();
+    println!("=== L3 hot paths (before/after tracking in EXPERIMENTS.md §Perf) ===\n");
+
+    // -- recording: fragments() + op-node construction ------------------
+    {
+        let mut reg = Registry::new(16);
+        let g = reg.alloc(vec![4096, 4096], 16, DType::F32);
+        let w = reg.alloc(vec![4094, 4094], 16, DType::F32);
+        let gv = reg.full_view(g);
+        let wv = reg.full_view(w);
+        let c = gv.slice(&[(1, 4095), (1, 4095)]);
+        let u = gv.slice(&[(0, 4094), (1, 4095)]);
+        let d = gv.slice(&[(2, 4096), (1, 4095)]);
+        let l = gv.slice(&[(1, 4095), (0, 4094)]);
+        let r = gv.slice(&[(1, 4095), (2, 4096)]);
+        let mut n_ops = 0usize;
+        let s = bench.run("record: stencil5 ufunc (4096^2, br=16, P=16)", || {
+            let mut bld = OpBuilder::new();
+            bld.ufunc(&reg, Kernel::Stencil5, &wv, &[&c, &u, &d, &l, &r]);
+            let ops = bld.finish();
+            n_ops = ops.len();
+            ops.len()
+        });
+        println!(
+            "         -> {n_ops} ops, {:.0} ns/op\n",
+            s.median / n_ops as f64 * 1e9
+        );
+    }
+
+    // -- dependency insertion -------------------------------------------
+    {
+        let ops = stencil_batch(16, 4096);
+        let s = bench.run(
+            &format!("deps: heuristic insert+drain ({} ops)", ops.len()),
+            || {
+                let mut d = HeuristicDeps::new();
+                d.insert_all(&ops);
+                let mut ready = d.take_ready();
+                let mut done = 0;
+                while !ready.is_empty() {
+                    for id in ready {
+                        d.complete(id);
+                        done += 1;
+                    }
+                    ready = d.take_ready();
+                }
+                done
+            },
+        );
+        println!(
+            "         -> {:.0} ns/op\n",
+            s.median / ops.len() as f64 * 1e9
+        );
+    }
+
+    // -- the flush DES ----------------------------------------------------
+    {
+        let ops = stencil_batch(16, 4096);
+        let cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        let s = bench.run(
+            &format!("flush: latency-hiding DES ({} ops, P=16)", ops.len()),
+            || {
+                run_latency_hiding(&ops, &cfg, &mut SimBackend)
+                    .unwrap()
+                    .makespan
+            },
+        );
+        println!(
+            "         -> {:.0} ns/op\n",
+            s.median / ops.len() as f64 * 1e9
+        );
+    }
+
+    // -- network post throughput -----------------------------------------
+    {
+        let spec = MachineSpec::paper();
+        let nodes = Placement::ByNode.assign(16, &spec);
+        const N: u64 = 10_000;
+        let s = bench.run("net: 10k matched post_send/post_recv", || {
+            let mut net = Network::new(&spec, nodes.clone());
+            for i in 0..N {
+                let from = Rank((i % 16) as u32);
+                let to = Rank(((i + 1) % 16) as u32);
+                net.post_recv(i as f64 * 1e-6, to, Tag(i));
+                net.post_send(i as f64 * 1e-6, from, to, Tag(i), 4096);
+            }
+            net.bytes_inter
+        });
+        println!("         -> {:.0} ns/transfer\n", s.median / N as f64 * 1e9);
+    }
+
+    // -- end-to-end: record + flush one sweep ------------------------------
+    {
+        let s = bench.run("e2e: jacobi_stencil sweep record+flush (P=16)", || {
+            let mut ctx =
+                Context::sim(SchedCfg::new(MachineSpec::paper(), 16), Policy::LatencyHiding);
+            record(
+                AppId::JacobiStencil,
+                &mut ctx,
+                &AppParams {
+                    scale: 1.0,
+                    iters: 1,
+                },
+            );
+            ctx.finish().unwrap().ops_executed
+        });
+        let _ = s;
+    }
+}

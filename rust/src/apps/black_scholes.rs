@@ -1,0 +1,27 @@
+//! Black-Scholes option pricing (paper Figs. 9 and 12) — embarrassingly
+//! parallel; per iteration one fused pricing pass over the portfolio and
+//! a price-sum read, exactly the shape of the classic DistNumPy
+//! benchmark (price a portfolio for successive maturities, accumulate).
+
+use crate::lazy::Context;
+use crate::ufunc::Kernel;
+
+use super::AppParams;
+
+pub fn record(ctx: &mut Context, p: &AppParams) {
+    let n = p.dim(4 << 20);
+    let br = (n / 512).max(1);
+    let s = ctx.zeros(&[n], br);
+    let x = ctx.zeros(&[n], br);
+    let t = ctx.zeros(&[n], br);
+    let prices = ctx.zeros(&[n], br);
+
+    for _ in 0..p.iters {
+        // Advance maturities: T += 1/iters (aligned, local).
+        ctx.ufunc(Kernel::Axpy(1.0 / p.iters as f32), &t, &[&t, &x]);
+        // Price the whole portfolio (fused kernel, L1: black_scholes.py).
+        ctx.ufunc(Kernel::BlackScholes, &prices, &[&s, &x, &t]);
+        // Portfolio value: scalar read -> flush (trigger 1).
+        let _ = ctx.sum(&prices);
+    }
+}

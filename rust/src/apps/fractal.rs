@@ -1,0 +1,32 @@
+//! Mandelbrot set (paper Fig. 11) — the embarrassingly parallel control.
+//!
+//! The NumPy tutorial original builds the complex plane with meshgrid
+//! arithmetic, then iterates; DistNumPy replaces the python-level
+//! iteration loop with the fused escape-time kernel (L1:
+//! `kernels/fractal.py`). All operands are aligned: no communication.
+
+use crate::lazy::Context;
+use crate::ufunc::Kernel;
+
+use super::AppParams;
+
+pub fn record(ctx: &mut Context, p: &AppParams) {
+    let n = p.dim(2048);
+    let br = (n / 128).max(1);
+    let cre = ctx.zeros(&[n, n], br);
+    let cim = ctx.zeros(&[n, n], br);
+    let out = ctx.zeros(&[n, n], br);
+
+    // Plane setup: a handful of aligned elementwise ops (meshgrid-ish).
+    ctx.ufunc(Kernel::Scale(3.0 / n as f32), &cre, &[&cre]);
+    ctx.ufunc(Kernel::Scale(2.0 / n as f32), &cim, &[&cim]);
+    ctx.ufunc(Kernel::Axpy(-2.0), &cre, &[&cre, &out]);
+    ctx.ufunc(Kernel::Axpy(-1.0), &cim, &[&cim, &out]);
+
+    // One fused escape-time pass per "frame".
+    let iters_inside = 32 * p.iters.max(1);
+    ctx.ufunc(Kernel::Fractal(iters_inside), &out, &[&cre, &cim]);
+
+    // The tutorial renders the result: a read of distributed data.
+    let _ = ctx.sum(&out);
+}

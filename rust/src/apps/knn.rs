@@ -1,0 +1,39 @@
+//! Naive k-nearest-neighbours (paper Fig. 14).
+//!
+//! All query-to-point distances via the Gram-matrix identity
+//! ‖q−p‖² = ‖q‖² + ‖p‖² − 2·q·p — the 2·q·pᵀ term is a SUMMA matmul
+//! (O(n²)), followed by elementwise assembly and per-query reductions.
+//! The paper notes its modest speedup comes from load imbalance when the
+//! problem does not divide evenly at 8 and 16 ranks; the same effect
+//! falls out of the block layout here.
+
+use crate::lazy::Context;
+use crate::summa::record_matmul;
+use crate::ufunc::Kernel;
+
+use super::AppParams;
+
+pub fn record(ctx: &mut Context, p: &AppParams) {
+    let n = p.dim(1024);
+    // Deliberately not a power of two (paper: "the chosen problem is not
+    // divided evenly between the processes" at 8/16 ranks).
+    let n = n + n / 6;
+    let br = (n / 96).max(1);
+
+    let q = ctx.zeros(&[n, n], br); // query Gram tile
+    let c = ctx.zeros(&[n, n], br); // corpus Gram tile
+    let d = ctx.zeros(&[n, n], br); // distance matrix
+    let qq = ctx.zeros(&[n], br);
+    let pp = ctx.zeros(&[n], br);
+
+    for _ in 0..p.iters.max(1) {
+        // Norms: aligned elementwise.
+        ctx.ufunc(Kernel::Mul, &qq, &[&qq, &qq]);
+        ctx.ufunc(Kernel::Mul, &pp, &[&pp, &pp]);
+        // -2 q pᵀ via SUMMA.
+        record_matmul(&mut ctx.builder, &ctx.reg, q.base, c.base, d.base);
+        // Assemble distances and extract the best per sweep (reduction).
+        ctx.ufunc(Kernel::Scale(-2.0), &d, &[&d]);
+        let _ = ctx.sum(&d);
+    }
+}

@@ -1,0 +1,216 @@
+//! The eight benchmark applications of the paper's evaluation
+//! (Section 6, Figs. 11–18).
+//!
+//! Each app records exactly the stream of array operations its
+//! NumPy/DistNumPy original issues — same views, same temporaries, same
+//! per-iteration convergence reads — through the lazy [`Context`]. Apps
+//! are agnostic to the backend: under [`crate::exec::SimBackend`] they
+//! drive the strong-scaling figures; under a data backend they compute
+//! real numerics (used by the examples and the e2e tests).
+//!
+//! | App            | Complexity | Communication          | Paper figure |
+//! |----------------|-----------|-------------------------|--------------|
+//! | fractal        | O(n) heavy| none                    | Fig. 11      |
+//! | black_scholes  | O(n) heavy| none                    | Fig. 12      |
+//! | nbody          | O(n²)     | SUMMA broadcasts        | Fig. 13      |
+//! | knn            | O(n²)     | SUMMA broadcasts        | Fig. 14      |
+//! | lbm2d          | O(n)      | streaming halos         | Fig. 15      |
+//! | lbm3d          | O(n)      | streaming halos         | Fig. 16      |
+//! | jacobi         | O(n) small| row-shift halos         | Fig. 17      |
+//! | jacobi_stencil | O(n) small| 5-point stencil halos   | Fig. 18      |
+
+mod black_scholes;
+mod fractal;
+mod jacobi;
+mod jacobi_stencil;
+mod knn;
+mod lbm;
+mod nbody;
+
+pub use jacobi_stencil::record_jacobi_stencil_iteration;
+
+use crate::lazy::Context;
+
+/// Which benchmark to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppId {
+    Fractal,
+    BlackScholes,
+    Nbody,
+    Knn,
+    Lbm2d,
+    Lbm3d,
+    Jacobi,
+    JacobiStencil,
+}
+
+impl AppId {
+    pub fn all() -> [AppId; 8] {
+        [
+            AppId::Fractal,
+            AppId::BlackScholes,
+            AppId::Nbody,
+            AppId::Knn,
+            AppId::Lbm2d,
+            AppId::Lbm3d,
+            AppId::Jacobi,
+            AppId::JacobiStencil,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppId::Fractal => "fractal",
+            AppId::BlackScholes => "black_scholes",
+            AppId::Nbody => "nbody",
+            AppId::Knn => "knn",
+            AppId::Lbm2d => "lbm2d",
+            AppId::Lbm3d => "lbm3d",
+            AppId::Jacobi => "jacobi",
+            AppId::JacobiStencil => "jacobi_stencil",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppId> {
+        AppId::all().into_iter().find(|a| a.name() == s)
+    }
+
+    /// The paper figure this app reproduces.
+    pub fn figure(self) -> u32 {
+        match self {
+            AppId::Fractal => 11,
+            AppId::BlackScholes => 12,
+            AppId::Nbody => 13,
+            AppId::Knn => 14,
+            AppId::Lbm2d => 15,
+            AppId::Lbm3d => 16,
+            AppId::Jacobi => 17,
+            AppId::JacobiStencil => 18,
+        }
+    }
+}
+
+/// Problem sizing. `scale = 1.0` is the figure-generation default —
+/// chosen so every P ≤ 128 keeps ≥ 2 blocks per rank (strong scaling,
+/// Section 6.1.2) while a full sweep stays tractable on one host core.
+#[derive(Clone, Copy, Debug)]
+pub struct AppParams {
+    pub scale: f64,
+    pub iters: u32,
+}
+
+impl Default for AppParams {
+    fn default() -> Self {
+        AppParams {
+            scale: 1.0,
+            iters: 10,
+        }
+    }
+}
+
+impl AppParams {
+    pub fn tiny() -> Self {
+        AppParams {
+            scale: 0.05,
+            iters: 2,
+        }
+    }
+
+    pub(crate) fn dim(&self, base: u64) -> u64 {
+        ((base as f64 * self.scale) as u64).max(8)
+    }
+}
+
+/// Record one full benchmark run into the context.
+pub fn record(app: AppId, ctx: &mut Context, p: &AppParams) {
+    match app {
+        AppId::Fractal => fractal::record(ctx, p),
+        AppId::BlackScholes => black_scholes::record(ctx, p),
+        AppId::Nbody => nbody::record(ctx, p),
+        AppId::Knn => knn::record(ctx, p),
+        AppId::Lbm2d => lbm::record_2d(ctx, p),
+        AppId::Lbm3d => lbm::record_3d(ctx, p),
+        AppId::Jacobi => jacobi::record(ctx, p),
+        AppId::JacobiStencil => jacobi_stencil::record(ctx, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineSpec;
+    use crate::sched::{Policy, SchedCfg};
+
+    fn run_app(app: AppId, p: u32) -> crate::metrics::RunReport {
+        let mut ctx = Context::sim(
+            SchedCfg::new(MachineSpec::tiny(), p),
+            Policy::LatencyHiding,
+        );
+        record(app, &mut ctx, &AppParams::tiny());
+        ctx.finish().expect("app run completes")
+    }
+
+    #[test]
+    fn every_app_completes_on_four_ranks() {
+        for app in AppId::all() {
+            let rep = run_app(app, 4);
+            assert!(rep.ops_executed > 0, "{} executed nothing", app.name());
+        }
+    }
+
+    #[test]
+    fn every_app_completes_on_one_rank_without_comm() {
+        for app in AppId::all() {
+            let rep = run_app(app, 1);
+            assert_eq!(
+                rep.bytes_inter + rep.bytes_intra,
+                0,
+                "{} at P=1 must not communicate",
+                app.name()
+            );
+        }
+    }
+
+    #[test]
+    fn embarrassingly_parallel_apps_have_little_comm() {
+        for app in [AppId::Fractal, AppId::BlackScholes] {
+            let rep = run_app(app, 4);
+            // Only the per-iteration scalar reductions communicate.
+            let per_op = rep.bytes_inter as f64 / rep.n_compute.max(1) as f64;
+            assert!(
+                per_op < 64.0,
+                "{}: {} bytes/op is too much for an EP app",
+                app.name(),
+                per_op
+            );
+        }
+    }
+
+    #[test]
+    fn stencil_apps_communicate() {
+        for app in [AppId::Jacobi, AppId::JacobiStencil, AppId::Lbm2d] {
+            let rep = run_app(app, 4);
+            assert!(
+                rep.bytes_inter > 0,
+                "{} on 4 ranks must exchange halos",
+                app.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for app in AppId::all() {
+            assert_eq!(AppId::parse(app.name()), Some(app));
+        }
+        assert_eq!(AppId::parse("nope"), None);
+    }
+
+    #[test]
+    fn figures_are_distinct() {
+        let mut f: Vec<u32> = AppId::all().iter().map(|a| a.figure()).collect();
+        f.sort();
+        f.dedup();
+        assert_eq!(f.len(), 8);
+    }
+}

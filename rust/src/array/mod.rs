@@ -1,0 +1,265 @@
+//! Array-bases, array-views and per-rank block storage
+//! (paper Section 5.1, Fig. 1).
+//!
+//! The [`Registry`] owns the metadata of every array-base (its [`Layout`])
+//! and hands out [`ViewSpec`]s. Real element data — when a run executes
+//! with actual numerics rather than in pure simulation — lives in a
+//! [`BlockStore`] per rank: one dense buffer per owned base-block, plus
+//! staging buffers for received fragments (keyed by message [`Tag`]).
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::layout::{Layout, ViewSpec};
+use crate::types::{BaseId, DType, Rank, Tag};
+use crate::ufunc::Region;
+
+/// Metadata registry of all distributed array-bases in a context.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    layouts: Vec<Layout>,
+    pub nprocs: u32,
+}
+
+impl Registry {
+    pub fn new(nprocs: u32) -> Self {
+        assert!(nprocs > 0);
+        Registry {
+            layouts: Vec::new(),
+            nprocs,
+        }
+    }
+
+    /// Allocate a new distributed array-base.
+    pub fn alloc(&mut self, shape: Vec<u64>, block_rows: u64, dtype: DType) -> BaseId {
+        let id = BaseId(self.layouts.len() as u32);
+        self.layouts
+            .push(Layout::new(id, shape, block_rows, self.nprocs, dtype));
+        id
+    }
+
+    pub fn layout(&self, id: BaseId) -> &Layout {
+        &self.layouts[id.0 as usize]
+    }
+
+    pub fn full_view(&self, id: BaseId) -> ViewSpec {
+        ViewSpec::full(self.layout(id))
+    }
+
+    pub fn n_bases(&self) -> usize {
+        self.layouts.len()
+    }
+}
+
+/// Per-rank physical storage: owned base-blocks + staging buffers.
+#[derive(Default, Debug)]
+pub struct BlockStore {
+    blocks: FxHashMap<(BaseId, u64), Vec<f32>>,
+    stages: FxHashMap<Tag, Vec<f32>>,
+}
+
+impl BlockStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate (zeroed) every block of `base` owned by `rank`.
+    pub fn alloc_base(&mut self, layout: &Layout, rank: Rank) {
+        for b in layout.blocks_of(rank) {
+            let n = (layout.block_nrows(b) * layout.row_elems()) as usize;
+            self.blocks.insert((layout.base, b), vec![0.0; n]);
+        }
+    }
+
+    pub fn block(&self, base: BaseId, block: u64) -> &[f32] {
+        &self.blocks[&(base, block)]
+    }
+
+    pub fn block_mut(&mut self, base: BaseId, block: u64) -> &mut Vec<f32> {
+        self.blocks.get_mut(&(base, block)).expect("block not local")
+    }
+
+    pub fn has_block(&self, base: BaseId, block: u64) -> bool {
+        self.blocks.contains_key(&(base, block))
+    }
+
+    /// Extract a region into a contiguous buffer (row-major).
+    pub fn extract(&self, r: &Region) -> Vec<f32> {
+        let blk = self.block(r.base, r.block);
+        let mut out = Vec::with_capacity(r.elems() as usize);
+        for row in r.row0..r.row0 + r.nrows {
+            let start = (row * r.row_stride + r.col0) as usize;
+            out.extend_from_slice(&blk[start..start + r.ncols as usize]);
+        }
+        out
+    }
+
+    /// Write a contiguous buffer back into a region.
+    pub fn write_region(&mut self, r: &Region, data: &[f32]) {
+        assert_eq!(data.len() as u64, r.elems());
+        let blk = self.block_mut(r.base, r.block);
+        for (i, row) in (r.row0..r.row0 + r.nrows).enumerate() {
+            let start = (row * r.row_stride + r.col0) as usize;
+            blk[start..start + r.ncols as usize]
+                .copy_from_slice(&data[i * r.ncols as usize..(i + 1) * r.ncols as usize]);
+        }
+    }
+
+    pub fn put_stage(&mut self, tag: Tag, data: Vec<f32>) {
+        self.stages.insert(tag, data);
+    }
+
+    pub fn stage(&self, tag: Tag) -> &[f32] {
+        &self.stages[&tag]
+    }
+
+    pub fn has_stage(&self, tag: Tag) -> bool {
+        self.stages.contains_key(&tag)
+    }
+
+    pub fn take_stage(&mut self, tag: Tag) -> Option<Vec<f32>> {
+        self.stages.remove(&tag)
+    }
+
+    /// Staging buffers retained after a flush (results of reductions).
+    pub fn clear_stages(&mut self) {
+        self.stages.clear();
+    }
+
+    pub fn owned_blocks(&self) -> impl Iterator<Item = (&(BaseId, u64), &Vec<f32>)> {
+        self.blocks.iter()
+    }
+}
+
+/// Whole-cluster storage: one [`BlockStore`] per rank, plus helpers to
+/// scatter/gather full arrays for test oracles and examples.
+#[derive(Default, Debug)]
+pub struct ClusterStore {
+    pub ranks: Vec<BlockStore>,
+}
+
+impl ClusterStore {
+    pub fn new(nprocs: u32) -> Self {
+        ClusterStore {
+            ranks: (0..nprocs).map(|_| BlockStore::new()).collect(),
+        }
+    }
+
+    pub fn alloc_base(&mut self, layout: &Layout) {
+        for (r, store) in self.ranks.iter_mut().enumerate() {
+            store.alloc_base(layout, Rank(r as u32));
+        }
+    }
+
+    /// Scatter a dense row-major global array into the owning blocks.
+    pub fn scatter(&mut self, layout: &Layout, data: &[f32]) {
+        let re = layout.row_elems();
+        assert_eq!(data.len() as u64, layout.rows() * re);
+        for b in 0..layout.nblocks() {
+            let owner = layout.owner(b);
+            let (lo, hi) = layout.block_rows_range(b);
+            let slice = &data[(lo * re) as usize..(hi * re) as usize];
+            self.ranks[owner.idx()]
+                .block_mut(layout.base, b)
+                .copy_from_slice(slice);
+        }
+    }
+
+    /// Gather the full array into a dense row-major buffer.
+    pub fn gather(&self, layout: &Layout) -> Vec<f32> {
+        let re = layout.row_elems();
+        let mut out = vec![0.0f32; (layout.rows() * re) as usize];
+        for b in 0..layout.nblocks() {
+            let owner = layout.owner(b);
+            let (lo, hi) = layout.block_rows_range(b);
+            out[(lo * re) as usize..(hi * re) as usize]
+                .copy_from_slice(self.ranks[owner.idx()].block(layout.base, b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_roundtrip() {
+        let mut reg = Registry::new(3);
+        let a = reg.alloc(vec![10, 4], 3, DType::F32);
+        let layout = reg.layout(a).clone();
+        let mut cs = ClusterStore::new(3);
+        cs.alloc_base(&layout);
+        let data: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        cs.scatter(&layout, &data);
+        assert_eq!(cs.gather(&layout), data);
+    }
+
+    #[test]
+    fn extract_region_2d() {
+        let mut reg = Registry::new(1);
+        let a = reg.alloc(vec![4, 5], 4, DType::F32);
+        let layout = reg.layout(a).clone();
+        let mut st = BlockStore::new();
+        st.alloc_base(&layout, Rank(0));
+        let data: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        st.block_mut(a, 0).copy_from_slice(&data);
+        // rows 1..3, cols 2..4
+        let r = Region {
+            base: a,
+            block: 0,
+            row0: 1,
+            nrows: 2,
+            col0: 2,
+            ncols: 2,
+            row_stride: 5,
+        };
+        assert_eq!(st.extract(&r), vec![7.0, 8.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn write_region_roundtrip() {
+        let mut reg = Registry::new(1);
+        let a = reg.alloc(vec![6], 6, DType::F32);
+        let layout = reg.layout(a).clone();
+        let mut st = BlockStore::new();
+        st.alloc_base(&layout, Rank(0));
+        let r = Region {
+            base: a,
+            block: 0,
+            row0: 2,
+            nrows: 3,
+            col0: 0,
+            ncols: 1,
+            row_stride: 1,
+        };
+        st.write_region(&r, &[7.0, 8.0, 9.0]);
+        assert_eq!(st.block(a, 0), &[0.0, 0.0, 7.0, 8.0, 9.0, 0.0]);
+        assert_eq!(st.extract(&r), vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn stages() {
+        let mut st = BlockStore::new();
+        st.put_stage(Tag(3), vec![1.0, 2.0]);
+        assert!(st.has_stage(Tag(3)));
+        assert_eq!(st.stage(Tag(3)), &[1.0, 2.0]);
+        assert_eq!(st.take_stage(Tag(3)), Some(vec![1.0, 2.0]));
+        assert!(!st.has_stage(Tag(3)));
+    }
+
+    #[test]
+    fn scatter_gather_multirank_cyclic() {
+        let mut reg = Registry::new(2);
+        let a = reg.alloc(vec![7], 2, DType::F32);
+        let layout = reg.layout(a).clone();
+        let mut cs = ClusterStore::new(2);
+        cs.alloc_base(&layout);
+        let data: Vec<f32> = (0..7).map(|i| i as f32 * 1.5).collect();
+        cs.scatter(&layout, &data);
+        // blocks: [0,1]->p0, [2,3]->p1, [4,5]->p0, [6]->p1
+        assert_eq!(cs.ranks[0].block(a, 0), &[0.0, 1.5]);
+        assert_eq!(cs.ranks[1].block(a, 1), &[3.0, 4.5]);
+        assert_eq!(cs.ranks[1].block(a, 3), &[9.0]);
+        assert_eq!(cs.gather(&layout), data);
+    }
+}

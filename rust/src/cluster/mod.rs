@@ -1,0 +1,255 @@
+//! The simulated cluster: machine model, rank placement, and cost model.
+//!
+//! Substitutes the paper's testbed (Table 1: 16 nodes, 2× Intel Xeon
+//! E5345 quad-core per node, 16 GB/node, Gigabit Ethernet, OpenMPI) with
+//! a calibrated analytic model. See DESIGN.md §2 for the substitution
+//! argument: the paper's findings are properties of the *overlap
+//! structure* (which transfers can hide behind which block computations),
+//! which a discrete-event simulation with an α–β network and a
+//! memory-bandwidth contention model reproduces.
+
+use crate::types::VTime;
+
+/// Hardware description (paper Table 1 defaults).
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    /// Effective scalar f32 compute rate per core (flops/s) for the C
+    /// ufunc inner loops NumPy 1.3-era executes (~0.9 GF/s on a 2.33 GHz
+    /// Core2: no SIMD in the generic loops).
+    pub flops_per_core: f64,
+    /// Sustainable memory bandwidth of one core with no contention (B/s).
+    pub core_mem_bw: f64,
+    /// Total node memory bandwidth shared by all cores (B/s) — the
+    /// von Neumann bottleneck of Section 6.1.2 (FSB-era Xeon).
+    pub node_mem_bw: f64,
+    /// Inter-node latency (s) — GbE + OpenMPI stack.
+    pub net_alpha: VTime,
+    /// Inter-node inverse bandwidth (s/B) — ~112 MB/s effective GbE.
+    pub net_beta: VTime,
+    /// Intra-node (shared-memory transport) latency (s).
+    pub smp_alpha: VTime,
+    /// Intra-node inverse bandwidth (s/B).
+    pub smp_beta: VTime,
+    /// Runtime overhead per recorded *fragment* operation (dependency-
+    /// list insertion + node allocation, C-level) in the latency-hiding
+    /// engine (s). Calibrated from the measured heuristic insert+drain
+    /// cost (`cargo bench --bench ablation_deps`: ~0.4 µs/op) plus
+    /// scheduling bookkeeping.
+    pub lh_op_overhead: VTime,
+    /// Runtime overhead per fragment operation in blocking mode (no
+    /// dependency system, just the program walk) (s).
+    pub blocking_op_overhead: VTime,
+    /// Interpreter-side overhead per *array-level* operation (one group
+    /// of fragments): the CPython dispatch that records the ufunc. Paid
+    /// by every rank under both policies — all processes run the same
+    /// Python program (global knowledge, §5.5).
+    pub py_op_overhead: VTime,
+    /// Per-ufunc interpreter + allocation overhead of the *sequential
+    /// NumPy baseline* (s). DistNumPy amortizes allocation by lazily
+    /// recycling buffers (Section 6.1.1), which is how the paper sees
+    /// super-linear speedups; NumPy 1.3 allocates a fresh temp per ufunc.
+    pub numpy_op_overhead: VTime,
+    /// NumPy temp-allocation cost per byte (page faults + zeroing on
+    /// first touch for large temps) (s/B).
+    pub numpy_alloc_per_byte: VTime,
+    /// Effective memory bandwidth multiplier when an operation re-uses
+    /// the base-block its rank touched last (L2-resident working set).
+    /// Drives the §7 cache-locality scheduling extension.
+    pub cache_reuse_factor: f64,
+}
+
+impl MachineSpec {
+    /// The paper's Table 1 cluster, calibrated for NumPy-1.3-era rates.
+    pub fn paper() -> Self {
+        MachineSpec {
+            nodes: 16,
+            cores_per_node: 8,
+            flops_per_core: 0.9e9,
+            core_mem_bw: 2.6e9,
+            node_mem_bw: 6.0e9,
+            net_alpha: 60e-6,
+            net_beta: 1.0 / 112e6,
+            smp_alpha: 1.5e-6,
+            smp_beta: 1.0 / 1.8e9,
+            lh_op_overhead: 0.8e-6,
+            blocking_op_overhead: 0.3e-6,
+            py_op_overhead: 6e-6,
+            numpy_op_overhead: 6e-6,
+            numpy_alloc_per_byte: 0.25e-9,
+            // Core2 L2 streams ~3x faster than FSB-bound DRAM traffic.
+            cache_reuse_factor: 3.0,
+        }
+    }
+
+    /// A small loopback machine for unit tests (fast, deterministic).
+    pub fn tiny() -> Self {
+        MachineSpec {
+            nodes: 4,
+            cores_per_node: 2,
+            flops_per_core: 1e9,
+            core_mem_bw: 4e9,
+            node_mem_bw: 8e9,
+            net_alpha: 10e-6,
+            net_beta: 1e-8,
+            smp_alpha: 1e-6,
+            smp_beta: 1e-9,
+            lh_op_overhead: 0.0,
+            blocking_op_overhead: 0.0,
+            py_op_overhead: 0.0,
+            numpy_op_overhead: 0.0,
+            numpy_alloc_per_byte: 0.0,
+            cache_reuse_factor: 1.0,
+        }
+    }
+
+    pub fn max_ranks(&self) -> u32 {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Effective memory bandwidth per rank when `ranks_on_node` ranks
+    /// share the node (static contention model).
+    pub fn mem_bw_per_rank(&self, ranks_on_node: u32) -> f64 {
+        (self.node_mem_bw / ranks_on_node.max(1) as f64).min(self.core_mem_bw)
+    }
+
+    /// Virtual execution time of one compute op with the given flop and
+    /// memory-byte counts, under `ranks_on_node`-way contention.
+    ///
+    /// Additive (no-overlap) model rather than a `max()` roofline: the
+    /// paper's testbed is FSB-era Xeon running NumPy 1.3's generic C
+    /// loops, which neither prefetch nor pipeline memory behind ALU work
+    /// — so compute time and memory-stall time serialize. This is what
+    /// makes the von Neumann bottleneck of Section 6.1.2 visible even
+    /// for flop-heavy kernels (Fig. 19: SUMMA by-core loses to by-node
+    /// although matmul is nominally compute-bound).
+    pub fn compute_time(&self, flops: f64, bytes: f64, ranks_on_node: u32) -> VTime {
+        let t_flops = flops / self.flops_per_core;
+        let t_mem = bytes / self.mem_bw_per_rank(ranks_on_node);
+        t_flops + t_mem
+    }
+
+    /// [`Self::compute_time`] when the operand block is L2-resident
+    /// (the rank touched it last): the memory term shrinks by
+    /// `cache_reuse_factor`. Used by the §7 locality scheduler.
+    pub fn compute_time_hot(&self, flops: f64, bytes: f64, ranks_on_node: u32) -> VTime {
+        let t_flops = flops / self.flops_per_core;
+        let bw = self.mem_bw_per_rank(ranks_on_node) * self.cache_reuse_factor;
+        t_flops + bytes / bw
+    }
+}
+
+/// How ranks map to nodes (paper Fig. 19: *by node* vs *by core*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Round-robin over nodes: rank r on node r mod N (max spread —
+    /// the paper's default for ≤16 ranks, one per node).
+    ByNode,
+    /// Fill each node before using the next: rank r on node r / C.
+    ByCore,
+}
+
+impl Placement {
+    /// node index per rank.
+    pub fn assign(self, nprocs: u32, spec: &MachineSpec) -> Vec<usize> {
+        assert!(
+            nprocs <= spec.max_ranks(),
+            "{} ranks exceed machine capacity {}",
+            nprocs,
+            spec.max_ranks()
+        );
+        (0..nprocs)
+            .map(|r| match self {
+                Placement::ByNode => (r % spec.nodes) as usize,
+                Placement::ByCore => (r / spec.cores_per_node) as usize,
+            })
+            .collect()
+    }
+
+    /// Number of ranks sharing each rank's node.
+    pub fn contention(self, nprocs: u32, spec: &MachineSpec) -> Vec<u32> {
+        let nodes = self.assign(nprocs, spec);
+        let mut per_node = vec![0u32; spec.nodes as usize];
+        for &n in &nodes {
+            per_node[n] += 1;
+        }
+        nodes.iter().map(|&n| per_node[n]).collect()
+    }
+
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s {
+            "by-node" | "bynode" | "node" => Some(Placement::ByNode),
+            "by-core" | "bycore" | "core" => Some(Placement::ByCore),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_machine_capacity() {
+        let s = MachineSpec::paper();
+        assert_eq!(s.max_ranks(), 128);
+    }
+
+    #[test]
+    fn by_node_spreads() {
+        let s = MachineSpec::paper();
+        let n = Placement::ByNode.assign(16, &s);
+        // One rank per node at P=16.
+        let mut seen = n.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 16);
+        // At 32 ranks, two per node.
+        let c = Placement::ByNode.contention(32, &s);
+        assert!(c.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn by_core_fills() {
+        let s = MachineSpec::paper();
+        let n = Placement::ByCore.assign(8, &s);
+        assert!(n.iter().all(|&x| x == 0), "8 ranks on one node");
+        let c = Placement::ByCore.contention(8, &s);
+        assert!(c.iter().all(|&x| x == 8));
+    }
+
+    #[test]
+    fn contention_slows_memory_bound_compute() {
+        let s = MachineSpec::paper();
+        // A memory-bound op (ufunc): 1 flop/elem, 12 B/elem.
+        let t1 = s.compute_time(1e6, 12e6, 1);
+        let t8 = s.compute_time(1e6, 12e6, 8);
+        assert!(t8 > 2.0 * t1, "8-way contention must hurt: {t1} vs {t8}");
+    }
+
+    #[test]
+    fn flop_bound_barely_affected_by_contention() {
+        let s = MachineSpec::paper();
+        // Fractal-like: 450 flops/elem, 8 B/elem — contention adds only
+        // the (small) memory term, so the slowdown stays marginal.
+        let t1 = s.compute_time(450e6, 8e6, 1);
+        let t8 = s.compute_time(450e6, 8e6, 8);
+        assert!(t8 > t1, "additive model: contention always costs");
+        assert!(t8 < 1.05 * t1, "flop-bound op must stay flop-bound: {t1} vs {t8}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_ranks_panics() {
+        let s = MachineSpec::paper();
+        Placement::ByNode.assign(129, &s);
+    }
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!(Placement::parse("by-node"), Some(Placement::ByNode));
+        assert_eq!(Placement::parse("core"), Some(Placement::ByCore));
+        assert_eq!(Placement::parse("x"), None);
+    }
+}

@@ -1,0 +1,285 @@
+//! Command-line interface.
+//!
+//! ```text
+//! distnumpy run    --app jacobi_stencil --procs 16 [--policy lh|blocking|naive]
+//!                  [--placement by-node|by-core] [--scale 1.0] [--iters 10]
+//!                  [--deps heuristic|dag] [--json]
+//! distnumpy sweep  --app jacobi_stencil [--procs 1,2,4,8,16,32,64,128] [--json]
+//! distnumpy report wait [--procs 16]
+//! distnumpy fig19  [--procs 8,16,32,64,128]
+//! distnumpy machine
+//! ```
+
+use std::collections::HashMap;
+
+use crate::apps::{AppId, AppParams};
+use crate::cluster::{MachineSpec, Placement};
+use crate::harness;
+use crate::sched::Policy;
+use crate::util::json::Json;
+
+/// Parsed command line.
+pub struct Cli {
+    pub cmd: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut it = args.iter();
+        let cmd = it.next().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let rest: Vec<&String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = rest[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Cli {
+            cmd,
+            flags,
+            positional,
+        })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn procs_list(&self, default: &[u32]) -> Vec<u32> {
+        match self.flag("procs") {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    fn params(&self) -> AppParams {
+        let mut p = AppParams::default();
+        if let Some(s) = self.flag("scale") {
+            p.scale = s.parse().unwrap_or(1.0);
+        }
+        if let Some(s) = self.flag("iters") {
+            p.iters = s.parse().unwrap_or(10);
+        }
+        p
+    }
+
+    fn app(&self) -> Result<AppId, String> {
+        let name = self.flag("app").ok_or("missing --app")?;
+        AppId::parse(name).ok_or_else(|| format!("unknown app '{name}'"))
+    }
+}
+
+const HELP: &str = "\
+distnumpy — runtime-managed communication latency-hiding (HPCC'12 repro)
+
+USAGE:
+  distnumpy run    --app <name> --procs <P> [--policy lh|blocking|naive]
+                   [--placement by-node|by-core] [--scale S] [--iters N]
+                   [--locality] [--json]
+  distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
+  distnumpy report wait [--procs P]          # Section 6.1.1 waiting-time table
+  distnumpy fig19  [--procs 8,16,...]        # by-node vs by-core (N-body)
+  distnumpy machine                          # print the Table 1 machine model
+  distnumpy apps                             # list benchmark apps
+
+APPS: fractal black_scholes nbody knn lbm2d lbm3d jacobi jacobi_stencil
+";
+
+/// Entry point (also used by tests). Returns the process exit code.
+pub fn main_with_args(args: &[String]) -> i32 {
+    let cli = match Cli::parse(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match run(&cli) {
+        Ok(out) => {
+            println!("{out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            2
+        }
+    }
+}
+
+fn run(cli: &Cli) -> Result<String, String> {
+    let spec = MachineSpec::paper();
+    match cli.cmd.as_str() {
+        "run" => {
+            let app = cli.app()?;
+            let p: u32 = cli
+                .flag("procs")
+                .unwrap_or("16")
+                .parse()
+                .map_err(|_| "bad --procs")?;
+            let policy = Policy::parse(cli.flag("policy").unwrap_or("lh"))
+                .ok_or("bad --policy")?;
+            let placement = Placement::parse(cli.flag("placement").unwrap_or("by-node"))
+                .ok_or("bad --placement")?;
+            let params = cli.params();
+            let (report, baseline) = if cli.flag("locality").is_some() {
+                harness::run_once_cfg(app, p, policy, placement, &spec, &params, true)
+            } else {
+                harness::run_once(app, p, policy, placement, &spec, &params)
+            };
+            if cli.flag("json").is_some() {
+                let mut o = report.to_json();
+                o.push("baseline", baseline.into());
+                o.push("speedup", (baseline / report.makespan.max(1e-12)).into());
+                Ok(o.render())
+            } else {
+                Ok(format!(
+                    "{} on {p} ranks ({policy:?}): makespan {:.4}s  speedup {:.2}  wait {:.1}%  util {:.2}",
+                    app.name(),
+                    report.makespan,
+                    baseline / report.makespan.max(1e-12),
+                    report.wait_pct(),
+                    report.utilization()
+                ))
+            }
+        }
+        "sweep" => {
+            let app = cli.app()?;
+            let ps = cli.procs_list(&harness::PAPER_PS);
+            let params = cli.params();
+            let fig = harness::figure(app, &ps, &spec, &params);
+            if cli.flag("json").is_some() {
+                Ok(fig.to_json().render())
+            } else {
+                Ok(fig.render_table())
+            }
+        }
+        "report" => {
+            if cli.positional.first().map(|s| s.as_str()) != Some("wait") {
+                return Err("usage: distnumpy report wait".into());
+            }
+            let p: u32 = cli
+                .flag("procs")
+                .unwrap_or("16")
+                .parse()
+                .map_err(|_| "bad --procs")?;
+            let params = cli.params();
+            let rows = harness::wait_table(p, &spec, &params);
+            let mut s = format!(
+                "Waiting time at {p} ranks (paper Section 6.1.1)\n  {:16} {:>12} {:>18}\n",
+                "app", "blocking", "latency-hiding"
+            );
+            for (app, blk, lh) in rows {
+                s.push_str(&format!(
+                    "  {:16} {:>11.1}% {:>17.1}%\n",
+                    app.name(),
+                    blk,
+                    lh
+                ));
+            }
+            Ok(s)
+        }
+        "fig19" => {
+            let ps = cli.procs_list(&[8, 16, 32, 64, 128]);
+            let params = cli.params();
+            let rows = harness::figure19(&ps, &spec, &params);
+            let mut s = String::from(
+                "Fig. 19 — N-body by-node vs by-core (speedup)\n    P |  by-node |  by-core\n",
+            );
+            for (p, bn, bc) in rows {
+                s.push_str(&format!(
+                    "  {:>3} | {:>8.2} | {:>8.2}\n",
+                    p, bn.speedup, bc.speedup
+                ));
+            }
+            Ok(s)
+        }
+        "machine" => {
+            let mut o = Json::obj();
+            o.push("nodes", (spec.nodes as u64).into());
+            o.push("cores_per_node", (spec.cores_per_node as u64).into());
+            o.push("flops_per_core", spec.flops_per_core.into());
+            o.push("node_mem_bw", spec.node_mem_bw.into());
+            o.push("net_alpha", spec.net_alpha.into());
+            o.push("net_beta", spec.net_beta.into());
+            Ok(o.render())
+        }
+        "apps" => Ok(AppId::all()
+            .iter()
+            .map(|a| format!("{} (Fig. {})", a.name(), a.figure()))
+            .collect::<Vec<_>>()
+            .join("\n")),
+        "help" | "--help" | "-h" => Ok(HELP.to_string()),
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let cli = Cli::parse(&args("run --app jacobi --procs 8 --json")).unwrap();
+        assert_eq!(cli.cmd, "run");
+        assert_eq!(cli.flag("app"), Some("jacobi"));
+        assert_eq!(cli.flag("procs"), Some("8"));
+        assert_eq!(cli.flag("json"), Some("true"));
+    }
+
+    #[test]
+    fn parse_equals_form() {
+        let cli = Cli::parse(&args("sweep --app=knn --procs=1,2,4")).unwrap();
+        assert_eq!(cli.flag("app"), Some("knn"));
+        assert_eq!(cli.procs_list(&[9]), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn run_command_executes() {
+        let out = run(&Cli::parse(&args(
+            "run --app black_scholes --procs 2 --scale 0.05 --iters 1",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("speedup"));
+    }
+
+    #[test]
+    fn machine_prints_table1() {
+        let out = run(&Cli::parse(&args("machine")).unwrap()).unwrap();
+        assert!(out.contains("\"nodes\":16"));
+        assert!(out.contains("\"cores_per_node\":8"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&Cli::parse(&args("bogus")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn apps_lists_eight() {
+        let out = run(&Cli::parse(&args("apps")).unwrap()).unwrap();
+        assert_eq!(out.lines().count(), 8);
+    }
+}

@@ -1,0 +1,7 @@
+//! The coordinator CLI: run benchmarks, sweeps and reports from the
+//! command line. Argument parsing is hand-rolled (offline environment,
+//! no clap) but follows the usual `--flag value` conventions.
+
+pub mod cli;
+
+pub use cli::{main_with_args, Cli};

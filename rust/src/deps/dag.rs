@@ -1,0 +1,179 @@
+//! Full-DAG dependency baseline (paper Section 4).
+//!
+//! Nodes are operations, edges are conflicts between their access-nodes.
+//! Insertion compares the new operation against **every** live node —
+//! O(n) per insertion, O(n²) per batch — which is precisely the overhead
+//! the paper's heuristic eliminates. Kept as (a) the correctness oracle
+//! for [`super::HeuristicDeps`] (identical conflict semantics ⇒ identical
+//! ready-set evolution) and (b) the baseline of the Section 5.7.2
+//! overhead ablation (`benches/ablation_deps.rs`).
+
+use super::DepSystem;
+use crate::types::OpId;
+use crate::ufunc::{Access, OpNode};
+
+#[derive(Default)]
+pub struct DagDeps {
+    /// Access lists of every inserted op (dense by OpId).
+    accesses: Vec<Vec<Access>>,
+    /// Outgoing edges: completed(op) unlocks these.
+    succs: Vec<Vec<OpId>>,
+    indeg: Vec<u32>,
+    live: Vec<bool>,
+    inserted: Vec<bool>,
+    ready: Vec<OpId>,
+    pending: usize,
+}
+
+impl DagDeps {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, id: OpId) {
+        let need = id.idx() + 1;
+        if self.accesses.len() < need {
+            self.accesses.resize_with(need, Vec::new);
+            self.succs.resize_with(need, Vec::new);
+            self.indeg.resize(need, 0);
+            self.live.resize(need, false);
+            self.inserted.resize(need, false);
+        }
+    }
+
+    /// Number of live (inserted, not completed) nodes — for the ablation.
+    pub fn live_nodes(&self) -> usize {
+        self.live.iter().filter(|l| **l).count()
+    }
+}
+
+fn conflict(a: &[Access], b: &[Access]) -> bool {
+    a.iter().any(|x| b.iter().any(|y| x.conflicts(y)))
+}
+
+impl DepSystem for DagDeps {
+    fn insert(&mut self, op: &OpNode) {
+        self.ensure(op.id);
+        let mut indeg = 0u32;
+        // The O(n) scan the paper's Section 4 complains about.
+        for prev in 0..self.accesses.len() {
+            if !self.live[prev] || prev == op.id.idx() {
+                continue;
+            }
+            if conflict(&self.accesses[prev], &op.accesses) {
+                self.succs[prev].push(op.id);
+                indeg += 1;
+            }
+        }
+        self.accesses[op.id.idx()] = op.accesses.clone();
+        self.indeg[op.id.idx()] = indeg;
+        self.live[op.id.idx()] = true;
+        self.inserted[op.id.idx()] = true;
+        self.pending += 1;
+        if indeg == 0 {
+            self.ready.push(op.id);
+        }
+    }
+
+    fn take_ready(&mut self) -> Vec<OpId> {
+        std::mem::take(&mut self.ready)
+    }
+
+    fn complete(&mut self, op: OpId) {
+        assert!(self.live[op.idx()], "complete of non-live op {op:?}");
+        assert_eq!(self.indeg[op.idx()], 0, "completing blocked op {op:?}");
+        self.live[op.idx()] = false;
+        self.pending -= 1;
+        for succ in std::mem::take(&mut self.succs[op.idx()]) {
+            let d = &mut self.indeg[succ.idx()];
+            *d -= 1;
+            if *d == 0 {
+                self.ready.push(succ);
+            }
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BaseId;
+    use crate::ufunc::Access;
+    use crate::util::rng::Rng;
+
+    fn op(id: u32, accesses: Vec<Access>) -> OpNode {
+        super::super::tests::op(id, accesses)
+    }
+
+    /// Oracle test: heuristic and DAG expose identical ready-set
+    /// evolutions on randomized access patterns.
+    #[test]
+    fn heuristic_matches_dag_on_random_streams() {
+        let mut rng = Rng::new(0xD15C0);
+        for trial in 0..50 {
+            let n_ops = 40;
+            let ops: Vec<OpNode> = (0..n_ops)
+                .map(|i| {
+                    let n_acc = rng.range(1, 4);
+                    let accesses = (0..n_acc)
+                        .map(|_| {
+                            let base = BaseId(rng.range(0, 3) as u32);
+                            let block = rng.below(3);
+                            let lo = rng.below(40);
+                            let hi = lo + 1 + rng.below(20);
+                            if rng.chance(0.4) {
+                                Access::write_block(base, block, (lo, hi))
+                            } else {
+                                Access::read_block(base, block, (lo, hi))
+                            }
+                        })
+                        .collect();
+                    op(i, accesses)
+                })
+                .collect();
+
+            let mut h = super::super::HeuristicDeps::new();
+            let mut g = DagDeps::new();
+            for o in &ops {
+                h.insert(o);
+                g.insert(o);
+            }
+            let mut done = 0;
+            loop {
+                let mut rh = h.take_ready();
+                let mut rg = g.take_ready();
+                rh.sort();
+                rg.sort();
+                assert_eq!(rh, rg, "trial {trial}: ready sets diverged");
+                if rh.is_empty() {
+                    break;
+                }
+                // Complete in a deterministic shuffled order.
+                for id in rh {
+                    h.complete(id);
+                    g.complete(id);
+                    done += 1;
+                }
+            }
+            assert_eq!(done, n_ops, "trial {trial}: not all ops completed");
+            assert_eq!(h.pending(), 0);
+            assert_eq!(g.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn live_nodes_tracks() {
+        let b = BaseId(0);
+        let mut g = DagDeps::new();
+        g.insert(&op(0, vec![Access::write_block(b, 0, (0, 10))]));
+        g.insert(&op(1, vec![Access::write_block(b, 0, (0, 10))]));
+        assert_eq!(g.live_nodes(), 2);
+        g.take_ready();
+        g.complete(OpId(0));
+        assert_eq!(g.live_nodes(), 1);
+    }
+}

@@ -1,0 +1,285 @@
+//! The paper's dependency heuristic (Section 5.7.2, Figs. 7–8).
+//!
+//! Instead of a global DAG, every location (base-block or staging buffer)
+//! keeps a **dependency-list** of access-nodes in insertion order. An
+//! operation-node's **reference counter** is the number of earlier, still
+//! live, conflicting access-nodes across all its accesses. Operations
+//! whose counter is zero sit in the **ready queue** (O(1) retrieval —
+//! invariant 1 of Section 5.7).
+//!
+//! When an operation completes, its access-nodes are removed from their
+//! lists; for every *later* access-node in the same list that conflicts,
+//! the owning operation's counter is decremented, and operations reaching
+//! zero move to the ready queue — exactly the flow of Fig. 7.
+//!
+//! Complexity: insertion scans only the lists of the touched locations.
+//! In the common case — operations spread evenly over the blocks of the
+//! involved arrays — each list stays short, so insertion is O(1) amortized
+//! versus O(n) for the full DAG (measured in benches/ablation_deps.rs).
+
+use super::DepSystem;
+use crate::types::OpId;
+use crate::ufunc::{Loc, OpNode};
+use crate::util::fxhash::FxHashMap;
+
+/// One access-node in a dependency-list.
+#[derive(Clone, Copy, Debug)]
+struct AccessNode {
+    op: OpId,
+    lo: u64,
+    hi: u64,
+    write: bool,
+    alive: bool,
+}
+
+impl AccessNode {
+    #[inline]
+    fn conflicts(&self, other: &AccessNode) -> bool {
+        (self.write || other.write) && self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+/// Dependency-list of one location plus a tombstone counter for
+/// amortized compaction.
+#[derive(Default, Debug)]
+struct DepList {
+    nodes: Vec<AccessNode>,
+    dead: usize,
+}
+
+#[derive(Default)]
+pub struct HeuristicDeps {
+    /// Dense dependency-lists; `list_ids` interns each touched location
+    /// to an index, so the completion path is pure indexing with no
+    /// hashing at all (§Perf-4 in EXPERIMENTS.md).
+    lists: Vec<DepList>,
+    list_ids: FxHashMap<Loc, u32>,
+    /// refcount per op (indexed by OpId).
+    refcount: Vec<u32>,
+    /// Flat arena of (list id, node index) access entries — one
+    /// contiguous span per op (`spans`), avoiding a Vec allocation per
+    /// operation (§Perf-3 in EXPERIMENTS.md).
+    entry_data: Vec<(u32, u32)>,
+    /// Per-op `[start, end)` into `entry_data`.
+    spans: Vec<(u32, u32)>,
+    ready: Vec<OpId>,
+    pending: usize,
+    completed: Vec<bool>,
+}
+
+impl HeuristicDeps {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, id: OpId) {
+        let need = id.idx() + 1;
+        if self.refcount.len() < need {
+            self.refcount.resize(need, 0);
+            self.spans.resize(need, (0, 0));
+            self.completed.resize(need, false);
+        }
+    }
+
+    /// Compact a list when more than half of it is tombstones, remapping
+    /// the stored indices of the surviving ops.
+    fn maybe_compact(
+        list: &mut DepList,
+        entry_data: &mut [(u32, u32)],
+        spans: &[(u32, u32)],
+        lid: u32,
+    ) {
+        if list.dead * 2 <= list.nodes.len() || list.nodes.len() < 32 {
+            return;
+        }
+        let mut new_nodes = Vec::with_capacity(list.nodes.len() - list.dead);
+        for (i, n) in list.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            let new = new_nodes.len() as u32;
+            new_nodes.push(*n);
+            // Update the owning op's stored index.
+            let (s, e) = spans[n.op.idx()];
+            for entry in entry_data[s as usize..e as usize].iter_mut() {
+                if entry.0 == lid && entry.1 == i as u32 {
+                    entry.1 = new;
+                }
+            }
+        }
+        list.nodes = new_nodes;
+        list.dead = 0;
+    }
+}
+
+impl DepSystem for HeuristicDeps {
+    fn insert(&mut self, op: &OpNode) {
+        self.ensure(op.id);
+        let start = self.entry_data.len() as u32;
+        let mut count = 0u32;
+        for a in &op.accesses {
+            let node = AccessNode {
+                op: op.id,
+                lo: a.lo,
+                hi: a.hi,
+                write: a.write,
+                alive: true,
+            };
+            let lid = *self.list_ids.entry(a.loc).or_insert_with(|| {
+                self.lists.push(DepList::default());
+                (self.lists.len() - 1) as u32
+            });
+            let list = &mut self.lists[lid as usize];
+            for e in &list.nodes {
+                if e.alive && e.op != op.id && e.conflicts(&node) {
+                    count += 1;
+                }
+            }
+            self.entry_data.push((lid, list.nodes.len() as u32));
+            list.nodes.push(node);
+        }
+        self.spans[op.id.idx()] = (start, self.entry_data.len() as u32);
+        self.refcount[op.id.idx()] = count;
+        self.pending += 1;
+        if count == 0 {
+            self.ready.push(op.id);
+        }
+    }
+
+    fn take_ready(&mut self) -> Vec<OpId> {
+        std::mem::take(&mut self.ready)
+    }
+
+    fn complete(&mut self, op: OpId) {
+        assert!(
+            !self.completed[op.idx()],
+            "operation {op:?} completed twice"
+        );
+        assert_eq!(
+            self.refcount[op.idx()],
+            0,
+            "completing {op:?} with nonzero refcount"
+        );
+        self.completed[op.idx()] = true;
+        self.pending -= 1;
+        let (s, e) = self.spans[op.idx()];
+        // One pass per access-node: tombstone it, repay the reference
+        // counts of later conflicting access-nodes (sibling accesses of
+        // the same op are excluded by the `other.op != op` check, so a
+        // separate tombstone pass is unnecessary), then compact if due.
+        for k in s..e {
+            let (lid, idx) = self.entry_data[k as usize];
+            let idx = idx as usize;
+            let list = &mut self.lists[lid as usize];
+            debug_assert!(list.nodes[idx].alive);
+            list.nodes[idx].alive = false;
+            list.dead += 1;
+            let me = list.nodes[idx];
+            for j in idx + 1..list.nodes.len() {
+                let other = list.nodes[j];
+                if other.alive && other.op != op && me.conflicts(&other) {
+                    let rc = &mut self.refcount[other.op.idx()];
+                    debug_assert!(*rc > 0, "refcount underflow on {:?}", other.op);
+                    *rc -= 1;
+                    if *rc == 0 {
+                        self.ready.push(other.op);
+                    }
+                }
+            }
+            Self::maybe_compact(list, &mut self.entry_data, &self.spans, lid);
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BaseId;
+    use crate::ufunc::Access;
+
+    fn op(id: u32, accesses: Vec<Access>) -> OpNode {
+        super::super::tests::op(id, accesses)
+    }
+
+    #[test]
+    fn duplicate_conflict_pairs_balance() {
+        // op1 reads the same written interval through two accesses: the
+        // refcount must reach exactly zero when op0 completes.
+        let b = BaseId(0);
+        let mut d = HeuristicDeps::new();
+        d.insert(&op(0, vec![Access::write_block(b, 0, (0, 100))]));
+        d.insert(&op(
+            1,
+            vec![
+                Access::read_block(b, 0, (10, 20)),
+                Access::read_block(b, 0, (15, 30)),
+            ],
+        ));
+        assert_eq!(d.refcount[1], 2);
+        assert_eq!(d.take_ready(), vec![OpId(0)]);
+        d.complete(OpId(0));
+        assert_eq!(d.refcount[1], 0);
+        assert_eq!(d.take_ready(), vec![OpId(1)]);
+    }
+
+    #[test]
+    fn compaction_preserves_semantics() {
+        let b = BaseId(0);
+        let mut d = HeuristicDeps::new();
+        // 64 independent writers on disjoint intervals, then complete all:
+        // triggers compaction; then a reader of everything must be ready
+        // only after the last writer.
+        for i in 0..64 {
+            d.insert(&op(
+                i,
+                vec![Access::write_block(b, 0, (i as u64 * 10, i as u64 * 10 + 10))],
+            ));
+        }
+        let ready = d.take_ready();
+        assert_eq!(ready.len(), 64);
+        for id in &ready[..63] {
+            d.complete(*id);
+        }
+        d.insert(&op(64, vec![Access::read_block(b, 0, (0, 640))]));
+        assert!(d.take_ready().is_empty(), "one writer still pending");
+        d.complete(OpId(63));
+        assert_eq!(d.take_ready(), vec![OpId(64)]);
+    }
+
+    #[test]
+    fn long_chain_fifo_order() {
+        // w -> w -> w on the same interval completes strictly in order.
+        let b = BaseId(0);
+        let mut d = HeuristicDeps::new();
+        for i in 0..10 {
+            d.insert(&op(i, vec![Access::write_block(b, 0, (0, 8))]));
+        }
+        let mut order = Vec::new();
+        loop {
+            let r = d.take_ready();
+            if r.is_empty() {
+                break;
+            }
+            for id in r {
+                order.push(id);
+                d.complete(id);
+            }
+        }
+        assert_eq!(order, (0..10).map(OpId).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "completed twice")]
+    fn double_complete_panics() {
+        let b = BaseId(0);
+        let mut d = HeuristicDeps::new();
+        d.insert(&op(0, vec![Access::write_block(b, 0, (0, 1))]));
+        d.take_ready();
+        d.complete(OpId(0));
+        d.complete(OpId(0));
+    }
+}

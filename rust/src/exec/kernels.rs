@@ -1,0 +1,213 @@
+//! Native Rust implementations of the block kernels.
+//!
+//! Semantics mirror the pure-jnp oracles in
+//! `python/compile/kernels/ref.py` exactly (same formulas, f32
+//! arithmetic), so a run through the native backend, the PJRT backend
+//! and the JAX reference all agree — the end-to-end correctness chain.
+
+use crate::ufunc::Kernel;
+
+/// Abramowitz & Stegun 7.1.26 erf approximation (|ε| ≤ 1.5e-7),
+/// computed in f64 and cast down — adequate against jax's erf at the
+/// e2e tolerance of 1e-4.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn cnd(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Black-Scholes constants baked into the AOT artifact
+/// (python/compile/model.py::g_black_scholes).
+pub const BS_R: f64 = 0.02;
+pub const BS_V: f64 = 0.3;
+
+/// Execute `kernel` over `inputs`, producing `elems` output elements
+/// (reductions produce a single element regardless).
+pub fn run(kernel: Kernel, inputs: &[&[f32]], elems: usize) -> Vec<f32> {
+    match kernel {
+        Kernel::Copy => inputs[0].to_vec(),
+        Kernel::Add => zip2(inputs, elems, |a, b| a + b),
+        Kernel::Sub => zip2(inputs, elems, |a, b| a - b),
+        Kernel::Mul => zip2(inputs, elems, |a, b| a * b),
+        Kernel::Div => zip2(inputs, elems, |a, b| a / b),
+        Kernel::Axpy(alpha) => zip2(inputs, elems, move |a, b| a + alpha * b),
+        Kernel::Scale(alpha) => inputs[0].iter().map(|&a| alpha * a).collect(),
+        Kernel::AbsDiff => zip2(inputs, elems, |a, b| (a - b).abs()),
+        Kernel::Stencil5 => {
+            let (c, u, d, l, r) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+            (0..elems)
+                .map(|i| 0.2 * (c[i] + u[i] + d[i] + l[i] + r[i]))
+                .collect()
+        }
+        Kernel::BlackScholes => {
+            let (s, x, t) = (inputs[0], inputs[1], inputs[2]);
+            (0..elems)
+                .map(|i| {
+                    let (s, x, t) = (s[i] as f64, x[i] as f64, t[i] as f64);
+                    let sqrt_t = t.sqrt();
+                    let d1 = ((s / x).ln() + (BS_R + BS_V * BS_V / 2.0) * t) / (BS_V * sqrt_t);
+                    let d2 = d1 - BS_V * sqrt_t;
+                    (s * cnd(d1) - x * (-BS_R * t).exp() * cnd(d2)) as f32
+                })
+                .collect()
+        }
+        Kernel::Fractal(max_iter) => {
+            let (cre, cim) = (inputs[0], inputs[1]);
+            (0..elems)
+                .map(|i| {
+                    let (cre, cim) = (cre[i], cim[i]);
+                    let (mut zre, mut zim) = (0.0f32, 0.0f32);
+                    let mut count = 0.0f32;
+                    for _ in 0..max_iter {
+                        let zre2 = zre * zre;
+                        let zim2 = zim * zim;
+                        if zre2 + zim2 <= 4.0 {
+                            count += 1.0;
+                            let new_zim = 2.0 * zre * zim + cim;
+                            zre = zre2 - zim2 + cre;
+                            zim = new_zim;
+                        }
+                    }
+                    count
+                })
+                .collect()
+        }
+        Kernel::MatmulAcc { n, k, m } => {
+            let (c, a, b) = (inputs[0], inputs[1], inputs[2]);
+            let (n, k, m) = (n as usize, k as usize, m as usize);
+            debug_assert_eq!(c.len(), n * m);
+            debug_assert_eq!(a.len(), n * k);
+            debug_assert_eq!(b.len(), k * m);
+            let mut out = c.to_vec();
+            for i in 0..n {
+                for kk in 0..k {
+                    let aik = a[i * k + kk];
+                    let brow = &b[kk * m..(kk + 1) * m];
+                    let orow = &mut out[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        orow[j] += aik * brow[j];
+                    }
+                }
+            }
+            out
+        }
+        Kernel::PartialSum => {
+            // f64 accumulator to match jnp.sum's pairwise accuracy class.
+            vec![inputs[0].iter().map(|&x| x as f64).sum::<f64>() as f32]
+        }
+        Kernel::PartialAbsDiffSum => {
+            let (a, b) = (inputs[0], inputs[1]);
+            vec![
+                a.iter()
+                    .zip(b)
+                    .map(|(&x, &y)| (x - y).abs() as f64)
+                    .sum::<f64>() as f32,
+            ]
+        }
+        Kernel::AccumSum => {
+            vec![inputs.iter().map(|s| s[0] as f64).sum::<f64>() as f32]
+        }
+    }
+}
+
+fn zip2(inputs: &[&[f32]], elems: usize, f: impl Fn(f32, f32) -> f32) -> Vec<f32> {
+    let (a, b) = (inputs[0], inputs[1]);
+    debug_assert!(a.len() >= elems && b.len() >= elems);
+    (0..elems).map(|i| f(a[i], b[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_kernels() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [10.0f32, 20.0, 30.0];
+        assert_eq!(run(Kernel::Add, &[&a, &b], 3), vec![11.0, 22.0, 33.0]);
+        assert_eq!(run(Kernel::Sub, &[&b, &a], 3), vec![9.0, 18.0, 27.0]);
+        assert_eq!(run(Kernel::Mul, &[&a, &b], 3), vec![10.0, 40.0, 90.0]);
+        assert_eq!(
+            run(Kernel::Axpy(0.5), &[&a, &b], 3),
+            vec![6.0, 12.0, 18.0]
+        );
+        assert_eq!(run(Kernel::Scale(2.0), &[&a], 3), vec![2.0, 4.0, 6.0]);
+        assert_eq!(run(Kernel::AbsDiff, &[&a, &b], 3), vec![9.0, 18.0, 27.0]);
+        assert_eq!(run(Kernel::Copy, &[&a], 3), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stencil5_is_average() {
+        let one = [1.0f32; 4];
+        let out = run(Kernel::Stencil5, &[&one, &one, &one, &one, &one], 4);
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // Reference values (scipy.special.erf).
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn black_scholes_deep_itm() {
+        // S >> X: call -> S - X*exp(-rT).
+        let s = [1000.0f32];
+        let x = [10.0f32];
+        let t = [1.0f32];
+        let out = run(Kernel::BlackScholes, &[&s, &x, &t], 1);
+        let want = 1000.0 - 10.0 * (-BS_R as f32).exp();
+        assert!((out[0] - want).abs() < 1e-2, "{} vs {want}", out[0]);
+    }
+
+    #[test]
+    fn fractal_interior_and_escape() {
+        let cre = [0.0f32, 10.0];
+        let cim = [0.0f32, 0.0];
+        let out = run(Kernel::Fractal(32), &[&cre, &cim], 2);
+        assert_eq!(out[0], 32.0, "origin never escapes");
+        assert_eq!(out[1], 1.0, "far point escapes after first check");
+    }
+
+    #[test]
+    fn matmul_acc_small() {
+        // C += A@B: A=[[1,2],[3,4]], B=I, C=ones.
+        let c = [1.0f32; 4];
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0];
+        let out = run(Kernel::MatmulAcc { n: 2, k: 2, m: 2 }, &[&c, &a, &b], 4);
+        assert_eq!(out, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [2.0f32, 0.0, 5.0];
+        assert_eq!(run(Kernel::PartialSum, &[&a], 3), vec![6.0]);
+        assert_eq!(run(Kernel::PartialAbsDiffSum, &[&a, &b], 3), vec![5.0]);
+        let p1 = [6.0f32];
+        let p2 = [5.0f32];
+        assert_eq!(run(Kernel::AccumSum, &[&p1, &p2], 2), vec![11.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Execution backends: what actually happens to data when the scheduler
+//! runs an operation.
+//!
+//! * [`SimBackend`] — nothing; pure timing simulation (the strong-scaling
+//!   sweeps run hundreds of virtual ranks on one host core this way).
+//! * [`NativeBackend`] — real numerics in Rust over a [`ClusterStore`];
+//!   the correctness oracle for the distributed execution.
+//! * `PjrtBackend` ([`crate::runtime`]) — real numerics through the AOT
+//!   HLO artifacts produced by the JAX/Pallas layer, dispatched per
+//!   kernel when the block shape matches the artifact contract, falling
+//!   back to native kernels otherwise.
+
+pub mod kernels;
+
+use crate::array::ClusterStore;
+use crate::layout::Layout;
+use crate::types::{Rank, Tag};
+use crate::ufunc::{ComputeTask, Dst, Operand, Region};
+
+/// Backend interface invoked by the schedulers in dependency order.
+pub trait Backend {
+    /// Execute one compute task on `rank`.
+    fn exec_compute(&mut self, rank: Rank, task: &ComputeTask);
+
+    /// Move `region` (on `from`) into `to`'s staging area under `tag`.
+    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, region: &Region);
+
+    /// Read a staged scalar (reduction results) after a flush.
+    fn staged_scalar(&self, rank: Rank, tag: Tag) -> Option<f64> {
+        let _ = (rank, tag);
+        None
+    }
+
+    /// Allocate physical blocks for a new array-base (data backends).
+    fn alloc_base(&mut self, layout: &Layout) {
+        let _ = layout;
+    }
+
+    /// Scatter a dense row-major array into the owning blocks.
+    fn scatter(&mut self, layout: &Layout, data: &[f32]) {
+        let _ = (layout, data);
+    }
+
+    /// Gather a whole base into a dense buffer, if data is materialized.
+    fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
+        let _ = layout;
+        None
+    }
+
+    /// Drop staging buffers from the previous flush batch (tags reset).
+    fn clear_stages(&mut self) {}
+
+    /// Downcasting hook: retrieve backend-specific state (e.g. the PJRT
+    /// dispatch counters) from a boxed backend.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Timing-only backend.
+#[derive(Default)]
+pub struct SimBackend;
+
+impl Backend for SimBackend {
+    fn exec_compute(&mut self, _rank: Rank, _task: &ComputeTask) {}
+    fn exec_transfer(&mut self, _from: Rank, _to: Rank, _tag: Tag, _region: &Region) {}
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Real numerics in Rust.
+pub struct NativeBackend {
+    pub store: ClusterStore,
+}
+
+impl NativeBackend {
+    pub fn new(store: ClusterStore) -> Self {
+        NativeBackend { store }
+    }
+
+    /// Gather a task's input buffers on `rank`.
+    pub(crate) fn gather_inputs(store: &ClusterStore, rank: Rank, task: &ComputeTask) -> Vec<Vec<f32>> {
+        task.inputs
+            .iter()
+            .map(|op| match op {
+                Operand::Local(r) => store.ranks[rank.idx()].extract(r),
+                Operand::Staged(tag) => store.ranks[rank.idx()].stage(*tag).to_vec(),
+            })
+            .collect()
+    }
+
+    pub(crate) fn write_dst(store: &mut ClusterStore, rank: Rank, dst: &Dst, out: Vec<f32>) {
+        match dst {
+            Dst::Block(r) => store.ranks[rank.idx()].write_region(r, &out),
+            Dst::Stage(tag) => store.ranks[rank.idx()].put_stage(*tag, out),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn exec_compute(&mut self, rank: Rank, task: &ComputeTask) {
+        let inputs = Self::gather_inputs(&self.store, rank, task);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = kernels::run(task.kernel, &refs, task.elems as usize);
+        Self::write_dst(&mut self.store, rank, &task.dst, out);
+    }
+
+    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, region: &Region) {
+        // Scalar-placeholder sends (reduction partials) source from the
+        // sender's stage under the transfer's own tag; block sends
+        // serialize the region.
+        let data = if region.is_scalar_placeholder() {
+            self.store.ranks[from.idx()].stage(tag).to_vec()
+        } else {
+            self.store.ranks[from.idx()].extract(region)
+        };
+        self.store.ranks[to.idx()].put_stage(tag, data);
+    }
+
+    fn staged_scalar(&self, rank: Rank, tag: Tag) -> Option<f64> {
+        if self.store.ranks[rank.idx()].has_stage(tag) {
+            Some(self.store.ranks[rank.idx()].stage(tag)[0] as f64)
+        } else {
+            None
+        }
+    }
+
+    fn alloc_base(&mut self, layout: &Layout) {
+        self.store.alloc_base(layout);
+    }
+
+    fn scatter(&mut self, layout: &Layout, data: &[f32]) {
+        self.store.scatter(layout, data);
+    }
+
+    fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
+        Some(self.store.gather(layout))
+    }
+
+    fn clear_stages(&mut self) {
+        for r in self.store.ranks.iter_mut() {
+            r.clear_stages();
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::types::{BaseId, DType};
+    use crate::ufunc::Kernel;
+
+    fn store1(vals: &[f32]) -> (Registry, ClusterStore, BaseId) {
+        let mut reg = Registry::new(1);
+        let a = reg.alloc(vec![vals.len() as u64], vals.len() as u64, DType::F32);
+        let mut cs = ClusterStore::new(1);
+        cs.alloc_base(reg.layout(a));
+        cs.scatter(reg.layout(a), vals);
+        (reg, cs, a)
+    }
+
+    #[test]
+    fn native_add_roundtrip() {
+        let (reg, cs, a) = store1(&[1.0, 2.0, 3.0, 4.0]);
+        let mut be = NativeBackend::new(cs);
+        let r = Region {
+            base: a,
+            block: 0,
+            row0: 0,
+            nrows: 4,
+            col0: 0,
+            ncols: 1,
+            row_stride: 1,
+        };
+        let task = ComputeTask {
+            kernel: Kernel::Add,
+            inputs: vec![Operand::Local(r.clone()), Operand::Local(r.clone())],
+            dst: Dst::Block(r),
+            elems: 4,
+        };
+        be.exec_compute(Rank(0), &task);
+        assert_eq!(be.store.gather(reg.layout(a)), vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn transfer_stages_data() {
+        let mut reg = Registry::new(2);
+        let a = reg.alloc(vec![4], 2, DType::F32);
+        let mut cs = ClusterStore::new(2);
+        cs.alloc_base(reg.layout(a));
+        cs.scatter(reg.layout(a), &[1.0, 2.0, 3.0, 4.0]);
+        let mut be = NativeBackend::new(cs);
+        // Block 1 (rows 2..4) lives on rank 1; ship it to rank 0.
+        let r = Region {
+            base: a,
+            block: 1,
+            row0: 0,
+            nrows: 2,
+            col0: 0,
+            ncols: 1,
+            row_stride: 1,
+        };
+        be.exec_transfer(Rank(1), Rank(0), Tag(5), &r);
+        assert_eq!(be.store.ranks[0].stage(Tag(5)), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn staged_scalar_reads() {
+        let cs = ClusterStore::new(1);
+        let mut be = NativeBackend::new(cs);
+        be.store.ranks[0].put_stage(Tag(9), vec![42.5]);
+        assert_eq!(be.staged_scalar(Rank(0), Tag(9)), Some(42.5));
+        assert_eq!(be.staged_scalar(Rank(0), Tag(10)), None);
+    }
+}

@@ -1,0 +1,357 @@
+//! Strong-scaling experiment harness: regenerates every figure of the
+//! paper's evaluation (Figs. 11–19) and the Section 6.1.1 waiting-time
+//! table.
+//!
+//! For each rank count the harness runs the benchmark twice — once with
+//! the latency-hiding scheduler, once with blocking communication — and
+//! reports speedup against the sequential NumPy baseline plus the
+//! waiting-time percentage, i.e. exactly the series the paper plots.
+
+use crate::apps::{record, AppId, AppParams};
+use crate::cluster::{MachineSpec, Placement};
+use crate::lazy::Context;
+use crate::metrics::RunReport;
+use crate::sched::{DepsKind, Policy, SchedCfg};
+use crate::types::VTime;
+use crate::util::json::Json;
+
+/// The rank counts of the paper's figures.
+pub const PAPER_PS: [u32; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub makespan: VTime,
+    pub speedup: f64,
+    pub wait_pct: f64,
+    pub utilization: f64,
+    pub bytes_inter: u64,
+}
+
+impl RunMetrics {
+    fn from(report: &RunReport, baseline: VTime) -> Self {
+        RunMetrics {
+            makespan: report.makespan,
+            speedup: baseline / report.makespan.max(1e-12),
+            wait_pct: report.wait_pct(),
+            utilization: report.utilization(),
+            bytes_inter: report.bytes_inter,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("makespan", self.makespan.into());
+        o.push("speedup", self.speedup.into());
+        o.push("wait_pct", self.wait_pct.into());
+        o.push("utilization", self.utilization.into());
+        o.push("bytes_inter", self.bytes_inter.into());
+        o
+    }
+}
+
+/// One point on a strong-scaling curve.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub p: u32,
+    pub lh: RunMetrics,
+    pub blocking: RunMetrics,
+}
+
+/// A whole figure: the two curves of the paper's speedup plots.
+#[derive(Clone, Debug)]
+pub struct FigureData {
+    pub app: AppId,
+    pub baseline: VTime,
+    pub points: Vec<ScalePoint>,
+}
+
+/// Execute one (app, P, policy, placement) cell.
+pub fn run_once(
+    app: AppId,
+    p: u32,
+    policy: Policy,
+    placement: Placement,
+    spec: &MachineSpec,
+    params: &AppParams,
+) -> (RunReport, VTime) {
+    run_once_cfg(app, p, policy, placement, spec, params, false)
+}
+
+/// [`run_once`] with the §7 cache-locality scheduling extension toggle.
+pub fn run_once_cfg(
+    app: AppId,
+    p: u32,
+    policy: Policy,
+    placement: Placement,
+    spec: &MachineSpec,
+    params: &AppParams,
+    locality: bool,
+) -> (RunReport, VTime) {
+    let mut cfg = SchedCfg::new(spec.clone(), p);
+    cfg.placement = placement;
+    cfg.deps = DepsKind::Heuristic;
+    cfg.locality = locality;
+    let mut ctx = Context::sim(cfg, policy);
+    record(app, &mut ctx, params);
+    let baseline = ctx.baseline;
+    let report = ctx.finish().expect("benchmark must complete");
+    (report, baseline)
+}
+
+/// Produce one speedup figure (Figs. 11–18).
+pub fn figure(
+    app: AppId,
+    ps: &[u32],
+    spec: &MachineSpec,
+    params: &AppParams,
+) -> FigureData {
+    let mut points = Vec::new();
+    let mut baseline = 0.0;
+    for &p in ps {
+        let (lh_rep, base) = run_once(app, p, Policy::LatencyHiding, Placement::ByNode, spec, params);
+        let (bl_rep, _) = run_once(app, p, Policy::Blocking, Placement::ByNode, spec, params);
+        baseline = base;
+        points.push(ScalePoint {
+            p,
+            lh: RunMetrics::from(&lh_rep, base),
+            blocking: RunMetrics::from(&bl_rep, base),
+        });
+    }
+    FigureData {
+        app,
+        baseline,
+        points,
+    }
+}
+
+/// Fig. 19: by-node vs by-core placement of the N-body benchmark.
+pub fn figure19(
+    ps: &[u32],
+    spec: &MachineSpec,
+    params: &AppParams,
+) -> Vec<(u32, RunMetrics, RunMetrics)> {
+    ps.iter()
+        .filter(|&&p| p <= spec.cores_per_node * spec.nodes)
+        .map(|&p| {
+            let (by_node, base) = run_once(
+                AppId::Nbody,
+                p,
+                Policy::LatencyHiding,
+                Placement::ByNode,
+                spec,
+                params,
+            );
+            let (by_core, _) = run_once(
+                AppId::Nbody,
+                p,
+                Policy::LatencyHiding,
+                Placement::ByCore,
+                spec,
+                params,
+            );
+            (
+                p,
+                RunMetrics::from(&by_node, base),
+                RunMetrics::from(&by_core, base),
+            )
+        })
+        .collect()
+}
+
+impl FigureData {
+    /// The paper-style text table: one row per P, both schedulers.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Figure {} — {} (baseline: {:.3}s sequential NumPy)\n",
+            self.app.figure(),
+            self.app.name(),
+            self.baseline
+        ));
+        s.push_str(
+            "    P | speedup(LH) | speedup(blk) | wait%(LH) | wait%(blk) | util(LH)\n",
+        );
+        s.push_str(
+            "  ----+-------------+--------------+-----------+------------+---------\n",
+        );
+        for pt in &self.points {
+            s.push_str(&format!(
+                "  {:>3} | {:>11.2} | {:>12.2} | {:>9.1} | {:>10.1} | {:>7.2}\n",
+                pt.p,
+                pt.lh.speedup,
+                pt.blocking.speedup,
+                pt.lh.wait_pct,
+                pt.blocking.wait_pct,
+                pt.lh.utilization,
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("figure", (self.app.figure() as u64).into());
+        o.push("app", self.app.name().into());
+        o.push("baseline", self.baseline.into());
+        let pts = self
+            .points
+            .iter()
+            .map(|pt| {
+                let mut p = Json::obj();
+                p.push("p", (pt.p as u64).into());
+                p.push("lh", pt.lh.to_json());
+                p.push("blocking", pt.blocking.to_json());
+                p
+            })
+            .collect();
+        o.push("points", Json::Arr(pts));
+        o
+    }
+}
+
+/// The Section 6.1.1 waiting-time summary at P ranks: for each
+/// communication-bound app, wait% with blocking vs latency-hiding.
+pub fn wait_table(
+    p: u32,
+    spec: &MachineSpec,
+    params: &AppParams,
+) -> Vec<(AppId, f64, f64)> {
+    [AppId::Lbm2d, AppId::Lbm3d, AppId::Jacobi, AppId::JacobiStencil]
+        .into_iter()
+        .map(|app| {
+            let (bl, _) = run_once(app, p, Policy::Blocking, Placement::ByNode, spec, params);
+            let (lh, _) =
+                run_once(app, p, Policy::LatencyHiding, Placement::ByNode, spec, params);
+            (app, bl.wait_pct(), lh.wait_pct())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_produces_monotone_ps() {
+        let spec = MachineSpec::paper();
+        let fig = figure(
+            AppId::BlackScholes,
+            &[1, 2, 4],
+            &spec,
+            &AppParams::tiny(),
+        );
+        assert_eq!(fig.points.len(), 3);
+        assert!(fig.points[2].lh.speedup > fig.points[0].lh.speedup);
+        assert!(!fig.render_table().is_empty());
+    }
+
+    #[test]
+    fn stencil_lh_beats_blocking_at_16() {
+        let spec = MachineSpec::paper();
+        let params = AppParams {
+            scale: 0.25,
+            iters: 4,
+        };
+        let fig = figure(AppId::JacobiStencil, &[16], &spec, &params);
+        let pt = &fig.points[0];
+        assert!(
+            pt.lh.speedup > pt.blocking.speedup,
+            "LH {} must beat blocking {}",
+            pt.lh.speedup,
+            pt.blocking.speedup
+        );
+        assert!(
+            pt.lh.wait_pct < pt.blocking.wait_pct,
+            "LH wait {} must be below blocking {}",
+            pt.lh.wait_pct,
+            pt.blocking.wait_pct
+        );
+    }
+
+    #[test]
+    fn fig19_by_node_beats_by_core() {
+        let spec = MachineSpec::paper();
+        // Large enough that per-panel compute dominates scheduling
+        // overhead and hides the broadcast, so the memory-contention
+        // penalty of by-core placement is the deciding term (Fig. 19).
+        let params = AppParams {
+            scale: 2.0,
+            iters: 1,
+        };
+        let rows = figure19(&[8], &spec, &params);
+        let (_, by_node, by_core) = &rows[0];
+        assert!(
+            by_node.speedup > by_core.speedup,
+            "by-node {} must beat by-core {}",
+            by_node.speedup,
+            by_core.speedup
+        );
+    }
+
+    #[test]
+    fn locality_scheduling_helps_memory_bound_apps() {
+        // §7 extension: cache-aware ready-queue ordering must shorten
+        // the makespan of a memory-bound app and leave a flop-bound app
+        // essentially untouched.
+        let spec = MachineSpec::paper();
+        let params = AppParams {
+            scale: 1.0,
+            iters: 3,
+        };
+        let (fifo, _) = run_once_cfg(
+            AppId::JacobiStencil,
+            16,
+            Policy::LatencyHiding,
+            Placement::ByNode,
+            &spec,
+            &params,
+            false,
+        );
+        let (loc, _) = run_once_cfg(
+            AppId::JacobiStencil,
+            16,
+            Policy::LatencyHiding,
+            Placement::ByNode,
+            &spec,
+            &params,
+            true,
+        );
+        assert!(
+            loc.makespan < fifo.makespan * 0.98,
+            "locality must help the stencil: {} vs {}",
+            loc.makespan,
+            fifo.makespan
+        );
+        let (f_fifo, _) = run_once_cfg(
+            AppId::Fractal,
+            16,
+            Policy::LatencyHiding,
+            Placement::ByNode,
+            &spec,
+            &params,
+            false,
+        );
+        let (f_loc, _) = run_once_cfg(
+            AppId::Fractal,
+            16,
+            Policy::LatencyHiding,
+            Placement::ByNode,
+            &spec,
+            &params,
+            true,
+        );
+        let delta = (f_fifo.makespan / f_loc.makespan - 1.0).abs();
+        assert!(delta < 0.05, "flop-bound app should barely move: {delta}");
+    }
+
+    #[test]
+    fn wait_table_has_four_rows() {
+        let spec = MachineSpec::paper();
+        let rows = wait_table(4, &spec, &AppParams::tiny());
+        assert_eq!(rows.len(), 4);
+        for (app, blk, lh) in rows {
+            assert!(blk >= 0.0 && lh >= 0.0, "{}", app.name());
+        }
+    }
+}

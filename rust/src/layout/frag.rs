@@ -1,0 +1,223 @@
+//! Fragment overlay: the common refinement of several views' sub-view-block
+//! decompositions.
+//!
+//! An elementwise ufunc over k same-shaped views must be split so that each
+//! piece touches exactly one sub-view-block of *every* operand — then each
+//! piece has a single computing rank (the output piece's owner) and at most
+//! k-1 single-source transfers. The paper reaches the same granularity by
+//! splitting view-block operations into sub-view-block operations
+//! (Section 5.3/5.7); for non-aligned operands the fragment grid is the
+//! intersection of all operands' block boundaries.
+
+use super::{Layout, ViewSpec};
+use crate::types::Rank;
+
+/// One operand of a fragment: the region of that operand's view the
+/// fragment covers, resolved to a base-block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FragOperand {
+    pub base: crate::types::BaseId,
+    /// Base-block index.
+    pub block: u64,
+    /// Owning rank.
+    pub owner: Rank,
+    /// Global row range within the base `[lo, hi)`.
+    pub global_rows: (u64, u64),
+    /// Flattened element interval within the base-block `[lo, hi)` —
+    /// conservative bounding interval used by the dependency system.
+    pub intra_block: (u64, u64),
+}
+
+/// One fragment of an elementwise operation.
+#[derive(Clone, Debug)]
+pub struct Frag {
+    /// Row range relative to the views `[lo, hi)` (all views share shape).
+    pub view_rows: (u64, u64),
+    /// Per-operand resolution, same order as the input slices.
+    pub operands: Vec<FragOperand>,
+}
+
+impl Frag {
+    /// Rows in the fragment.
+    pub fn nrows(&self) -> u64 {
+        self.view_rows.1 - self.view_rows.0
+    }
+}
+
+fn resolve(layout: &Layout, view: &ViewSpec, vlo: u64, vhi: u64) -> FragOperand {
+    let glo = view.offset[0] + vlo;
+    let ghi = view.offset[0] + vhi;
+    let block = layout.block_of_row(glo);
+    debug_assert_eq!(
+        layout.block_of_row(ghi - 1),
+        block,
+        "fragment crosses a block boundary of an operand"
+    );
+    let (blk_lo, _) = layout.block_rows_range(block);
+    let row_elems = layout.row_elems();
+    let (col_lo, col_hi) = view.col_bounds(layout);
+    let intra_lo = (glo - blk_lo) * row_elems + col_lo;
+    let intra_hi = (ghi - 1 - blk_lo) * row_elems + col_hi + 1;
+    FragOperand {
+        base: layout.base,
+        block,
+        owner: layout.owner(block),
+        global_rows: (glo, ghi),
+        intra_block: (intra_lo, intra_hi),
+    }
+}
+
+/// Compute the fragment overlay of `views` (all with identical shape).
+/// `layouts[i]` is the layout of `views[i]`'s base. Fragments are returned
+/// in ascending view-row order and exactly tile `[0, shape[0])`.
+pub fn fragments(layouts: &[&Layout], views: &[&ViewSpec]) -> Vec<Frag> {
+    assert_eq!(layouts.len(), views.len());
+    assert!(!views.is_empty());
+    let shape = &views[0].shape;
+    for v in views {
+        assert_eq!(&v.shape, shape, "elementwise operands must share shape");
+    }
+    let rows = shape[0];
+    if shape.iter().any(|&d| d == 0) {
+        return Vec::new();
+    }
+
+    // Cut points in view-relative row coordinates: 0, rows, and every
+    // operand block boundary that falls strictly inside.
+    let mut cuts: Vec<u64> = vec![0, rows];
+    for (l, v) in layouts.iter().zip(views.iter()) {
+        let g0 = v.offset[0];
+        let g1 = g0 + rows;
+        // First block boundary strictly greater than g0.
+        let mut b = (g0 / l.block_rows + 1) * l.block_rows;
+        while b < g1 {
+            cuts.push(b - g0);
+            b += l.block_rows;
+        }
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+
+    let mut frags = Vec::with_capacity(cuts.len() - 1);
+    for w in cuts.windows(2) {
+        let (vlo, vhi) = (w[0], w[1]);
+        let operands = layouts
+            .iter()
+            .zip(views.iter())
+            .map(|(l, v)| resolve(l, v, vlo, vhi))
+            .collect();
+        frags.push(Frag {
+            view_rows: (vlo, vhi),
+            operands,
+        });
+    }
+    frags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BaseId, DType};
+
+    fn layout(id: u32, rows: u64, br: u64, p: u32) -> Layout {
+        Layout::new(BaseId(id), vec![rows], br, p, DType::F32)
+    }
+
+    /// The paper's Fig. 3/4 three-point stencil: M (6 elems, block 3,
+    /// 2 ranks), N likewise; A = M[2:6], B = M[0:4], C = N[1:5].
+    #[test]
+    fn paper_3pt_stencil_fragments() {
+        let lm = layout(0, 6, 3, 2);
+        let ln = layout(1, 6, 3, 2);
+        let m = ViewSpec::full(&lm);
+        let n = ViewSpec::full(&ln);
+        let a = m.slice(&[(2, 6)]);
+        let b = m.slice(&[(0, 4)]);
+        let c = n.slice(&[(1, 5)]);
+        let frags = fragments(&[&ln, &lm, &lm], &[&c, &a, &b]);
+        // Cut points (view-relative, len 4): from C: rows 3-1=2; from A:
+        // 3-2=1; from B: 3. => 0,1,2,3,4 -> 4 fragments.
+        assert_eq!(frags.len(), 4);
+        let owners: Vec<Vec<u32>> = frags
+            .iter()
+            .map(|f| f.operands.iter().map(|o| o.owner.0).collect())
+            .collect();
+        // frag 0 (view row 0): C[1] on p0, A=M[2] on p0, B=M[0] on p0.
+        assert_eq!(owners[0], vec![0, 0, 0]);
+        // frag 1 (view row 1): C[2] p0, A=M[3] p1, B=M[1] p0.
+        assert_eq!(owners[1], vec![0, 1, 0]);
+        // frag 2 (view row 2): C[3] p1, A=M[4] p1, B=M[2] p0.
+        assert_eq!(owners[2], vec![1, 1, 0]);
+        // frag 3 (view row 3): C[4] p1, A=M[5] p1, B=M[3] p1.
+        assert_eq!(owners[3], vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn aligned_views_one_fragment_per_block() {
+        let l0 = layout(0, 30, 10, 3);
+        let l1 = layout(1, 30, 10, 3);
+        let v0 = ViewSpec::full(&l0);
+        let v1 = ViewSpec::full(&l1);
+        let frags = fragments(&[&l0, &l1], &[&v0, &v1]);
+        assert_eq!(frags.len(), 3);
+        for f in &frags {
+            // Aligned: both operands in the same-numbered block, same rank.
+            assert_eq!(f.operands[0].block, f.operands[1].block);
+            assert_eq!(f.operands[0].owner, f.operands[1].owner);
+            assert_eq!(f.nrows(), 10);
+        }
+    }
+
+    #[test]
+    fn fragments_tile_view_exactly() {
+        let l0 = layout(0, 101, 7, 4);
+        let l1 = layout(1, 120, 11, 4);
+        let v0 = ViewSpec::full(&l0).slice(&[(3, 98)]);
+        let v1 = ViewSpec::full(&l1).slice(&[(20, 115)]);
+        let frags = fragments(&[&l0, &l1], &[&v0, &v1]);
+        assert_eq!(frags[0].view_rows.0, 0);
+        assert_eq!(frags.last().unwrap().view_rows.1, 95);
+        for w in frags.windows(2) {
+            assert_eq!(w[0].view_rows.1, w[1].view_rows.0);
+        }
+        // No fragment crosses a block boundary in either operand.
+        for f in &frags {
+            for (op, l) in f.operands.iter().zip([&l0, &l1]) {
+                assert_eq!(l.block_of_row(op.global_rows.0), op.block);
+                assert_eq!(l.block_of_row(op.global_rows.1 - 1), op.block);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_block_intervals_within_block() {
+        let l = layout(0, 64, 8, 2);
+        let v = ViewSpec::full(&l).slice(&[(5, 60)]);
+        for f in fragments(&[&l], &[&v]) {
+            let op = &f.operands[0];
+            let blk_elems = l.block_nrows(op.block) * l.row_elems();
+            assert!(op.intra_block.0 < op.intra_block.1);
+            assert!(op.intra_block.1 <= blk_elems);
+        }
+    }
+
+    #[test]
+    fn intervals_2d_conservative() {
+        let l = Layout::new(BaseId(0), vec![16, 10], 4, 2, DType::F32);
+        let v = ViewSpec::full(&l).slice(&[(2, 14), (3, 8)]);
+        let frags = fragments(&[&l], &[&v]);
+        for f in &frags {
+            let op = &f.operands[0];
+            // Interval covers at least the rectangle's element count.
+            let rect = f.nrows() * 5;
+            assert!(op.intra_block.1 - op.intra_block.0 >= rect);
+        }
+    }
+
+    #[test]
+    fn empty_view_no_fragments() {
+        let l = layout(0, 10, 5, 2);
+        let v = ViewSpec::full(&l).slice(&[(2, 2)]);
+        assert!(fragments(&[&l], &[&v]).is_empty());
+    }
+}

@@ -1,0 +1,355 @@
+//! Block-cyclic data layout (paper Section 5.2).
+//!
+//! DistNumPy distributes an array-base in fixed-size **base-blocks**,
+//! assigned round-robin (block-cyclic) to MPI ranks. A view of the base
+//! decomposes into **view-blocks**, and each view-block into
+//! **sub-view-blocks** — the largest pieces that live on a single rank.
+//! All operations are ultimately expressed on sub-view-blocks.
+//!
+//! This implementation distributes along dimension 0 (row slabs), the
+//! layout DistNumPy uses for its benchmark suite; the remaining
+//! dimensions stay intact inside each block. A base-block is therefore a
+//! contiguous slab of `block_rows` rows, and the flattened element
+//! interval of any rectangular sub-view inside its block is cheap to
+//! compute — which the dependency heuristic (deps::heuristic) relies on.
+
+mod frag;
+pub use frag::{fragments, Frag, FragOperand};
+
+use crate::types::{BaseId, DType, Rank};
+
+/// Distribution metadata of one array-base.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub base: BaseId,
+    /// Global shape; `shape[0]` is the distributed dimension.
+    pub shape: Vec<u64>,
+    /// Rows per base-block (the paper's block size).
+    pub block_rows: u64,
+    /// Number of ranks the base is distributed over.
+    pub nprocs: u32,
+    pub dtype: DType,
+}
+
+impl Layout {
+    pub fn new(
+        base: BaseId,
+        shape: Vec<u64>,
+        block_rows: u64,
+        nprocs: u32,
+        dtype: DType,
+    ) -> Self {
+        assert!(!shape.is_empty() && shape.iter().all(|&d| d > 0));
+        assert!(block_rows > 0 && nprocs > 0);
+        Layout {
+            base,
+            shape,
+            block_rows,
+            nprocs,
+            dtype,
+        }
+    }
+
+    /// Number of rows (extent of the distributed dimension).
+    #[inline]
+    pub fn rows(&self) -> u64 {
+        self.shape[0]
+    }
+
+    /// Elements per row (product of the non-distributed dimensions).
+    #[inline]
+    pub fn row_elems(&self) -> u64 {
+        self.shape[1..].iter().product::<u64>().max(1)
+    }
+
+    /// Total number of base-blocks.
+    #[inline]
+    pub fn nblocks(&self) -> u64 {
+        self.rows().div_ceil(self.block_rows)
+    }
+
+    /// Owning rank of a base-block: round-robin (block-cyclic).
+    #[inline]
+    pub fn owner(&self, block: u64) -> Rank {
+        Rank((block % self.nprocs as u64) as u32)
+    }
+
+    /// Base-block index containing a global row.
+    #[inline]
+    pub fn block_of_row(&self, row: u64) -> u64 {
+        row / self.block_rows
+    }
+
+    /// Global row range `[lo, hi)` covered by a base-block.
+    #[inline]
+    pub fn block_rows_range(&self, block: u64) -> (u64, u64) {
+        let lo = block * self.block_rows;
+        (lo, (lo + self.block_rows).min(self.rows()))
+    }
+
+    /// Rows actually present in a block (the last block may be short).
+    #[inline]
+    pub fn block_nrows(&self, block: u64) -> u64 {
+        let (lo, hi) = self.block_rows_range(block);
+        hi - lo
+    }
+
+    /// Bytes of one full base-block.
+    #[inline]
+    pub fn block_bytes(&self, block: u64) -> u64 {
+        self.block_nrows(block) * self.row_elems() * self.dtype.size()
+    }
+
+    /// Blocks owned by `rank`, in block order.
+    pub fn blocks_of(&self, rank: Rank) -> impl Iterator<Item = u64> + '_ {
+        (0..self.nblocks()).filter(move |b| self.owner(*b) == rank)
+    }
+
+    /// Is this layout "aligned" with another (identical block structure)?
+    /// Aligned arrays admit the simple double-buffering schedule
+    /// (paper Section 5.4); non-aligned ones need intra-view-block
+    /// latency-hiding — the paper's contribution.
+    pub fn aligned_with(&self, other: &Layout) -> bool {
+        self.shape == other.shape
+            && self.block_rows == other.block_rows
+            && self.nprocs == other.nprocs
+    }
+}
+
+/// A rectangular view of an array-base (paper Section 5.1: array-view).
+///
+/// Views are unit-stride rectangles: `offset[d] .. offset[d] + shape[d]`
+/// in every dimension. The hierarchy is flat — a view always refers
+/// directly to a base, never to another view.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ViewSpec {
+    pub base: BaseId,
+    pub offset: Vec<u64>,
+    pub shape: Vec<u64>,
+}
+
+impl ViewSpec {
+    /// Full view of a layout.
+    pub fn full(l: &Layout) -> ViewSpec {
+        ViewSpec {
+            base: l.base,
+            offset: vec![0; l.shape.len()],
+            shape: l.shape.clone(),
+        }
+    }
+
+    /// Number of elements in the view.
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().product::<u64>().max(1)
+    }
+
+    /// Sub-slice relative to this view: `ranges[d] = (lo, hi)` with
+    /// `hi <= shape[d]`. Returns a view still anchored at the base
+    /// (2-level hierarchy preserved).
+    pub fn slice(&self, ranges: &[(u64, u64)]) -> ViewSpec {
+        assert_eq!(ranges.len(), self.shape.len(), "rank mismatch");
+        let mut offset = Vec::with_capacity(ranges.len());
+        let mut shape = Vec::with_capacity(ranges.len());
+        for (d, &(lo, hi)) in ranges.iter().enumerate() {
+            assert!(
+                lo <= hi && hi <= self.shape[d],
+                "slice out of bounds: dim {d} ({lo},{hi}) of {}",
+                self.shape[d]
+            );
+            offset.push(self.offset[d] + lo);
+            shape.push(hi - lo);
+        }
+        ViewSpec {
+            base: self.base,
+            offset,
+            shape,
+        }
+    }
+
+    /// Flattened column offset bounds of the view rectangle within one
+    /// row of the base: (min, max) over the non-distributed dims.
+    /// Used for the conservative interval of the dependency system.
+    pub fn col_bounds(&self, layout: &Layout) -> (u64, u64) {
+        let mut stride = 1u64;
+        let mut strides = vec![1u64; layout.shape.len()];
+        for d in (1..layout.shape.len()).rev() {
+            strides[d] = stride;
+            stride *= layout.shape[d];
+        }
+        let mut lo = 0u64;
+        let mut hi = 0u64;
+        for d in 1..layout.shape.len() {
+            lo += self.offset[d] * strides[d];
+            hi += (self.offset[d] + self.shape[d] - 1) * strides[d];
+        }
+        (lo, hi)
+    }
+}
+
+/// One sub-view-block: the part of a view that lies in a single
+/// base-block (and hence on a single rank).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubViewBlock {
+    /// Base-block index within the base.
+    pub block: u64,
+    /// Owning rank of that block.
+    pub owner: Rank,
+    /// Row range relative to the *view* `[lo, hi)`.
+    pub view_rows: (u64, u64),
+    /// Row range in *global base* coordinates `[lo, hi)`.
+    pub global_rows: (u64, u64),
+}
+
+/// Decompose a view into sub-view-blocks along the distributed dim.
+pub fn sub_view_blocks(layout: &Layout, view: &ViewSpec) -> Vec<SubViewBlock> {
+    assert_eq!(view.base, layout.base);
+    let mut out = Vec::new();
+    if view.shape.iter().any(|&d| d == 0) {
+        return out;
+    }
+    let g0 = view.offset[0];
+    let g1 = g0 + view.shape[0];
+    let mut g = g0;
+    while g < g1 {
+        let b = layout.block_of_row(g);
+        let (_, bhi) = layout.block_rows_range(b);
+        let seg_hi = g1.min(bhi);
+        out.push(SubViewBlock {
+            block: b,
+            owner: layout.owner(b),
+            view_rows: (g - g0, seg_hi - g0),
+            global_rows: (g, seg_hi),
+        });
+        g = seg_hi;
+    }
+    out
+}
+
+/// True when every sub-view-block of the view coincides exactly with a
+/// base-block — the paper's *aligned array* case.
+pub fn view_is_aligned(layout: &Layout, view: &ViewSpec) -> bool {
+    if view.offset.iter().skip(1).any(|&o| o != 0) {
+        return false;
+    }
+    if view.shape[1..] != layout.shape[1..] {
+        return false;
+    }
+    view.offset[0] % layout.block_rows == 0
+        && (view.offset[0] + view.shape[0] == layout.rows()
+            || (view.offset[0] + view.shape[0]) % layout.block_rows == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_1d(rows: u64, br: u64, p: u32) -> Layout {
+        Layout::new(BaseId(0), vec![rows], br, p, DType::F32)
+    }
+
+    #[test]
+    fn paper_example_two_ranks_block3() {
+        // Fig. 4: arrays of 6 elements, block size 3, two nodes.
+        let l = layout_1d(6, 3, 2);
+        assert_eq!(l.nblocks(), 2);
+        assert_eq!(l.owner(0), Rank(0));
+        assert_eq!(l.owner(1), Rank(1));
+        // View A = M[2:] spans both blocks.
+        let m = ViewSpec::full(&l);
+        let a = m.slice(&[(2, 6)]);
+        let svbs = sub_view_blocks(&l, &a);
+        assert_eq!(svbs.len(), 2);
+        assert_eq!(svbs[0].block, 0);
+        assert_eq!(svbs[0].global_rows, (2, 3));
+        assert_eq!(svbs[0].view_rows, (0, 1));
+        assert_eq!(svbs[1].block, 1);
+        assert_eq!(svbs[1].global_rows, (3, 6));
+        assert_eq!(svbs[1].owner, Rank(1));
+    }
+
+    #[test]
+    fn block_cyclic_round_robin() {
+        let l = layout_1d(100, 10, 3);
+        assert_eq!(l.nblocks(), 10);
+        let owners: Vec<u32> = (0..10).map(|b| l.owner(b).0).collect();
+        assert_eq!(owners, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn last_block_short() {
+        let l = layout_1d(25, 10, 2);
+        assert_eq!(l.nblocks(), 3);
+        assert_eq!(l.block_nrows(2), 5);
+        assert_eq!(l.block_bytes(2), 5 * 4);
+    }
+
+    #[test]
+    fn blocks_of_rank() {
+        let l = layout_1d(100, 10, 4);
+        let r1: Vec<u64> = l.blocks_of(Rank(1)).collect();
+        assert_eq!(r1, vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn svb_covers_view_exactly() {
+        let l = layout_1d(97, 8, 3);
+        let v = ViewSpec::full(&l).slice(&[(5, 90)]);
+        let svbs = sub_view_blocks(&l, &v);
+        // Coverage: contiguous, disjoint, spans [0, 85) in view coords.
+        assert_eq!(svbs.first().unwrap().view_rows.0, 0);
+        assert_eq!(svbs.last().unwrap().view_rows.1, 85);
+        for w in svbs.windows(2) {
+            assert_eq!(w[0].view_rows.1, w[1].view_rows.0);
+            assert_eq!(w[0].global_rows.1, w[1].global_rows.0);
+        }
+        // Each segment inside one block.
+        for s in &svbs {
+            assert_eq!(l.block_of_row(s.global_rows.0), s.block);
+            assert_eq!(l.block_of_row(s.global_rows.1 - 1), s.block);
+            assert_eq!(l.owner(s.block), s.owner);
+        }
+    }
+
+    #[test]
+    fn view_2d_col_bounds() {
+        let l = Layout::new(BaseId(1), vec![8, 10], 2, 2, DType::F32);
+        let v = ViewSpec::full(&l).slice(&[(1, 7), (2, 9)]);
+        let (lo, hi) = v.col_bounds(&l);
+        assert_eq!(lo, 2);
+        assert_eq!(hi, 8);
+    }
+
+    #[test]
+    fn aligned_detection() {
+        let l = Layout::new(BaseId(0), vec![12, 4], 3, 2, DType::F32);
+        let full = ViewSpec::full(&l);
+        assert!(view_is_aligned(&l, &full));
+        assert!(view_is_aligned(&l, &full.slice(&[(3, 9), (0, 4)])));
+        assert!(!view_is_aligned(&l, &full.slice(&[(1, 7), (0, 4)])));
+        assert!(!view_is_aligned(&l, &full.slice(&[(3, 9), (1, 4)])));
+    }
+
+    #[test]
+    fn slice_of_slice_stays_base_anchored() {
+        let l = layout_1d(50, 5, 2);
+        let v = ViewSpec::full(&l).slice(&[(10, 40)]);
+        let w = v.slice(&[(5, 10)]);
+        assert_eq!(w.offset, vec![15]);
+        assert_eq!(w.shape, vec![5]);
+        assert_eq!(w.base, l.base);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_bounds_panics() {
+        let l = layout_1d(10, 5, 2);
+        let _ = ViewSpec::full(&l).slice(&[(0, 11)]);
+    }
+
+    #[test]
+    fn empty_view_no_blocks() {
+        let l = layout_1d(10, 5, 2);
+        let v = ViewSpec::full(&l).slice(&[(3, 3)]);
+        assert!(sub_view_blocks(&l, &v).is_empty());
+    }
+}

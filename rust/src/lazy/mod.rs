@@ -1,0 +1,227 @@
+//! Lazy evaluation front-end (paper Section 5.6).
+//!
+//! A [`Context`] plays the role of the Python interpreter boundary in
+//! DistNumPy: array operations are **recorded**, not executed. A flush —
+//! executing every recorded operation through the configured scheduler —
+//! is triggered by the paper's three conditions:
+//!
+//! 1. the program *reads* distributed data (a reduction result, a
+//!    gather, …) — [`Context::sum`], [`Context::sum_absdiff`],
+//!    [`Context::gather`];
+//! 2. the number of recorded operations reaches a threshold —
+//!    [`Context::flush_threshold`];
+//! 3. the program ends — [`Context::flush`] called by the apps at exit.
+
+use crate::array::Registry;
+use crate::exec::Backend;
+use crate::layout::ViewSpec;
+use crate::metrics::RunReport;
+use crate::sched::{execute, Policy, SchedCfg, SchedError};
+use crate::types::{BaseId, DType, Rank};
+use crate::ufunc::{Kernel, OpBuilder};
+
+/// Default flush threshold (paper: "a user-defined threshold").
+pub const DEFAULT_FLUSH_THRESHOLD: usize = 50_000;
+
+/// The DistNumPy programming context: array registry + lazy recorder +
+/// scheduler + backend.
+pub struct Context {
+    pub reg: Registry,
+    pub builder: OpBuilder,
+    pub cfg: SchedCfg,
+    pub policy: Policy,
+    pub backend: Box<dyn Backend>,
+    pub report: RunReport,
+    pub flush_threshold: usize,
+    pub flushes: u64,
+    /// Accumulated virtual time of the sequential NumPy baseline for the
+    /// same program (Section 6: the denominator of every speedup curve).
+    /// Derived from the recorded compute payloads, so any-P runs yield
+    /// the same baseline as a P=1 run (fragmentation cancels out).
+    pub baseline: f64,
+    array_ops_since_flush: u64,
+    /// First scheduling error (the naive policy can deadlock).
+    pub error: Option<SchedError>,
+}
+
+impl Context {
+    pub fn new(cfg: SchedCfg, policy: Policy, backend: Box<dyn Backend>) -> Self {
+        let n = cfg.nprocs as usize;
+        Context {
+            reg: Registry::new(cfg.nprocs),
+            builder: OpBuilder::new(),
+            cfg,
+            policy,
+            backend,
+            report: RunReport::new(n),
+            flush_threshold: DEFAULT_FLUSH_THRESHOLD,
+            flushes: 0,
+            baseline: 0.0,
+            array_ops_since_flush: 0,
+            error: None,
+        }
+    }
+
+    /// Simulation-only context (no real data).
+    pub fn sim(cfg: SchedCfg, policy: Policy) -> Self {
+        Context::new(cfg, policy, Box::new(crate::exec::SimBackend))
+    }
+
+    // -- array creation (the only API difference from NumPy, Section 5) --
+
+    /// Allocate a distributed array (zeros), returning its full view.
+    pub fn zeros(&mut self, shape: &[u64], block_rows: u64) -> ViewSpec {
+        let id = self.reg.alloc(shape.to_vec(), block_rows, DType::F32);
+        self.backend.alloc_base(self.reg.layout(id));
+        self.reg.full_view(id)
+    }
+
+    /// Allocate and fill from a dense row-major buffer (real backends).
+    pub fn array(&mut self, shape: &[u64], block_rows: u64, data: &[f32]) -> ViewSpec {
+        let v = self.zeros(shape, block_rows);
+        self.backend.scatter(self.reg.layout(v.base), data);
+        v
+    }
+
+    // -- recording --
+
+    /// Record an elementwise ufunc `out = kernel(ins…)`.
+    pub fn ufunc(&mut self, kernel: Kernel, out: &ViewSpec, ins: &[&ViewSpec]) {
+        self.builder.ufunc(&self.reg, kernel, out, ins);
+        self.array_ops_since_flush += 1;
+        self.maybe_flush();
+    }
+
+    /// Record `c = a + b`.
+    pub fn add(&mut self, c: &ViewSpec, a: &ViewSpec, b: &ViewSpec) {
+        self.ufunc(Kernel::Add, c, &[a, b]);
+    }
+
+    /// Record `dst = src` (copy between views).
+    pub fn copy(&mut self, dst: &ViewSpec, src: &ViewSpec) {
+        self.ufunc(Kernel::Copy, dst, &[src]);
+    }
+
+    // -- flush triggers --
+
+    fn maybe_flush(&mut self) {
+        if self.builder.n_recorded() >= self.flush_threshold {
+            self.flush();
+        }
+    }
+
+    /// Trigger 3 (and the explicit form of trigger 1): execute everything
+    /// recorded so far.
+    pub fn flush(&mut self) {
+        let ops = self.builder.take();
+        if ops.is_empty() {
+            return;
+        }
+        self.backend.clear_stages();
+        self.flushes += 1;
+        self.baseline += crate::sched::numpy_baseline(&ops, &self.cfg.spec)
+            + self.array_ops_since_flush as f64 * self.cfg.spec.numpy_op_overhead;
+        self.array_ops_since_flush = 0;
+        match execute(self.policy, &ops, &self.cfg, self.backend.as_mut()) {
+            Ok(rep) => self.report.absorb(&rep),
+            Err(e) => {
+                if self.error.is_none() {
+                    self.error = Some(e);
+                }
+            }
+        }
+    }
+
+    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush.
+    /// Returns the real value under a data backend, 0.0 in simulation.
+    pub fn sum(&mut self, v: &ViewSpec) -> f64 {
+        let tag = self.builder.reduce(&self.reg, Kernel::PartialSum, &[v]);
+        self.array_ops_since_flush += 1;
+        self.flush();
+        self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
+    }
+
+    /// Trigger 1: `sum(|a - b|)` — the Jacobi convergence delta.
+    pub fn sum_absdiff(&mut self, a: &ViewSpec, b: &ViewSpec) -> f64 {
+        let tag = self
+            .builder
+            .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b]);
+        self.array_ops_since_flush += 1;
+        self.flush();
+        self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
+    }
+
+    /// Trigger 1: gather a whole base to a dense buffer (real backends).
+    pub fn gather(&mut self, base: BaseId) -> Option<Vec<f32>> {
+        self.flush();
+        self.backend.gather(self.reg.layout(base))
+    }
+
+    /// Finish the program: final flush, return the accumulated report.
+    pub fn finish(mut self) -> Result<RunReport, SchedError> {
+        self.flush();
+        match self.error {
+            Some(e) => Err(e),
+            None => Ok(self.report),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineSpec;
+
+    fn ctx(p: u32) -> Context {
+        Context::sim(SchedCfg::new(MachineSpec::tiny(), p), Policy::LatencyHiding)
+    }
+
+    #[test]
+    fn records_without_executing() {
+        let mut c = ctx(2);
+        let x = c.zeros(&[16], 4);
+        let y = c.zeros(&[16], 4);
+        c.add(&y.clone(), &x, &y);
+        assert_eq!(c.flushes, 0, "lazy: nothing executed yet");
+        assert!(c.builder.n_recorded() > 0);
+        c.flush();
+        assert_eq!(c.flushes, 1);
+        assert!(c.report.ops_executed > 0);
+    }
+
+    #[test]
+    fn threshold_triggers_flush() {
+        let mut c = ctx(2);
+        c.flush_threshold = 8;
+        let x = c.zeros(&[16], 4);
+        for _ in 0..4 {
+            c.add(&x.clone(), &x, &x); // 4 fragments per call
+        }
+        assert!(c.flushes >= 1, "threshold flush fired");
+    }
+
+    #[test]
+    fn sum_triggers_flush_and_counts_ops() {
+        let mut c = ctx(2);
+        let x = c.zeros(&[16], 4);
+        let _ = c.sum(&x);
+        assert_eq!(c.flushes, 1);
+        assert!(c.report.ops_executed >= 5);
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let mut c = ctx(1);
+        c.flush();
+        assert_eq!(c.flushes, 0);
+    }
+
+    #[test]
+    fn finish_returns_report() {
+        let mut c = ctx(2);
+        let x = c.zeros(&[8], 2);
+        c.copy(&x.slice(&[(0, 4)]), &x.slice(&[(4, 8)]));
+        let rep = c.finish().unwrap();
+        assert!(rep.ops_executed > 0);
+    }
+}

@@ -1,0 +1,49 @@
+//! # DistNumPy-rs — runtime-managed communication latency-hiding
+//!
+//! Reproduction of Kristensen & Vinter, *"Managing Communication
+//! Latency-Hiding at Runtime for Parallel Programming Languages and
+//! Libraries"*, HPCC 2012 (DOI 10.1109/HPCC.2012.80).
+//!
+//! The paper's system, DistNumPy, records NumPy array operations lazily,
+//! splits them into sub-view-block tasks over block-cyclic distributed
+//! arrays, tracks data dependencies with per-base-block dependency lists
+//! (instead of a full DAG), and schedules communication aggressively /
+//! computation lazily so transfers hide behind local work.
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (here)**: the lazy-evaluation runtime — [`array`], [`layout`],
+//!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`] — executing over a
+//!   discrete-event simulated cluster ([`cluster`], [`net`]) or with real
+//!   numerics ([`exec`]).
+//! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
+//!   under `artifacts/` (see `python/compile/model.py`).
+//! * **L1 (Pallas)**: the per-block kernels those graphs call
+//!   (`python/compile/kernels/`), loaded and executed from Rust via PJRT
+//!   in [`runtime`].
+//!
+//! The paper's 16-node Gigabit-Ethernet cluster is simulated by a
+//! calibrated discrete-event engine (see `DESIGN.md` §2 for why this
+//! preserves the reported behaviour); the benchmark applications in
+//! [`apps`] regenerate every figure of the paper's evaluation through
+//! [`harness`].
+
+pub mod apps;
+pub mod array;
+pub mod cluster;
+pub mod coordinator;
+pub mod deps;
+pub mod exec;
+pub mod harness;
+pub mod layout;
+pub mod lazy;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sched;
+pub mod summa;
+pub mod types;
+pub mod ufunc;
+pub mod util;
+
+pub use types::{BaseId, DType, OpId, Rank, Tag};

@@ -1,0 +1,9 @@
+//! `distnumpy` — the coordinator CLI (leader entrypoint).
+//!
+//! See `distnumpy help` for usage; the heavy lifting lives in
+//! [`distnumpy::coordinator::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(distnumpy::coordinator::main_with_args(&args));
+}

@@ -1,0 +1,130 @@
+//! Run metrics: the quantities the paper reports.
+//!
+//! The headline metric is **waiting time** — "the communication latency
+//! not hidden behind computation" (Section 6) — as a percentage of total
+//! execution time, plus speedup against the sequential NumPy baseline.
+
+use crate::types::VTime;
+use crate::util::json::Json;
+
+/// Outcome of executing one flushed batch (or a whole run) on the
+/// simulated cluster.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Virtual makespan of the run (s).
+    pub makespan: VTime,
+    /// Per-rank time spent blocked waiting for communication (s).
+    pub wait: Vec<VTime>,
+    /// Per-rank busy compute time (s).
+    pub busy: Vec<VTime>,
+    /// Runtime overhead charged (recording + dependency management) (s).
+    pub overhead: VTime,
+    pub ops_executed: u64,
+    pub n_compute: u64,
+    pub n_comm: u64,
+    pub bytes_inter: u64,
+    pub bytes_intra: u64,
+}
+
+impl RunReport {
+    pub fn new(nprocs: usize) -> Self {
+        RunReport {
+            wait: vec![0.0; nprocs],
+            busy: vec![0.0; nprocs],
+            ..Default::default()
+        }
+    }
+
+    /// Merge a subsequent batch's report (flush after flush).
+    pub fn absorb(&mut self, other: &RunReport) {
+        self.makespan += other.makespan;
+        for (a, b) in self.wait.iter_mut().zip(&other.wait) {
+            *a += b;
+        }
+        for (a, b) in self.busy.iter_mut().zip(&other.busy) {
+            *a += b;
+        }
+        self.overhead += other.overhead;
+        self.ops_executed += other.ops_executed;
+        self.n_compute += other.n_compute;
+        self.n_comm += other.n_comm;
+        self.bytes_inter += other.bytes_inter;
+        self.bytes_intra += other.bytes_intra;
+    }
+
+    /// Mean over ranks of wait time / total time — the paper's
+    /// "time spent on waiting for communication" percentage.
+    pub fn wait_pct(&self) -> f64 {
+        if self.makespan <= 0.0 || self.wait.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.wait.iter().sum();
+        100.0 * total / (self.makespan * self.wait.len() as f64)
+    }
+
+    /// CPU utilization: busy / (P × makespan).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 || self.busy.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.busy.iter().sum();
+        total / (self.makespan * self.busy.len() as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("makespan", self.makespan.into());
+        o.push("wait_pct", self.wait_pct().into());
+        o.push("utilization", self.utilization().into());
+        o.push("overhead", self.overhead.into());
+        o.push("ops", self.ops_executed.into());
+        o.push("n_compute", self.n_compute.into());
+        o.push("n_comm", self.n_comm.into());
+        o.push("bytes_inter", self.bytes_inter.into());
+        o.push("bytes_intra", self.bytes_intra.into());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_pct_basic() {
+        let mut r = RunReport::new(2);
+        r.makespan = 10.0;
+        r.wait = vec![2.0, 4.0];
+        assert!((r.wait_pct() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut a = RunReport::new(2);
+        a.makespan = 1.0;
+        a.wait = vec![0.5, 0.0];
+        a.ops_executed = 3;
+        let mut b = RunReport::new(2);
+        b.makespan = 2.0;
+        b.wait = vec![0.5, 1.0];
+        b.ops_executed = 4;
+        a.absorb(&b);
+        assert_eq!(a.makespan, 3.0);
+        assert_eq!(a.wait, vec![1.0, 1.0]);
+        assert_eq!(a.ops_executed, 7);
+    }
+
+    #[test]
+    fn empty_report_no_nan() {
+        let r = RunReport::default();
+        assert_eq!(r.wait_pct(), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+    }
+
+    #[test]
+    fn json_renders() {
+        let r = RunReport::new(1);
+        let s = r.to_json().render();
+        assert!(s.contains("wait_pct"));
+    }
+}

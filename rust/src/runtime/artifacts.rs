@@ -1,0 +1,67 @@
+//! The artifact shape contracts — the Rust mirror of
+//! `python/compile/model.py::ARTIFACTS`. Changing either side requires a
+//! coordinated change; `rust/tests/e2e.rs` cross-checks against
+//! `artifacts/manifest.json`.
+
+/// Block edge of the 2-D AOT artifacts (model.py BS).
+pub const BS: usize = 64;
+/// Length of the 1-D AOT artifacts (model.py BS1).
+pub const BS1: usize = 4096;
+
+/// Artifacts the Rust runtime knows how to drive (subset of the full
+/// AOT set: multi-output graphs like `nbody` are exercised from the
+/// Python tests only).
+pub const ARTIFACT_NAMES: &[&str] = &[
+    "add1d",
+    "add2d",
+    "sub2d",
+    "mul2d",
+    "axpy1d",
+    "stencil3",
+    "stencil5",
+    "stencil5v",
+    "jacobi_row",
+    "black_scholes",
+    "knn",
+    "lbm_d2q9",
+    "matmul",
+    "fractal",
+];
+
+/// Input shapes (row-major dims) per artifact.
+pub fn artifact_inputs(name: &str) -> Vec<Vec<usize>> {
+    match name {
+        "add1d" | "axpy1d" => vec![vec![BS1]; 2],
+        "add2d" | "sub2d" | "mul2d" => vec![vec![BS, BS]; 2],
+        "stencil3" => vec![vec![BS]; 2],
+        "stencil5" => vec![vec![BS + 2, BS + 2]],
+        "stencil5v" => vec![vec![BS, BS]; 5],
+        "jacobi_row" => vec![vec![BS], vec![BS, BS], vec![BS], vec![BS]],
+        "black_scholes" => vec![vec![BS1]; 3],
+        "knn" => vec![vec![BS, 4]; 2],
+        "lbm_d2q9" => vec![vec![9, BS, BS]],
+        "matmul" => vec![vec![BS, BS]; 3],
+        "fractal" => vec![vec![BS, BS]; 2],
+        _ => vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_artifact_has_shapes() {
+        for name in ARTIFACT_NAMES {
+            assert!(
+                !artifact_inputs(name).is_empty(),
+                "missing contract for {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_empty() {
+        assert!(artifact_inputs("nope").is_empty());
+    }
+}

@@ -1,0 +1,224 @@
+//! Blocking-communication baseline (the "without latency-hiding" setup
+//! of the paper's evaluation, Section 6).
+//!
+//! Each rank walks the recorded array operations in order, executing
+//! every one with the paper's §5.3 four-step scheme and blocking MPI
+//! semantics: first exchange the array elements of the operation (sends
+//! return once injected — eager protocol; receives block until arrival),
+//! then compute the local fragments. No dependency analysis, no overlap
+//! across array operations — communication time lands squarely in the
+//! waiting-time metric.
+//!
+//! Within one array operation (an op *group*) the per-rank order is
+//! sends, then receives, then computes; groups execute strictly in
+//! recording order. This is exactly DistNumPy-without-latency-hiding:
+//! the exchange phase pipelines inside one operation, but nothing ever
+//! crosses an operation boundary.
+//!
+//! Progress property: within a group every send precedes every recv on
+//! each rank and matched pairs share a group, so the globally-earliest
+//! unexecuted operation can always proceed; the smallest-clock-first
+//! loop below therefore never deadlocks.
+
+use std::collections::BinaryHeap;
+
+use super::{compute_costs, SchedCfg, SchedError, TEvent, TransferTable};
+use crate::exec::Backend;
+use crate::metrics::RunReport;
+use crate::net::Network;
+use crate::types::{Rank, Tag, VTime};
+use crate::ufunc::{OpNode, OpPayload};
+use crate::util::fxhash::FxHashMap;
+
+pub fn run_blocking(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+) -> Result<RunReport, SchedError> {
+    let n = cfg.nprocs as usize;
+    let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
+    let mut net = Network::new(&cfg.spec, node_of);
+    let xfers = TransferTable::build(ops);
+    let costs = compute_costs(ops, cfg);
+
+    // Per-rank program: indices into `ops`, phased per §5.3 — groups in
+    // recording order; within a group sends, then recvs, then computes
+    // (each sub-phase in recording order).
+    let phase = |op: &OpNode| match op.payload {
+        OpPayload::Send { .. } => 0u8,
+        OpPayload::Recv { .. } => 1,
+        OpPayload::Compute(_) => 2,
+    };
+    let mut program: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, op) in ops.iter().enumerate() {
+        program[op.rank.idx()].push(i);
+    }
+    for prog in program.iter_mut() {
+        prog.sort_by_key(|&i| (ops[i].group, phase(&ops[i]), i));
+    }
+    let mut ptr = vec![0usize; n];
+    let mut clock = vec![0.0f64; n];
+    let mut wait = vec![0.0f64; n];
+    let mut busy = vec![0.0f64; n];
+    // No dependency system: only the (cheaper) recording overhead.
+    let overhead = super::batch_overhead(ops, cfg.spec.blocking_op_overhead, &cfg.spec);
+    for c in clock.iter_mut() {
+        *c = overhead;
+    }
+
+    // Runnable ranks by clock; receivers parked on an unposted send.
+    let mut heap: BinaryHeap<TEvent<Rank>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut parked: FxHashMap<Tag, (Rank, VTime)> = FxHashMap::default();
+    for r in 0..n {
+        if !program[r].is_empty() {
+            heap.push(TEvent {
+                t: clock[r],
+                seq,
+                ev: Rank(r as u32),
+            });
+            seq += 1;
+        }
+    }
+
+    let mut executed = 0u64;
+    while let Some(TEvent { ev: rank, .. }) = heap.pop() {
+        let r = rank.idx();
+        if ptr[r] >= program[r].len() {
+            continue;
+        }
+        let i = program[r][ptr[r]];
+        let op = &ops[i];
+        match &op.payload {
+            OpPayload::Compute(task) => {
+                backend.exec_compute(rank, task);
+                busy[r] += costs[i];
+                clock[r] += costs[i];
+                ptr[r] += 1;
+                executed += 1;
+            }
+            OpPayload::Send {
+                peer, tag, bytes, ..
+            } => {
+                let t0 = clock[r];
+                let res = net.post_send(t0, rank, *peer, *tag, *bytes);
+                // Data leaves the sender *now* (eager injection): the
+                // payload must be captured before the sender's later
+                // operations can overwrite the source region. The
+                // receiver only reads its stage after recv completion
+                // in virtual time, so early delivery is unobservable.
+                let info = &xfers.info[tag];
+                backend.exec_transfer(info.from, info.to, *tag, &info.region);
+                let done = res.send_done.unwrap();
+                wait[r] += done - t0;
+                clock[r] = done;
+                ptr[r] += 1;
+                executed += 1;
+                if let Some(rd) = res.recv_done {
+                    // The matching recv was already blocked: wake it.
+                    if let Some((peer_rank, parked_at)) = parked.remove(tag) {
+                        let pr = peer_rank.idx();
+                        let resume = rd.max(parked_at);
+                        wait[pr] += resume - parked_at;
+                        clock[pr] = resume;
+                        ptr[pr] += 1;
+                        executed += 1;
+                        heap.push(TEvent {
+                            t: clock[pr],
+                            seq,
+                            ev: peer_rank,
+                        });
+                        seq += 1;
+                    }
+                }
+            }
+            OpPayload::Recv { tag, .. } => {
+                let t0 = clock[r];
+                if net.send_posted(*tag) {
+                    let res = net.post_recv(t0, rank, *tag);
+                    let rd = res.recv_done.unwrap();
+                    wait[r] += rd - t0;
+                    clock[r] = rd;
+                    ptr[r] += 1;
+                    executed += 1;
+                } else {
+                    // Block until the send appears.
+                    net.post_recv(t0, rank, *tag);
+                    parked.insert(*tag, (rank, t0));
+                    continue; // don't requeue; the sender wakes us.
+                }
+            }
+        }
+        if ptr[r] < program[r].len() {
+            heap.push(TEvent {
+                t: clock[r],
+                seq,
+                ev: rank,
+            });
+            seq += 1;
+        }
+    }
+
+    if executed as usize != ops.len() {
+        return Err(SchedError::Deadlock {
+            executed,
+            total: ops.len() as u64,
+        });
+    }
+
+    let makespan = clock.iter().cloned().fold(0.0, f64::max);
+    let mut report = RunReport::new(n);
+    report.makespan = makespan;
+    report.wait = wait;
+    report.busy = busy;
+    report.overhead = overhead;
+    report.ops_executed = executed;
+    report.n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
+    report.n_comm = ops.len() as u64 - report.n_compute;
+    report.bytes_inter = net.bytes_inter;
+    report.bytes_intra = net.bytes_intra;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::cluster::MachineSpec;
+    use crate::exec::SimBackend;
+    use crate::types::DType;
+    use crate::ufunc::{Kernel, OpBuilder};
+
+    #[test]
+    fn executes_all_ops_in_order() {
+        let mut reg = Registry::new(2);
+        let m = reg.alloc(vec![6], 3, DType::F32);
+        let nn = reg.alloc(vec![6], 3, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(nn);
+        let a = mv.slice(&[(2, 6)]);
+        let b = mv.slice(&[(0, 4)]);
+        let c = nv.slice(&[(1, 5)]);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Add, &c, &[&a, &b]);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let rep = run_blocking(&ops, &cfg, &mut SimBackend).unwrap();
+        assert_eq!(rep.ops_executed, ops.len() as u64);
+        assert!(rep.wait.iter().sum::<f64>() > 0.0, "blocking must wait");
+    }
+
+    #[test]
+    fn single_rank_never_waits() {
+        let mut reg = Registry::new(1);
+        let x = reg.alloc(vec![100], 10, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Scale(2.0), &xv, &[&xv]);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 1);
+        let rep = run_blocking(&ops, &cfg, &mut SimBackend).unwrap();
+        assert_eq!(rep.wait[0], 0.0);
+        assert_eq!(rep.n_comm, 0);
+    }
+}

@@ -1,0 +1,421 @@
+//! The latency-hiding flush scheduler (paper Section 5.7).
+//!
+//! Event-driven implementation of the flush algorithm:
+//!
+//! 1. initiate every communication operation in the ready queue
+//!    (non-blocking isend/irecv — zero rank time);
+//! 2. completed transfers retire between compute operations
+//!    (`MPI_Testsome` — modelled as completion events);
+//! 3. execute one ready compute operation at a time;
+//! 4. repeat; block only when no compute is ready and transfers are
+//!    outstanding (invariants 1–3 of Section 5.7; deadlock-free per
+//!    Section 5.7.1 because no blocking call is ever issued before all
+//!    ready communication is initiated).
+//!
+//! Waiting time — the paper's headline metric — accrues exactly while a
+//! rank is idle with operations still pending.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::{compute_costs, SchedCfg, SchedError, TEvent, TransferTable};
+use crate::exec::Backend;
+use crate::metrics::RunReport;
+use crate::net::Network;
+use crate::types::{OpId, Rank, VTime};
+use crate::ufunc::{OpNode, OpPayload};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ev {
+    ComputeDone { rank: Rank, op: OpId },
+    SendDone { rank: Rank, op: OpId },
+    RecvDone { rank: Rank, op: OpId },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Idle,
+    Busy,
+    Done,
+}
+
+struct Lh<'a, 'b> {
+    ops: &'a [OpNode],
+    backend: &'a mut dyn Backend,
+    net: Network<'b>,
+    deps: Box<dyn crate::deps::DepSystem>,
+    xfers: TransferTable,
+    costs: Vec<VTime>,
+    costs_hot: Vec<VTime>,
+    locality: bool,
+    /// Per-rank most recently touched base-block (cache key, §7 ext).
+    last_block: Vec<Option<(crate::types::BaseId, u64)>>,
+
+    clock: Vec<VTime>,
+    state: Vec<State>,
+    idle_since: Vec<Option<VTime>>,
+    ready_comm: Vec<VecDeque<OpId>>,
+    ready_comp: Vec<VecDeque<OpId>>,
+    remaining: Vec<u64>,
+
+    heap: BinaryHeap<TEvent<Ev>>,
+    seq: u64,
+    completed: u64,
+
+    wait: Vec<VTime>,
+    busy: Vec<VTime>,
+}
+
+impl<'a, 'b> Lh<'a, 'b> {
+    fn push_ev(&mut self, t: VTime, ev: Ev) {
+        self.heap.push(TEvent {
+            t,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+    }
+
+    /// Distribute newly-ready ops into per-rank queues; step idle ranks.
+    fn distribute(&mut self, ready: Vec<OpId>, t: VTime) {
+        let mut affected = Vec::new();
+        for id in ready {
+            let op = &self.ops[id.idx()];
+            let r = op.rank.idx();
+            if op.is_comm() {
+                self.ready_comm[r].push_back(id);
+            } else {
+                self.ready_comp[r].push_back(id);
+            }
+            if !affected.contains(&op.rank) {
+                affected.push(op.rank);
+            }
+        }
+        for r in affected {
+            if self.state[r.idx()] == State::Idle {
+                self.step(r, t);
+            }
+        }
+    }
+
+    /// Mark `op` complete in the dependency system and release dependents.
+    fn complete_op(&mut self, op: OpId, t: VTime) {
+        self.deps.complete(op);
+        self.remaining[self.ops[op.idx()].rank.idx()] -= 1;
+        self.completed += 1;
+        let ready = self.deps.take_ready();
+        self.distribute(ready, t);
+    }
+
+    /// Post one communication op at the rank's current time.
+    fn post_comm(&mut self, op_id: OpId) {
+        let op = &self.ops[op_id.idx()];
+        let now = self.clock[op.rank.idx()];
+        match &op.payload {
+            OpPayload::Send {
+                peer, tag, bytes, ..
+            } => {
+                let res = self.net.post_send(now, op.rank, *peer, *tag, *bytes);
+                // Capture the payload at injection time: once the send
+                // completes, the dependency system allows the sender's
+                // later ops to overwrite the source region — the data
+                // must leave first. The receiver reads its stage only
+                // after RecvDone in virtual time, so early delivery is
+                // unobservable.
+                let info = self.xfers.info[tag].clone();
+                self.backend
+                    .exec_transfer(info.from, info.to, *tag, &info.region);
+                self.push_ev(
+                    res.send_done.unwrap(),
+                    Ev::SendDone {
+                        rank: op.rank,
+                        op: op_id,
+                    },
+                );
+                if let Some(rd) = res.recv_done {
+                    self.push_ev(
+                        rd,
+                        Ev::RecvDone {
+                            rank: info.to,
+                            op: info.recv_op,
+                        },
+                    );
+                }
+            }
+            OpPayload::Recv { tag, .. } => {
+                let res = self.net.post_recv(now, op.rank, *tag);
+                if let Some(rd) = res.recv_done {
+                    self.push_ev(
+                        rd,
+                        Ev::RecvDone {
+                            rank: op.rank,
+                            op: op_id,
+                        },
+                    );
+                }
+            }
+            OpPayload::Compute(_) => unreachable!("compute in comm queue"),
+        }
+    }
+
+    /// Choose the next compute op for rank `r`: FIFO by default; under
+    /// the §7 locality extension, prefer (within a bounded scan window)
+    /// an op whose primary block the rank touched last — "sort the
+    /// operations in the ready queue after the last time the associated
+    /// data block has been accessed".
+    fn pick_compute(&mut self, r: usize) -> Option<OpId> {
+        if !self.locality || self.last_block[r].is_none() {
+            return self.ready_comp[r].pop_front();
+        }
+        const WINDOW: usize = 16;
+        let want = self.last_block[r];
+        let hit = self.ready_comp[r]
+            .iter()
+            .take(WINDOW)
+            .position(|id| super::primary_block(&self.ops[id.idx()]) == want);
+        match hit {
+            Some(i) => self.ready_comp[r].remove(i),
+            None => self.ready_comp[r].pop_front(),
+        }
+    }
+
+    /// Advance a rank: flush its comm queue, start compute or idle.
+    fn step(&mut self, rank: Rank, t: VTime) {
+        let r = rank.idx();
+        if self.state[r] == State::Done {
+            return;
+        }
+        let now = self.clock[r].max(t);
+        if let Some(t0) = self.idle_since[r].take() {
+            self.wait[r] += now - t0;
+        }
+        self.clock[r] = now;
+
+        // Invariant 2: all ready communication is initiated before any
+        // compute starts.
+        while let Some(c) = self.ready_comm[r].pop_front() {
+            self.post_comm(c);
+        }
+
+        if self.state[r] == State::Busy {
+            return;
+        }
+        if let Some(op) = self.pick_compute(r) {
+            self.state[r] = State::Busy;
+            let blk = super::primary_block(&self.ops[op.idx()]);
+            let hot = blk.is_some() && blk == self.last_block[r];
+            self.last_block[r] = blk.or(self.last_block[r]);
+            let cost = if hot {
+                self.costs_hot[op.idx()]
+            } else {
+                self.costs[op.idx()]
+            };
+            let done = now + cost;
+            self.push_ev(done, Ev::ComputeDone { rank, op });
+        } else if self.remaining[r] > 0 {
+            self.state[r] = State::Idle;
+            self.idle_since[r] = Some(now);
+        } else {
+            self.state[r] = State::Done;
+        }
+    }
+}
+
+pub fn run_latency_hiding(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+) -> Result<RunReport, SchedError> {
+    let n = cfg.nprocs as usize;
+    let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
+    let mut deps = cfg.deps.build();
+    deps.insert_all(ops);
+    let initial = deps.take_ready();
+
+    // Every process records + inserts every operation (global knowledge,
+    // Section 5.5): the dependency-system overhead is charged to all
+    // ranks up front.
+    let overhead = super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec);
+
+    let mut remaining = vec![0u64; n];
+    for op in ops {
+        remaining[op.rank.idx()] += 1;
+    }
+
+    let mut lh = Lh {
+        ops,
+        backend,
+        net: Network::new(&cfg.spec, node_of),
+        deps,
+        xfers: TransferTable::build(ops),
+        costs: compute_costs(ops, cfg),
+        costs_hot: super::compute_costs_hot(ops, cfg),
+        locality: cfg.locality,
+        last_block: vec![None; n],
+        clock: vec![overhead; n],
+        state: vec![State::Idle; n],
+        idle_since: vec![None; n],
+        ready_comm: vec![VecDeque::new(); n],
+        ready_comp: vec![VecDeque::new(); n],
+        remaining,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        completed: 0,
+        wait: vec![0.0; n],
+        busy: vec![0.0; n],
+    };
+
+    lh.distribute(initial, overhead);
+    for r in 0..n {
+        // Ranks with nothing to do yet park as Idle (or Done).
+        if lh.state[r] == State::Idle && lh.idle_since[r].is_none() {
+            lh.step(Rank(r as u32), overhead);
+        }
+    }
+
+    while let Some(TEvent { t, ev, .. }) = lh.heap.pop() {
+        match ev {
+            Ev::ComputeDone { rank, op } => {
+                let r = rank.idx();
+                // Busy time = the cost actually charged when the op was
+                // started (clock advanced to `t` when it began).
+                let started = lh.clock[r];
+                lh.busy[r] += t - started;
+                let _ = op;
+                lh.clock[r] = t;
+                lh.state[r] = State::Idle;
+                if let OpPayload::Compute(task) = &lh.ops[op.idx()].payload {
+                    lh.backend.exec_compute(rank, task);
+                }
+                lh.complete_op(op, t);
+                lh.step(rank, t);
+            }
+            Ev::SendDone { rank, op } => {
+                lh.complete_op(op, t);
+                if lh.state[rank.idx()] == State::Idle {
+                    lh.step(rank, t);
+                }
+            }
+            Ev::RecvDone { rank, op } => {
+                lh.complete_op(op, t);
+                if lh.state[rank.idx()] == State::Idle {
+                    lh.step(rank, t);
+                }
+            }
+        }
+    }
+
+    if lh.completed as usize != ops.len() {
+        return Err(SchedError::Deadlock {
+            executed: lh.completed,
+            total: ops.len() as u64,
+        });
+    }
+
+    let makespan = lh.clock.iter().cloned().fold(0.0, f64::max);
+    let mut report = RunReport::new(n);
+    report.makespan = makespan;
+    report.wait = lh.wait;
+    report.busy = lh.busy;
+    report.overhead = overhead;
+    report.ops_executed = ops.len() as u64;
+    report.n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
+    report.n_comm = ops.len() as u64 - report.n_compute;
+    report.bytes_inter = lh.net.bytes_inter;
+    report.bytes_intra = lh.net.bytes_intra;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::cluster::MachineSpec;
+    use crate::exec::SimBackend;
+    use crate::types::DType;
+    use crate::ufunc::{Kernel, OpBuilder};
+
+    fn stencil3_batch(nprocs: u32, rows: u64, br: u64) -> Vec<OpNode> {
+        let mut reg = Registry::new(nprocs);
+        let m = reg.alloc(vec![rows], br, DType::F32);
+        let nn = reg.alloc(vec![rows], br, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(nn);
+        let a = mv.slice(&[(2, rows)]);
+        let b = mv.slice(&[(0, rows - 2)]);
+        let c = nv.slice(&[(1, rows - 1)]);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Add, &c, &[&a, &b]);
+        bld.finish()
+    }
+
+    #[test]
+    fn completes_paper_stencil() {
+        let ops = stencil3_batch(2, 6, 3);
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut be = SimBackend;
+        let rep = run_latency_hiding(&ops, &cfg, &mut be).unwrap();
+        assert_eq!(rep.ops_executed, ops.len() as u64);
+        assert!(rep.makespan > 0.0);
+    }
+
+    #[test]
+    fn aligned_batch_has_no_wait() {
+        // Aligned add: no communication at all -> zero wait.
+        let mut reg = Registry::new(4);
+        let x = reg.alloc(vec![64], 4, DType::F32);
+        let y = reg.alloc(vec![64], 4, DType::F32);
+        let xv = reg.full_view(x);
+        let yv = reg.full_view(y);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Add, &yv, &[&xv, &yv]);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
+        let rep = run_latency_hiding(&ops, &cfg, &mut SimBackend).unwrap();
+        assert_eq!(rep.n_comm, 0);
+        assert!(rep.wait.iter().all(|&w| w == 0.0), "wait={:?}", rep.wait);
+    }
+
+    #[test]
+    fn makespan_scales_down_with_ranks() {
+        // Embarrassingly parallel batch: more ranks, shorter makespan.
+        let mk = |p: u32| {
+            let mut reg = Registry::new(p);
+            let x = reg.alloc(vec![1 << 14], 64, DType::F32);
+            let y = reg.alloc(vec![1 << 14], 64, DType::F32);
+            let xv = reg.full_view(x);
+            let yv = reg.full_view(y);
+            let mut bld = OpBuilder::new();
+            bld.ufunc(&reg, Kernel::Mul, &yv, &[&xv, &yv]);
+            let ops = bld.finish();
+            let mut spec = MachineSpec::tiny();
+            spec.nodes = 16;
+            let cfg = SchedCfg::new(spec, p);
+            run_latency_hiding(&ops, &cfg, &mut SimBackend)
+                .unwrap()
+                .makespan
+        };
+        let t1 = mk(1);
+        let t4 = mk(4);
+        let t16 = mk(16);
+        assert!(t4 < t1 * 0.4, "t1={t1} t4={t4}");
+        assert!(t16 < t4 * 0.5, "t4={t4} t16={t16}");
+    }
+
+    #[test]
+    fn wait_drops_vs_blocking_on_stencil() {
+        // The paper's core claim, in miniature: non-aligned stencil
+        // traffic waits less under latency-hiding than blocking.
+        let ops = stencil3_batch(4, 4096, 64);
+        let mut spec = MachineSpec::tiny();
+        spec.net_alpha = 100e-6; // make comm expensive
+        let cfg = SchedCfg::new(spec, 4);
+        let lh = run_latency_hiding(&ops, &cfg, &mut SimBackend).unwrap();
+        let bl = super::super::run_blocking(&ops, &cfg, &mut SimBackend).unwrap();
+        let lw: f64 = lh.wait.iter().sum();
+        let bw: f64 = bl.wait.iter().sum();
+        assert!(
+            lw < bw,
+            "latency-hiding should wait less: lh={lw} blocking={bw}"
+        );
+    }
+}

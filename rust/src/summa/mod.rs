@@ -1,0 +1,203 @@
+//! SUMMA distributed matrix multiply (van de Geijn & Watts, paper
+//! ref [26]) — DistNumPy's native matmul, used by the N-body and kNN
+//! benchmarks (Section 6.1.1).
+//!
+//! Row-slab layout variant: A (n×k), B (k×m) and C (n×m) are all
+//! distributed by rows with the same block size. Each SUMMA step
+//! broadcasts one row-panel of B (one base-block) from its owner to
+//! every rank; every rank then updates each of its local C blocks with
+//! `C_blk += A_blk[:, panel] @ B_panel`. The broadcast transfers overlap
+//! the panel updates of previous steps under the latency-hiding
+//! scheduler — which is why the paper sees SUMMA "performing very
+//! similar" with and without latency-hiding (compute dominates), a
+//! shape `benches/figures.rs` reproduces for Fig. 13.
+
+use crate::array::Registry;
+use crate::layout::ViewSpec;
+use crate::types::{BaseId, Rank};
+use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpBuilder, Operand, Region};
+
+/// Record `C = C + A @ B` into the builder.
+///
+/// Requirements (asserted): all three bases 2-D, same `block_rows`,
+/// `a.shape = [n, k]`, `b.shape = [k, m]`, `c.shape = [n, m]`.
+pub fn record_matmul(
+    bld: &mut OpBuilder,
+    reg: &Registry,
+    a: BaseId,
+    b: BaseId,
+    c: BaseId,
+) {
+    let (la, lb, lc) = (
+        reg.layout(a).clone(),
+        reg.layout(b).clone(),
+        reg.layout(c).clone(),
+    );
+    assert_eq!(la.shape.len(), 2);
+    assert_eq!(lb.shape.len(), 2);
+    assert_eq!(lc.shape.len(), 2);
+    let (n, k) = (la.shape[0], la.shape[1]);
+    let m = lb.shape[1];
+    assert_eq!(lb.shape[0], k, "inner dims must agree");
+    assert_eq!(lc.shape, vec![n, m]);
+    assert_eq!(la.block_rows, lc.block_rows, "A and C row-aligned");
+
+    let bv = ViewSpec::full(&lb);
+
+    // One SUMMA step per base-block of B (panel height = block size).
+    // Each step is one §5.3 group: broadcast the panel, then update.
+    for (panel_region, panel_intra, panel_owner) in
+        OpBuilder::default().svb_regions(reg, &bv)
+    {
+        bld.begin_group();
+        let panel_rows = panel_region.nrows;
+        let s0 = panel_region.block * lb.block_rows; // global first row of panel
+        // Broadcast the panel to every rank that owns C blocks.
+        let tags = bld.broadcast(reg, panel_region.clone(), panel_intra, reg.nprocs);
+
+        for rank in 0..reg.nprocs {
+            let rank = Rank(rank);
+            // Panel operand on this rank: local on the owner, staged else.
+            let (panel_op, panel_access) = if rank == panel_owner {
+                (
+                    Operand::Local(panel_region.clone()),
+                    Access::read_block(b, panel_region.block, panel_intra),
+                )
+            } else {
+                let tag = tags[rank.idx()].expect("broadcast tag");
+                (Operand::Staged(tag), Access::read_stage(tag))
+            };
+
+            // Update every local C block.
+            for cblk in lc.blocks_of(rank) {
+                let c_rows = lc.block_nrows(cblk);
+                let c_region = Region {
+                    base: c,
+                    block: cblk,
+                    row0: 0,
+                    nrows: c_rows,
+                    col0: 0,
+                    ncols: m,
+                    row_stride: m,
+                };
+                let c_intra = (0, c_rows * m);
+                // A panel slice: the same rows, columns [s0, s0+panel_rows).
+                let a_region = Region {
+                    base: a,
+                    block: cblk,
+                    row0: 0,
+                    nrows: c_rows,
+                    col0: s0,
+                    ncols: panel_rows,
+                    row_stride: k,
+                };
+                let a_intra = (s0, (c_rows - 1) * k + s0 + panel_rows);
+                let task = ComputeTask {
+                    kernel: Kernel::MatmulAcc {
+                        n: c_rows,
+                        k: panel_rows,
+                        m,
+                    },
+                    inputs: vec![
+                        Operand::Local(c_region.clone()),
+                        Operand::Local(a_region),
+                        panel_op.clone(),
+                    ],
+                    dst: Dst::Block(c_region),
+                    elems: c_rows * m,
+                };
+                let accesses = vec![
+                    Access::read_block(c, cblk, c_intra),
+                    Access::write_block(c, cblk, c_intra),
+                    Access::read_block(a, cblk, a_intra),
+                    panel_access,
+                ];
+                bld.compute(rank, task, accesses);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::{ClusterStore, Registry};
+    use crate::cluster::MachineSpec;
+    use crate::exec::{NativeBackend, SimBackend};
+    use crate::sched::{execute, Policy, SchedCfg};
+    use crate::types::DType;
+    use crate::util::rng::Rng;
+
+    fn dense_matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; n * m];
+        for i in 0..n {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..m {
+                    c[i * m + j] += aik * b[kk * m + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn run_summa(p: u32, n: u64, br: u64, policy: Policy) -> (Vec<f32>, Vec<f32>) {
+        let mut reg = Registry::new(p);
+        let a = reg.alloc(vec![n, n], br, DType::F32);
+        let b = reg.alloc(vec![n, n], br, DType::F32);
+        let c = reg.alloc(vec![n, n], br, DType::F32);
+        let mut store = ClusterStore::new(p);
+        store.alloc_base(reg.layout(a));
+        store.alloc_base(reg.layout(b));
+        store.alloc_base(reg.layout(c));
+        let mut rng = Rng::new(7);
+        let da = rng.fill_f32((n * n) as usize, -1.0, 1.0);
+        let db = rng.fill_f32((n * n) as usize, -1.0, 1.0);
+        store.scatter(reg.layout(a), &da);
+        store.scatter(reg.layout(b), &db);
+        let mut bld = OpBuilder::new();
+        record_matmul(&mut bld, &reg, a, b, c);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        let mut be = NativeBackend::new(store);
+        execute(policy, &ops, &cfg, &mut be).unwrap();
+        let got = be.store.gather(reg.layout(c));
+        let want = dense_matmul(&da, &db, n as usize, n as usize, n as usize);
+        (got, want)
+    }
+
+    #[test]
+    fn summa_matches_dense_latency_hiding() {
+        let (got, want) = run_summa(3, 12, 2, Policy::LatencyHiding);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn summa_matches_dense_blocking() {
+        let (got, want) = run_summa(2, 8, 2, Policy::Blocking);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn summa_comm_volume_scales_with_ranks() {
+        // P-1 transfers per panel: volume grows with P.
+        let vol = |p: u32| {
+            let mut reg = Registry::new(p);
+            let a = reg.alloc(vec![16, 16], 4, DType::F32);
+            let b = reg.alloc(vec![16, 16], 4, DType::F32);
+            let c = reg.alloc(vec![16, 16], 4, DType::F32);
+            let mut bld = OpBuilder::new();
+            record_matmul(&mut bld, &reg, a, b, c);
+            let ops = bld.finish();
+            let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            execute(Policy::LatencyHiding, &ops, &cfg, &mut SimBackend)
+                .unwrap()
+                .bytes_inter
+        };
+        assert!(vol(4) > vol(2));
+    }
+}

@@ -1,0 +1,58 @@
+//! Core identifier and element types shared across the runtime.
+
+/// MPI-style process rank in the (simulated) cluster.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Rank(pub u32);
+
+impl Rank {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for Rank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Identifier of an array-base (the paper's two-level hierarchy bottom).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct BaseId(pub u32);
+
+/// Identifier of a recorded operation (operation-node in the paper).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct OpId(pub u32);
+
+impl OpId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Message / staging-buffer tag. Unique per transfer within a flush batch.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Tag(pub u64);
+
+/// Element dtype of distributed arrays. The benchmarks are f32 (matching
+/// the AOT artifacts); f64 is supported by the layout/dependency machinery.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    #[inline]
+    pub fn size(self) -> u64 {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+}
+
+/// Virtual time in seconds (discrete-event clock).
+pub type VTime = f64;

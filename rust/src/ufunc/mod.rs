@@ -1,0 +1,505 @@
+//! The distributed universal-function engine (paper Section 5.3).
+//!
+//! A ufunc applies elementwise over array-views. The engine splits each
+//! recorded ufunc into *fragment tasks* — pieces that touch exactly one
+//! sub-view-block of every operand — following the paper's 4-step
+//! distributed-ufunc scheme:
+//!
+//! 1. computation is distributed by the **output** view's layout: the rank
+//!    owning an output fragment computes it;
+//! 2. remote input fragments become send/recv operation pairs;
+//! 3. the local computation is one compute operation per fragment;
+//! 4. (write-back is unnecessary here because computation is assigned at
+//!    output sub-view-block granularity, so outputs are always local.)
+//!
+//! For aligned operands this degenerates to one compute op per base-block
+//! with no communication — the paper's double-buffering case. For
+//! non-aligned operands (stencil views) it produces exactly the
+//! DAG of the paper's Fig. 5.
+
+pub mod op;
+
+pub use op::{Access, ComputeTask, Dst, Kernel, Loc, OpNode, OpPayload, Operand, Region};
+
+use crate::array::Registry;
+use crate::layout::{fragments, FragOperand};
+use crate::layout::{sub_view_blocks, ViewSpec};
+use crate::types::{OpId, Rank, Tag};
+
+/// Builds operation-nodes from array-level requests. One builder per
+/// flush batch; tags are unique within it. The registry is passed per
+/// call so the owning context can keep allocating arrays mid-recording.
+#[derive(Default)]
+pub struct OpBuilder {
+    pub ops: Vec<OpNode>,
+    next_tag: u64,
+    group: u32,
+}
+
+impl OpBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drain the recorded batch, resetting ids and tags for the next one.
+    pub fn take(&mut self) -> Vec<OpNode> {
+        self.next_tag = 0;
+        self.group = 0;
+        std::mem::take(&mut self.ops)
+    }
+
+    pub fn fresh_tag(&mut self) -> Tag {
+        let t = Tag(self.next_tag);
+        self.next_tag += 1;
+        t
+    }
+
+    /// Start a new array-level operation group (§5.3 phasing unit).
+    pub fn begin_group(&mut self) {
+        self.group += 1;
+    }
+
+    fn push(&mut self, rank: Rank, payload: OpPayload, accesses: Vec<Access>) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        self.ops.push(OpNode {
+            id,
+            rank,
+            group: self.group,
+            payload,
+            accesses,
+        });
+        id
+    }
+
+    fn region_of(&self, reg: &Registry, fo: &FragOperand, view: &ViewSpec) -> Region {
+        let layout = reg.layout(fo.base);
+        let (blk_lo, _) = layout.block_rows_range(fo.block);
+        let (col0, ncols) = match view.shape.len() {
+            1 => (0, 1),
+            2 => (view.offset[1], view.shape[1]),
+            // >2-D regions only occur in simulation mode where data is
+            // never materialized; collapse trailing dims conservatively.
+            _ => (0, view.shape[1..].iter().product()),
+        };
+        Region {
+            base: fo.base,
+            block: fo.block,
+            row0: fo.global_rows.0 - blk_lo,
+            nrows: fo.global_rows.1 - fo.global_rows.0,
+            col0,
+            ncols,
+            row_stride: if view.shape.len() == 1 {
+                1
+            } else {
+                layout.row_elems()
+            },
+        }
+    }
+
+    /// Record a transfer of `region` (on its owner) to `to`; returns the
+    /// staging tag the receiver can use as a compute input.
+    pub fn transfer(&mut self, from: Rank, to: Rank, region: Region, intra: (u64, u64)) -> Tag {
+        let tag = self.fresh_tag();
+        let bytes = region.elems() * 4;
+        self.push(
+            from,
+            OpPayload::Send {
+                peer: to,
+                tag,
+                bytes,
+                region: region.clone(),
+            },
+            vec![Access::read_block(region.base, region.block, intra)],
+        );
+        self.push(
+            to,
+            OpPayload::Recv {
+                peer: from,
+                tag,
+                bytes,
+            },
+            vec![Access::write_stage(tag)],
+        );
+        tag
+    }
+
+    /// Record one elementwise ufunc: `out = kernel(ins...)`.
+    /// All views must share a shape; the output view's owner computes.
+    pub fn ufunc(&mut self, reg: &Registry, kernel: Kernel, out: &ViewSpec, ins: &[&ViewSpec]) {
+        self.begin_group();
+        let out_layout = reg.layout(out.base).clone();
+        let mut layouts = vec![&out_layout];
+        let in_layouts: Vec<_> = ins.iter().map(|v| reg.layout(v.base).clone()).collect();
+        for l in &in_layouts {
+            layouts.push(l);
+        }
+        let mut views: Vec<&ViewSpec> = vec![out];
+        views.extend_from_slice(ins);
+
+        let frags = fragments(&layouts, &views);
+        for f in &frags {
+            let out_op = &f.operands[0];
+            let rank = out_op.owner;
+            let mut inputs = Vec::with_capacity(ins.len());
+            let mut accesses = Vec::with_capacity(ins.len() + 1);
+            let mut net_elems = 0u64;
+            for (i, fo) in f.operands.iter().enumerate().skip(1) {
+                let region = self.region_of(reg, fo, views[i]);
+                if fo.owner == rank {
+                    accesses.push(Access::read_block(fo.base, fo.block, fo.intra_block));
+                    inputs.push(Operand::Local(region));
+                } else {
+                    let tag = self.transfer(fo.owner, rank, region, fo.intra_block);
+                    accesses.push(Access::read_stage(tag));
+                    inputs.push(Operand::Staged(tag));
+                    net_elems += (f.view_rows.1 - f.view_rows.0)
+                        * views[i].shape[1..].iter().product::<u64>().max(1);
+                }
+            }
+            let out_region = self.region_of(reg, out_op, out);
+            let elems = out_region.elems();
+            accesses.push(Access::write_block(
+                out_op.base,
+                out_op.block,
+                out_op.intra_block,
+            ));
+            let _ = net_elems;
+            self.push(
+                rank,
+                OpPayload::Compute(ComputeTask {
+                    kernel,
+                    inputs,
+                    dst: Dst::Block(out_region),
+                    elems,
+                }),
+                accesses,
+            );
+        }
+    }
+
+    /// Record a full reduction `sum(kernel over view(s))` to a staged
+    /// scalar on rank 0. `kernel` must be a reducing kernel
+    /// ([`Kernel::PartialSum`] or [`Kernel::PartialAbsDiffSum`]).
+    /// Returns the tag holding the final result on rank 0.
+    pub fn reduce(&mut self, reg: &Registry, kernel: Kernel, views: &[&ViewSpec]) -> Tag {
+        self.begin_group();
+        assert!(kernel.is_reduction());
+        let layouts: Vec<_> = views
+            .iter()
+            .map(|v| reg.layout(v.base).clone())
+            .collect();
+        let layout_refs: Vec<&_> = layouts.iter().collect();
+        let frags = fragments(&layout_refs, views);
+
+        // Partial per fragment on the rank owning the *first* operand.
+        let mut partial_tags: Vec<(Rank, Tag)> = Vec::new();
+        for f in &frags {
+            let rank = f.operands[0].owner;
+            let mut inputs = Vec::new();
+            let mut accesses = Vec::new();
+            for (i, fo) in f.operands.iter().enumerate() {
+                let region = self.region_of(reg, fo, views[i]);
+                if fo.owner == rank {
+                    accesses.push(Access::read_block(fo.base, fo.block, fo.intra_block));
+                    inputs.push(Operand::Local(region));
+                } else {
+                    let tag = self.transfer(fo.owner, rank, region, fo.intra_block);
+                    accesses.push(Access::read_stage(tag));
+                    inputs.push(Operand::Staged(tag));
+                }
+            }
+            let ptag = self.fresh_tag();
+            accesses.push(Access::write_stage(ptag));
+            let elems = f.nrows() * views[0].shape[1..].iter().product::<u64>().max(1);
+            self.push(
+                rank,
+                OpPayload::Compute(ComputeTask {
+                    kernel,
+                    inputs,
+                    dst: Dst::Stage(ptag),
+                    elems,
+                }),
+                accesses,
+            );
+            partial_tags.push((rank, ptag));
+        }
+
+        // Combine each rank's block partials into one local scalar
+        // before the gather — one message per rank, not per block (the
+        // root would otherwise serialize P·blocks α-latencies under
+        // blocking execution). Its own group: it reads the partial
+        // stages computed above.
+        self.begin_group();
+        let mut rank_tags: Vec<(Rank, Tag)> = Vec::new();
+        for idx in 0..partial_tags.len() {
+            let rank = partial_tags[idx].0;
+            if partial_tags[..idx].iter().any(|(r, _)| *r == rank) {
+                continue; // this rank's partials already combined
+            }
+            let mine: Vec<Tag> = partial_tags
+                .iter()
+                .filter(|(r, _)| *r == rank)
+                .map(|(_, t)| *t)
+                .collect();
+            if mine.len() == 1 {
+                rank_tags.push((rank, mine[0]));
+                continue;
+            }
+            let ctag = self.fresh_tag();
+            let mut accesses: Vec<Access> =
+                mine.iter().map(|&t| Access::read_stage(t)).collect();
+            accesses.push(Access::write_stage(ctag));
+            let n = mine.len() as u64;
+            self.push(
+                rank,
+                OpPayload::Compute(ComputeTask {
+                    kernel: Kernel::AccumSum,
+                    inputs: mine.into_iter().map(Operand::Staged).collect(),
+                    dst: Dst::Stage(ctag),
+                    elems: n,
+                }),
+                accesses,
+            );
+            rank_tags.push((rank, ctag));
+        }
+
+        // Gather the per-rank scalars to rank 0 (as DistNumPy does for
+        // scalar reductions) and accumulate. A separate group: the
+        // gather sends read the stages combined above, so §5.3 phasing
+        // must not hoist them ahead of the combines.
+        self.begin_group();
+        let partial_tags = rank_tags;
+        let root = Rank(0);
+        let mut accum_inputs = Vec::new();
+        let mut accum_accesses = Vec::new();
+        for (rank, ptag) in partial_tags {
+            if rank == root {
+                accum_inputs.push(Operand::Staged(ptag));
+                accum_accesses.push(Access::read_stage(ptag));
+            } else {
+                // The transfer reuses the partial's stage tag: data
+                // backends source a scalar-placeholder send from the
+                // sender's stage under the transfer tag itself.
+                self.push(
+                    rank,
+                    OpPayload::Send {
+                        peer: root,
+                        tag: ptag,
+                        bytes: 8,
+                        region: Region::scalar(),
+                    },
+                    vec![Access::read_stage(ptag)],
+                );
+                self.push(
+                    root,
+                    OpPayload::Recv {
+                        peer: rank,
+                        tag: ptag,
+                        bytes: 8,
+                    },
+                    vec![Access::write_stage(ptag)],
+                );
+                accum_inputs.push(Operand::Staged(ptag));
+                accum_accesses.push(Access::read_stage(ptag));
+            }
+        }
+        let result = self.fresh_tag();
+        accum_accesses.push(Access::write_stage(result));
+        let n = accum_inputs.len() as u64;
+        self.push(
+            root,
+            OpPayload::Compute(ComputeTask {
+                kernel: Kernel::AccumSum,
+                inputs: accum_inputs,
+                dst: Dst::Stage(result),
+                elems: n,
+            }),
+            accum_accesses,
+        );
+        result
+    }
+
+    /// Broadcast a region from its owner to every other rank; returns the
+    /// staging tag per rank (index = rank). Used by SUMMA.
+    pub fn broadcast(
+        &mut self,
+        reg: &Registry,
+        region: Region,
+        intra: (u64, u64),
+        nprocs: u32,
+    ) -> Vec<Option<Tag>> {
+        let owner = reg.layout(region.base).owner(region.block);
+        let mut tags = vec![None; nprocs as usize];
+        for r in 0..nprocs {
+            let to = Rank(r);
+            if to == owner {
+                continue;
+            }
+            let tag = self.transfer(owner, to, region.clone(), intra);
+            tags[r as usize] = Some(tag);
+        }
+        tags
+    }
+
+    /// Record an opaque local compute op (used by SUMMA and the apps for
+    /// kernels that are not simple elementwise ufuncs).
+    pub fn compute(
+        &mut self,
+        rank: Rank,
+        task: ComputeTask,
+        accesses: Vec<Access>,
+    ) -> OpId {
+        self.push(rank, OpPayload::Compute(task), accesses)
+    }
+
+    /// Convenience: all sub-view-blocks of a view with their regions
+    /// and conservative intra-block intervals.
+    pub fn svb_regions(&self, reg: &Registry, view: &ViewSpec) -> Vec<(Region, (u64, u64), Rank)> {
+        let layout = reg.layout(view.base);
+        sub_view_blocks(layout, view)
+            .iter()
+            .map(|s| {
+                let fo = FragOperand {
+                    base: view.base,
+                    block: s.block,
+                    owner: s.owner,
+                    global_rows: s.global_rows,
+                    intra_block: {
+                        let (blk_lo, _) = layout.block_rows_range(s.block);
+                        let re = layout.row_elems();
+                        let (clo, chi) = view.col_bounds(layout);
+                        (
+                            (s.global_rows.0 - blk_lo) * re + clo,
+                            (s.global_rows.1 - 1 - blk_lo) * re + chi + 1,
+                        )
+                    },
+                };
+                (
+                    self.region_of(reg, &fo, view),
+                    fo.intra_block,
+                    s.owner,
+                )
+            })
+            .collect()
+    }
+
+    pub fn finish(self) -> Vec<OpNode> {
+        self.ops
+    }
+
+    pub fn n_recorded(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::types::DType;
+
+    fn setup() -> (Registry, ViewSpec, ViewSpec, ViewSpec) {
+        let mut reg = Registry::new(2);
+        let m = reg.alloc(vec![6], 3, DType::F32);
+        let n = reg.alloc(vec![6], 3, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(n);
+        let a = mv.slice(&[(2, 6)]);
+        let b = mv.slice(&[(0, 4)]);
+        let c = nv.slice(&[(1, 5)]);
+        (reg, a, b, c)
+    }
+
+    /// The paper's Fig. 5: the 3-point stencil generates 4 compute ops and
+    /// exactly one send/recv pair (M[3] from p1 to p0 for fragment 1 and
+    /// M[2] from p0 to p1 for fragment 2).
+    #[test]
+    fn stencil3_generates_fig5_dag_ops() {
+        let (reg, a, b, c) = setup();
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Add, &c, &[&a, &b]);
+        let ops = bld.finish();
+        let n_compute = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Compute(_)))
+            .count();
+        let n_send = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Send { .. }))
+            .count();
+        let n_recv = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Recv { .. }))
+            .count();
+        assert_eq!(n_compute, 4);
+        assert_eq!(n_send, 2);
+        assert_eq!(n_recv, 2);
+        // Fragment computes land on the output owner.
+        for o in &ops {
+            if let OpPayload::Compute(t) = &o.payload {
+                if let Dst::Block(r) = &t.dst {
+                    assert_eq!(reg.layout(r.base).owner(r.block), o.rank);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_ufunc_no_comm() {
+        let mut reg = Registry::new(4);
+        let x = reg.alloc(vec![64], 4, DType::F32);
+        let y = reg.alloc(vec![64], 4, DType::F32);
+        let xv = reg.full_view(x);
+        let yv = reg.full_view(y);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Add, &yv, &[&xv, &yv]);
+        let ops = bld.finish();
+        assert!(ops
+            .iter()
+            .all(|o| matches!(o.payload, OpPayload::Compute(_))));
+        assert_eq!(ops.len(), 16); // one per block
+    }
+
+    #[test]
+    fn reduce_produces_root_result() {
+        let mut reg = Registry::new(3);
+        let x = reg.alloc(vec![30], 5, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        let _tag = bld.reduce(&reg, Kernel::PartialSum, &[&xv]);
+        let ops = bld.finish();
+        // 6 block partials (2 per rank) -> 3 local combines; then one
+        // message per remote rank (1, 2) and the final accumulate.
+        let n_send = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Send { .. }))
+            .count();
+        assert_eq!(n_send, 2, "one gather message per remote rank");
+        let accum = ops
+            .iter()
+            .filter(|o| {
+                matches!(&o.payload, OpPayload::Compute(t) if t.kernel == Kernel::AccumSum)
+            })
+            .count();
+        assert_eq!(accum, 4, "3 per-rank combines + 1 root accumulate");
+        // Final accum on rank 0.
+        let last = ops.last().unwrap();
+        assert_eq!(last.rank, Rank(0));
+    }
+
+    #[test]
+    fn broadcast_sends_to_all_but_owner() {
+        let mut reg = Registry::new(4);
+        let x = reg.alloc(vec![16], 4, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        let regions = bld.svb_regions(&reg, &xv);
+        let (r0, intra, owner) = regions[1].clone();
+        assert_eq!(owner, Rank(1));
+        let tags = bld.broadcast(&reg, r0, intra, 4);
+        assert!(tags[1].is_none());
+        assert_eq!(tags.iter().flatten().count(), 3);
+        let ops = bld.finish();
+        assert_eq!(ops.len(), 6); // 3 send + 3 recv
+    }
+}

@@ -1,0 +1,350 @@
+//! Operation-nodes and access-nodes (paper Section 5.7, Fig. 7).
+//!
+//! An operation-node carries everything needed to execute it on a set of
+//! sub-view-blocks; each of its access-nodes names one memory access
+//! (read or write) to a base-block interval or a staging buffer. The
+//! dependency system orders operations purely through these accesses.
+
+use crate::types::{BaseId, OpId, Rank, Tag};
+
+/// What an access-node points at: a base-block (with a conservative
+/// flattened element interval) or a message staging buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Loc {
+    Block { base: BaseId, block: u64 },
+    Stage(Tag),
+}
+
+/// An access-node: one read/write of an operation on one location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub loc: Loc,
+    /// Conservative element interval within the location `[lo, hi)`.
+    pub lo: u64,
+    pub hi: u64,
+    pub write: bool,
+}
+
+impl Access {
+    pub fn read_block(base: BaseId, block: u64, intra: (u64, u64)) -> Access {
+        Access {
+            loc: Loc::Block { base, block },
+            lo: intra.0,
+            hi: intra.1,
+            write: false,
+        }
+    }
+
+    pub fn write_block(base: BaseId, block: u64, intra: (u64, u64)) -> Access {
+        Access {
+            loc: Loc::Block { base, block },
+            lo: intra.0,
+            hi: intra.1,
+            write: true,
+        }
+    }
+
+    pub fn read_stage(tag: Tag) -> Access {
+        Access {
+            loc: Loc::Stage(tag),
+            lo: 0,
+            hi: u64::MAX,
+            write: false,
+        }
+    }
+
+    pub fn write_stage(tag: Tag) -> Access {
+        Access {
+            loc: Loc::Stage(tag),
+            lo: 0,
+            hi: u64::MAX,
+            write: true,
+        }
+    }
+
+    /// Two accesses conflict when they touch the same location, their
+    /// intervals overlap, and at least one writes.
+    #[inline]
+    pub fn conflicts(&self, other: &Access) -> bool {
+        self.loc == other.loc
+            && (self.write || other.write)
+            && self.lo < other.hi
+            && other.lo < self.hi
+    }
+}
+
+/// Block-level compute kernels. Elementwise kernels map 1:1 onto the L1
+/// Pallas kernels (python/compile/kernels/); the Rust native backend
+/// mirrors them for shapes with no AOT artifact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// out = in
+    Copy,
+    /// out = a + b
+    Add,
+    /// out = a - b
+    Sub,
+    /// out = a * b
+    Mul,
+    /// out = a / b
+    Div,
+    /// out = a + alpha * b
+    Axpy(f32),
+    /// out = alpha * a
+    Scale(f32),
+    /// out = |a - b|
+    AbsDiff,
+    /// out = 0.2 * (c + u + d + l + r)  — fused 5-point stencil
+    Stencil5,
+    /// out = BlackScholes(s, x, t) with fixed (r, v)
+    BlackScholes,
+    /// out = mandelbrot iteration count; payload = max iterations
+    Fractal(u32),
+    /// C += A @ B with inner dim k (inputs: [C-in? no — dst doubles as
+    /// accumulator], A panel, B panel); payload = (n, k, m)
+    MatmulAcc { n: u64, k: u64, m: u64 },
+    /// staged scalar = sum(a)
+    PartialSum,
+    /// staged scalar = sum(|a - b|)
+    PartialAbsDiffSum,
+    /// staged scalar = sum of staged partial scalars
+    AccumSum,
+}
+
+impl Kernel {
+    /// Floating-point operations per output element (cost model).
+    pub fn flops_per_elem(&self) -> f64 {
+        match self {
+            Kernel::Copy => 0.0,
+            Kernel::Add | Kernel::Sub | Kernel::Mul => 1.0,
+            Kernel::Div => 4.0,
+            Kernel::Axpy(_) => 2.0,
+            Kernel::Scale(_) => 1.0,
+            Kernel::AbsDiff => 2.0,
+            Kernel::Stencil5 => 5.0,
+            // log, exp, sqrt, erf ~ 15 flops each in a scalar libm.
+            Kernel::BlackScholes => 60.0,
+            Kernel::Fractal(iters) => 14.0 * *iters as f64,
+            Kernel::MatmulAcc { k, .. } => 2.0 * *k as f64,
+            Kernel::PartialSum => 1.0,
+            Kernel::PartialAbsDiffSum => 3.0,
+            Kernel::AccumSum => 1.0,
+        }
+    }
+
+    /// Memory traffic in bytes per output element (inputs + output).
+    pub fn bytes_per_elem(&self, n_inputs: usize) -> f64 {
+        match self {
+            // Reductions read inputs, write O(1).
+            Kernel::PartialSum | Kernel::PartialAbsDiffSum | Kernel::AccumSum => {
+                4.0 * n_inputs as f64
+            }
+            // Matmul traffic accounted separately via elems ~ n*m and k.
+            Kernel::MatmulAcc { .. } => 12.0,
+            _ => 4.0 * (n_inputs as f64 + 1.0),
+        }
+    }
+
+    pub fn is_reduction(&self) -> bool {
+        matches!(
+            self,
+            Kernel::PartialSum | Kernel::PartialAbsDiffSum | Kernel::AccumSum
+        )
+    }
+
+    /// Name of the AOT HLO artifact implementing this kernel at the
+    /// artifact's block shape, if one exists.
+    pub fn artifact(&self) -> Option<&'static str> {
+        match self {
+            Kernel::Add => Some("add1d"),
+            Kernel::Sub => Some("sub2d"),
+            Kernel::Div => None,
+            Kernel::Mul => Some("mul2d"),
+            Kernel::Axpy(_) => Some("axpy1d"),
+            Kernel::Stencil5 => Some("stencil5v"),
+            Kernel::BlackScholes => Some("black_scholes"),
+            Kernel::Fractal(_) => Some("fractal"),
+            Kernel::MatmulAcc { .. } => Some("matmul"),
+            _ => None,
+        }
+    }
+}
+
+/// A rectangular region inside one base-block (real-data addressing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub base: BaseId,
+    pub block: u64,
+    /// First row, local to the block.
+    pub row0: u64,
+    pub nrows: u64,
+    /// First column (flattened trailing dims) and width.
+    pub col0: u64,
+    pub ncols: u64,
+    /// Elements per block row (stride between consecutive rows).
+    pub row_stride: u64,
+}
+
+impl Region {
+    pub fn elems(&self) -> u64 {
+        self.nrows * self.ncols
+    }
+
+    /// Placeholder region for scalar (staged) transfers.
+    pub fn scalar() -> Region {
+        Region {
+            base: BaseId(u32::MAX),
+            block: 0,
+            row0: 0,
+            nrows: 1,
+            col0: 0,
+            ncols: 1,
+            row_stride: 1,
+        }
+    }
+
+    pub fn is_scalar_placeholder(&self) -> bool {
+        self.base == BaseId(u32::MAX)
+    }
+}
+
+/// A compute input: a local block region or a staged (received) buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Operand {
+    Local(Region),
+    Staged(Tag),
+}
+
+/// Compute destination: a local block region or a staging slot (for
+/// reduction partials/results).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dst {
+    Block(Region),
+    Stage(Tag),
+}
+
+/// One block-level compute task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeTask {
+    pub kernel: Kernel,
+    pub inputs: Vec<Operand>,
+    pub dst: Dst,
+    /// Output elements (cost model driver).
+    pub elems: u64,
+}
+
+/// Payload of an operation-node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpPayload {
+    Compute(ComputeTask),
+    Send {
+        peer: Rank,
+        tag: Tag,
+        bytes: u64,
+        /// Source region to serialize (real-data mode).
+        region: Region,
+    },
+    Recv {
+        peer: Rank,
+        tag: Tag,
+        bytes: u64,
+    },
+}
+
+/// An operation-node (paper Fig. 7): payload + access-nodes + owner rank.
+#[derive(Clone, Debug)]
+pub struct OpNode {
+    pub id: OpId,
+    pub rank: Rank,
+    /// Array-level operation this fragment belongs to (one group per
+    /// recorded ufunc/reduction/SUMMA step). The blocking baseline uses
+    /// it to phase execution per §5.3: exchange all elements of an array
+    /// operation, then compute it.
+    pub group: u32,
+    pub payload: OpPayload,
+    pub accesses: Vec<Access>,
+}
+
+impl OpNode {
+    #[inline]
+    pub fn is_comm(&self) -> bool {
+        !matches!(self.payload, OpPayload::Compute(_))
+    }
+
+    /// (flops, memory bytes) of a compute op for the cost model.
+    pub fn compute_cost(&self) -> Option<(f64, f64)> {
+        match &self.payload {
+            OpPayload::Compute(t) => {
+                let flops = t.kernel.flops_per_elem() * t.elems as f64;
+                let bytes = t.kernel.bytes_per_elem(t.inputs.len()) * t.elems as f64;
+                Some((flops, bytes))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_rules() {
+        let b = BaseId(0);
+        let r1 = Access::read_block(b, 0, (0, 10));
+        let r2 = Access::read_block(b, 0, (5, 15));
+        let w1 = Access::write_block(b, 0, (5, 15));
+        let w2 = Access::write_block(b, 0, (20, 30));
+        let other_block = Access::write_block(b, 1, (0, 10));
+        assert!(!r1.conflicts(&r2), "read-read never conflicts");
+        assert!(r1.conflicts(&w1), "overlapping read-write conflicts");
+        assert!(w1.conflicts(&r1));
+        assert!(!r1.conflicts(&w2), "disjoint intervals don't conflict");
+        assert!(!w1.conflicts(&other_block), "different blocks never conflict");
+        let w3 = Access::write_block(b, 0, (0, 6));
+        assert!(w1.conflicts(&w3), "write-write overlapping conflicts");
+    }
+
+    #[test]
+    fn stage_conflicts() {
+        let w = Access::write_stage(Tag(7));
+        let r = Access::read_stage(Tag(7));
+        let r8 = Access::read_stage(Tag(8));
+        assert!(w.conflicts(&r));
+        assert!(!w.conflicts(&r8));
+    }
+
+    #[test]
+    fn kernel_flops_sane() {
+        assert_eq!(Kernel::Add.flops_per_elem(), 1.0);
+        assert_eq!(Kernel::Stencil5.flops_per_elem(), 5.0);
+        assert_eq!(
+            Kernel::MatmulAcc { n: 4, k: 32, m: 4 }.flops_per_elem(),
+            64.0
+        );
+        assert!(Kernel::Fractal(32).flops_per_elem() > 100.0);
+    }
+
+    #[test]
+    fn region_elems() {
+        let r = Region {
+            base: BaseId(0),
+            block: 0,
+            row0: 1,
+            nrows: 3,
+            col0: 2,
+            ncols: 5,
+            row_stride: 10,
+        };
+        assert_eq!(r.elems(), 15);
+        assert!(Region::scalar().is_scalar_placeholder());
+    }
+
+    #[test]
+    fn boundary_touch_no_overlap() {
+        let b = BaseId(0);
+        let w1 = Access::write_block(b, 0, (0, 10));
+        let w2 = Access::write_block(b, 0, (10, 20));
+        assert!(!w1.conflicts(&w2), "half-open intervals: [0,10) vs [10,20)");
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal wall-clock bench driver (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()` with
+//! `harness = false`; targets use [`Bench`] to time closures with warmup,
+//! report summary statistics, and emit one line per case.
+
+use std::time::Instant;
+
+use super::stats::{fmt_time, summarize, Summary};
+
+pub struct Bench {
+    /// Minimum measured iterations per case.
+    pub min_iters: usize,
+    /// Wall-clock budget per case in seconds.
+    pub budget: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 5,
+            budget: 2.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            min_iters: 3,
+            budget: 0.5,
+        }
+    }
+
+    /// Time `f`, printing `name: median ± stddev (n iters)`.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        // Warmup.
+        let _ = f();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.budget
+                && samples.len() < 1000)
+        {
+            let t0 = Instant::now();
+            let out = f();
+            samples.push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(&out);
+        }
+        let s = summarize(&samples);
+        println!(
+            "{name:44} {:>12} ± {:>10}  ({} iters)",
+            fmt_time(s.median),
+            fmt_time(s.stddev),
+            s.n
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            min_iters: 3,
+            budget: 0.01,
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.n >= 3);
+        assert!(s.median >= 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small in-repo utilities.
+//!
+//! The build environment is offline with only the `xla` crate's dependency
+//! closure available, so the RNG, JSON emission, CLI parsing and the
+//! bench/property-test drivers that would normally come from `rand`,
+//! `serde_json`, `clap`, `criterion` and `proptest` live here instead.
+
+pub mod bench;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod stats;
