@@ -81,7 +81,14 @@ impl Workload {
                 let a = reg.alloc(vec![n, n], br, DType::F32);
                 let b = reg.alloc(vec![n, n], br, DType::F32);
                 let c = reg.alloc(vec![n, n], br, DType::F32);
-                record_matmul(&mut bld, &reg, a, b, c);
+                record_matmul(
+                    &mut bld,
+                    &reg,
+                    a,
+                    b,
+                    c,
+                    distnumpy::comm::Collective::Flat,
+                );
             }
         }
         bld.finish()

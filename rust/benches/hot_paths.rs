@@ -37,7 +37,12 @@ fn stencil_batch(p: u32, n: u64) -> Vec<OpNode> {
     let r = gv.slice(&[(1, n - 1), (2, n)]);
     let mut bld = OpBuilder::new();
     bld.ufunc(&reg, Kernel::Stencil5, &wv, &[&c, &u, &d, &l, &r]);
-    bld.reduce(&reg, Kernel::PartialAbsDiffSum, &[&wv, &c]);
+    bld.reduce(
+        &reg,
+        Kernel::PartialAbsDiffSum,
+        &[&wv, &c],
+        distnumpy::comm::Collective::Flat,
+    );
     bld.ufunc(&reg, Kernel::Copy, &c, &[&wv]);
     bld.finish()
 }

@@ -31,7 +31,8 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
         ctx.ufunc(Kernel::Mul, &qq, &[&qq, &qq]);
         ctx.ufunc(Kernel::Mul, &pp, &[&pp, &pp]);
         // -2 q pᵀ via SUMMA.
-        record_matmul(&mut ctx.builder, &ctx.reg, q.base, c.base, d.base);
+        let collective = ctx.cfg.collective;
+        record_matmul(&mut ctx.builder, &ctx.reg, q.base, c.base, d.base, collective);
         // Assemble distances and extract the best per sweep (reduction).
         ctx.ufunc(Kernel::Scale(-2.0), &d, &[&d]);
         let _ = ctx.sum(&d);

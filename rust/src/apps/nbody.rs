@@ -29,8 +29,9 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
     for _ in 0..p.iters {
         // Pairwise geometry + force tiles: two SUMMA products, as in the
         // MATLAB translation (distance matrix, then force aggregation).
-        record_matmul(&mut ctx.builder, &ctx.reg, r2.base, w.base, f.base);
-        record_matmul(&mut ctx.builder, &ctx.reg, f.base, r2.base, w.base);
+        let collective = ctx.cfg.collective;
+        record_matmul(&mut ctx.builder, &ctx.reg, r2.base, w.base, f.base, collective);
+        record_matmul(&mut ctx.builder, &ctx.reg, f.base, r2.base, w.base, collective);
         // Body updates: aligned vector ops.
         ctx.ufunc(Kernel::Axpy(0.5), &acc, &[&acc, &pos]);
         ctx.ufunc(Kernel::Axpy(0.01), &vel, &[&vel, &acc]);

@@ -28,6 +28,13 @@ pub struct MachineSpec {
     pub net_alpha: VTime,
     /// Inter-node inverse bandwidth (s/B) — ~112 MB/s effective GbE.
     pub net_beta: VTime,
+    /// Per-message occupancy of the receiving NIC/CPU (s): tag matching,
+    /// rendezvous handshake and copy-out of the era's MPI stack. Unlike
+    /// `net_alpha` (pipeline latency, overlappable across messages) this
+    /// serializes messages draining into one node — the term that makes
+    /// flat O(P) fan-ins hot-spot on the root and message aggregation
+    /// worthwhile (see `comm`).
+    pub net_msg_cost: VTime,
     /// Intra-node (shared-memory transport) latency (s).
     pub smp_alpha: VTime,
     /// Intra-node inverse bandwidth (s/B).
@@ -71,6 +78,7 @@ impl MachineSpec {
             node_mem_bw: 6.0e9,
             net_alpha: 60e-6,
             net_beta: 1.0 / 112e6,
+            net_msg_cost: 20e-6,
             smp_alpha: 1.5e-6,
             smp_beta: 1.0 / 1.8e9,
             lh_op_overhead: 0.8e-6,
@@ -93,6 +101,7 @@ impl MachineSpec {
             node_mem_bw: 8e9,
             net_alpha: 10e-6,
             net_beta: 1e-8,
+            net_msg_cost: 2e-6,
             smp_alpha: 1e-6,
             smp_beta: 1e-9,
             lh_op_overhead: 0.0,

@@ -1,0 +1,451 @@
+//! Message aggregation: per-(src, dst) coalescing of block transfers.
+//!
+//! A flush batch routinely records several small transfers between the
+//! same pair of ranks in the same epoch — a stencil fragment pulling two
+//! shifted regions from one neighbour, SUMMA panels, halo exchanges of
+//! consecutive array operations. Each one pays the full per-message cost
+//! (α latency plus the receiver-side message overhead). This pass packs
+//! them into one wire message ([`SendSrc::Packed`]), amortizing those
+//! per-message terms, while staying a *pure op-stream rewrite*: the
+//! packed send/recv are ordinary dependency-tracked [`OpNode`]s, so
+//! every policy schedules them through the unmodified machinery.
+//!
+//! ## Hoisting and validity
+//!
+//! The packed message is emitted at the position of its **first**
+//! constituent (the anchor); later constituents are hoisted up to it. A
+//! candidate may join a buffer only if nothing between the *start of
+//! the anchor's §5.3 group* and the candidate writes anything the
+//! candidate reads — otherwise the hoisted send would capture pre-write
+//! data. (Group start, not anchor position: the blocking baseline
+//! executes the packed pair in the anchor group's exchange phase, i.e.
+//! before every compute of that group, so writes anywhere in the anchor
+//! group count as hazards too.) Under this rule the rewrite is
+//! semantics-preserving for the dependency-tracked policies *and* for
+//! blocking.
+//!
+//! The naive evaluator of Fig. 6 is a different story: a coalesced send
+//! becomes ready only once *all* constituents are, so its matching
+//! (blocking) receive can park a rank behind work that feeds the packed
+//! send — a cycle the scheduler must detect and report rather than hang
+//! (see `sched::naive` and the regression test in `rust/tests/props.rs`).
+
+use std::borrow::Cow;
+
+use crate::types::{OpId, Rank, Tag};
+use crate::ufunc::{Access, Loc, OpNode, OpPayload, SendSrc};
+use crate::util::fxhash::FxHashMap;
+
+/// What the pass did — threaded into [`crate::metrics::RunReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggStats {
+    /// Packed wire messages emitted.
+    pub packed_msgs: u64,
+    /// Constituent transfers absorbed into packed messages.
+    pub packed_parts: u64,
+}
+
+/// An open per-(src, dst) coalescing buffer.
+struct Buffer {
+    /// Index of the first constituent send (packed ops land here).
+    anchor: usize,
+    /// Indices of the constituent sends.
+    parts: Vec<usize>,
+    /// Block write accesses recorded since the anchor (hazard list).
+    hazards: Vec<Access>,
+}
+
+/// Hazard lists longer than this seal the buffer — bounds the validity
+/// scan on long flush batches. Sized for the figure-generation runs: a
+/// full-scale ufunc group records a few hundred fragment writes, and a
+/// buffer usually spans a handful of groups.
+const HAZARD_CAP: usize = 4096;
+
+/// Coalesce same-(src, dst) block transfers into packed messages of at
+/// most `max_parts` constituents. `max_parts < 2` disables the pass.
+/// Returns the rewritten stream (ids renumbered) and what was packed;
+/// the input is borrowed unchanged when nothing coalesces.
+pub fn aggregate(ops: &[OpNode], max_parts: usize) -> (Cow<'_, [OpNode]>, AggStats) {
+    if max_parts < 2 {
+        return (Cow::Borrowed(ops), AggStats::default());
+    }
+
+    // Tag -> recv index (to drop constituent recvs alongside sends).
+    let mut recv_of: FxHashMap<Tag, usize> = FxHashMap::default();
+    for (i, op) in ops.iter().enumerate() {
+        if let OpPayload::Recv { tag, .. } = &op.payload {
+            recv_of.insert(*tag, i);
+        }
+    }
+
+    let mut open: Vec<((Rank, Rank), Buffer)> = Vec::new();
+    let mut sealed: Vec<Buffer> = Vec::new();
+    // Block writes seen so far in the current §5.3 group — the seed for
+    // a buffer opened later in the same group (see the validity rule).
+    let mut group_writes: Vec<Access> = Vec::new();
+    let mut cur_group = ops.first().map(|o| o.group).unwrap_or(0);
+
+    for (i, op) in ops.iter().enumerate() {
+        if op.group != cur_group {
+            cur_group = op.group;
+            group_writes.clear();
+        }
+        // Only plain block transfers coalesce; stage-sourced forwards
+        // (tree hops, reduction partials) keep their own message.
+        let candidate_peer = match &op.payload {
+            OpPayload::Send {
+                peer,
+                src: SendSrc::Region(_),
+                ..
+            } => Some(*peer),
+            _ => None,
+        };
+        if let Some(peer) = candidate_peer {
+            let key = (op.rank, peer);
+            match open.iter().position(|(k, _)| *k == key) {
+                Some(pos) => {
+                    let full = open[pos].1.parts.len() >= max_parts;
+                    let hazard = op.accesses.iter().any(|a| {
+                        !a.write && open[pos].1.hazards.iter().any(|h| h.conflicts(a))
+                    });
+                    if full || hazard {
+                        let (_, buf) = open.remove(pos);
+                        sealed.push(buf);
+                        open.push((
+                            key,
+                            Buffer {
+                                anchor: i,
+                                parts: vec![i],
+                                hazards: group_writes.clone(),
+                            },
+                        ));
+                    } else {
+                        open[pos].1.parts.push(i);
+                    }
+                }
+                None => open.push((
+                    key,
+                    Buffer {
+                        anchor: i,
+                        parts: vec![i],
+                        hazards: group_writes.clone(),
+                    },
+                )),
+            }
+            continue;
+        }
+
+        // Track block writes for the validity rule — both in every open
+        // buffer and in the current group's seed list. (Stage writes can
+        // never conflict with a candidate's block reads — skip them to
+        // keep hazard lists short.)
+        let mut wrote = false;
+        for a in &op.accesses {
+            if a.write && matches!(a.loc, Loc::Block { .. }) {
+                group_writes.push(*a);
+                for (_, buf) in open.iter_mut() {
+                    buf.hazards.push(*a);
+                }
+                wrote = true;
+            }
+        }
+        if wrote {
+            let mut j = 0;
+            while j < open.len() {
+                if open[j].1.hazards.len() > HAZARD_CAP {
+                    let (_, buf) = open.remove(j);
+                    sealed.push(buf);
+                } else {
+                    j += 1;
+                }
+            }
+        }
+    }
+    sealed.extend(open.into_iter().map(|(_, b)| b));
+
+    // Decide what to pack.
+    let mut stats = AggStats::default();
+    let mut drop = vec![false; ops.len()];
+    let mut packed_at: FxHashMap<usize, Vec<usize>> = FxHashMap::default();
+    for buf in sealed {
+        if buf.parts.len() < 2 {
+            continue;
+        }
+        for &p in &buf.parts {
+            let tag = match &ops[p].payload {
+                OpPayload::Send { tag, .. } => *tag,
+                _ => unreachable!("buffered op is a send"),
+            };
+            drop[p] = true;
+            drop[recv_of[&tag]] = true;
+        }
+        stats.packed_msgs += 1;
+        stats.packed_parts += buf.parts.len() as u64;
+        packed_at.insert(buf.anchor, buf.parts);
+    }
+    if stats.packed_msgs == 0 {
+        return (Cow::Borrowed(ops), stats);
+    }
+
+    // Envelope tags must not collide with any tag in the batch.
+    let mut next_tag = 1 + ops
+        .iter()
+        .flat_map(|op| {
+            let payload_tag = match &op.payload {
+                OpPayload::Send { tag, .. } | OpPayload::Recv { tag, .. } => Some(tag.0),
+                OpPayload::Compute(_) => None,
+            };
+            payload_tag.into_iter().chain(op.accesses.iter().filter_map(|a| {
+                match a.loc {
+                    Loc::Stage(t) => Some(t.0),
+                    Loc::Block { .. } => None,
+                }
+            }))
+        })
+        .max()
+        .unwrap_or(0);
+
+    let mut out: Vec<OpNode> = Vec::with_capacity(ops.len());
+    for (i, op) in ops.iter().enumerate() {
+        if let Some(parts) = packed_at.get(&i) {
+            let (from, group) = (op.rank, op.group);
+            let to = match &op.payload {
+                OpPayload::Send { peer, .. } => *peer,
+                _ => unreachable!(),
+            };
+            let mut packed = Vec::with_capacity(parts.len());
+            let mut send_accesses = Vec::new();
+            let mut recv_accesses = Vec::with_capacity(parts.len());
+            let mut bytes = 0u64;
+            for &p in parts {
+                match &ops[p].payload {
+                    OpPayload::Send {
+                        tag, bytes: b, src, ..
+                    } => {
+                        packed.push((*tag, src.clone()));
+                        bytes += b;
+                        recv_accesses.push(Access::write_stage(*tag));
+                    }
+                    _ => unreachable!(),
+                }
+                send_accesses.extend(ops[p].accesses.iter().copied());
+            }
+            let envelope = Tag(next_tag);
+            next_tag += 1;
+            out.push(OpNode {
+                id: OpId(0), // renumbered below
+                rank: from,
+                group,
+                payload: OpPayload::Send {
+                    peer: to,
+                    tag: envelope,
+                    bytes,
+                    src: SendSrc::Packed(packed),
+                },
+                accesses: send_accesses,
+            });
+            out.push(OpNode {
+                id: OpId(0),
+                rank: to,
+                group,
+                payload: OpPayload::Recv {
+                    peer: from,
+                    tag: envelope,
+                    bytes,
+                },
+                accesses: recv_accesses,
+            });
+            continue;
+        }
+        if drop[i] {
+            continue;
+        }
+        out.push(op.clone());
+    }
+    for (i, op) in out.iter_mut().enumerate() {
+        op.id = OpId(i as u32);
+    }
+    (Cow::Owned(out), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::cluster::MachineSpec;
+    use crate::exec::SimBackend;
+    use crate::sched::{execute, Policy, SchedCfg};
+    use crate::types::DType;
+    use crate::ufunc::{Kernel, OpBuilder};
+
+    /// A 3-point stencil whose fragments pull two shifted regions from
+    /// the same neighbour: the canonical coalescing opportunity.
+    fn stencil_ops(p: u32, rows: u64, br: u64) -> Vec<OpNode> {
+        let mut reg = Registry::new(p);
+        let m = reg.alloc(vec![rows], br, DType::F32);
+        let nn = reg.alloc(vec![rows], br, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(nn);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(
+            &reg,
+            Kernel::Add,
+            &nv.slice(&[(1, rows - 1)]),
+            &[&mv.slice(&[(2, rows)]), &mv.slice(&[(0, rows - 2)])],
+        );
+        bld.finish()
+    }
+
+    fn count_transfers(ops: &[OpNode]) -> (usize, usize) {
+        let s = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Send { .. }))
+            .count();
+        let r = ops
+            .iter()
+            .filter(|o| matches!(o.payload, OpPayload::Recv { .. }))
+            .count();
+        (s, r)
+    }
+
+    #[test]
+    fn threshold_below_two_is_identity() {
+        let ops = stencil_ops(2, 12, 2);
+        let (out, stats) = aggregate(&ops, 1);
+        assert_eq!(out.len(), ops.len());
+        assert_eq!(stats, AggStats::default());
+    }
+
+    #[test]
+    fn packs_same_pair_transfers_and_renumbers() {
+        let ops = stencil_ops(2, 12, 2);
+        let (before_s, before_r) = count_transfers(&ops);
+        let (out, stats) = aggregate(&ops, 8);
+        let (after_s, after_r) = count_transfers(&out);
+        assert!(stats.packed_msgs >= 1, "stencil must offer coalescing");
+        assert!(stats.packed_parts > stats.packed_msgs);
+        let saved = (stats.packed_parts - stats.packed_msgs) as usize;
+        assert_eq!(after_s, before_s - saved);
+        assert_eq!(after_r, before_r - saved);
+        for (i, op) in out.iter().enumerate() {
+            assert_eq!(op.id.idx(), i, "ids must match indices");
+        }
+        // Envelope tags are fresh.
+        let mut seen = std::collections::HashSet::new();
+        for op in out.iter() {
+            if let OpPayload::Recv { tag, .. } = &op.payload {
+                assert!(seen.insert(*tag), "duplicate wire tag {tag:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_max_parts() {
+        let ops = stencil_ops(2, 48, 2);
+        let (_, unbounded) = aggregate(&ops, usize::MAX);
+        let (out, stats) = aggregate(&ops, 2);
+        assert!(unbounded.packed_parts >= 2, "workload offers coalescing");
+        // The bounded run can never absorb more constituents than the
+        // unbounded one, and splitting the same constituents into
+        // 2-part envelopes takes at least as many messages.
+        assert!(stats.packed_parts <= unbounded.packed_parts);
+        assert!(stats.packed_msgs >= unbounded.packed_msgs);
+        for op in out.iter() {
+            if let OpPayload::Send {
+                src: SendSrc::Packed(parts),
+                ..
+            } = &op.payload
+            {
+                assert!(parts.len() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn write_hazard_prevents_stale_capture() {
+        // Two same-pair sends with an intervening write to the second
+        // send's source must NOT merge.
+        use crate::ufunc::{ComputeTask, Dst, Operand, Region};
+        let b = crate::types::BaseId(0);
+        let region = |lo: u64| Region {
+            base: b,
+            block: 0,
+            row0: lo,
+            nrows: 1,
+            col0: 0,
+            ncols: 4,
+            row_stride: 4,
+        };
+        let send = |id: u32, tag: u64, lo: u64| OpNode {
+            id: OpId(id),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Send {
+                peer: Rank(1),
+                tag: Tag(tag),
+                bytes: 16,
+                src: SendSrc::Region(region(lo)),
+            },
+            accesses: vec![Access::read_block(b, 0, (lo * 4, lo * 4 + 4))],
+        };
+        let recv = |id: u32, tag: u64| OpNode {
+            id: OpId(id),
+            rank: Rank(1),
+            group: 0,
+            payload: OpPayload::Recv {
+                peer: Rank(0),
+                tag: Tag(tag),
+                bytes: 16,
+            },
+            accesses: vec![Access::write_stage(Tag(tag))],
+        };
+        let writer = OpNode {
+            id: OpId(2),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::Scale(2.0),
+                inputs: vec![Operand::Local(region(1))],
+                dst: Dst::Block(region(1)),
+                elems: 4,
+            }),
+            accesses: vec![Access::write_block(b, 0, (4, 8))],
+        };
+        let ops = vec![send(0, 0, 0), recv(1, 0), writer, send(3, 1, 1), recv(4, 1)];
+        let (out, stats) = aggregate(&ops, 8);
+        assert_eq!(stats.packed_msgs, 0, "hazard must block the merge");
+        assert_eq!(out.len(), ops.len());
+
+        // Without the writer the two sends do merge.
+        let ops2 = vec![send(0, 0, 0), recv(1, 0), send(2, 1, 1), recv(3, 1)];
+        let (out2, stats2) = aggregate(&ops2, 8);
+        assert_eq!(stats2.packed_msgs, 1);
+        assert_eq!(stats2.packed_parts, 2);
+        assert_eq!(out2.len(), 2, "2 sends + 2 recvs become 1 + 1");
+    }
+
+    #[test]
+    fn aggregated_stream_schedules_and_counts_match() {
+        let ops = stencil_ops(4, 64, 4);
+        let (packed, stats) = aggregate(&ops, 8);
+        assert!(stats.packed_msgs > 0);
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
+        for policy in [Policy::LatencyHiding, Policy::Blocking] {
+            let rep = execute(policy, &packed, &cfg, &mut SimBackend)
+                .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            assert_eq!(rep.ops_executed, packed.len() as u64, "{policy:?}");
+            let plain = execute(policy, &ops, &cfg, &mut SimBackend).unwrap();
+            assert!(
+                rep.n_messages < plain.n_messages,
+                "{policy:?}: packing must cut wire messages ({} vs {})",
+                rep.n_messages,
+                plain.n_messages
+            );
+            assert_eq!(
+                rep.bytes_inter + rep.bytes_intra,
+                plain.bytes_inter + plain.bytes_intra,
+                "{policy:?}: volume is conserved"
+            );
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! Collective communication engine.
+//!
+//! The paper's flush triggers — reductions and gathers (Section 5.6) —
+//! drain through flat O(P) fan-ins to the root rank, which serializes on
+//! the root's NIC ingress and dominates makespan at P = 128. This module
+//! provides *structured* collective schedules:
+//!
+//! * [`reduce_scalar_tree`] — binomial-tree combine of per-rank
+//!   reduction partials (depth ⌈log₂P⌉ instead of P-1 root messages);
+//! * [`broadcast_tree`] — binomial-tree broadcast of a base-block region
+//!   (the owner injects ⌈log₂P⌉ messages instead of P-1);
+//! * [`allgather_ring`] — ring allgather of a whole array-base (every
+//!   link carries 1/P of the volume; no root hot spot);
+//! * [`gather_flat`] — the flat fan-in baseline the ablation compares
+//!   against;
+//! * [`aggregate`] — message aggregation: same-`(src, dst)` block
+//!   transfers that are ready in the same flush epoch are packed into
+//!   one wire message, amortizing the per-message latency α and the
+//!   receiver-side message cost.
+//!
+//! Everything is emitted as ordinary dependency-tracked send / recv /
+//! combine [`crate::ufunc::OpNode`]s, so all three policies (latency-hiding, blocking,
+//! naive) schedule collectives through the existing dependency systems
+//! and the α–β [`crate::net::Network`] with no special cases. Tree hops
+//! forward received data out of staging buffers ([`SendSrc::Stage`]);
+//! every round is its own §5.3 group so the blocking baseline's
+//! send-recv-compute phasing stays deadlock-free.
+//!
+//! **Determinism:** each tree node combines `[own partial, received
+//! partial]` in that fixed order, and the tree shape depends only on the
+//! participating ranks — so a data backend produces bit-identical
+//! reduction results under every policy (asserted by
+//! `rust/tests/props.rs`).
+
+mod aggregate;
+
+pub use aggregate::{aggregate, AggStats};
+
+use crate::array::Registry;
+use crate::types::{BaseId, Rank, Tag};
+use crate::ufunc::{
+    Access, ComputeTask, Dst, Kernel, OpBuilder, OpPayload, Operand, Region, SendSrc,
+};
+
+/// Bytes on the wire per staged reduction scalar (matches the flat
+/// gather of `OpBuilder::reduce`).
+const SCALAR_BYTES: u64 = 8;
+
+/// Which schedule the cross-rank phase of a collective uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    /// Direct fan-in/fan-out to or from the root (the paper's scheme).
+    Flat,
+    /// Binomial trees for reduce/broadcast, a ring for allgather.
+    Tree,
+}
+
+impl Collective {
+    pub fn parse(s: &str) -> Option<Collective> {
+        match s {
+            "flat" => Some(Collective::Flat),
+            "tree" => Some(Collective::Tree),
+            _ => None,
+        }
+    }
+}
+
+/// Combine per-rank staged scalars into one scalar on `root` along a
+/// binomial tree. `parts` holds each participating rank's current
+/// partial tag (at most one entry per rank). Returns the tag of the
+/// final result, staged on `root`.
+///
+/// Round k pairs participants 2k apart: the higher one sends its
+/// running partial, the lower one combines `[own, received]` (fixed
+/// order — determinism). Each round is one §5.3 group.
+pub fn reduce_scalar_tree(bld: &mut OpBuilder, parts: &[(Rank, Tag)], root: Rank) -> Tag {
+    assert!(!parts.is_empty(), "reduce over no partials");
+    let mut cur: Vec<(Rank, Tag)> = parts.to_vec();
+    cur.sort_by_key(|(r, _)| *r);
+    if let Some(i) = cur.iter().position(|(r, _)| *r == root) {
+        cur.rotate_left(i);
+    }
+    let n = cur.len();
+    let mut k = 1;
+    while k < n {
+        bld.begin_group();
+        let mut i = 0;
+        while i + k < n {
+            let (s_rank, s_tag) = cur[i + k];
+            let (r_rank, r_tag) = cur[i];
+            let wire = bld.fresh_tag();
+            bld.push(
+                s_rank,
+                OpPayload::Send {
+                    peer: r_rank,
+                    tag: wire,
+                    bytes: SCALAR_BYTES,
+                    src: SendSrc::Stage(s_tag),
+                },
+                vec![Access::read_stage(s_tag)],
+            );
+            bld.push(
+                r_rank,
+                OpPayload::Recv {
+                    peer: s_rank,
+                    tag: wire,
+                    bytes: SCALAR_BYTES,
+                },
+                vec![Access::write_stage(wire)],
+            );
+            let combined = bld.fresh_tag();
+            bld.push(
+                r_rank,
+                OpPayload::Compute(ComputeTask {
+                    kernel: Kernel::AccumSum,
+                    inputs: vec![Operand::Staged(r_tag), Operand::Staged(wire)],
+                    dst: Dst::Stage(combined),
+                    elems: 2,
+                }),
+                vec![
+                    Access::read_stage(r_tag),
+                    Access::read_stage(wire),
+                    Access::write_stage(combined),
+                ],
+            );
+            cur[i].1 = combined;
+            i += 2 * k;
+        }
+        k *= 2;
+    }
+    let (owner, tag) = cur[0];
+    if owner == root {
+        return tag;
+    }
+    // The root owned no partial (the reduced view touches none of its
+    // blocks): one final hop delivers the result.
+    bld.begin_group();
+    let wire = bld.fresh_tag();
+    bld.push(
+        owner,
+        OpPayload::Send {
+            peer: root,
+            tag: wire,
+            bytes: SCALAR_BYTES,
+            src: SendSrc::Stage(tag),
+        },
+        vec![Access::read_stage(tag)],
+    );
+    bld.push(
+        root,
+        OpPayload::Recv {
+            peer: owner,
+            tag: wire,
+            bytes: SCALAR_BYTES,
+        },
+        vec![Access::write_stage(wire)],
+    );
+    wire
+}
+
+/// Broadcast `region` from its owning rank to every other rank along a
+/// binomial tree; returns the staging tag per rank (index = rank, `None`
+/// for the owner). Drop-in replacement for the flat
+/// `OpBuilder::broadcast` fan-out: the owner injects ⌈log₂P⌉ messages
+/// instead of P-1, and later hops forward out of their staging buffers.
+pub fn broadcast_tree(
+    bld: &mut OpBuilder,
+    reg: &Registry,
+    region: Region,
+    intra: (u64, u64),
+    nprocs: u32,
+) -> Vec<Option<Tag>> {
+    let owner = reg.layout(region.base).owner(region.block);
+    let p = nprocs;
+    let mut tags: Vec<Option<Tag>> = vec![None; p as usize];
+    let bytes = region.elems() * 4;
+    let rank_of = |vid: u32| Rank((owner.0 + vid) % p);
+    let mut k = 1u32;
+    while k < p {
+        bld.begin_group();
+        for vid in 0..k {
+            let dst_vid = vid + k;
+            if dst_vid >= p {
+                break;
+            }
+            let from = rank_of(vid);
+            let to = rank_of(dst_vid);
+            let wire = bld.fresh_tag();
+            let (src, access) = if vid == 0 {
+                (
+                    SendSrc::Region(region.clone()),
+                    Access::read_block(region.base, region.block, intra),
+                )
+            } else {
+                let t = tags[from.idx()].expect("forwarder holds the region");
+                (SendSrc::Stage(t), Access::read_stage(t))
+            };
+            bld.push(
+                from,
+                OpPayload::Send {
+                    peer: to,
+                    tag: wire,
+                    bytes,
+                    src,
+                },
+                vec![access],
+            );
+            bld.push(
+                to,
+                OpPayload::Recv {
+                    peer: from,
+                    tag: wire,
+                    bytes,
+                },
+                vec![Access::write_stage(wire)],
+            );
+            tags[to.idx()] = Some(wire);
+        }
+        k *= 2;
+    }
+    tags
+}
+
+/// Full-block region of base-block `block` (helper for whole-base
+/// collectives).
+fn block_region(reg: &Registry, base: BaseId, block: u64) -> (Region, (u64, u64)) {
+    let layout = reg.layout(base);
+    let nrows = layout.block_nrows(block);
+    let re = layout.row_elems();
+    (
+        Region {
+            base,
+            block,
+            row0: 0,
+            nrows,
+            col0: 0,
+            ncols: re,
+            row_stride: re,
+        },
+        (0, nrows * re),
+    )
+}
+
+/// Ring allgather of every base-block of `base`: after execution every
+/// rank holds a staged copy of each block it does not own. Returns
+/// `tags[rank][block]` (`None` where the block is local to that rank).
+///
+/// Each block circulates rank-to-rank around the ring, one hop per §5.3
+/// group (P-1 rounds); hop s forwards what hop s-1 received, so every
+/// link carries the same volume and no rank's NIC becomes a hot spot —
+/// unlike the flat fan-in of [`gather_flat`].
+pub fn allgather_ring(bld: &mut OpBuilder, reg: &Registry, base: BaseId) -> Vec<Vec<Option<Tag>>> {
+    let layout = reg.layout(base);
+    let p = layout.nprocs;
+    let nb = layout.nblocks();
+    let mut tags: Vec<Vec<Option<Tag>>> = vec![vec![None; nb as usize]; p as usize];
+    if p == 1 {
+        return tags;
+    }
+    for s in 0..p - 1 {
+        bld.begin_group();
+        for b in 0..nb {
+            let owner = layout.owner(b);
+            let from = Rank((owner.0 + s) % p);
+            let to = Rank((owner.0 + s + 1) % p);
+            let (region, intra) = block_region(reg, base, b);
+            let bytes = region.elems() * 4;
+            let wire = bld.fresh_tag();
+            let (src, access) = if s == 0 {
+                (
+                    SendSrc::Region(region),
+                    Access::read_block(base, b, intra),
+                )
+            } else {
+                let t = tags[from.idx()][b as usize].expect("ring hop holds the block");
+                (SendSrc::Stage(t), Access::read_stage(t))
+            };
+            bld.push(
+                from,
+                OpPayload::Send {
+                    peer: to,
+                    tag: wire,
+                    bytes,
+                    src,
+                },
+                vec![access],
+            );
+            bld.push(
+                to,
+                OpPayload::Recv {
+                    peer: from,
+                    tag: wire,
+                    bytes,
+                },
+                vec![Access::write_stage(wire)],
+            );
+            tags[to.idx()][b as usize] = Some(wire);
+        }
+    }
+    tags
+}
+
+/// Flat fan-in of every remote base-block of `base` to `root` — the
+/// baseline schedule [`allgather_ring`] replaces. Returns the staging
+/// tag per block on the root (`None` for root-local blocks).
+pub fn gather_flat(
+    bld: &mut OpBuilder,
+    reg: &Registry,
+    base: BaseId,
+    root: Rank,
+) -> Vec<Option<Tag>> {
+    let layout = reg.layout(base);
+    let nb = layout.nblocks();
+    bld.begin_group();
+    let mut tags = vec![None; nb as usize];
+    for b in 0..nb {
+        let owner = layout.owner(b);
+        if owner == root {
+            continue;
+        }
+        let (region, intra) = block_region(reg, base, b);
+        tags[b as usize] = Some(bld.transfer(owner, root, region, intra));
+    }
+    tags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::{ClusterStore, Registry};
+    use crate::cluster::MachineSpec;
+    use crate::exec::{NativeBackend, SimBackend};
+    use crate::sched::{execute, Policy, SchedCfg};
+    use crate::types::DType;
+    use crate::util::rng::Rng;
+
+    fn count_sends(ops: &[crate::ufunc::OpNode]) -> usize {
+        ops.iter()
+            .filter(|o| matches!(o.payload, OpPayload::Send { .. }))
+            .count()
+    }
+
+    #[test]
+    fn tree_reduce_message_count_and_depth() {
+        for p in [2u32, 3, 5, 8, 16] {
+            let mut bld = OpBuilder::new();
+            let parts: Vec<(Rank, Tag)> =
+                (0..p).map(|r| (Rank(r), bld.fresh_tag())).collect();
+            let n0 = bld.n_recorded();
+            let _ = reduce_scalar_tree(&mut bld, &parts, Rank(0));
+            let ops = bld.finish();
+            assert_eq!(ops.len() - n0, 3 * (p as usize - 1), "P={p}");
+            assert_eq!(count_sends(&ops), p as usize - 1, "P={p}: P-1 messages");
+            // Depth: the root receives exactly ceil(log2 P) messages.
+            let root_recvs = ops
+                .iter()
+                .filter(|o| {
+                    o.rank == Rank(0) && matches!(o.payload, OpPayload::Recv { .. })
+                })
+                .count();
+            assert_eq!(root_recvs, (p as f64).log2().ceil() as usize, "P={p}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_forwards_when_root_has_no_partial() {
+        let mut bld = OpBuilder::new();
+        let parts = vec![(Rank(2), bld.fresh_tag()), (Rank(3), bld.fresh_tag())];
+        let tag = reduce_scalar_tree(&mut bld, &parts, Rank(0));
+        let ops = bld.finish();
+        // One combine round + one forwarding hop to the root.
+        assert_eq!(count_sends(&ops), 2);
+        let last = ops.last().unwrap();
+        assert_eq!(last.rank, Rank(0));
+        assert!(matches!(last.payload, OpPayload::Recv { tag: t, .. } if t == tag));
+    }
+
+    #[test]
+    fn broadcast_tree_spreads_owner_egress() {
+        let mut reg = Registry::new(8);
+        let x = reg.alloc(vec![32], 4, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        let regions = bld.svb_regions(&reg, &xv);
+        let (r0, intra, owner) = regions[3].clone();
+        let tags = broadcast_tree(&mut bld, &reg, r0, intra, 8);
+        assert!(tags[owner.idx()].is_none());
+        assert_eq!(tags.iter().flatten().count(), 7, "everyone else tagged");
+        let ops = bld.finish();
+        assert_eq!(count_sends(&ops), 7, "P-1 messages in total");
+        let owner_sends = ops
+            .iter()
+            .filter(|o| o.rank == owner && matches!(o.payload, OpPayload::Send { .. }))
+            .count();
+        assert_eq!(owner_sends, 3, "owner injects only log2(8) messages");
+    }
+
+    #[test]
+    fn tree_reduce_schedules_under_all_policies() {
+        let mut reg = Registry::new(4);
+        let x = reg.alloc(vec![16], 2, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        let _ = bld.reduce(&reg, Kernel::PartialSum, &[&xv], Collective::Tree);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            let rep = execute(policy, &ops, &cfg, &mut SimBackend)
+                .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            assert_eq!(rep.ops_executed, ops.len() as u64, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_schedules_under_all_policies() {
+        let mut reg = Registry::new(4);
+        let x = reg.alloc(vec![16], 2, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        let regions = bld.svb_regions(&reg, &xv);
+        let (r0, intra, _) = regions[0].clone();
+        let _ = broadcast_tree(&mut bld, &reg, r0, intra, 4);
+        let ops = bld.finish();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            let rep = execute(policy, &ops, &cfg, &mut SimBackend)
+                .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            assert_eq!(rep.ops_executed, ops.len() as u64, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn ring_allgather_delivers_every_block() {
+        let p = 3u32;
+        let rows = 14u64;
+        let br = 2u64;
+        let mut reg = Registry::new(p);
+        let a = reg.alloc(vec![rows], br, DType::F32);
+        let mut store = ClusterStore::new(p);
+        store.alloc_base(reg.layout(a));
+        let mut rng = Rng::new(11);
+        let data = rng.fill_f32(rows as usize, -1.0, 1.0);
+        store.scatter(reg.layout(a), &data);
+        let mut bld = OpBuilder::new();
+        let tags = allgather_ring(&mut bld, &reg, a);
+        let ops = bld.finish();
+        let layout = reg.layout(a).clone();
+        assert_eq!(
+            count_sends(&ops),
+            (layout.nblocks() * (p as u64 - 1)) as usize,
+            "each block travels P-1 hops"
+        );
+        let mut be = NativeBackend::new(store);
+        let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        execute(Policy::LatencyHiding, &ops, &cfg, &mut be).unwrap();
+        for r in 0..p {
+            for b in 0..layout.nblocks() {
+                let (lo, hi) = layout.block_rows_range(b);
+                let want = &data[lo as usize..hi as usize];
+                match tags[r as usize][b as usize] {
+                    None => assert_eq!(layout.owner(b), Rank(r), "local blocks untagged"),
+                    Some(t) => {
+                        assert_eq!(
+                            be.store.ranks[r as usize].stage(t),
+                            want,
+                            "rank {r} block {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_flat_targets_root_only() {
+        let mut reg = Registry::new(4);
+        let a = reg.alloc(vec![16], 2, DType::F32);
+        let mut bld = OpBuilder::new();
+        let tags = gather_flat(&mut bld, &reg, a, Rank(0));
+        let ops = bld.finish();
+        // 8 blocks, 2 owned by the root -> 6 transfers, all into rank 0.
+        assert_eq!(count_sends(&ops), 6);
+        assert_eq!(tags.iter().flatten().count(), 6);
+        for op in &ops {
+            if let OpPayload::Recv { .. } = op.payload {
+                assert_eq!(op.rank, Rank(0));
+            }
+        }
+    }
+
+    #[test]
+    fn collective_parse() {
+        assert_eq!(Collective::parse("flat"), Some(Collective::Flat));
+        assert_eq!(Collective::parse("tree"), Some(Collective::Tree));
+        assert_eq!(Collective::parse("ring"), None);
+    }
+}

@@ -14,8 +14,9 @@ use std::collections::HashMap;
 
 use crate::apps::{AppId, AppParams};
 use crate::cluster::{MachineSpec, Placement};
+use crate::comm::Collective;
 use crate::harness;
-use crate::sched::Policy;
+use crate::sched::{Policy, SchedCfg};
 use crate::util::json::Json;
 
 /// Parsed command line.
@@ -93,7 +94,7 @@ distnumpy — runtime-managed communication latency-hiding (HPCC'12 repro)
 USAGE:
   distnumpy run    --app <name> --procs <P> [--policy lh|blocking|naive]
                    [--placement by-node|by-core] [--scale S] [--iters N]
-                   [--locality] [--json]
+                   [--locality] [--collective flat|tree] [--agg N] [--json]
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy report wait [--procs P]          # Section 6.1.1 waiting-time table
   distnumpy fig19  [--procs 8,16,...]        # by-node vs by-core (N-body)
@@ -139,11 +140,15 @@ fn run(cli: &Cli) -> Result<String, String> {
             let placement = Placement::parse(cli.flag("placement").unwrap_or("by-node"))
                 .ok_or("bad --placement")?;
             let params = cli.params();
-            let (report, baseline) = if cli.flag("locality").is_some() {
-                harness::run_once_cfg(app, p, policy, placement, &spec, &params, true)
-            } else {
-                harness::run_once(app, p, policy, placement, &spec, &params)
-            };
+            let mut cfg = SchedCfg::new(spec.clone(), p);
+            cfg.placement = placement;
+            cfg.locality = cli.flag("locality").is_some();
+            cfg.collective = Collective::parse(cli.flag("collective").unwrap_or("flat"))
+                .ok_or("bad --collective")?;
+            if let Some(a) = cli.flag("agg") {
+                cfg.aggregation = a.parse().map_err(|_| "bad --agg")?;
+            }
+            let (report, baseline) = harness::run_once_full(app, policy, &params, cfg);
             if cli.flag("json").is_some() {
                 let mut o = report.to_json();
                 o.push("baseline", baseline.into());
@@ -263,6 +268,19 @@ mod tests {
         .unwrap())
         .unwrap();
         assert!(out.contains("speedup"));
+    }
+
+    #[test]
+    fn run_with_tree_collective_and_aggregation() {
+        let out = run(&Cli::parse(&args(
+            "run --app jacobi --procs 8 --scale 0.05 --iters 1 \
+             --collective tree --agg 8 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("n_messages"));
+        assert!(out.contains("agg_parts"));
+        assert!(run(&Cli::parse(&args("run --app jacobi --collective ring")).unwrap()).is_err());
     }
 
     #[test]

@@ -15,15 +15,16 @@ pub mod kernels;
 use crate::array::ClusterStore;
 use crate::layout::Layout;
 use crate::types::{Rank, Tag};
-use crate::ufunc::{ComputeTask, Dst, Operand, Region};
+use crate::ufunc::{ComputeTask, Dst, Operand, SendSrc};
 
 /// Backend interface invoked by the schedulers in dependency order.
 pub trait Backend {
     /// Execute one compute task on `rank`.
     fn exec_compute(&mut self, rank: Rank, task: &ComputeTask);
 
-    /// Move `region` (on `from`) into `to`'s staging area under `tag`.
-    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, region: &Region);
+    /// Move `src` (on `from`) into `to`'s staging area under `tag`.
+    /// Packed sources unpack into one staging buffer per constituent.
+    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, src: &SendSrc);
 
     /// Read a staged scalar (reduction results) after a flush.
     fn staged_scalar(&self, rank: Rank, tag: Tag) -> Option<f64> {
@@ -61,7 +62,7 @@ pub struct SimBackend;
 
 impl Backend for SimBackend {
     fn exec_compute(&mut self, _rank: Rank, _task: &ComputeTask) {}
-    fn exec_transfer(&mut self, _from: Rank, _to: Rank, _tag: Tag, _region: &Region) {}
+    fn exec_transfer(&mut self, _from: Rank, _to: Rank, _tag: Tag, _src: &SendSrc) {}
     fn as_any(&self) -> &dyn std::any::Any {
         self
     }
@@ -104,16 +105,27 @@ impl Backend for NativeBackend {
         Self::write_dst(&mut self.store, rank, &task.dst, out);
     }
 
-    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, region: &Region) {
-        // Scalar-placeholder sends (reduction partials) source from the
-        // sender's stage under the transfer's own tag; block sends
-        // serialize the region.
-        let data = if region.is_scalar_placeholder() {
-            self.store.ranks[from.idx()].stage(tag).to_vec()
-        } else {
-            self.store.ranks[from.idx()].extract(region)
-        };
-        self.store.ranks[to.idx()].put_stage(tag, data);
+    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, src: &SendSrc) {
+        match src {
+            SendSrc::Region(r) => {
+                let data = self.store.ranks[from.idx()].extract(r);
+                self.store.ranks[to.idx()].put_stage(tag, data);
+            }
+            SendSrc::Stage(t) => {
+                let data = self.store.ranks[from.idx()].stage(*t).to_vec();
+                self.store.ranks[to.idx()].put_stage(tag, data);
+            }
+            SendSrc::Packed(parts) => {
+                for (ptag, part) in parts {
+                    let data = match part {
+                        SendSrc::Region(r) => self.store.ranks[from.idx()].extract(r),
+                        SendSrc::Stage(t) => self.store.ranks[from.idx()].stage(*t).to_vec(),
+                        SendSrc::Packed(_) => unreachable!("nested packed message"),
+                    };
+                    self.store.ranks[to.idx()].put_stage(*ptag, data);
+                }
+            }
+        }
     }
 
     fn staged_scalar(&self, rank: Rank, tag: Tag) -> Option<f64> {
@@ -152,7 +164,7 @@ mod tests {
     use super::*;
     use crate::array::Registry;
     use crate::types::{BaseId, DType};
-    use crate::ufunc::Kernel;
+    use crate::ufunc::{Kernel, Region};
 
     fn store1(vals: &[f32]) -> (Registry, ClusterStore, BaseId) {
         let mut reg = Registry::new(1);
@@ -204,8 +216,36 @@ mod tests {
             ncols: 1,
             row_stride: 1,
         };
-        be.exec_transfer(Rank(1), Rank(0), Tag(5), &r);
+        be.exec_transfer(Rank(1), Rank(0), Tag(5), &SendSrc::Region(r));
         assert_eq!(be.store.ranks[0].stage(Tag(5)), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn packed_transfer_unpacks_per_part() {
+        let mut reg = Registry::new(2);
+        let a = reg.alloc(vec![4], 2, DType::F32);
+        let mut cs = ClusterStore::new(2);
+        cs.alloc_base(reg.layout(a));
+        cs.scatter(reg.layout(a), &[1.0, 2.0, 3.0, 4.0]);
+        let mut be = NativeBackend::new(cs);
+        be.store.ranks[1].put_stage(Tag(9), vec![42.0]);
+        let r = Region {
+            base: a,
+            block: 1,
+            row0: 0,
+            nrows: 2,
+            col0: 0,
+            ncols: 1,
+            row_stride: 1,
+        };
+        let packed = SendSrc::Packed(vec![
+            (Tag(5), SendSrc::Region(r)),
+            (Tag(6), SendSrc::Stage(Tag(9))),
+        ]);
+        be.exec_transfer(Rank(1), Rank(0), Tag(100), &packed);
+        assert_eq!(be.store.ranks[0].stage(Tag(5)), &[3.0, 4.0]);
+        assert_eq!(be.store.ranks[0].stage(Tag(6)), &[42.0]);
+        assert!(!be.store.ranks[0].has_stage(Tag(100)), "no envelope stage");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::apps::{record, AppId, AppParams};
 use crate::cluster::{MachineSpec, Placement};
 use crate::lazy::Context;
 use crate::metrics::RunReport;
-use crate::sched::{DepsKind, Policy, SchedCfg};
+use crate::sched::{Policy, SchedCfg};
 use crate::types::VTime;
 use crate::util::json::Json;
 
@@ -26,6 +26,12 @@ pub struct RunMetrics {
     pub wait_pct: f64,
     pub utilization: f64,
     pub bytes_inter: u64,
+    /// Wire messages posted (post-aggregation).
+    pub n_messages: u64,
+    /// Wait time of the collective root, rank 0 (s).
+    pub wait_root: VTime,
+    /// Constituent transfers the aggregation pass packed.
+    pub agg_parts: u64,
 }
 
 impl RunMetrics {
@@ -36,6 +42,9 @@ impl RunMetrics {
             wait_pct: report.wait_pct(),
             utilization: report.utilization(),
             bytes_inter: report.bytes_inter,
+            n_messages: report.n_messages,
+            wait_root: report.wait_root(),
+            agg_parts: report.agg_parts,
         }
     }
 
@@ -46,6 +55,9 @@ impl RunMetrics {
         o.push("wait_pct", self.wait_pct.into());
         o.push("utilization", self.utilization.into());
         o.push("bytes_inter", self.bytes_inter.into());
+        o.push("n_messages", self.n_messages.into());
+        o.push("wait_root", self.wait_root.into());
+        o.push("agg_parts", self.agg_parts.into());
         o
     }
 }
@@ -90,8 +102,19 @@ pub fn run_once_cfg(
 ) -> (RunReport, VTime) {
     let mut cfg = SchedCfg::new(spec.clone(), p);
     cfg.placement = placement;
-    cfg.deps = DepsKind::Heuristic;
     cfg.locality = locality;
+    run_once_full(app, policy, params, cfg)
+}
+
+/// The fully-configured cell: every scheduler knob (placement, deps,
+/// locality, collective schedule, aggregation threshold) comes from the
+/// caller's [`SchedCfg`]. Used by the collective ablation.
+pub fn run_once_full(
+    app: AppId,
+    policy: Policy,
+    params: &AppParams,
+    cfg: SchedCfg,
+) -> (RunReport, VTime) {
     let mut ctx = Context::sim(cfg, policy);
     record(app, &mut ctx, params);
     let baseline = ctx.baseline;
@@ -231,6 +254,7 @@ pub fn wait_table(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Collective;
 
     #[test]
     fn figure_produces_monotone_ps() {
@@ -343,6 +367,39 @@ mod tests {
         );
         let delta = (f_fifo.makespan / f_loc.makespan - 1.0).abs();
         assert!(delta < 0.05, "flop-bound app should barely move: {delta}");
+    }
+
+    #[test]
+    fn tree_aggregation_beats_flat_fanin_at_32() {
+        // The collective-engine acceptance claim: at P >= 32 the
+        // binomial-tree reduction plus message aggregation strictly
+        // reduces both the root rank's wait time (the flat fan-in hot
+        // spot) and the total wire-message count.
+        let spec = MachineSpec::paper();
+        let params = AppParams {
+            scale: 0.25,
+            iters: 3,
+        };
+        let flat_cfg = SchedCfg::new(spec.clone(), 32);
+        let (flat, _) = run_once_full(AppId::Jacobi, Policy::LatencyHiding, &params, flat_cfg);
+        let mut tree_cfg = SchedCfg::new(spec, 32);
+        tree_cfg.collective = Collective::Tree;
+        tree_cfg.aggregation = 16;
+        let (tree, _) = run_once_full(AppId::Jacobi, Policy::LatencyHiding, &params, tree_cfg);
+        assert!(
+            tree.wait_root() < flat.wait_root(),
+            "tree+agg root wait {} must undercut flat {}",
+            tree.wait_root(),
+            flat.wait_root()
+        );
+        assert!(
+            tree.n_messages < flat.n_messages,
+            "tree+agg messages {} must undercut flat {}",
+            tree.n_messages,
+            flat.n_messages
+        );
+        assert!(tree.agg_parts > tree.agg_msgs, "aggregation engaged");
+        assert_eq!(flat.agg_msgs, 0, "flat config runs unaggregated");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! 3. the program ends — [`Context::flush`] called by the apps at exit.
 
 use crate::array::Registry;
+use crate::comm::Collective;
 use crate::exec::Backend;
 use crate::layout::ViewSpec;
 use crate::metrics::RunReport;
@@ -132,10 +133,15 @@ impl Context {
         }
     }
 
-    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush.
+    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush. The
+    /// cross-rank fan-in is scheduled by `cfg.collective` (flat gather
+    /// or binomial tree, see [`crate::comm`]).
     /// Returns the real value under a data backend, 0.0 in simulation.
     pub fn sum(&mut self, v: &ViewSpec) -> f64 {
-        let tag = self.builder.reduce(&self.reg, Kernel::PartialSum, &[v]);
+        let collective = self.cfg.collective;
+        let tag = self
+            .builder
+            .reduce(&self.reg, Kernel::PartialSum, &[v], collective);
         self.array_ops_since_flush += 1;
         self.flush();
         self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
@@ -143,16 +149,35 @@ impl Context {
 
     /// Trigger 1: `sum(|a - b|)` — the Jacobi convergence delta.
     pub fn sum_absdiff(&mut self, a: &ViewSpec, b: &ViewSpec) -> f64 {
-        let tag = self
-            .builder
-            .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b]);
+        let collective = self.cfg.collective;
+        let tag =
+            self.builder
+                .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b], collective);
         self.array_ops_since_flush += 1;
         self.flush();
         self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
     }
 
     /// Trigger 1: gather a whole base to a dense buffer (real backends).
+    ///
+    /// The data movement is recorded as a first-class collective — a
+    /// flat fan-in to rank 0 or a ring allgather, per `cfg.collective` —
+    /// so it is dependency-tracked, scheduled and timed like every other
+    /// operation. The dense assembly below then reads the block contents
+    /// through the store oracle (bit-identical to the staged copies the
+    /// collective delivered).
     pub fn gather(&mut self, base: BaseId) -> Option<Vec<f32>> {
+        if self.cfg.nprocs > 1 {
+            match self.cfg.collective {
+                Collective::Flat => {
+                    let _ = crate::comm::gather_flat(&mut self.builder, &self.reg, base, Rank(0));
+                }
+                Collective::Tree => {
+                    let _ = crate::comm::allgather_ring(&mut self.builder, &self.reg, base);
+                }
+            }
+            self.array_ops_since_flush += 1;
+        }
         self.flush();
         self.backend.gather(self.reg.layout(base))
     }

@@ -13,9 +13,11 @@
 //! This crate is the Layer-3 coordinator of a three-layer stack:
 //!
 //! * **L3 (here)**: the lazy-evaluation runtime — [`array`], [`layout`],
-//!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`] — executing over a
-//!   discrete-event simulated cluster ([`cluster`], [`net`]) or with real
-//!   numerics ([`exec`]).
+//!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`], plus the
+//!   collective-communication engine [`comm`] (tree/ring collective
+//!   schedules and message aggregation, layered between recording and
+//!   scheduling) — executing over a discrete-event simulated cluster
+//!   ([`cluster`], [`net`]) or with real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call
@@ -31,6 +33,7 @@
 pub mod apps;
 pub mod array;
 pub mod cluster;
+pub mod comm;
 pub mod coordinator;
 pub mod deps;
 pub mod exec;

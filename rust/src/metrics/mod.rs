@@ -24,6 +24,14 @@ pub struct RunReport {
     pub n_comm: u64,
     pub bytes_inter: u64,
     pub bytes_intra: u64,
+    /// Wire messages actually posted to the network (after aggregation
+    /// packed constituent transfers into envelopes).
+    pub n_messages: u64,
+    /// Packed envelopes emitted by `comm::aggregate`.
+    pub agg_msgs: u64,
+    /// Constituent transfers absorbed into those envelopes; the
+    /// messages saved are `agg_parts - agg_msgs`.
+    pub agg_parts: u64,
 }
 
 impl RunReport {
@@ -50,6 +58,15 @@ impl RunReport {
         self.n_comm += other.n_comm;
         self.bytes_inter += other.bytes_inter;
         self.bytes_intra += other.bytes_intra;
+        self.n_messages += other.n_messages;
+        self.agg_msgs += other.agg_msgs;
+        self.agg_parts += other.agg_parts;
+    }
+
+    /// Wait time of the collective root (rank 0) — the hot spot flat
+    /// fan-ins serialize on.
+    pub fn wait_root(&self) -> f64 {
+        self.wait.first().copied().unwrap_or(0.0)
     }
 
     /// Mean over ranks of wait time / total time — the paper's
@@ -82,6 +99,10 @@ impl RunReport {
         o.push("n_comm", self.n_comm.into());
         o.push("bytes_inter", self.bytes_inter.into());
         o.push("bytes_intra", self.bytes_intra.into());
+        o.push("n_messages", self.n_messages.into());
+        o.push("agg_msgs", self.agg_msgs.into());
+        o.push("agg_parts", self.agg_parts.into());
+        o.push("wait_root", self.wait_root().into());
         o
     }
 }
@@ -126,5 +147,24 @@ mod tests {
         let r = RunReport::new(1);
         let s = r.to_json().render();
         assert!(s.contains("wait_pct"));
+        assert!(s.contains("n_messages"));
+        assert!(s.contains("agg_msgs"));
+        assert!(s.contains("wait_root"));
+    }
+
+    #[test]
+    fn absorb_accumulates_message_counters() {
+        let mut a = RunReport::new(1);
+        a.n_messages = 3;
+        a.agg_msgs = 1;
+        a.agg_parts = 4;
+        let mut b = RunReport::new(1);
+        b.n_messages = 2;
+        b.agg_parts = 2;
+        b.agg_msgs = 1;
+        a.absorb(&b);
+        assert_eq!(a.n_messages, 5);
+        assert_eq!(a.agg_msgs, 2);
+        assert_eq!(a.agg_parts, 6);
     }
 }

@@ -99,10 +99,16 @@ impl<'a> Network<'a> {
     /// resolved immediately (eager protocol); if the recv half is
     /// already posted, the recv completion is returned as well.
     /// Receiver-side completion: drain through the ingress FIFO, no
-    /// earlier than both the message transit and the recv post.
+    /// earlier than both the message transit and the recv post. Each
+    /// message *occupies* the ingress for `net_msg_cost` on top of its
+    /// payload drain — the per-message CPU/NIC work of the receiving MPI
+    /// stack (matching, rendezvous handshake, copy-out). This is the
+    /// term that makes a flat O(P) fan-in serialize on the root and
+    /// makes message aggregation profitable; the pipeline latency α is
+    /// paid per message but does not occupy the NIC.
     fn drain(&mut self, rnode: usize, e_start: VTime, inject: VTime, bytes: u64, recv_t: VTime) -> VTime {
         let i_start = e_start.max(self.ingress[rnode]).max(recv_t);
-        let drained = i_start + bytes as f64 * self.spec.net_beta;
+        let drained = i_start + self.spec.net_msg_cost + bytes as f64 * self.spec.net_beta;
         self.ingress[rnode] = drained;
         inject.max(drained) + self.spec.net_alpha
     }
@@ -200,6 +206,11 @@ impl<'a> Network<'a> {
     pub fn unmatched(&self) -> usize {
         self.sends.len() + self.recvs.len()
     }
+
+    /// Receives posted with no matching send (deadlock diagnostics).
+    pub fn unmatched_recvs(&self) -> usize {
+        self.recvs.len()
+    }
 }
 
 #[cfg(test)]
@@ -220,7 +231,7 @@ mod tests {
         assert!(ps.send_done.is_some());
         assert!(ps.recv_done.is_none());
         let pr = net.post_recv(0.0, Rank(1), Tag(1));
-        let expect = s.net_alpha + 1000.0 * s.net_beta;
+        let expect = s.net_alpha + s.net_msg_cost + 1000.0 * s.net_beta;
         assert!((pr.recv_done.unwrap() - expect).abs() < 1e-12);
         assert_eq!(net.unmatched(), 0);
     }
@@ -258,7 +269,7 @@ mod tests {
         let a2 = net.post_send(0.0, Rank(0), Rank(2), Tag(2), b);
         // Second transfer queues behind the first on rank 0's egress.
         assert!(a2.recv_done.unwrap() > a1.recv_done.unwrap());
-        let expect2 = 2.0 * b as f64 * s.net_beta + s.net_alpha;
+        let expect2 = 2.0 * b as f64 * s.net_beta + s.net_msg_cost + s.net_alpha;
         assert!((a2.recv_done.unwrap() - expect2).abs() < 1e-9);
     }
 
@@ -287,7 +298,7 @@ mod tests {
         let mut net = Network::new(&s, nodes);
         net.post_send(0.0, Rank(0), Rank(1), Tag(9), 10);
         let pr = net.post_recv(100.0, Rank(1), Tag(9));
-        let expect = 100.0 + 10.0 * s.net_beta + s.net_alpha;
+        let expect = 100.0 + s.net_msg_cost + 10.0 * s.net_beta + s.net_alpha;
         assert!((pr.recv_done.unwrap() - expect).abs() < 1e-9);
     }
 
@@ -308,7 +319,31 @@ mod tests {
         late.post_send(0.0, Rank(0), Rank(1), Tag(1), b);
         let t_need = b as f64 * s.net_beta; // data wanted here
         let l = late.post_recv(t_need, Rank(1), Tag(1)).recv_done.unwrap();
-        assert!(e <= t_need + s.net_alpha + 1e-9, "early recv hides the transfer");
+        assert!(
+            e <= t_need + s.net_alpha + s.net_msg_cost + 1e-9,
+            "early recv hides the transfer"
+        );
         assert!(l >= 2.0 * t_need, "late recv pays it serially");
+
+        // One packed message of the same total volume beats two
+        // messages: the per-message ingress occupancy is paid once.
+        let mut two = Network::new(&s, Placement::ByNode.assign(2, &s));
+        two.post_recv(0.0, Rank(1), Tag(1));
+        two.post_recv(0.0, Rank(1), Tag(2));
+        two.post_send(0.0, Rank(0), Rank(1), Tag(1), b / 2);
+        let t2 = two
+            .post_send(0.0, Rank(0), Rank(1), Tag(2), b / 2)
+            .recv_done
+            .unwrap();
+        let mut one = Network::new(&s, Placement::ByNode.assign(2, &s));
+        one.post_recv(0.0, Rank(1), Tag(1));
+        let t1 = one
+            .post_send(0.0, Rank(0), Rank(1), Tag(1), b)
+            .recv_done
+            .unwrap();
+        assert!(
+            t1 + 0.5 * s.net_msg_cost < t2,
+            "aggregation must amortize the per-message cost: {t1} vs {t2}"
+        );
     }
 }

@@ -1,0 +1,213 @@
+//! The PJRT engine proper (compiled only with the `pjrt` feature).
+//!
+//! The interchange format is HLO **text** (`artifacts/*.hlo.txt`), not a
+//! serialized `HloModuleProto`: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that the crate's xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md). Each
+//! artifact is compiled once per process by [`PjrtEngine::load`]; the
+//! request path only executes.
+//!
+//! [`PjrtBackend`] plugs the engine into the scheduler: compute tasks
+//! whose kernel and block shape match an artifact contract run through
+//! PJRT; everything else falls back to the native Rust kernels (the two
+//! paths agree numerically — asserted by `rust/tests/e2e.rs`).
+
+use super::artifacts::{artifact_inputs, ARTIFACT_NAMES};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+use crate::array::ClusterStore;
+use crate::exec::{kernels, Backend, NativeBackend};
+use crate::layout::Layout;
+use crate::types::{Rank, Tag};
+use crate::ufunc::{ComputeTask, Kernel, SendSrc};
+
+/// A compiled artifact plus its input-shape contract.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected input shapes (row-major dims per input).
+    inputs: Vec<Vec<usize>>,
+}
+
+/// Loads and executes the AOT artifacts on the PJRT CPU client.
+pub struct PjrtEngine {
+    exes: HashMap<&'static str, Compiled>,
+}
+
+impl PjrtEngine {
+    /// Compile every artifact found in `dir`. Missing files are skipped
+    /// (their kernels fall back to native execution).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for &name in ARTIFACT_NAMES {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            exes.insert(
+                name,
+                Compiled {
+                    exe,
+                    inputs: artifact_inputs(name),
+                },
+            );
+        }
+        Ok(PjrtEngine { exes })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn loaded(&self) -> usize {
+        self.exes.len()
+    }
+
+    /// Do `inputs` (flat buffers) match the artifact's shape contract?
+    pub fn matches(&self, name: &str, input_lens: &[usize]) -> bool {
+        match self.exes.get(name) {
+            None => false,
+            Some(c) => {
+                c.inputs.len() == input_lens.len()
+                    && c.inputs
+                        .iter()
+                        .zip(input_lens)
+                        .all(|(dims, len)| dims.iter().product::<usize>() == *len)
+            }
+        }
+    }
+
+    /// Execute one artifact on flat f32 buffers; returns the first
+    /// (only) tuple element, flattened.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let c = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, dims) in inputs.iter().zip(&c.inputs) {
+            let lit = xla::Literal::vec1(buf);
+            let shaped = if dims.len() > 1 {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)?
+            } else {
+                lit
+            };
+            literals.push(shaped);
+        }
+        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // AOT contract: every artifact returns a tuple (gen via
+        // return_tuple=True); ours are all 1-tuples.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Scheduler backend dispatching to PJRT where an artifact matches.
+pub struct PjrtBackend {
+    native: NativeBackend,
+    engine: PjrtEngine,
+    /// Compute ops executed through PJRT vs the native fallback.
+    pub dispatched: u64,
+    pub fallback: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(store: ClusterStore, engine: PjrtEngine) -> Self {
+        PjrtBackend {
+            native: NativeBackend::new(store),
+            engine,
+            dispatched: 0,
+            fallback: 0,
+        }
+    }
+
+    pub fn store(&self) -> &ClusterStore {
+        &self.native.store
+    }
+
+    /// Artifact eligibility: kernel has an artifact, parameters match the
+    /// baked constants, shapes match the contract.
+    fn artifact_for(&self, task: &ComputeTask, input_lens: &[usize]) -> Option<&'static str> {
+        let name = task.kernel.artifact()?;
+        // Baked-constant kernels only match their compiled parameters.
+        match task.kernel {
+            Kernel::Axpy(a) if a != 0.2 => return None,
+            Kernel::Fractal(it) if it != 32 => return None,
+            _ => {}
+        }
+        if self.engine.matches(name, input_lens) {
+            Some(name)
+        } else {
+            None
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn exec_compute(&mut self, rank: Rank, task: &ComputeTask) {
+        let inputs = NativeBackend::gather_inputs(&self.native.store, rank, task);
+        let lens: Vec<usize> = inputs.iter().map(|b| b.len()).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = match self.artifact_for(task, &lens) {
+            Some(name) => match self.engine.execute(name, &refs) {
+                Ok(out) => {
+                    self.dispatched += 1;
+                    out
+                }
+                Err(e) => {
+                    // A PJRT failure is a bug, not a fallback case — but
+                    // keep the run alive and surface it loudly.
+                    eprintln!("PJRT execution of {name} failed: {e:#}");
+                    self.fallback += 1;
+                    kernels::run(task.kernel, &refs, task.elems as usize)
+                }
+            },
+            None => {
+                self.fallback += 1;
+                kernels::run(task.kernel, &refs, task.elems as usize)
+            }
+        };
+        NativeBackend::write_dst(&mut self.native.store, rank, &task.dst, out);
+    }
+
+    fn exec_transfer(&mut self, from: Rank, to: Rank, tag: Tag, src: &SendSrc) {
+        self.native.exec_transfer(from, to, tag, src);
+    }
+
+    fn staged_scalar(&self, rank: Rank, tag: Tag) -> Option<f64> {
+        self.native.staged_scalar(rank, tag)
+    }
+
+    fn alloc_base(&mut self, layout: &Layout) {
+        self.native.alloc_base(layout);
+    }
+
+    fn scatter(&mut self, layout: &Layout, data: &[f32]) {
+        self.native.scatter(layout, data);
+    }
+
+    fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
+        self.native.gather(layout)
+    }
+
+    fn clear_stages(&mut self) {
+        self.native.clear_stages();
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}

@@ -108,7 +108,7 @@ pub fn run_blocking(
                 // receiver only reads its stage after recv completion
                 // in virtual time, so early delivery is unobservable.
                 let info = &xfers.info[tag];
-                backend.exec_transfer(info.from, info.to, *tag, &info.region);
+                backend.exec_transfer(info.from, info.to, *tag, &info.src);
                 let done = res.send_done.unwrap();
                 wait[r] += done - t0;
                 clock[r] = done;
@@ -163,6 +163,7 @@ pub fn run_blocking(
         return Err(SchedError::Deadlock {
             executed,
             total: ops.len() as u64,
+            blocked_recvs: parked.len() as u64,
         });
     }
 
@@ -177,6 +178,7 @@ pub fn run_blocking(
     report.n_comm = ops.len() as u64 - report.n_compute;
     report.bytes_inter = net.bytes_inter;
     report.bytes_intra = net.bytes_intra;
+    report.n_messages = net.n_transfers;
     Ok(report)
 }
 

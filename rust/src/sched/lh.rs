@@ -123,7 +123,7 @@ impl<'a, 'b> Lh<'a, 'b> {
                 // unobservable.
                 let info = self.xfers.info[tag].clone();
                 self.backend
-                    .exec_transfer(info.from, info.to, *tag, &info.region);
+                    .exec_transfer(info.from, info.to, *tag, &info.src);
                 self.push_ev(
                     res.send_done.unwrap(),
                     Ev::SendDone {
@@ -308,6 +308,7 @@ pub fn run_latency_hiding(
         return Err(SchedError::Deadlock {
             executed: lh.completed,
             total: ops.len() as u64,
+            blocked_recvs: lh.net.unmatched_recvs() as u64,
         });
     }
 
@@ -322,6 +323,7 @@ pub fn run_latency_hiding(
     report.n_comm = ops.len() as u64 - report.n_compute;
     report.bytes_inter = lh.net.bytes_inter;
     report.bytes_intra = lh.net.bytes_intra;
+    report.n_messages = lh.net.n_transfers;
     Ok(report)
 }
 

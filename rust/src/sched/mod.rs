@@ -28,12 +28,13 @@ pub use lh::run_latency_hiding;
 pub use naive::run_naive;
 
 use crate::cluster::{MachineSpec, Placement};
+use crate::comm::Collective;
 use crate::deps::{DagDeps, DepSystem, HeuristicDeps};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::types::{OpId, Rank, Tag, VTime};
 use crate::util::fxhash::FxHashMap;
-use crate::ufunc::{OpNode, OpPayload, Region};
+use crate::ufunc::{OpNode, OpPayload, SendSrc};
 
 /// Which dependency system backs the scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,6 +82,12 @@ pub struct SchedCfg {
     /// the *selection order* of the ready queue; the cache-reuse cost
     /// discount itself applies under every policy.
     pub locality: bool,
+    /// Which cross-rank schedule collectives record ([`crate::comm`]):
+    /// flat fan-ins (the paper) or binomial-tree / ring schedules.
+    pub collective: Collective,
+    /// Message-aggregation threshold: maximum constituent transfers per
+    /// packed wire message (`comm::aggregate`). `0` or `1` disables.
+    pub aggregation: usize,
 }
 
 impl SchedCfg {
@@ -91,29 +98,71 @@ impl SchedCfg {
             placement: Placement::ByNode,
             deps: DepsKind::Heuristic,
             locality: false,
+            collective: Collective::Flat,
+            aggregation: 0,
         }
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SchedError {
-    #[error("deadlock detected: {executed} of {total} operations executed")]
-    Deadlock { executed: u64, total: u64 },
-    #[error("internal scheduler stall: {0}")]
+    /// Every runnable path is blocked on an unreachable transfer (the
+    /// naive evaluator of Fig. 6; also any policy fed a cyclic stream,
+    /// e.g. an aggregated message whose constituents span a blocked
+    /// receive). `blocked_recvs` counts the receives parked with no
+    /// matching send posted when progress stopped.
+    Deadlock {
+        executed: u64,
+        total: u64,
+        blocked_recvs: u64,
+    },
+    /// Internal scheduler invariant violation (a bug, not a program
+    /// property): progress stopped with no blocked receive to blame.
     Stall(String),
 }
 
-/// Execute one flushed batch under `policy`.
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::Deadlock {
+                executed,
+                total,
+                blocked_recvs,
+            } => write!(
+                f,
+                "deadlock detected: {executed} of {total} operations executed \
+                 ({blocked_recvs} receives blocked on unposted sends)"
+            ),
+            SchedError::Stall(s) => write!(f, "internal scheduler stall: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
+
+/// Execute one flushed batch under `policy`. When the configuration
+/// enables message aggregation, the batch is rewritten by
+/// [`crate::comm::aggregate`] first and the resulting statistics are
+/// threaded into the report.
 pub fn execute(
     policy: Policy,
     ops: &[OpNode],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
 ) -> Result<RunReport, SchedError> {
-    match policy {
+    let dispatch = |ops: &[OpNode], backend: &mut dyn Backend| match policy {
         Policy::LatencyHiding => run_latency_hiding(ops, cfg, backend),
         Policy::Blocking => run_blocking(ops, cfg, backend),
         Policy::Naive => run_naive(ops, cfg, backend),
+    };
+    if cfg.aggregation >= 2 {
+        let (packed, stats) = crate::comm::aggregate(ops, cfg.aggregation);
+        let mut report = dispatch(&packed, backend)?;
+        report.agg_msgs = stats.packed_msgs;
+        report.agg_parts = stats.packed_parts;
+        Ok(report)
+    } else {
+        dispatch(ops, backend)
     }
 }
 
@@ -156,7 +205,7 @@ pub(crate) struct TransferInfo {
     pub from: Rank,
     pub to: Rank,
     pub bytes: u64,
-    pub region: Region,
+    pub src: SendSrc,
 }
 
 impl TransferTable {
@@ -168,7 +217,7 @@ impl TransferTable {
                     peer,
                     tag,
                     bytes,
-                    region,
+                    src,
                 } => {
                     let e = half.entry(*tag).or_insert_with(|| TransferInfo {
                         send_op: op.id,
@@ -176,11 +225,11 @@ impl TransferTable {
                         from: op.rank,
                         to: *peer,
                         bytes: *bytes,
-                        region: region.clone(),
+                        src: src.clone(),
                     });
                     e.send_op = op.id;
                     e.from = op.rank;
-                    e.region = region.clone();
+                    e.src = src.clone();
                     e.bytes = *bytes;
                 }
                 OpPayload::Recv { peer, tag, bytes } => {
@@ -190,7 +239,7 @@ impl TransferTable {
                         from: *peer,
                         to: op.rank,
                         bytes: *bytes,
-                        region: Region::scalar(),
+                        src: SendSrc::Stage(*tag),
                     });
                     e.recv_op = op.id;
                     e.to = op.rank;

@@ -95,7 +95,7 @@ pub fn run_naive(
                 let res = net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time (see lh.rs).
                 let info = &xfers.info[tag];
-                backend.exec_transfer(info.from, info.to, *tag, &info.region);
+                backend.exec_transfer(info.from, info.to, *tag, &info.src);
                 let done = res.send_done.unwrap();
                 wait[r] += done - t0;
                 clock[r] = done;
@@ -149,9 +149,23 @@ pub fn run_naive(
     }
 
     if executed as usize != ops.len() {
+        // Progress stopped. A genuine deadlock leaves at least one rank
+        // parked on a receive whose matching send was never initiated —
+        // including sends the aggregation pass coalesced, whose
+        // constituents can span a blocked receive on another rank (the
+        // packed send only becomes ready once *all* constituents are).
+        // Anything else is an internal scheduling bug: report it as a
+        // stall instead of mislabelling it.
+        if parked.is_empty() {
+            return Err(SchedError::Stall(format!(
+                "naive evaluator stopped at {executed}/{} with no blocked receive",
+                ops.len()
+            )));
+        }
         return Err(SchedError::Deadlock {
             executed,
             total: ops.len() as u64,
+            blocked_recvs: parked.len() as u64,
         });
     }
 
@@ -166,6 +180,7 @@ pub fn run_naive(
     report.n_comm = ops.len() as u64 - report.n_compute;
     report.bytes_inter = net.bytes_inter;
     report.bytes_intra = net.bytes_intra;
+    report.n_messages = net.n_transfers;
     Ok(report)
 }
 
@@ -218,8 +233,13 @@ mod tests {
         assert!(lh.is_ok(), "latency-hiding must complete");
         let nv = run_naive(&ops, &cfg, &mut SimBackend);
         match nv {
-            Err(SchedError::Deadlock { executed, total }) => {
+            Err(SchedError::Deadlock {
+                executed,
+                total,
+                blocked_recvs,
+            }) => {
                 assert!(executed < total);
+                assert!(blocked_recvs > 0, "a deadlock names its blocked receives");
             }
             Ok(_) => {
                 // Depending on interleaving the naive order *may* squeak

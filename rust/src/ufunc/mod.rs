@@ -19,9 +19,10 @@
 
 pub mod op;
 
-pub use op::{Access, ComputeTask, Dst, Kernel, Loc, OpNode, OpPayload, Operand, Region};
+pub use op::{Access, ComputeTask, Dst, Kernel, Loc, OpNode, OpPayload, Operand, Region, SendSrc};
 
 use crate::array::Registry;
+use crate::comm::Collective;
 use crate::layout::{fragments, FragOperand};
 use crate::layout::{sub_view_blocks, ViewSpec};
 use crate::types::{OpId, Rank, Tag};
@@ -59,7 +60,7 @@ impl OpBuilder {
         self.group += 1;
     }
 
-    fn push(&mut self, rank: Rank, payload: OpPayload, accesses: Vec<Access>) -> OpId {
+    pub(crate) fn push(&mut self, rank: Rank, payload: OpPayload, accesses: Vec<Access>) -> OpId {
         let id = OpId(self.ops.len() as u32);
         self.ops.push(OpNode {
             id,
@@ -107,7 +108,7 @@ impl OpBuilder {
                 peer: to,
                 tag,
                 bytes,
-                region: region.clone(),
+                src: SendSrc::Region(region.clone()),
             },
             vec![Access::read_block(region.base, region.block, intra)],
         );
@@ -180,8 +181,18 @@ impl OpBuilder {
     /// Record a full reduction `sum(kernel over view(s))` to a staged
     /// scalar on rank 0. `kernel` must be a reducing kernel
     /// ([`Kernel::PartialSum`] or [`Kernel::PartialAbsDiffSum`]).
+    /// The final cross-rank fan-in is scheduled by `collective`:
+    /// [`Collective::Flat`] sends every rank's partial straight to the
+    /// root (the paper's gather), [`Collective::Tree`] combines them
+    /// along a binomial tree ([`crate::comm`]).
     /// Returns the tag holding the final result on rank 0.
-    pub fn reduce(&mut self, reg: &Registry, kernel: Kernel, views: &[&ViewSpec]) -> Tag {
+    pub fn reduce(
+        &mut self,
+        reg: &Registry,
+        kernel: Kernel,
+        views: &[&ViewSpec],
+        collective: Collective,
+    ) -> Tag {
         self.begin_group();
         assert!(kernel.is_reduction());
         let layouts: Vec<_> = views
@@ -263,13 +274,16 @@ impl OpBuilder {
             rank_tags.push((rank, ctag));
         }
 
-        // Gather the per-rank scalars to rank 0 (as DistNumPy does for
-        // scalar reductions) and accumulate. A separate group: the
-        // gather sends read the stages combined above, so §5.3 phasing
+        // Fan the per-rank scalars in to rank 0 (as DistNumPy does for
+        // scalar reductions) and accumulate. Separate groups: the
+        // fan-in sends read the stages combined above, so §5.3 phasing
         // must not hoist them ahead of the combines.
+        let root = Rank(0);
+        if collective == Collective::Tree {
+            return crate::comm::reduce_scalar_tree(self, &rank_tags, root);
+        }
         self.begin_group();
         let partial_tags = rank_tags;
-        let root = Rank(0);
         let mut accum_inputs = Vec::new();
         let mut accum_accesses = Vec::new();
         for (rank, ptag) in partial_tags {
@@ -278,15 +292,15 @@ impl OpBuilder {
                 accum_accesses.push(Access::read_stage(ptag));
             } else {
                 // The transfer reuses the partial's stage tag: data
-                // backends source a scalar-placeholder send from the
-                // sender's stage under the transfer tag itself.
+                // backends forward the sender's stage under the
+                // transfer tag itself.
                 self.push(
                     rank,
                     OpPayload::Send {
                         peer: root,
                         tag: ptag,
                         bytes: 8,
-                        region: Region::scalar(),
+                        src: SendSrc::Stage(ptag),
                     },
                     vec![Access::read_stage(ptag)],
                 );
@@ -466,7 +480,7 @@ mod tests {
         let x = reg.alloc(vec![30], 5, DType::F32);
         let xv = reg.full_view(x);
         let mut bld = OpBuilder::new();
-        let _tag = bld.reduce(&reg, Kernel::PartialSum, &[&xv]);
+        let _tag = bld.reduce(&reg, Kernel::PartialSum, &[&xv], Collective::Flat);
         let ops = bld.finish();
         // 6 block partials (2 per rank) -> 3 local combines; then one
         // message per remote rank (1, 2) and the final accumulate.

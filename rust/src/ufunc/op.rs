@@ -190,7 +190,7 @@ impl Region {
         self.nrows * self.ncols
     }
 
-    /// Placeholder region for scalar (staged) transfers.
+    /// Placeholder region (dummy operands in tests and defaults).
     pub fn scalar() -> Region {
         Region {
             base: BaseId(u32::MAX),
@@ -202,9 +202,31 @@ impl Region {
             row_stride: 1,
         }
     }
+}
 
-    pub fn is_scalar_placeholder(&self) -> bool {
-        self.base == BaseId(u32::MAX)
+/// Where a send operation's payload comes from on the sender.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SendSrc {
+    /// Serialize a rectangular region out of the sender's base-blocks.
+    Region(Region),
+    /// Forward the sender's staging buffer stored under this tag
+    /// (reduction partials, tree-collective forwarding hops).
+    Stage(Tag),
+    /// An aggregated message (`comm::aggregate`): several constituent
+    /// transfers packed into one wire message. Each part pairs the
+    /// constituent's original staging tag with its source; the receiver
+    /// unpacks every part into its own staging buffer. Parts are never
+    /// themselves `Packed`.
+    Packed(Vec<(Tag, SendSrc)>),
+}
+
+impl SendSrc {
+    /// Number of wire-level constituents (1 except for packed messages).
+    pub fn parts(&self) -> usize {
+        match self {
+            SendSrc::Packed(p) => p.len(),
+            _ => 1,
+        }
     }
 }
 
@@ -241,8 +263,8 @@ pub enum OpPayload {
         peer: Rank,
         tag: Tag,
         bytes: u64,
-        /// Source region to serialize (real-data mode).
-        region: Region,
+        /// What to serialize on the sender (real-data mode).
+        src: SendSrc,
     },
     Recv {
         peer: Rank,
@@ -337,7 +359,17 @@ mod tests {
             row_stride: 10,
         };
         assert_eq!(r.elems(), 15);
-        assert!(Region::scalar().is_scalar_placeholder());
+    }
+
+    #[test]
+    fn send_src_parts() {
+        assert_eq!(SendSrc::Stage(Tag(0)).parts(), 1);
+        assert_eq!(SendSrc::Region(Region::scalar()).parts(), 1);
+        let packed = SendSrc::Packed(vec![
+            (Tag(1), SendSrc::Region(Region::scalar())),
+            (Tag(2), SendSrc::Region(Region::scalar())),
+        ]);
+        assert_eq!(packed.parts(), 2);
     }
 
     #[test]

@@ -1,195 +1,243 @@
-//! End-to-end integration tests across the three layers: the AOT HLO
-//! artifacts (L1/L2) executed through PJRT from the scheduler (L3).
+//! End-to-end integration tests across the three layers.
 //!
-//! Requires `make artifacts`. Tests panic with a clear message when the
-//! artifacts are missing rather than silently passing.
+//! The native half exercises the full stack (lazy context, schedulers,
+//! simulated network, real numerics) with the built-in Rust kernels and
+//! always runs. The PJRT half drives the AOT HLO artifacts (L1/L2)
+//! through the scheduler (L3); it needs the `pjrt` cargo feature and
+//! `make artifacts`, and panics with a clear message when the artifacts
+//! are missing rather than silently passing.
 
 use distnumpy::array::ClusterStore;
 use distnumpy::cluster::MachineSpec;
-use distnumpy::exec::{kernels, NativeBackend};
+use distnumpy::comm::Collective;
+use distnumpy::exec::NativeBackend;
 use distnumpy::lazy::Context;
-use distnumpy::runtime::{artifact_dir, artifact_inputs, PjrtBackend, PjrtEngine, ARTIFACT_NAMES};
 use distnumpy::sched::{Policy, SchedCfg};
-use distnumpy::ufunc::Kernel;
 use distnumpy::util::rng::Rng;
 
-fn engine() -> PjrtEngine {
-    PjrtEngine::load(&artifact_dir())
-        .expect("PJRT engine must load — run `make artifacts` first")
-}
-
-#[test]
-fn all_artifacts_load_and_compile() {
-    let e = engine();
-    assert_eq!(
-        e.loaded(),
-        ARTIFACT_NAMES.len(),
-        "every artifact in the contract must compile — run `make artifacts`"
-    );
-}
-
-#[test]
-fn manifest_matches_rust_contracts() {
-    let manifest = std::fs::read_to_string(artifact_dir().join("manifest.json"))
-        .expect("manifest.json — run `make artifacts`");
-    for name in ARTIFACT_NAMES {
-        assert!(
-            manifest.contains(&format!("\"{name}\"")),
-            "{name} missing from manifest"
-        );
-        // Shape spot-check: every declared input length appears.
-        for dims in artifact_inputs(name) {
-            let len: usize = dims.iter().product();
-            assert!(len > 0, "{name}: degenerate contract");
-        }
-    }
-}
-
-/// Each single-output artifact agrees with the native Rust kernel on
-/// random inputs — the L1 (Pallas) ↔ L3 (native) correctness chain, on
-/// the Rust side (pytest covers Pallas ↔ pure-jnp).
-#[test]
-fn artifacts_agree_with_native_kernels() {
-    let e = engine();
-    let mut rng = Rng::new(2012);
-    // (artifact, kernel, positive-only inputs)
-    let cases: Vec<(&str, Kernel, bool)> = vec![
-        ("add1d", Kernel::Add, false),
-        ("add2d", Kernel::Add, false),
-        ("sub2d", Kernel::Sub, false),
-        ("mul2d", Kernel::Mul, false),
-        ("axpy1d", Kernel::Axpy(0.2), false),
-        ("stencil5v", Kernel::Stencil5, false),
-        ("black_scholes", Kernel::BlackScholes, true),
-        ("fractal", Kernel::Fractal(32), false),
-        (
-            "matmul",
-            Kernel::MatmulAcc {
-                n: 64,
-                k: 64,
-                m: 64,
-            },
-            false,
-        ),
-    ];
-    for (name, kernel, positive) in cases {
-        let shapes = artifact_inputs(name);
-        let inputs: Vec<Vec<f32>> = shapes
-            .iter()
-            .map(|dims| {
-                let len: usize = dims.iter().product();
-                if positive {
-                    rng.fill_f32(len, 0.5, 2.0)
-                } else {
-                    rng.fill_f32(len, -1.0, 1.0)
-                }
-            })
-            .collect();
-        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let got = e.execute(name, &refs).expect(name);
-        let elems = got.len();
-        let want = kernels::run(kernel, &refs, elems);
-        assert_eq!(got.len(), want.len(), "{name}: output length");
-        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-            assert!(
-                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
-                "{name}[{i}]: PJRT {g} vs native {w}"
-            );
-        }
-    }
-}
-
-/// The full stack on the paper's Fig. 3 program with real numerics
-/// through PJRT, all three policies that terminate.
-#[test]
-fn fig3_stencil_through_pjrt_matches_native() {
-    for policy in [Policy::LatencyHiding, Policy::Blocking] {
-        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
-        let backend = PjrtBackend::new(ClusterStore::new(2), engine());
-        let mut ctx = Context::new(cfg, policy, Box::new(backend));
-        let m = ctx.array(&[6], 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let n = ctx.zeros(&[6], 3);
-        let a = m.slice(&[(2, 6)]);
-        let b = m.slice(&[(0, 4)]);
-        let c = n.slice(&[(1, 5)]);
-        ctx.add(&c, &a, &b);
-        ctx.flush();
-        let got = ctx.gather(n.base).unwrap();
-        assert_eq!(got, vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0], "{policy:?}");
-        ctx.finish().unwrap();
-    }
-}
-
-/// Aligned 1-D ufuncs at the artifact block size dispatch through PJRT
-/// (not the native fallback) and still match the native result.
-#[test]
-fn aligned_blocks_dispatch_to_pjrt() {
-    const N: u64 = 16_384;
-    const BR: u64 = 4_096;
-    let mut rng = Rng::new(7);
-    let xs = rng.fill_f32(N as usize, -2.0, 2.0);
-    let ys = rng.fill_f32(N as usize, -2.0, 2.0);
-
-    let run = |use_pjrt: bool| -> (Vec<f32>, u64) {
-        let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
-        let mut ctx = if use_pjrt {
-            Context::new(
-                cfg,
-                Policy::LatencyHiding,
-                Box::new(PjrtBackend::new(ClusterStore::new(4), engine())),
-            )
-        } else {
-            Context::new(
-                cfg,
-                Policy::LatencyHiding,
-                Box::new(NativeBackend::new(ClusterStore::new(4))),
-            )
-        };
-        let x = ctx.array(&[N], BR, &xs);
-        let y = ctx.array(&[N], BR, &ys);
-        let z = ctx.zeros(&[N], BR);
-        ctx.add(&z, &x, &y);
-        ctx.ufunc(Kernel::Axpy(0.2), &z, &[&z, &x]);
-        ctx.flush();
-        let out = ctx.gather(z.base).unwrap();
-        let dispatched = ctx
-            .backend
-            .as_any()
-            .downcast_ref::<PjrtBackend>()
-            .map(|b| b.dispatched)
-            .unwrap_or(0);
-        ctx.finish().unwrap();
-        (out, dispatched)
-    };
-
-    let (pjrt_out, dispatched) = run(true);
-    let (native_out, _) = run(false);
-    assert_eq!(
-        dispatched,
-        2 * (N / BR),
-        "both aligned ufuncs must dispatch on every block"
-    );
-    for (g, w) in pjrt_out.iter().zip(&native_out) {
-        assert!((g - w).abs() <= 1e-5, "{g} vs {w}");
-    }
-}
-
-/// Reductions flow partials over the simulated network correctly.
+/// Reductions flow partials over the simulated network correctly —
+/// under both the paper's flat gather and the binomial tree, with and
+/// without message aggregation.
 #[test]
 fn distributed_reduction_matches_serial_sum() {
     for p in [1u32, 2, 3, 4] {
-        let cfg = SchedCfg::new(MachineSpec::tiny(), p);
-        let backend = NativeBackend::new(ClusterStore::new(p));
-        let mut ctx = Context::new(cfg, Policy::LatencyHiding, Box::new(backend));
-        let mut rng = Rng::new(p as u64);
-        let data = rng.fill_f32(1000, -1.0, 1.0);
-        let x = ctx.array(&[1000], 32, &data);
-        let got = ctx.sum(&x);
-        let want: f64 = data.iter().map(|&v| v as f64).sum();
-        assert!(
-            (got - want).abs() < 1e-3,
-            "P={p}: distributed sum {got} vs serial {want}"
+        for collective in [Collective::Flat, Collective::Tree] {
+            for aggregation in [0usize, 8] {
+                let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+                cfg.collective = collective;
+                cfg.aggregation = aggregation;
+                let backend = NativeBackend::new(ClusterStore::new(p));
+                let mut ctx = Context::new(cfg, Policy::LatencyHiding, Box::new(backend));
+                let mut rng = Rng::new(p as u64);
+                let data = rng.fill_f32(1000, -1.0, 1.0);
+                let x = ctx.array(&[1000], 32, &data);
+                let got = ctx.sum(&x);
+                let want: f64 = data.iter().map(|&v| v as f64).sum();
+                assert!(
+                    (got - want).abs() < 1e-3,
+                    "P={p} {collective:?} agg={aggregation}: distributed sum {got} vs serial {want}"
+                );
+                ctx.finish().unwrap();
+            }
+        }
+    }
+}
+
+/// The paper's Fig. 3 stencil with real numerics through the native
+/// backend, gathered back through the recorded collective schedules.
+#[test]
+fn fig3_stencil_native_roundtrip() {
+    for policy in [Policy::LatencyHiding, Policy::Blocking] {
+        for collective in [Collective::Flat, Collective::Tree] {
+            let mut cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+            cfg.collective = collective;
+            let backend = NativeBackend::new(ClusterStore::new(2));
+            let mut ctx = Context::new(cfg, policy, Box::new(backend));
+            let m = ctx.array(&[6], 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            let n = ctx.zeros(&[6], 3);
+            let a = m.slice(&[(2, 6)]);
+            let b = m.slice(&[(0, 4)]);
+            let c = n.slice(&[(1, 5)]);
+            ctx.add(&c, &a, &b);
+            ctx.flush();
+            let got = ctx.gather(n.base).unwrap();
+            assert_eq!(
+                got,
+                vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0],
+                "{policy:?} {collective:?}"
+            );
+            ctx.finish().unwrap();
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use distnumpy::exec::kernels;
+    use distnumpy::runtime::{
+        artifact_dir, artifact_inputs, PjrtBackend, PjrtEngine, ARTIFACT_NAMES,
+    };
+    use distnumpy::ufunc::Kernel;
+
+    fn engine() -> PjrtEngine {
+        PjrtEngine::load(&artifact_dir())
+            .expect("PJRT engine must load — run `make artifacts` first")
+    }
+
+    #[test]
+    fn all_artifacts_load_and_compile() {
+        let e = engine();
+        assert_eq!(
+            e.loaded(),
+            ARTIFACT_NAMES.len(),
+            "every artifact in the contract must compile — run `make artifacts`"
         );
-        ctx.finish().unwrap();
+    }
+
+    #[test]
+    fn manifest_matches_rust_contracts() {
+        let manifest = std::fs::read_to_string(artifact_dir().join("manifest.json"))
+            .expect("manifest.json — run `make artifacts`");
+        for name in ARTIFACT_NAMES {
+            assert!(
+                manifest.contains(&format!("\"{name}\"")),
+                "{name} missing from manifest"
+            );
+            // Shape spot-check: every declared input length appears.
+            for dims in artifact_inputs(name) {
+                let len: usize = dims.iter().product();
+                assert!(len > 0, "{name}: degenerate contract");
+            }
+        }
+    }
+
+    /// Each single-output artifact agrees with the native Rust kernel on
+    /// random inputs — the L1 (Pallas) ↔ L3 (native) correctness chain,
+    /// on the Rust side (pytest covers Pallas ↔ pure-jnp).
+    #[test]
+    fn artifacts_agree_with_native_kernels() {
+        let e = engine();
+        let mut rng = Rng::new(2012);
+        // (artifact, kernel, positive-only inputs)
+        let cases: Vec<(&str, Kernel, bool)> = vec![
+            ("add1d", Kernel::Add, false),
+            ("add2d", Kernel::Add, false),
+            ("sub2d", Kernel::Sub, false),
+            ("mul2d", Kernel::Mul, false),
+            ("axpy1d", Kernel::Axpy(0.2), false),
+            ("stencil5v", Kernel::Stencil5, false),
+            ("black_scholes", Kernel::BlackScholes, true),
+            ("fractal", Kernel::Fractal(32), false),
+            (
+                "matmul",
+                Kernel::MatmulAcc {
+                    n: 64,
+                    k: 64,
+                    m: 64,
+                },
+                false,
+            ),
+        ];
+        for (name, kernel, positive) in cases {
+            let shapes = artifact_inputs(name);
+            let inputs: Vec<Vec<f32>> = shapes
+                .iter()
+                .map(|dims| {
+                    let len: usize = dims.iter().product();
+                    if positive {
+                        rng.fill_f32(len, 0.5, 2.0)
+                    } else {
+                        rng.fill_f32(len, -1.0, 1.0)
+                    }
+                })
+                .collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let got = e.execute(name, &refs).expect(name);
+            let elems = got.len();
+            let want = kernels::run(kernel, &refs, elems);
+            assert_eq!(got.len(), want.len(), "{name}: output length");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                    "{name}[{i}]: PJRT {g} vs native {w}"
+                );
+            }
+        }
+    }
+
+    /// The full stack on the paper's Fig. 3 program with real numerics
+    /// through PJRT, all policies that terminate.
+    #[test]
+    fn fig3_stencil_through_pjrt_matches_native() {
+        for policy in [Policy::LatencyHiding, Policy::Blocking] {
+            let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+            let backend = PjrtBackend::new(ClusterStore::new(2), engine());
+            let mut ctx = Context::new(cfg, policy, Box::new(backend));
+            let m = ctx.array(&[6], 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            let n = ctx.zeros(&[6], 3);
+            let a = m.slice(&[(2, 6)]);
+            let b = m.slice(&[(0, 4)]);
+            let c = n.slice(&[(1, 5)]);
+            ctx.add(&c, &a, &b);
+            ctx.flush();
+            let got = ctx.gather(n.base).unwrap();
+            assert_eq!(got, vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0], "{policy:?}");
+            ctx.finish().unwrap();
+        }
+    }
+
+    /// Aligned 1-D ufuncs at the artifact block size dispatch through
+    /// PJRT (not the native fallback) and still match the native result.
+    #[test]
+    fn aligned_blocks_dispatch_to_pjrt() {
+        const N: u64 = 16_384;
+        const BR: u64 = 4_096;
+        let mut rng = Rng::new(7);
+        let xs = rng.fill_f32(N as usize, -2.0, 2.0);
+        let ys = rng.fill_f32(N as usize, -2.0, 2.0);
+
+        let run = |use_pjrt: bool| -> (Vec<f32>, u64) {
+            let cfg = SchedCfg::new(MachineSpec::tiny(), 4);
+            let mut ctx = if use_pjrt {
+                Context::new(
+                    cfg,
+                    Policy::LatencyHiding,
+                    Box::new(PjrtBackend::new(ClusterStore::new(4), engine())),
+                )
+            } else {
+                Context::new(
+                    cfg,
+                    Policy::LatencyHiding,
+                    Box::new(NativeBackend::new(ClusterStore::new(4))),
+                )
+            };
+            let x = ctx.array(&[N], BR, &xs);
+            let y = ctx.array(&[N], BR, &ys);
+            let z = ctx.zeros(&[N], BR);
+            ctx.add(&z, &x, &y);
+            ctx.ufunc(Kernel::Axpy(0.2), &z, &[&z, &x]);
+            ctx.flush();
+            let out = ctx.gather(z.base).unwrap();
+            let dispatched = ctx
+                .backend
+                .as_any()
+                .downcast_ref::<PjrtBackend>()
+                .map(|b| b.dispatched)
+                .unwrap_or(0);
+            ctx.finish().unwrap();
+            (out, dispatched)
+        };
+
+        let (pjrt_out, dispatched) = run(true);
+        let (native_out, _) = run(false);
+        assert_eq!(
+            dispatched,
+            2 * (N / BR),
+            "both aligned ufuncs must dispatch on every block"
+        );
+        for (g, w) in pjrt_out.iter().zip(&native_out) {
+            assert!((g - w).abs() <= 1e-5, "{g} vs {w}");
+        }
     }
 }

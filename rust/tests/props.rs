@@ -16,13 +16,16 @@
 
 use distnumpy::array::{ClusterStore, Registry};
 use distnumpy::cluster::MachineSpec;
+use distnumpy::comm::{aggregate, allgather_ring, Collective};
 use distnumpy::deps::{DagDeps, DepSystem, HeuristicDeps};
-use distnumpy::exec::{NativeBackend, SimBackend};
+use distnumpy::exec::{Backend, NativeBackend, SimBackend};
 use distnumpy::layout::{sub_view_blocks, ViewSpec};
 use distnumpy::lazy::Context;
-use distnumpy::sched::{execute, Policy, SchedCfg};
-use distnumpy::types::{DType, OpId};
-use distnumpy::ufunc::{Kernel, OpBuilder, OpNode};
+use distnumpy::sched::{execute, Policy, SchedCfg, SchedError};
+use distnumpy::types::{DType, OpId, Rank, Tag};
+use distnumpy::ufunc::{
+    Access, ComputeTask, Dst, Kernel, OpBuilder, OpNode, OpPayload, Operand, Region, SendSrc,
+};
 use distnumpy::util::rng::Rng;
 
 // ---------------------------------------------------------------------
@@ -153,7 +156,14 @@ fn random_program(rng: &mut Rng, p: u32) -> (Registry, Vec<OpNode>, Vec<distnump
             }
             _ => {
                 let a = pick_view(rng, &reg);
-                bld.reduce(&reg, Kernel::PartialSum, &[&a]);
+                // Alternate fan-in schedules so the random streams
+                // exercise both collective paths.
+                let collective = if rng.range(0, 2) == 0 {
+                    Collective::Flat
+                } else {
+                    Collective::Tree
+                };
+                bld.reduce(&reg, Kernel::PartialSum, &[&a], collective);
             }
         }
     }
@@ -297,6 +307,348 @@ fn prop_lh_waits_no_more_than_blocking_on_stencils() {
             lw <= bw + 1e-9,
             "LH waited more than blocking: {lw} vs {bw} (P={p} rows={rows} br={br})"
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Collective-engine properties (comm/)
+// ---------------------------------------------------------------------
+
+/// Tree reduce over the native backend matches the sequential reference
+/// and the old flat fan-in for randomized shapes, rank counts and view
+/// slices, under all three policies — and is bit-identical across
+/// policies (fixed combine order).
+#[test]
+fn prop_tree_reduce_matches_reference_and_flat_fanin() {
+    let mut rng = Rng::new(0x7EE5);
+    for trial in 0..40 {
+        let p = 1 + rng.below(8) as u32;
+        let rows = 8 + rng.below(300);
+        let br = 1 + rng.below(12);
+        let lo = rng.below(rows);
+        let hi = lo + 1 + rng.below(rows - lo);
+
+        let mut reg = Registry::new(p);
+        let base = reg.alloc(vec![rows], br, DType::F32);
+        let view = reg.full_view(base).slice(&[(lo, hi)]);
+        let mut rng_data = Rng::new(trial as u64 + 1);
+        let data = rng_data.fill_f32(rows as usize, -1.0, 1.0);
+        let want: f64 = data[lo as usize..hi as usize]
+            .iter()
+            .map(|&v| v as f64)
+            .sum();
+
+        let run = |collective: Collective, policy: Policy| -> f64 {
+            let mut store = ClusterStore::new(p);
+            store.alloc_base(reg.layout(base));
+            store.scatter(reg.layout(base), &data);
+            let mut bld = OpBuilder::new();
+            let tag = bld.reduce(&reg, Kernel::PartialSum, &[&view], collective);
+            let ops = bld.finish();
+            let mut be = NativeBackend::new(store);
+            let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            execute(policy, &ops, &cfg, &mut be)
+                .unwrap_or_else(|e| panic!("{policy:?}/{collective:?} trial {trial}: {e}"));
+            be.staged_scalar(Rank(0), tag).expect("result staged on root")
+        };
+
+        let tol = 1e-3 * want.abs().max(1.0);
+        let flat = run(Collective::Flat, Policy::LatencyHiding);
+        let mut tree_results = Vec::new();
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            let tree = run(Collective::Tree, policy);
+            assert!(
+                (tree - want).abs() < tol,
+                "trial {trial} {policy:?}: tree {tree} vs reference {want}"
+            );
+            tree_results.push(tree);
+        }
+        assert!(
+            (flat - want).abs() < tol,
+            "trial {trial}: flat {flat} vs reference {want}"
+        );
+        assert!(
+            (tree_results[0] - flat).abs() < tol,
+            "trial {trial}: tree {} vs flat {flat}",
+            tree_results[0]
+        );
+        // Fixed combine order: the tree result is *bit-identical*
+        // across policies.
+        assert!(
+            tree_results.iter().all(|&t| t == tree_results[0]),
+            "trial {trial}: tree results diverge across policies: {tree_results:?}"
+        );
+    }
+}
+
+/// Ring allgather delivers every remote block, bit-exact, for
+/// randomized layouts under latency-hiding and blocking.
+#[test]
+fn prop_ring_allgather_delivers_all_blocks() {
+    let mut rng = Rng::new(0x41A6);
+    for trial in 0..30 {
+        let p = 2 + rng.below(6) as u32;
+        let rows = p as u64 + rng.below(200);
+        let br = 1 + rng.below(10);
+        let mut reg = Registry::new(p);
+        let base = reg.alloc(vec![rows], br, DType::F32);
+        let layout = reg.layout(base).clone();
+        let mut rng_data = Rng::new(0xDA7A + trial as u64);
+        let data = rng_data.fill_f32(rows as usize, -1.0, 1.0);
+
+        for policy in [Policy::LatencyHiding, Policy::Blocking] {
+            let mut store = ClusterStore::new(p);
+            store.alloc_base(&layout);
+            store.scatter(&layout, &data);
+            let mut bld = OpBuilder::new();
+            let tags = allgather_ring(&mut bld, &reg, base);
+            let ops = bld.finish();
+            let mut be = NativeBackend::new(store);
+            let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            execute(policy, &ops, &cfg, &mut be)
+                .unwrap_or_else(|e| panic!("{policy:?} trial {trial}: {e}"));
+            for r in 0..p {
+                for b in 0..layout.nblocks() {
+                    let (blo, bhi) = layout.block_rows_range(b);
+                    let want = &data[blo as usize..bhi as usize];
+                    match tags[r as usize][b as usize] {
+                        None => assert_eq!(layout.owner(b), Rank(r)),
+                        Some(t) => assert_eq!(
+                            be.store.ranks[r as usize].stage(t),
+                            want,
+                            "{policy:?} trial {trial}: rank {r} block {b}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The multi-round ring parks every rank on a becoming-ready receive
+/// under the naive evaluator — Fig. 6 all over again. It must report a
+/// deadlock (with its blocked receives counted), not hang.
+#[test]
+fn ring_allgather_deadlocks_naive_with_report() {
+    let mut reg = Registry::new(3);
+    let base = reg.alloc(vec![3], 1, DType::F32);
+    let mut bld = OpBuilder::new();
+    let _ = allgather_ring(&mut bld, &reg, base);
+    let ops = bld.finish();
+    let cfg = SchedCfg::new(MachineSpec::tiny(), 3);
+    assert!(
+        execute(Policy::LatencyHiding, &ops, &cfg, &mut SimBackend).is_ok(),
+        "latency-hiding completes the ring"
+    );
+    match execute(Policy::Naive, &ops, &cfg, &mut SimBackend) {
+        Err(SchedError::Deadlock {
+            executed,
+            total,
+            blocked_recvs,
+        }) => {
+            assert!(executed < total);
+            assert!(blocked_recvs > 0);
+        }
+        other => panic!("naive must deadlock on the multi-round ring, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Message-aggregation properties (comm/aggregate)
+// ---------------------------------------------------------------------
+
+/// Aggregation is invisible to the numerics: random programs produce
+/// bit-identical results with and without it, under latency-hiding and
+/// blocking, while never increasing the wire-message count.
+#[test]
+fn prop_aggregation_preserves_numerics() {
+    let mut rng = Rng::new(0xA660);
+    for trial in 0..40 {
+        let p = 1 + (trial % 4) as u32;
+        let (reg, ops, bases) = random_program(&mut rng, p);
+        for policy in [Policy::LatencyHiding, Policy::Blocking] {
+            let mut gathers: Vec<Vec<f32>> = Vec::new();
+            let mut messages: Vec<u64> = Vec::new();
+            for aggregation in [0usize, 4] {
+                let mut store = ClusterStore::new(p);
+                let mut data_rng = Rng::new(77);
+                for &b in &bases {
+                    store.alloc_base(reg.layout(b));
+                    let rows = reg.layout(b).rows();
+                    let d = data_rng.fill_f32(rows as usize, -1.0, 1.0);
+                    store.scatter(reg.layout(b), &d);
+                }
+                let mut be = NativeBackend::new(store);
+                let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+                cfg.aggregation = aggregation;
+                let rep = execute(policy, &ops, &cfg, &mut be)
+                    .unwrap_or_else(|e| panic!("{policy:?} agg={aggregation}: {e}"));
+                messages.push(rep.n_messages);
+                let mut all = Vec::new();
+                for &b in &bases {
+                    all.extend(be.store.gather(reg.layout(b)));
+                }
+                gathers.push(all);
+            }
+            assert_eq!(
+                gathers[0], gathers[1],
+                "{policy:?} trial {trial}: aggregation changed the numerics"
+            );
+            assert!(
+                messages[1] <= messages[0],
+                "{policy:?} trial {trial}: aggregation added messages"
+            );
+        }
+    }
+}
+
+/// Regression (naive + aggregation): a coalesced send whose
+/// constituents span a blocked receive forms a cycle — rank 1 parks on
+/// the packed envelope receive while the packed send on rank 0 waits
+/// for a compute fed by rank 1's unreached send. The naive evaluator
+/// must detect and report this, not hang; latency-hiding completes the
+/// very same stream.
+#[test]
+fn naive_reports_cycle_through_aggregated_message() {
+    let b = distnumpy::types::BaseId(0);
+    let region = |row: u64| Region {
+        base: b,
+        block: 0,
+        row0: row,
+        nrows: 1,
+        col0: 0,
+        ncols: 4,
+        row_stride: 4,
+    };
+    let read_iv = |row: u64| (row * 4, row * 4 + 4);
+    // Recorded stream (2 ranks, one base block on rank 0):
+    //   id0  rank0: Recv  Ta   <- rank1            (group 0)
+    //   id1  rank0: Compute    reads stage Ta, writes block A (group 0)
+    //   id2  rank0: Send  T1   -> rank1, region A[0]   (group 1)
+    //   id3  rank1: Recv  T1
+    //   id4  rank0: Send  T2   -> rank1, region A[1]   (group 1)
+    //   id5  rank1: Recv  T2
+    //   id6  rank1: Send  Ta   -> rank0, region B      (group 1)
+    let ta = Tag(100);
+    let ops = vec![
+        OpNode {
+            id: OpId(0),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Recv {
+                peer: Rank(1),
+                tag: ta,
+                bytes: 16,
+            },
+            accesses: vec![Access::write_stage(ta)],
+        },
+        OpNode {
+            id: OpId(1),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::Copy,
+                inputs: vec![Operand::Staged(ta)],
+                dst: Dst::Block(region(0)),
+                elems: 4,
+            }),
+            accesses: vec![Access::read_stage(ta), Access::write_block(b, 0, (0, 8))],
+        },
+        OpNode {
+            id: OpId(2),
+            rank: Rank(0),
+            group: 1,
+            payload: OpPayload::Send {
+                peer: Rank(1),
+                tag: Tag(0),
+                bytes: 16,
+                src: SendSrc::Region(region(0)),
+            },
+            accesses: vec![Access::read_block(b, 0, read_iv(0))],
+        },
+        OpNode {
+            id: OpId(3),
+            rank: Rank(1),
+            group: 1,
+            payload: OpPayload::Recv {
+                peer: Rank(0),
+                tag: Tag(0),
+                bytes: 16,
+            },
+            accesses: vec![Access::write_stage(Tag(0))],
+        },
+        OpNode {
+            id: OpId(4),
+            rank: Rank(0),
+            group: 1,
+            payload: OpPayload::Send {
+                peer: Rank(1),
+                tag: Tag(1),
+                bytes: 16,
+                src: SendSrc::Region(region(1)),
+            },
+            accesses: vec![Access::read_block(b, 0, read_iv(1))],
+        },
+        OpNode {
+            id: OpId(5),
+            rank: Rank(1),
+            group: 1,
+            payload: OpPayload::Recv {
+                peer: Rank(0),
+                tag: Tag(1),
+                bytes: 16,
+            },
+            accesses: vec![Access::write_stage(Tag(1))],
+        },
+        OpNode {
+            id: OpId(6),
+            rank: Rank(1),
+            group: 1,
+            payload: OpPayload::Send {
+                peer: Rank(0),
+                tag: ta,
+                bytes: 16,
+                src: SendSrc::Region(Region {
+                    base: distnumpy::types::BaseId(1),
+                    block: 0,
+                    row0: 0,
+                    nrows: 1,
+                    col0: 0,
+                    ncols: 4,
+                    row_stride: 4,
+                }),
+            },
+            accesses: vec![Access::read_block(distnumpy::types::BaseId(1), 0, (0, 4))],
+        },
+    ];
+
+    // The two rank0 -> rank1 sends coalesce (their sources were written
+    // before the anchor's group; no hazard in between).
+    let (packed, stats) = aggregate(&ops, 4);
+    assert_eq!(stats.packed_msgs, 1, "the two block sends must coalesce");
+    assert_eq!(stats.packed_parts, 2);
+    assert_eq!(packed.len(), 5, "7 ops collapse to 5");
+
+    let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+    // Latency-hiding initiates every ready communication before
+    // blocking on anything (invariant 2) and completes.
+    let rep = execute(Policy::LatencyHiding, &packed, &cfg, &mut SimBackend)
+        .expect("latency-hiding completes the aggregated stream");
+    assert_eq!(rep.ops_executed, packed.len() as u64);
+    // The naive evaluator parks rank 1 on the envelope receive (it
+    // became ready before Sa) and rank 0 on Ta: a cycle through the
+    // coalesced send. Must be reported as a deadlock, promptly.
+    match execute(Policy::Naive, &packed, &cfg, &mut SimBackend) {
+        Err(SchedError::Deadlock {
+            executed,
+            total,
+            blocked_recvs,
+        }) => {
+            assert_eq!(executed, 0);
+            assert_eq!(total, packed.len() as u64);
+            assert_eq!(blocked_recvs, 2, "both parked receives reported");
+        }
+        other => panic!("naive must report the aggregated cycle, got {other:?}"),
     }
 }
 
