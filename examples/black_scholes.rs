@@ -55,14 +55,20 @@ fn main() {
             ctx.ufunc(Kernel::Scale(1.25), &t, &[&t]);
         }
         ctx.ufunc(Kernel::BlackScholes, &prices, &[&s, &x, &t]);
-        let value = ctx.sum(&prices);
+        let value = ctx.sum(&prices).expect("no deadlock");
         println!("  {:>10} {:>18.2}", step, value);
         assert!(value > 0.0, "portfolio value must be positive");
     }
 
     // Validate a sample of prices against the native oracle.
-    let got = ctx.gather(prices.base).expect("data backend");
-    let t_final = ctx.gather(t.base).expect("data backend");
+    let got = ctx
+        .gather(prices.base)
+        .expect("no deadlock")
+        .expect("data backend");
+    let t_final = ctx
+        .gather(t.base)
+        .expect("no deadlock")
+        .expect("data backend");
     let want = kernels::run(
         Kernel::BlackScholes,
         &[&spot, &strike, &t_final],

@@ -125,12 +125,15 @@ fn distributed(policy: Policy, engine: PjrtEngine, p: u32) -> E2eRun {
             &[&center, &up, &down, &left, &right],
         );
         // Convergence read: flush trigger 1.
-        deltas.push(ctx.sum_absdiff(&work, &center) as f32);
+        deltas.push(ctx.sum_absdiff(&work, &center).expect("no deadlock") as f32);
         // Write the interior back.
         ctx.copy(&shift(1, 1), &work);
     }
     ctx.flush();
-    let grid = ctx.gather(g.base).expect("data backend");
+    let grid = ctx
+        .gather(g.base)
+        .expect("no deadlock")
+        .expect("data backend");
     let baseline = ctx.baseline;
     // Pull PJRT dispatch counters back out of the boxed backend.
     let stats = ctx

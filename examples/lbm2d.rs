@@ -198,12 +198,18 @@ fn run(p: u32, policy: Policy) -> FlowRun {
         collide(&mut ctx, &l);
         stream(&mut ctx, &l);
         // Mass monitor: read -> flush trigger 1, once per step.
-        mass.push(ctx.sum(&l.rho));
+        mass.push(ctx.sum(&l.rho).expect("no deadlock"));
     }
     ctx.flush();
     collide_moments_only(&mut ctx, &l);
-    let rho = ctx.gather(l.rho.base).expect("data backend");
-    let ux = ctx.gather(l.ux.base).expect("data backend");
+    let rho = ctx
+        .gather(l.rho.base)
+        .expect("no deadlock")
+        .expect("data backend");
+    let ux = ctx
+        .gather(l.ux.base)
+        .expect("no deadlock")
+        .expect("data backend");
     let report = ctx.finish().expect("no deadlock");
     FlowRun {
         rho,

@@ -50,7 +50,10 @@ fn run(policy: Policy) -> (Vec<f32>, distnumpy::metrics::RunReport) {
 
     // Trigger 3: end of program.
     ctx.flush();
-    let result = ctx.gather(n.base).expect("native backend materializes data");
+    let result = ctx
+        .gather(n.base)
+        .expect("no deadlock under this policy")
+        .expect("native backend materializes data");
     let report = ctx.finish().expect("no deadlock under this policy");
     (result, report)
 }

@@ -20,6 +20,7 @@ use distnumpy::comm::Collective;
 use distnumpy::harness::{run_once_full, PAPER_PS};
 use distnumpy::metrics::RunReport;
 use distnumpy::sched::{Policy, SchedCfg};
+use distnumpy::util::json::Json;
 
 struct Config {
     name: &'static str,
@@ -66,9 +67,19 @@ fn main() {
         "P", "config", "makespan", "root wait", "messages", "packed", "saved"
     );
 
+    let mut json_rows = Vec::new();
     for &p in &PAPER_PS {
         let reports: Vec<RunReport> = CONFIGS.iter().map(|c| run(p, c, &spec, &params)).collect();
         for (c, r) in CONFIGS.iter().zip(&reports) {
+            let mut o = Json::obj();
+            o.push("p", (p as u64).into());
+            o.push("config", c.name.into());
+            o.push("makespan", r.makespan.into());
+            o.push("wait_root", r.wait_root().into());
+            o.push("n_messages", r.n_messages.into());
+            o.push("agg_msgs", r.agg_msgs.into());
+            o.push("agg_parts", r.agg_parts.into());
+            json_rows.push(o);
             println!(
                 "{:>4} {:>9} | {:>10.4}ms {:>10.4}ms {:>10} {:>10} {:>10}",
                 p,
@@ -100,6 +111,10 @@ fn main() {
             );
         }
     }
+
+    let json = Json::Arr(json_rows).render();
+    std::fs::write("BENCH_collectives.json", &json).expect("write BENCH_collectives.json");
+    println!("wrote BENCH_collectives.json\n");
 
     println!(
         "flat fan-ins serialize P-1 drains on the root NIC; the binomial tree\n\

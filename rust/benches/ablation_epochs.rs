@@ -1,0 +1,185 @@
+//! `cargo bench --bench ablation_epochs` — the epochs/futures ablation:
+//! barrier-per-iteration convergence checks (the paper's §5.6 flush
+//! triggers, an immediate `sum_absdiff` every iteration) vs pipelined
+//! deferred checks (`ScalarFuture`s issued every k = 4 iterations and
+//! forced one interval later), across rank counts.
+//!
+//! Workload: the Jacobi row-ops solver (Fig. 17). Everything runs on
+//! the persistent `ExecState` timeline, so the *only* difference between
+//! the two configurations is where the global barriers fall: per
+//! iteration, or once per check interval. Expected shape (asserted for
+//! P >= 16): the pipelined variant strictly reduces the waiting-time
+//! percentage — the reduction fan-ins drain behind subsequent
+//! iterations' compute instead of stalling every rank — while a data
+//! backend produces bit-identical grids and deltas under both.
+//!
+//! Also asserts the headline bugfix: a scalar read after a failed flush
+//! (naive-policy deadlock) returns an error, never a silent 0.0.
+//!
+//! Writes `BENCH_epochs.json` next to the working directory so CI can
+//! archive the numbers per-PR.
+
+use distnumpy::apps::{record_jacobi_observed, record_jacobi_with, AppParams, Convergence};
+use distnumpy::array::ClusterStore;
+use distnumpy::cluster::MachineSpec;
+use distnumpy::exec::NativeBackend;
+use distnumpy::lazy::Context;
+use distnumpy::metrics::RunReport;
+use distnumpy::sched::{Policy, SchedCfg, SchedError};
+use distnumpy::util::json::Json;
+use distnumpy::util::rng::Rng;
+
+const CHECK_EVERY: u32 = 4;
+
+fn run(p: u32, conv: Convergence, spec: &MachineSpec, params: &AppParams) -> RunReport {
+    let cfg = SchedCfg::new(spec.clone(), p);
+    let mut ctx = Context::sim(cfg, Policy::LatencyHiding);
+    record_jacobi_with(&mut ctx, params, conv);
+    ctx.finish().expect("jacobi completes under latency-hiding")
+}
+
+/// The *shipped* Fig. 17 loop (`apps::record_jacobi_observed`) on a
+/// data backend with a seeded grid: returns the final grid and the
+/// convergence deltas actually observed (iteration, value).
+fn jacobi_data(p: u32, params: &AppParams, conv: Convergence) -> (Vec<f32>, Vec<(u32, f64)>) {
+    let cfg = SchedCfg::new(MachineSpec::tiny(), p);
+    let mut ctx = Context::new(
+        cfg,
+        Policy::LatencyHiding,
+        Box::new(NativeBackend::new(ClusterStore::new(p))),
+    );
+    let n = params.dim(4096);
+    let mut rng = Rng::new(42);
+    let data = rng.fill_f32((n * n) as usize, -1.0, 1.0);
+    let run = record_jacobi_observed(&mut ctx, params, conv, Some(&data));
+    let grid = ctx
+        .gather(run.grid)
+        .expect("no deadlock")
+        .expect("data backend");
+    (grid, run.deltas)
+}
+
+fn main() {
+    let spec = MachineSpec::paper();
+    let params = AppParams {
+        scale: 0.25,
+        iters: 8,
+    };
+    let configs: [(&str, Convergence); 2] = [
+        ("barrier", Convergence::EveryIteration),
+        (
+            "pipelined-k4",
+            Convergence::Pipelined { every: CHECK_EVERY },
+        ),
+    ];
+
+    println!("=== Epoch ablation — jacobi (Fig. 17 app), latency-hiding ===\n");
+    println!(
+        "{:>4} {:>13} | {:>12} {:>8} {:>8} {:>14}",
+        "P", "config", "makespan", "wait%", "epochs", "barrier wait"
+    );
+
+    let mut rows = Vec::new();
+    for &p in &[4u32, 16, 32, 64] {
+        let reports: Vec<RunReport> = configs
+            .iter()
+            .map(|(_, conv)| run(p, *conv, &spec, &params))
+            .collect();
+        for ((name, _), r) in configs.iter().zip(&reports) {
+            println!(
+                "{:>4} {:>13} | {:>10.4}ms {:>7.2}% {:>8} {:>12.4}ms",
+                p,
+                name,
+                r.makespan * 1e3,
+                r.wait_pct(),
+                r.n_epochs,
+                r.wait_at_barrier * 1e3,
+            );
+            let mut o = Json::obj();
+            o.push("p", (p as u64).into());
+            o.push("config", (*name).into());
+            o.push("makespan", r.makespan.into());
+            o.push("wait_pct", r.wait_pct().into());
+            o.push("n_epochs", r.n_epochs.into());
+            o.push("wait_at_barrier", r.wait_at_barrier.into());
+            rows.push(o);
+        }
+        println!();
+
+        let (barrier, pipelined) = (&reports[0], &reports[1]);
+        assert!(
+            pipelined.n_epochs < barrier.n_epochs,
+            "P={p}: pipelining must cut epochs ({} vs {})",
+            pipelined.n_epochs,
+            barrier.n_epochs
+        );
+        // The acceptance claim: at P >= 16 deferring the convergence
+        // read strictly reduces the waiting-time percentage.
+        if p >= 16 {
+            assert!(
+                pipelined.wait_pct() < barrier.wait_pct(),
+                "P={p}: pipelined wait {:.2}% must undercut barrier {:.2}%",
+                pipelined.wait_pct(),
+                barrier.wait_pct()
+            );
+            assert!(
+                pipelined.wait_at_barrier < barrier.wait_at_barrier,
+                "P={p}: pipelined barrier wait must shrink"
+            );
+        }
+    }
+
+    // -- data backends stay bit-identical across the two schedules -----
+    let dparams = AppParams {
+        scale: 0.01, // n = 40: small enough for a real-numerics run
+        iters: 2 * CHECK_EVERY,
+    };
+    let (grid_b, deltas_b) = jacobi_data(4, &dparams, Convergence::EveryIteration);
+    let (grid_p, deltas_p) =
+        jacobi_data(4, &dparams, Convergence::Pipelined { every: CHECK_EVERY });
+    assert_eq!(grid_b, grid_p, "grids must be bit-identical");
+    assert_eq!(deltas_b.len() as u32, dparams.iters, "a delta per iteration");
+    assert!(!deltas_p.is_empty(), "pipelined run observed deltas");
+    let immediate: std::collections::HashMap<u32, f64> = deltas_b.into_iter().collect();
+    for (it, d) in deltas_p {
+        assert_eq!(
+            d, immediate[&it],
+            "deferred delta at iteration {it} must equal the immediate one"
+        );
+    }
+    println!("data backends: grids and deltas bit-identical (barrier vs pipelined)");
+
+    // -- a failed flush can no longer masquerade as convergence --------
+    let mut ctx = Context::sim(SchedCfg::new(MachineSpec::tiny(), 2), Policy::Naive);
+    let rows_n = 12u64;
+    let m = ctx.zeros(&[rows_n], 3);
+    let nv = ctx.zeros(&[rows_n], 3);
+    for _ in 0..2 {
+        ctx.add(
+            &nv.slice(&[(1, rows_n - 1)]),
+            &m.slice(&[(2, rows_n)]),
+            &m.slice(&[(0, rows_n - 2)]),
+        );
+        ctx.add(
+            &m.slice(&[(1, rows_n - 1)]),
+            &nv.slice(&[(2, rows_n)]),
+            &nv.slice(&[(0, rows_n - 2)]),
+        );
+    }
+    match ctx.sum_absdiff(&m, &nv) {
+        Err(SchedError::Deadlock { .. }) => {
+            println!("poisoned context: deadlocked convergence read errors (not 0.0)")
+        }
+        other => panic!("sum after failed flush must error, got {other:?}"),
+    }
+
+    let json = Json::Arr(rows).render();
+    std::fs::write("BENCH_epochs.json", &json).expect("write BENCH_epochs.json");
+    println!("\nwrote BENCH_epochs.json");
+
+    println!(
+        "\nbarrier-per-iteration pays a global join for every convergence read;\n\
+         deferring the read through a ScalarFuture lets the fan-in drain behind\n\
+         the next iterations' compute — same numerics, strictly less waiting."
+    );
+}

@@ -4,21 +4,72 @@
 //! copies into temporaries — the natural NumPy style before one thinks
 //! in stencils. Per iteration: four shifted copies (the up/down pair
 //! crosses block boundaries ⇒ halo communication), three adds, one
-//! fused axpy, a copy-back and the convergence read that flushes the
-//! batch. More memory traffic than the stencil form (Fig. 18), hence
-//! the lower absolute speedup the paper reports — but the same
-//! communication pattern, hence the same dramatic latency-hiding win
-//! (wait 54% → 2% at 16 ranks).
+//! fused axpy, a copy-back and the convergence read. More memory traffic
+//! than the stencil form (Fig. 18), hence the lower absolute speedup the
+//! paper reports — but the same communication pattern, hence the same
+//! dramatic latency-hiding win (wait 54% → 2% at 16 ranks).
+//!
+//! The convergence read is where the epochs/futures machinery earns its
+//! keep: an *immediate* `sum_absdiff` per iteration erects a global
+//! barrier per iteration ([`Convergence::EveryIteration`] — the paper's
+//! behaviour and the harness default), while the pipelined variant
+//! ([`Convergence::Pipelined`]) issues a *deferred* reduction every `k`
+//! iterations and forces it one check-interval later, so the fan-in
+//! drains behind subsequent iterations' compute and the timeline
+//! barriers ~`iters/k` times instead of `iters` times
+//! (`benches/ablation_epochs.rs` measures the difference).
 
-use crate::lazy::Context;
+use crate::lazy::{Context, ScalarFuture};
 use crate::ufunc::Kernel;
 
 use super::AppParams;
 
+/// How the solver checks convergence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Convergence {
+    /// Immediate `sum_absdiff` every iteration: flush + barrier per
+    /// iteration (the paper's §5.6 flush-on-read behaviour).
+    EveryIteration,
+    /// Deferred `sum_absdiff` every `every` iterations, forced one
+    /// check-interval later through a [`ScalarFuture`].
+    Pipelined { every: u32 },
+}
+
+/// What one recorded solver run exposes to callers that want to check
+/// numerics: the grid base and every convergence delta actually read
+/// (iteration index, value). Reads that failed (poisoned context) are
+/// omitted — the error surfaces through `Context::finish`.
+pub struct JacobiRun {
+    pub grid: crate::types::BaseId,
+    pub deltas: Vec<(u32, f64)>,
+}
+
 pub fn record(ctx: &mut Context, p: &AppParams) {
+    record_with(ctx, p, Convergence::EveryIteration);
+}
+
+/// Record the full solver with an explicit convergence-check policy.
+pub fn record_with(ctx: &mut Context, p: &AppParams, conv: Convergence) {
+    let _ = record_observed(ctx, p, conv, None);
+}
+
+/// [`record_with`] exposing the observed deltas and the grid base, with
+/// an optional initial grid (`init` must hold `n × n` values, `n =
+/// p.dim(4096)`) — the single source of truth for the iteration body,
+/// shared by the harness runs and the `ablation_epochs` bit-identity
+/// check so the bench exercises exactly the shipped loop.
+pub fn record_observed(
+    ctx: &mut Context,
+    p: &AppParams,
+    conv: Convergence,
+    init: Option<&[f32]>,
+) -> JacobiRun {
     let n = p.dim(4096);
     let br = (n / 256).max(1);
-    let g = ctx.zeros(&[n, n], br); // full grid
+    let g = match init {
+        Some(data) => ctx.array(&[n, n], br, data), // seeded grid
+        None => ctx.zeros(&[n, n], br),             // full grid, zeros
+    };
     let m = n - 2; // interior extent
 
     // Temporaries are allocated once and recycled (DistNumPy's lazy
@@ -34,7 +85,9 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
     let v_lf = g.slice(&[(1, n - 1), (0, n - 2)]);
     let v_rt = g.slice(&[(1, n - 1), (2, n)]);
 
-    for _ in 0..p.iters {
+    let mut deltas = Vec::new();
+    let mut pending: Option<(u32, ScalarFuture)> = None;
+    for it in 0..p.iters {
         // Row operations: shifted copies into temps, then accumulate.
         // Each shifted copy lands in a temp whose rows are offset by
         // one against the grid's blocks -> every copy carries a halo
@@ -50,10 +103,38 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
         // work = cells + 0.2*acc  (the 0.2·Σ update of Fig. 10).
         ctx.ufunc(Kernel::Copy, &work, &[&v_c]);
         ctx.ufunc(Kernel::Axpy(0.2), &work, &[&work, &acc]);
-        // delta = sum(|cells - work|): the convergence read -> flush.
-        let _ = ctx.sum_absdiff(&v_c, &work);
+        // delta = sum(|cells - work|): the convergence read.
+        match conv {
+            Convergence::EveryIteration => {
+                if let Ok(d) = ctx.sum_absdiff(&v_c, &work) {
+                    deltas.push((it, d));
+                }
+            }
+            Convergence::Pipelined { every } => {
+                if (it + 1) % every.max(1) == 0 {
+                    // Force the delta issued one interval ago (its
+                    // fan-in has had `every` iterations to drain), then
+                    // issue this interval's — no barrier in between.
+                    if let Some((at, f)) = pending.take() {
+                        if let Ok(d) = ctx.wait_scalar(&f) {
+                            deltas.push((at, d));
+                        }
+                    }
+                    pending = Some((it, ctx.sum_absdiff_deferred(&v_c, &work)));
+                }
+            }
+        }
         // cells[:] = work (write back into the grid interior).
         ctx.copy(&v_c, &work);
     }
+    if let Some((at, f)) = pending.take() {
+        if let Ok(d) = ctx.wait_scalar(&f) {
+            deltas.push((at, d));
+        }
+    }
     ctx.flush();
+    JacobiRun {
+        grid: g.base,
+        deltas,
+    }
 }

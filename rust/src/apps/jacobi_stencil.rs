@@ -34,14 +34,15 @@ pub fn views_of(g: &ViewSpec, n: u64) -> StencilViews {
 }
 
 /// Record one sweep: `work = 0.2*(c+u+d+l+r)`, convergence delta,
-/// write-back. Returns the delta (real backends) — used by the e2e
-/// example to iterate to convergence.
+/// write-back. Returns the delta (real backends; 0.0 in simulation) —
+/// used by the e2e example to iterate to convergence — or the flush
+/// error if the schedule failed (the read no longer swallows it).
 pub fn record_jacobi_stencil_iteration(
     ctx: &mut Context,
     g: &ViewSpec,
     work: &ViewSpec,
     n: u64,
-) -> f64 {
+) -> Result<f64, crate::sched::SchedError> {
     let v = views_of(g, n);
     ctx.ufunc(
         Kernel::Stencil5,
@@ -60,7 +61,7 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
     let work = ctx.zeros(&[n - 2, n - 2], br);
 
     for _ in 0..p.iters {
-        record_jacobi_stencil_iteration(ctx, &g, &work, n);
+        let _ = record_jacobi_stencil_iteration(ctx, &g, &work, n);
     }
     ctx.flush();
 }

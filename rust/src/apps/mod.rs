@@ -27,6 +27,10 @@ mod knn;
 mod lbm;
 mod nbody;
 
+pub use jacobi::{
+    record_observed as record_jacobi_observed, record_with as record_jacobi_with, Convergence,
+    JacobiRun,
+};
 pub use jacobi_stencil::record_jacobi_stencil_iteration;
 
 use crate::lazy::Context;
@@ -116,7 +120,9 @@ impl AppParams {
         }
     }
 
-    pub(crate) fn dim(&self, base: u64) -> u64 {
+    /// Problem dimension for a given base size (pub so external callers
+    /// — e.g. the epochs ablation seeding a grid — can size inputs).
+    pub fn dim(&self, base: u64) -> u64 {
         ((base as f64 * self.scale) as u64).max(8)
     }
 }

@@ -53,6 +53,16 @@ fn conflict(a: &[Access], b: &[Access]) -> bool {
 
 impl DepSystem for DagDeps {
     fn insert(&mut self, op: &OpNode) {
+        // Epoch recycling (mirrors `HeuristicDeps::recycle`): once an
+        // epoch fully drained, drop its nodes so ids can restart at zero
+        // and the O(n) insertion scan stays bounded per epoch.
+        if self.pending == 0 && !self.inserted.is_empty() {
+            self.accesses.clear();
+            self.succs.clear();
+            self.indeg.clear();
+            self.live.clear();
+            self.inserted.clear();
+        }
         self.ensure(op.id);
         let mut indeg = 0u32;
         // The O(n) scan the paper's Section 4 complains about.

@@ -112,8 +112,31 @@ impl HeuristicDeps {
     }
 }
 
+impl HeuristicDeps {
+    /// Drop the drained epoch's residue (tombstoned list nodes, the
+    /// entry arena, refcounts) so operation ids can recycle. Sound only
+    /// because nothing is pending: every access-node is a tombstone and
+    /// no refcount is outstanding. Called lazily from `insert` at the
+    /// first insertion of a new flush epoch — the schedulers reuse one
+    /// live dependency system across epochs ([`crate::sched::ExecState`])
+    /// while each epoch's `OpId`s restart at zero.
+    fn recycle(&mut self) {
+        for l in self.lists.iter_mut() {
+            l.nodes.clear();
+            l.dead = 0;
+        }
+        self.entry_data.clear();
+        self.refcount.clear();
+        self.spans.clear();
+        self.completed.clear();
+    }
+}
+
 impl DepSystem for HeuristicDeps {
     fn insert(&mut self, op: &OpNode) {
+        if self.pending == 0 && !self.completed.is_empty() {
+            self.recycle();
+        }
         self.ensure(op.id);
         let start = self.entry_data.len() as u32;
         let mut count = 0u32;

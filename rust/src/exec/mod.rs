@@ -32,6 +32,15 @@ pub trait Backend {
         None
     }
 
+    /// Does this backend hold real array data? Data backends return
+    /// `true`; the default `false` marks timing-only simulation, where
+    /// scalar reads legitimately have no staged value and read as 0.0.
+    /// The lazy context uses this to tell "simulation" apart from "a
+    /// staged value that should exist but doesn't" (an error).
+    fn materializes_data(&self) -> bool {
+        false
+    }
+
     /// Allocate physical blocks for a new array-base (data backends).
     fn alloc_base(&mut self, layout: &Layout) {
         let _ = layout;
@@ -48,7 +57,11 @@ pub trait Backend {
         None
     }
 
-    /// Drop staging buffers from the previous flush batch (tags reset).
+    /// Drop every staging buffer. Tags are run-unique, so stages are
+    /// never overwritten — but pending [`crate::lazy::ScalarFuture`]s
+    /// *read* stages across flush epochs, so this must NOT be called
+    /// mid-run (the lazy context no longer calls it per flush). It
+    /// exists for end-of-run cleanup and tests.
     fn clear_stages(&mut self) {}
 
     /// Downcasting hook: retrieve backend-specific state (e.g. the PJRT
@@ -134,6 +147,10 @@ impl Backend for NativeBackend {
         } else {
             None
         }
+    }
+
+    fn materializes_data(&self) -> bool {
+        true
     }
 
     fn alloc_base(&mut self, layout: &Layout) {

@@ -32,6 +32,11 @@ pub struct RunMetrics {
     pub wait_root: VTime,
     /// Constituent transfers the aggregation pass packed.
     pub agg_parts: u64,
+    /// Flush epochs executed on the persistent timeline.
+    pub n_epochs: u64,
+    /// Wait paid at explicit barriers (forced scalar reads), summed
+    /// over ranks (s).
+    pub wait_at_barrier: VTime,
 }
 
 impl RunMetrics {
@@ -45,6 +50,8 @@ impl RunMetrics {
             n_messages: report.n_messages,
             wait_root: report.wait_root(),
             agg_parts: report.agg_parts,
+            n_epochs: report.n_epochs,
+            wait_at_barrier: report.wait_at_barrier,
         }
     }
 
@@ -58,6 +65,8 @@ impl RunMetrics {
         o.push("n_messages", self.n_messages.into());
         o.push("wait_root", self.wait_root.into());
         o.push("agg_parts", self.agg_parts.into());
+        o.push("n_epochs", self.n_epochs.into());
+        o.push("wait_at_barrier", self.wait_at_barrier.into());
         o
     }
 }

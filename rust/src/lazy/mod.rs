@@ -11,27 +11,72 @@
 //! 2. the number of recorded operations reaches a threshold —
 //!    [`Context::flush_threshold`];
 //! 3. the program ends — [`Context::flush`] called by the apps at exit.
+//!
+//! ## Epochs and scalar futures
+//!
+//! A flush is *not* a barrier: every flush executes as one epoch of a
+//! persistent [`ExecState`] — per-rank clocks, NIC frontiers and the
+//! dependency system resume across epochs, so communication initiated in
+//! epoch *k* keeps draining while epoch *k+1* records and computes. The
+//! only global synchronization is *forcing* a scalar: an immediate
+//! [`Context::sum`] barriers every rank (the interpreter is replicated,
+//! §5.5 — every rank needs the value to take the branch), whereas the
+//! deferred forms ([`Context::sum_deferred`],
+//! [`Context::sum_absdiff_deferred`]) return a [`ScalarFuture`] whose
+//! recorded reduction flows through the normal schedule and whose value
+//! — and barrier — materialize only at [`ScalarFuture::wait`].
+//!
+//! ## Error handling
+//!
+//! A failed flush (e.g. a naive-policy deadlock) **poisons** the
+//! context: the error is latched, later batches are dropped unexecuted,
+//! and every subsequent scalar read returns `Err` instead of a silent
+//! `0.0` — a deadlocked convergence loop can no longer masquerade as
+//! converged at delta 0.0.
 
 use crate::array::Registry;
 use crate::comm::Collective;
 use crate::exec::Backend;
 use crate::layout::ViewSpec;
 use crate::metrics::RunReport;
-use crate::sched::{execute, Policy, SchedCfg, SchedError};
-use crate::types::{BaseId, DType, Rank};
+use crate::sched::{execute_epoch, ExecState, Policy, SchedCfg, SchedError};
+use crate::types::{BaseId, DType, Rank, Tag};
 use crate::ufunc::{Kernel, OpBuilder};
 
 /// Default flush threshold (paper: "a user-defined threshold").
 pub const DEFAULT_FLUSH_THRESHOLD: usize = 50_000;
 
+/// A deferred scalar read: the reduction is recorded (and executes with
+/// whatever flush epoch it lands in), but the value is only forced — and
+/// the global barrier only paid — at [`ScalarFuture::wait`]. Staging
+/// buffers are keyed by run-unique tags, so a future stays readable
+/// across later flushes until it is waited on.
+#[must_use = "a deferred read does nothing until .wait(ctx)"]
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarFuture {
+    tag: Tag,
+}
+
+impl ScalarFuture {
+    /// Force the value: flush everything recorded so far, barrier, read.
+    /// Fails if any flush epoch has failed (the context is poisoned).
+    pub fn wait(&self, ctx: &mut Context) -> Result<f64, SchedError> {
+        ctx.wait_scalar(self)
+    }
+}
+
 /// The DistNumPy programming context: array registry + lazy recorder +
-/// scheduler + backend.
+/// persistent execution state + backend.
 pub struct Context {
     pub reg: Registry,
     pub builder: OpBuilder,
     pub cfg: SchedCfg,
     pub policy: Policy,
     pub backend: Box<dyn Backend>,
+    /// Execution state persisting across flush epochs (clocks, NIC
+    /// frontiers, dependency system, accumulated wait/busy).
+    pub state: ExecState,
+    /// Snapshot of `state` after the most recent flush/barrier.
     pub report: RunReport,
     pub flush_threshold: usize,
     pub flushes: u64,
@@ -41,19 +86,23 @@ pub struct Context {
     /// the same baseline as a P=1 run (fragmentation cancels out).
     pub baseline: f64,
     array_ops_since_flush: u64,
-    /// First scheduling error (the naive policy can deadlock).
+    /// First scheduling error (the naive policy can deadlock). Once set
+    /// the context is poisoned: later batches are dropped and every
+    /// scalar read fails.
     pub error: Option<SchedError>,
 }
 
 impl Context {
     pub fn new(cfg: SchedCfg, policy: Policy, backend: Box<dyn Backend>) -> Self {
         let n = cfg.nprocs as usize;
+        let state = ExecState::new(&cfg);
         Context {
             reg: Registry::new(cfg.nprocs),
             builder: OpBuilder::new(),
             cfg,
             policy,
             backend,
+            state,
             report: RunReport::new(n),
             flush_threshold: DEFAULT_FLUSH_THRESHOLD,
             flushes: 0,
@@ -111,20 +160,33 @@ impl Context {
         }
     }
 
-    /// Trigger 3 (and the explicit form of trigger 1): execute everything
-    /// recorded so far.
+    /// Trigger 3 (and trigger 2's worker): execute everything recorded
+    /// so far as one more epoch of the persistent timeline. No barrier —
+    /// ranks resume wherever the epoch's dependency structure lets them.
+    /// On a poisoned context the batch is dropped unexecuted.
     pub fn flush(&mut self) {
         let ops = self.builder.take();
         if ops.is_empty() {
             return;
         }
-        self.backend.clear_stages();
+        if self.error.is_some() {
+            // Poisoned: executing further epochs on torn state would
+            // produce garbage timing/numerics. Drop the batch.
+            self.array_ops_since_flush = 0;
+            return;
+        }
         self.flushes += 1;
         self.baseline += crate::sched::numpy_baseline(&ops, &self.cfg.spec)
             + self.array_ops_since_flush as f64 * self.cfg.spec.numpy_op_overhead;
         self.array_ops_since_flush = 0;
-        match execute(self.policy, &ops, &self.cfg, self.backend.as_mut()) {
-            Ok(rep) => self.report.absorb(&rep),
+        match execute_epoch(
+            self.policy,
+            &ops,
+            &self.cfg,
+            self.backend.as_mut(),
+            &mut self.state,
+        ) {
+            Ok(()) => self.report = self.state.report(),
             Err(e) => {
                 if self.error.is_none() {
                     self.error = Some(e);
@@ -133,40 +195,83 @@ impl Context {
         }
     }
 
-    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush. The
-    /// cross-rank fan-in is scheduled by `cfg.collective` (flat gather
-    /// or binomial tree, see [`crate::comm`]).
-    /// Returns the real value under a data backend, 0.0 in simulation.
-    pub fn sum(&mut self, v: &ViewSpec) -> f64 {
+    /// Record a deferred `sum(view)`: the reduction executes with the
+    /// normal flush flow; the value (and the barrier) wait for
+    /// [`ScalarFuture::wait`]. The cross-rank fan-in is scheduled by
+    /// `cfg.collective` (flat gather or binomial tree, see
+    /// [`crate::comm`]).
+    pub fn sum_deferred(&mut self, v: &ViewSpec) -> ScalarFuture {
         let collective = self.cfg.collective;
         let tag = self
             .builder
             .reduce(&self.reg, Kernel::PartialSum, &[v], collective);
         self.array_ops_since_flush += 1;
-        self.flush();
-        self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
+        self.maybe_flush();
+        ScalarFuture { tag }
     }
 
-    /// Trigger 1: `sum(|a - b|)` — the Jacobi convergence delta.
-    pub fn sum_absdiff(&mut self, a: &ViewSpec, b: &ViewSpec) -> f64 {
+    /// Deferred `sum(|a - b|)` — the Jacobi convergence delta, checkable
+    /// every *k* iterations without erecting a barrier per iteration.
+    pub fn sum_absdiff_deferred(&mut self, a: &ViewSpec, b: &ViewSpec) -> ScalarFuture {
         let collective = self.cfg.collective;
         let tag =
             self.builder
                 .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b], collective);
         self.array_ops_since_flush += 1;
-        self.flush();
-        self.backend.staged_scalar(Rank(0), tag).unwrap_or(0.0)
+        self.maybe_flush();
+        ScalarFuture { tag }
     }
 
-    /// Trigger 1: gather a whole base to a dense buffer (real backends).
+    /// Force a deferred scalar: flush, check for poisoning, barrier
+    /// (every rank joins the timeline frontier — the interpreter is
+    /// replicated, so the value gates every rank's control flow), read.
+    /// Returns the real value under a data backend, 0.0 in simulation.
+    /// A data backend with *no* staged value for the future's tag is an
+    /// error (e.g. the future was waited on a different context), never
+    /// a silent 0.0.
+    pub fn wait_scalar(&mut self, f: &ScalarFuture) -> Result<f64, SchedError> {
+        self.flush();
+        if let Some(e) = &self.error {
+            return Err(e.clone());
+        }
+        self.state.barrier();
+        self.report = self.state.report();
+        match self.backend.staged_scalar(Rank(0), f.tag) {
+            Some(v) => Ok(v),
+            None if !self.backend.materializes_data() => Ok(0.0),
+            None => Err(SchedError::Stall(format!(
+                "scalar future {:?} has no staged value on rank 0 \
+                 (waited on the wrong context?)",
+                f.tag
+            ))),
+        }
+    }
+
+    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush *and* a
+    /// barrier; equivalent to `self.sum_deferred(v).wait(self)`.
+    /// Fails loudly if any flush epoch failed (poisoned context).
+    pub fn sum(&mut self, v: &ViewSpec) -> Result<f64, SchedError> {
+        let f = self.sum_deferred(v);
+        self.wait_scalar(&f)
+    }
+
+    /// Trigger 1: `sum(|a - b|)` — the Jacobi convergence delta, forced.
+    pub fn sum_absdiff(&mut self, a: &ViewSpec, b: &ViewSpec) -> Result<f64, SchedError> {
+        let f = self.sum_absdiff_deferred(a, b);
+        self.wait_scalar(&f)
+    }
+
+    /// Trigger 1: gather a whole base to a dense buffer.
     ///
     /// The data movement is recorded as a first-class collective — a
     /// flat fan-in to rank 0 or a ring allgather, per `cfg.collective` —
     /// so it is dependency-tracked, scheduled and timed like every other
     /// operation. The dense assembly below then reads the block contents
     /// through the store oracle (bit-identical to the staged copies the
-    /// collective delivered).
-    pub fn gather(&mut self, base: BaseId) -> Option<Vec<f32>> {
+    /// collective delivered). A gather is a forced read: it flushes,
+    /// fails on a poisoned context, and barriers. `Ok(None)` means the
+    /// backend holds no real data (simulation).
+    pub fn gather(&mut self, base: BaseId) -> Result<Option<Vec<f32>>, SchedError> {
         if self.cfg.nprocs > 1 {
             match self.cfg.collective {
                 Collective::Flat => {
@@ -179,15 +284,21 @@ impl Context {
             self.array_ops_since_flush += 1;
         }
         self.flush();
-        self.backend.gather(self.reg.layout(base))
+        if let Some(e) = &self.error {
+            return Err(e.clone());
+        }
+        self.state.barrier();
+        self.report = self.state.report();
+        Ok(self.backend.gather(self.reg.layout(base)))
     }
 
-    /// Finish the program: final flush, return the accumulated report.
+    /// Finish the program: final flush, return the accumulated report of
+    /// the whole continuous timeline (makespan = latest rank clock).
     pub fn finish(mut self) -> Result<RunReport, SchedError> {
         self.flush();
         match self.error {
             Some(e) => Err(e),
-            None => Ok(self.report),
+            None => Ok(self.state.report()),
         }
     }
 }
@@ -212,6 +323,7 @@ mod tests {
         c.flush();
         assert_eq!(c.flushes, 1);
         assert!(c.report.ops_executed > 0);
+        assert_eq!(c.report.n_epochs, 1);
     }
 
     #[test]
@@ -248,5 +360,133 @@ mod tests {
         c.copy(&x.slice(&[(0, 4)]), &x.slice(&[(4, 8)]));
         let rep = c.finish().unwrap();
         assert!(rep.ops_executed > 0);
+    }
+
+    #[test]
+    fn flushes_accumulate_one_continuous_timeline() {
+        // Two flushes: the report's makespan is the frontier of one
+        // continuous timeline, strictly less than the sum of two
+        // independent runs (no barrier between epochs), and epochs count.
+        let mut c = ctx(2);
+        let x = c.zeros(&[32], 4);
+        c.add(&x.clone(), &x, &x);
+        c.flush();
+        let m1 = c.report.makespan;
+        c.add(&x.clone(), &x, &x);
+        c.flush();
+        assert_eq!(c.report.n_epochs, 2);
+        assert!(c.report.makespan > m1, "timeline extends");
+        assert_eq!(c.flushes, 2);
+    }
+
+    #[test]
+    fn deferred_sum_postpones_the_barrier() {
+        let mut c = ctx(4);
+        let x = c.zeros(&[64], 4);
+        let f = c.sum_deferred(&x);
+        c.flush();
+        // The reduce executed, but no barrier was paid: flushing is not
+        // a global join any more.
+        assert_eq!(c.flushes, 1, "deferred read flushed the epoch");
+        assert_eq!(
+            c.state.wait_at_barrier, 0.0,
+            "no barrier wait before the future is forced"
+        );
+        let v = f.wait(&mut c).unwrap();
+        assert_eq!(v, 0.0, "simulation backends read 0.0");
+        // Forcing the value joined every rank to the frontier; the
+        // fan-in leaves the clocks unequal, so the join costs wait.
+        assert!(
+            c.state.wait_at_barrier > 0.0,
+            "the barrier is paid at wait()"
+        );
+        let t = c.state.max_clock();
+        assert!(c.state.clock.iter().all(|&cl| cl == t));
+    }
+
+    #[test]
+    fn immediate_sum_barriers_the_timeline() {
+        let mut c = ctx(4);
+        let x = c.zeros(&[64], 4);
+        let _ = c.sum(&x).unwrap();
+        let t = c.state.max_clock();
+        assert!(c.state.clock.iter().all(|&cl| (cl - t).abs() < 1e-15));
+    }
+
+    /// The headline regression: a naive-policy deadlock must surface as
+    /// an error from the convergence read — not as delta = 0.0, which a
+    /// convergence loop would take as "converged".
+    #[test]
+    fn failed_flush_poisons_scalar_reads() {
+        let mut c = Context::sim(SchedCfg::new(MachineSpec::tiny(), 2), Policy::Naive);
+        let rows = 12u64;
+        let m = c.zeros(&[rows], 3);
+        let nv = c.zeros(&[rows], 3);
+        // The Fig. 6 ping-pong stream: naive deadlocks in iteration 1.
+        for _ in 0..2 {
+            c.add(
+                &nv.slice(&[(1, rows - 1)]),
+                &m.slice(&[(2, rows)]),
+                &m.slice(&[(0, rows - 2)]),
+            );
+            c.add(
+                &m.slice(&[(1, rows - 1)]),
+                &nv.slice(&[(2, rows)]),
+                &nv.slice(&[(0, rows - 2)]),
+            );
+        }
+        let delta = c.sum_absdiff(&m, &nv);
+        assert!(
+            matches!(delta, Err(SchedError::Deadlock { .. })),
+            "deadlock must not masquerade as convergence: {delta:?}"
+        );
+        // Poisoned: subsequent reads and gathers keep failing loudly.
+        assert!(c.sum(&m).is_err());
+        assert!(c.gather(m.base).is_err());
+        assert!(c.finish().is_err());
+    }
+
+    /// Same regression through the ring collective: `gather` under the
+    /// tree schedule records a multi-round ring, which the naive
+    /// evaluator deadlocks on (Fig. 6 restated) — the gather must error.
+    #[test]
+    fn naive_ring_collective_gather_errors() {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), 3);
+        cfg.collective = Collective::Tree;
+        let mut c = Context::sim(cfg, Policy::Naive);
+        let x = c.zeros(&[3], 1);
+        let got = c.gather(x.base);
+        assert!(
+            matches!(got, Err(SchedError::Deadlock { .. })),
+            "ring gather under naive must deadlock loudly: {got:?}"
+        );
+    }
+
+    #[test]
+    fn poisoned_context_drops_later_batches() {
+        let mut c = Context::sim(SchedCfg::new(MachineSpec::tiny(), 2), Policy::Naive);
+        let rows = 12u64;
+        let m = c.zeros(&[rows], 3);
+        let nv = c.zeros(&[rows], 3);
+        for _ in 0..2 {
+            c.add(
+                &nv.slice(&[(1, rows - 1)]),
+                &m.slice(&[(2, rows)]),
+                &m.slice(&[(0, rows - 2)]),
+            );
+            c.add(
+                &m.slice(&[(1, rows - 1)]),
+                &nv.slice(&[(2, rows)]),
+                &nv.slice(&[(0, rows - 2)]),
+            );
+        }
+        c.flush();
+        assert!(c.error.is_some(), "deadlock latched");
+        let flushes = c.flushes;
+        let executed = c.state.ops_executed;
+        c.add(&m.clone(), &m, &m);
+        c.flush();
+        assert_eq!(c.flushes, flushes, "poisoned flush drops the batch");
+        assert_eq!(c.state.ops_executed, executed, "nothing else executed");
     }
 }

@@ -32,6 +32,13 @@ pub struct RunReport {
     /// Constituent transfers absorbed into those envelopes; the
     /// messages saved are `agg_parts - agg_msgs`.
     pub agg_parts: u64,
+    /// Flush epochs executed on the persistent
+    /// [`crate::sched::ExecState`] timeline.
+    pub n_epochs: u64,
+    /// Wait accumulated at explicit global barriers — the cost of
+    /// *forcing* scalar reads (immediate `sum`/`gather`/future waits),
+    /// already included in the per-rank `wait` vectors.
+    pub wait_at_barrier: VTime,
 }
 
 impl RunReport {
@@ -43,8 +50,28 @@ impl RunReport {
         }
     }
 
-    /// Merge a subsequent batch's report (flush after flush).
+    /// Merge a subsequent batch's report (batch after batch).
+    ///
+    /// **Invariant:** both reports must describe the same rank count —
+    /// merging reports of different widths would silently truncate the
+    /// per-rank vectors to the shorter one. Debug builds assert it.
+    ///
+    /// Note the makespans *add*: absorbing models back-to-back runs with
+    /// a barrier in between. The epoch model ([`crate::sched::ExecState`])
+    /// does not absorb per-flush reports any more — it keeps one
+    /// continuous timeline and snapshots it — so this is only for
+    /// combining genuinely independent runs.
     pub fn absorb(&mut self, other: &RunReport) {
+        debug_assert_eq!(
+            self.wait.len(),
+            other.wait.len(),
+            "absorb: rank-count mismatch"
+        );
+        debug_assert_eq!(
+            self.busy.len(),
+            other.busy.len(),
+            "absorb: rank-count mismatch"
+        );
         self.makespan += other.makespan;
         for (a, b) in self.wait.iter_mut().zip(&other.wait) {
             *a += b;
@@ -61,6 +88,8 @@ impl RunReport {
         self.n_messages += other.n_messages;
         self.agg_msgs += other.agg_msgs;
         self.agg_parts += other.agg_parts;
+        self.n_epochs += other.n_epochs;
+        self.wait_at_barrier += other.wait_at_barrier;
     }
 
     /// Wait time of the collective root (rank 0) — the hot spot flat
@@ -103,6 +132,8 @@ impl RunReport {
         o.push("agg_msgs", self.agg_msgs.into());
         o.push("agg_parts", self.agg_parts.into());
         o.push("wait_root", self.wait_root().into());
+        o.push("n_epochs", self.n_epochs.into());
+        o.push("wait_at_barrier", self.wait_at_barrier.into());
         o
     }
 }
@@ -150,6 +181,8 @@ mod tests {
         assert!(s.contains("n_messages"));
         assert!(s.contains("agg_msgs"));
         assert!(s.contains("wait_root"));
+        assert!(s.contains("n_epochs"));
+        assert!(s.contains("wait_at_barrier"));
     }
 
     #[test]

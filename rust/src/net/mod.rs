@@ -58,8 +58,14 @@ struct RecvInfo {
 }
 
 /// The simulated interconnect. All times are virtual.
-pub struct Network<'a> {
-    spec: &'a MachineSpec,
+///
+/// Owns its machine model so it can live inside the long-lived
+/// [`crate::sched::ExecState`]: the NIC egress/ingress frontiers (and any
+/// unmatched transfer halves) persist across flush epochs, which is what
+/// lets communication initiated in one epoch keep draining while the
+/// next epoch records and computes.
+pub struct Network {
+    spec: MachineSpec,
     /// node -> time its NIC egress frees up.
     egress: Vec<VTime>,
     /// node -> time its NIC ingress frees up.
@@ -74,11 +80,11 @@ pub struct Network<'a> {
     pub n_transfers: u64,
 }
 
-impl<'a> Network<'a> {
-    pub fn new(spec: &'a MachineSpec, node_of: Vec<usize>) -> Self {
+impl Network {
+    pub fn new(spec: &MachineSpec, node_of: Vec<usize>) -> Self {
         let nodes = spec.nodes as usize;
         Network {
-            spec,
+            spec: spec.clone(),
             egress: vec![0.0; nodes],
             ingress: vec![0.0; nodes],
             sends: FxHashMap::default(),

@@ -191,6 +191,10 @@ impl Backend for PjrtBackend {
         self.native.staged_scalar(rank, tag)
     }
 
+    fn materializes_data(&self) -> bool {
+        true
+    }
+
     fn alloc_base(&mut self, layout: &Layout) {
         self.native.alloc_base(layout);
     }

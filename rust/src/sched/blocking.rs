@@ -19,26 +19,42 @@
 //! each rank and matched pairs share a group, so the globally-earliest
 //! unexecuted operation can always proceed; the smallest-clock-first
 //! loop below therefore never deadlocks.
+//!
+//! Like the other policies this runs as one epoch of a persistent
+//! [`ExecState`] — even the blocking baseline resumes per-rank clocks
+//! and NIC frontiers across flushes; what it *never* does is overlap
+//! across operation (or epoch) boundaries on the same rank.
 
 use std::collections::BinaryHeap;
 
-use super::{compute_costs, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
-use crate::net::Network;
 use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
 
+/// One-shot convenience: run `ops` as the single epoch of a fresh
+/// [`ExecState`] and report it.
 pub fn run_blocking(
     ops: &[OpNode],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
 ) -> Result<RunReport, SchedError> {
+    let mut state = ExecState::new(cfg);
+    state.n_epochs = 1;
+    run_blocking_epoch(ops, cfg, backend, &mut state)?;
+    Ok(state.report())
+}
+
+pub(crate) fn run_blocking_epoch(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    st: &mut ExecState,
+) -> Result<(), SchedError> {
     let n = cfg.nprocs as usize;
-    let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
-    let mut net = Network::new(&cfg.spec, node_of);
-    let xfers = TransferTable::build(ops);
+    let xfers = TransferTable::build(ops)?;
     let costs = compute_costs(ops, cfg);
 
     // Per-rank program: indices into `ops`, phased per §5.3 — groups in
@@ -57,14 +73,12 @@ pub fn run_blocking(
         prog.sort_by_key(|&i| (ops[i].group, phase(&ops[i]), i));
     }
     let mut ptr = vec![0usize; n];
-    let mut clock = vec![0.0f64; n];
-    let mut wait = vec![0.0f64; n];
-    let mut busy = vec![0.0f64; n];
     // No dependency system: only the (cheaper) recording overhead.
-    let overhead = super::batch_overhead(ops, cfg.spec.blocking_op_overhead, &cfg.spec);
-    for c in clock.iter_mut() {
-        *c = overhead;
-    }
+    st.charge_overhead(super::batch_overhead(
+        ops,
+        cfg.spec.blocking_op_overhead,
+        &cfg.spec,
+    ));
 
     // Runnable ranks by clock; receivers parked on an unposted send.
     let mut heap: BinaryHeap<TEvent<Rank>> = BinaryHeap::new();
@@ -73,7 +87,7 @@ pub fn run_blocking(
     for r in 0..n {
         if !program[r].is_empty() {
             heap.push(TEvent {
-                t: clock[r],
+                t: st.clock[r],
                 seq,
                 ev: Rank(r as u32),
             });
@@ -92,16 +106,16 @@ pub fn run_blocking(
         match &op.payload {
             OpPayload::Compute(task) => {
                 backend.exec_compute(rank, task);
-                busy[r] += costs[i];
-                clock[r] += costs[i];
+                st.busy[r] += costs[i];
+                st.clock[r] += costs[i];
                 ptr[r] += 1;
                 executed += 1;
             }
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let t0 = clock[r];
-                let res = net.post_send(t0, rank, *peer, *tag, *bytes);
+                let t0 = st.clock[r];
+                let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Data leaves the sender *now* (eager injection): the
                 // payload must be captured before the sender's later
                 // operations can overwrite the source region. The
@@ -110,8 +124,8 @@ pub fn run_blocking(
                 let info = &xfers.info[tag];
                 backend.exec_transfer(info.from, info.to, *tag, &info.src);
                 let done = res.send_done.unwrap();
-                wait[r] += done - t0;
-                clock[r] = done;
+                st.wait[r] += done - t0;
+                st.clock[r] = done;
                 ptr[r] += 1;
                 executed += 1;
                 if let Some(rd) = res.recv_done {
@@ -119,12 +133,12 @@ pub fn run_blocking(
                     if let Some((peer_rank, parked_at)) = parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
-                        wait[pr] += resume - parked_at;
-                        clock[pr] = resume;
+                        st.wait[pr] += resume - parked_at;
+                        st.clock[pr] = resume;
                         ptr[pr] += 1;
                         executed += 1;
                         heap.push(TEvent {
-                            t: clock[pr],
+                            t: st.clock[pr],
                             seq,
                             ev: peer_rank,
                         });
@@ -133,17 +147,17 @@ pub fn run_blocking(
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let t0 = clock[r];
-                if net.send_posted(*tag) {
-                    let res = net.post_recv(t0, rank, *tag);
+                let t0 = st.clock[r];
+                if st.net.send_posted(*tag) {
+                    let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();
-                    wait[r] += rd - t0;
-                    clock[r] = rd;
+                    st.wait[r] += rd - t0;
+                    st.clock[r] = rd;
                     ptr[r] += 1;
                     executed += 1;
                 } else {
                     // Block until the send appears.
-                    net.post_recv(t0, rank, *tag);
+                    st.net.post_recv(t0, rank, *tag);
                     parked.insert(*tag, (rank, t0));
                     continue; // don't requeue; the sender wakes us.
                 }
@@ -151,7 +165,7 @@ pub fn run_blocking(
         }
         if ptr[r] < program[r].len() {
             heap.push(TEvent {
-                t: clock[r],
+                t: st.clock[r],
                 seq,
                 ev: rank,
             });
@@ -167,19 +181,8 @@ pub fn run_blocking(
         });
     }
 
-    let makespan = clock.iter().cloned().fold(0.0, f64::max);
-    let mut report = RunReport::new(n);
-    report.makespan = makespan;
-    report.wait = wait;
-    report.busy = busy;
-    report.overhead = overhead;
-    report.ops_executed = executed;
-    report.n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
-    report.n_comm = ops.len() as u64 - report.n_compute;
-    report.bytes_inter = net.bytes_inter;
-    report.bytes_intra = net.bytes_intra;
-    report.n_messages = net.n_transfers;
-    Ok(report)
+    super::count_epoch_ops(st, ops);
+    Ok(())
 }
 
 #[cfg(test)]

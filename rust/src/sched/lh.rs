@@ -14,13 +14,18 @@
 //!
 //! Waiting time — the paper's headline metric — accrues exactly while a
 //! rank is idle with operations still pending.
+//!
+//! The scheduler runs as one *epoch* of a persistent [`ExecState`]: rank
+//! clocks, NIC frontiers, cache keys and the dependency system resume
+//! from wherever the previous flush left them, so a flush is no longer a
+//! global barrier and communication posted near an epoch's end keeps
+//! occupying the wire into the next one.
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use super::{compute_costs, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
-use crate::net::Network;
 use crate::types::{OpId, Rank, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 
@@ -38,19 +43,17 @@ enum State {
     Done,
 }
 
-struct Lh<'a, 'b> {
+struct Lh<'a> {
     ops: &'a [OpNode],
     backend: &'a mut dyn Backend,
-    net: Network<'b>,
-    deps: Box<dyn crate::deps::DepSystem>,
+    /// Persistent state: clocks, wait/busy, network, deps, cache keys.
+    st: &'a mut ExecState,
     xfers: TransferTable,
     costs: Vec<VTime>,
     costs_hot: Vec<VTime>,
     locality: bool,
-    /// Per-rank most recently touched base-block (cache key, §7 ext).
-    last_block: Vec<Option<(crate::types::BaseId, u64)>>,
 
-    clock: Vec<VTime>,
+    // -- epoch-local scheduling state --
     state: Vec<State>,
     idle_since: Vec<Option<VTime>>,
     ready_comm: Vec<VecDeque<OpId>>,
@@ -60,12 +63,9 @@ struct Lh<'a, 'b> {
     heap: BinaryHeap<TEvent<Ev>>,
     seq: u64,
     completed: u64,
-
-    wait: Vec<VTime>,
-    busy: Vec<VTime>,
 }
 
-impl<'a, 'b> Lh<'a, 'b> {
+impl<'a> Lh<'a> {
     fn push_ev(&mut self, t: VTime, ev: Ev) {
         self.heap.push(TEvent {
             t,
@@ -99,22 +99,22 @@ impl<'a, 'b> Lh<'a, 'b> {
 
     /// Mark `op` complete in the dependency system and release dependents.
     fn complete_op(&mut self, op: OpId, t: VTime) {
-        self.deps.complete(op);
+        self.st.deps.complete(op);
         self.remaining[self.ops[op.idx()].rank.idx()] -= 1;
         self.completed += 1;
-        let ready = self.deps.take_ready();
+        let ready = self.st.deps.take_ready();
         self.distribute(ready, t);
     }
 
     /// Post one communication op at the rank's current time.
     fn post_comm(&mut self, op_id: OpId) {
         let op = &self.ops[op_id.idx()];
-        let now = self.clock[op.rank.idx()];
+        let now = self.st.clock[op.rank.idx()];
         match &op.payload {
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let res = self.net.post_send(now, op.rank, *peer, *tag, *bytes);
+                let res = self.st.net.post_send(now, op.rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time: once the send
                 // completes, the dependency system allows the sender's
                 // later ops to overwrite the source region — the data
@@ -142,7 +142,7 @@ impl<'a, 'b> Lh<'a, 'b> {
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let res = self.net.post_recv(now, op.rank, *tag);
+                let res = self.st.net.post_recv(now, op.rank, *tag);
                 if let Some(rd) = res.recv_done {
                     self.push_ev(
                         rd,
@@ -163,11 +163,11 @@ impl<'a, 'b> Lh<'a, 'b> {
     /// operations in the ready queue after the last time the associated
     /// data block has been accessed".
     fn pick_compute(&mut self, r: usize) -> Option<OpId> {
-        if !self.locality || self.last_block[r].is_none() {
+        if !self.locality || self.st.last_block[r].is_none() {
             return self.ready_comp[r].pop_front();
         }
         const WINDOW: usize = 16;
-        let want = self.last_block[r];
+        let want = self.st.last_block[r];
         let hit = self.ready_comp[r]
             .iter()
             .take(WINDOW)
@@ -184,11 +184,11 @@ impl<'a, 'b> Lh<'a, 'b> {
         if self.state[r] == State::Done {
             return;
         }
-        let now = self.clock[r].max(t);
+        let now = self.st.clock[r].max(t);
         if let Some(t0) = self.idle_since[r].take() {
-            self.wait[r] += now - t0;
+            self.st.wait[r] += now - t0;
         }
-        self.clock[r] = now;
+        self.st.clock[r] = now;
 
         // Invariant 2: all ready communication is initiated before any
         // compute starts.
@@ -202,8 +202,8 @@ impl<'a, 'b> Lh<'a, 'b> {
         if let Some(op) = self.pick_compute(r) {
             self.state[r] = State::Busy;
             let blk = super::primary_block(&self.ops[op.idx()]);
-            let hot = blk.is_some() && blk == self.last_block[r];
-            self.last_block[r] = blk.or(self.last_block[r]);
+            let hot = blk.is_some() && blk == self.st.last_block[r];
+            self.st.last_block[r] = blk.or(self.st.last_block[r]);
             let cost = if hot {
                 self.costs_hot[op.idx()]
             } else {
@@ -220,21 +220,36 @@ impl<'a, 'b> Lh<'a, 'b> {
     }
 }
 
+/// One-shot convenience: run `ops` as the single epoch of a fresh
+/// [`ExecState`] and report it (the pre-epoch API, kept for batch tests
+/// and benches).
 pub fn run_latency_hiding(
     ops: &[OpNode],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
 ) -> Result<RunReport, SchedError> {
+    let mut state = ExecState::new(cfg);
+    state.n_epochs = 1;
+    run_latency_hiding_epoch(ops, cfg, backend, &mut state)?;
+    Ok(state.report())
+}
+
+/// Resume the persistent simulation with one more flushed batch.
+pub(crate) fn run_latency_hiding_epoch(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    st: &mut ExecState,
+) -> Result<(), SchedError> {
     let n = cfg.nprocs as usize;
-    let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
-    let mut deps = cfg.deps.build();
-    deps.insert_all(ops);
-    let initial = deps.take_ready();
+    let xfers = TransferTable::build(ops)?;
+    st.deps.insert_all(ops);
+    let initial = st.deps.take_ready();
 
     // Every process records + inserts every operation (global knowledge,
     // Section 5.5): the dependency-system overhead is charged to all
-    // ranks up front.
-    let overhead = super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec);
+    // ranks up front, on top of wherever their clocks already are.
+    st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
 
     let mut remaining = vec![0u64; n];
     for op in ops {
@@ -244,14 +259,11 @@ pub fn run_latency_hiding(
     let mut lh = Lh {
         ops,
         backend,
-        net: Network::new(&cfg.spec, node_of),
-        deps,
-        xfers: TransferTable::build(ops),
+        st,
+        xfers,
         costs: compute_costs(ops, cfg),
         costs_hot: super::compute_costs_hot(ops, cfg),
         locality: cfg.locality,
-        last_block: vec![None; n],
-        clock: vec![overhead; n],
         state: vec![State::Idle; n],
         idle_since: vec![None; n],
         ready_comm: vec![VecDeque::new(); n],
@@ -260,15 +272,13 @@ pub fn run_latency_hiding(
         heap: BinaryHeap::new(),
         seq: 0,
         completed: 0,
-        wait: vec![0.0; n],
-        busy: vec![0.0; n],
     };
 
-    lh.distribute(initial, overhead);
+    lh.distribute(initial, 0.0);
     for r in 0..n {
         // Ranks with nothing to do yet park as Idle (or Done).
         if lh.state[r] == State::Idle && lh.idle_since[r].is_none() {
-            lh.step(Rank(r as u32), overhead);
+            lh.step(Rank(r as u32), 0.0);
         }
     }
 
@@ -277,11 +287,10 @@ pub fn run_latency_hiding(
             Ev::ComputeDone { rank, op } => {
                 let r = rank.idx();
                 // Busy time = the cost actually charged when the op was
-                // started (clock advanced to `t` when it began).
-                let started = lh.clock[r];
-                lh.busy[r] += t - started;
-                let _ = op;
-                lh.clock[r] = t;
+                // started (clock advanced to the start time back then).
+                let started = lh.st.clock[r];
+                lh.st.busy[r] += t - started;
+                lh.st.clock[r] = t;
                 lh.state[r] = State::Idle;
                 if let OpPayload::Compute(task) = &lh.ops[op.idx()].payload {
                     lh.backend.exec_compute(rank, task);
@@ -308,23 +317,12 @@ pub fn run_latency_hiding(
         return Err(SchedError::Deadlock {
             executed: lh.completed,
             total: ops.len() as u64,
-            blocked_recvs: lh.net.unmatched_recvs() as u64,
+            blocked_recvs: lh.st.net.unmatched_recvs() as u64,
         });
     }
 
-    let makespan = lh.clock.iter().cloned().fold(0.0, f64::max);
-    let mut report = RunReport::new(n);
-    report.makespan = makespan;
-    report.wait = lh.wait;
-    report.busy = lh.busy;
-    report.overhead = overhead;
-    report.ops_executed = ops.len() as u64;
-    report.n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
-    report.n_comm = ops.len() as u64 - report.n_compute;
-    report.bytes_inter = lh.net.bytes_inter;
-    report.bytes_intra = lh.net.bytes_intra;
-    report.n_messages = lh.net.n_transfers;
-    Ok(report)
+    super::count_epoch_ops(lh.st, ops);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -418,6 +416,34 @@ mod tests {
         assert!(
             lw < bw,
             "latency-hiding should wait less: lh={lw} blocking={bw}"
+        );
+    }
+
+    #[test]
+    fn pipelined_epochs_beat_barriered_epochs() {
+        // The epoch model's core claim: running batch after batch on one
+        // persistent state with no barrier in between yields a shorter
+        // makespan than barriering after every batch — halo transfers
+        // drain behind the next batch's compute.
+        let mut spec = MachineSpec::tiny();
+        spec.net_alpha = 100e-6;
+        let cfg = SchedCfg::new(spec, 4);
+        let run = |barrier_every_epoch: bool| -> f64 {
+            let mut st = ExecState::new(&cfg);
+            for _ in 0..4 {
+                let ops = stencil3_batch(4, 4096, 64);
+                run_latency_hiding_epoch(&ops, &cfg, &mut SimBackend, &mut st).unwrap();
+                if barrier_every_epoch {
+                    st.barrier();
+                }
+            }
+            st.max_clock()
+        };
+        let barriered = run(true);
+        let pipelined = run(false);
+        assert!(
+            pipelined <= barriered,
+            "pipelined {pipelined} must not exceed barriered {barriered}"
         );
     }
 }

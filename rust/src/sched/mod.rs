@@ -22,10 +22,12 @@
 mod blocking;
 mod lh;
 mod naive;
+mod state;
 
 pub use blocking::run_blocking;
 pub use lh::run_latency_hiding;
 pub use naive::run_naive;
+pub use state::ExecState;
 
 use crate::cluster::{MachineSpec, Placement};
 use crate::comm::Collective;
@@ -104,7 +106,7 @@ impl SchedCfg {
     }
 }
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub enum SchedError {
     /// Every runnable path is blocked on an unreachable transfer (the
     /// naive evaluator of Fig. 6; also any policy fed a cyclic stream,
@@ -140,29 +142,49 @@ impl std::fmt::Display for SchedError {
 
 impl std::error::Error for SchedError {}
 
-/// Execute one flushed batch under `policy`. When the configuration
-/// enables message aggregation, the batch is rewritten by
-/// [`crate::comm::aggregate`] first and the resulting statistics are
-/// threaded into the report.
+/// Execute one flushed batch under `policy` on a *fresh* [`ExecState`]
+/// and return the resulting report — the single-epoch entry point used
+/// by tests and standalone batch runs. Long-lived contexts use
+/// [`execute_epoch`] instead, which resumes the simulation.
 pub fn execute(
     policy: Policy,
     ops: &[OpNode],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
 ) -> Result<RunReport, SchedError> {
-    let dispatch = |ops: &[OpNode], backend: &mut dyn Backend| match policy {
-        Policy::LatencyHiding => run_latency_hiding(ops, cfg, backend),
-        Policy::Blocking => run_blocking(ops, cfg, backend),
-        Policy::Naive => run_naive(ops, cfg, backend),
-    };
+    let mut state = ExecState::new(cfg);
+    execute_epoch(policy, ops, cfg, backend, &mut state)?;
+    Ok(state.report())
+}
+
+/// Execute one flushed batch as the next *epoch* of a continuous
+/// simulation: per-rank clocks, NIC frontiers, accumulated wait/busy and
+/// the dependency system all resume from `state` instead of restarting.
+/// When the configuration enables message aggregation, the batch is
+/// rewritten by [`crate::comm::aggregate`] first and the statistics are
+/// folded into the state's counters.
+pub fn execute_epoch(
+    policy: Policy,
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    state: &mut ExecState,
+) -> Result<(), SchedError> {
+    let dispatch =
+        |ops: &[OpNode], backend: &mut dyn Backend, state: &mut ExecState| match policy {
+            Policy::LatencyHiding => lh::run_latency_hiding_epoch(ops, cfg, backend, state),
+            Policy::Blocking => blocking::run_blocking_epoch(ops, cfg, backend, state),
+            Policy::Naive => naive::run_naive_epoch(ops, cfg, backend, state),
+        };
+    state.n_epochs += 1;
     if cfg.aggregation >= 2 {
         let (packed, stats) = crate::comm::aggregate(ops, cfg.aggregation);
-        let mut report = dispatch(&packed, backend)?;
-        report.agg_msgs = stats.packed_msgs;
-        report.agg_parts = stats.packed_parts;
-        Ok(report)
+        dispatch(&packed, backend, state)?;
+        state.agg_msgs += stats.packed_msgs;
+        state.agg_parts += stats.packed_parts;
+        Ok(())
     } else {
-        dispatch(ops, backend)
+        dispatch(ops, backend, state)
     }
 }
 
@@ -209,7 +231,11 @@ pub(crate) struct TransferInfo {
 }
 
 impl TransferTable {
-    pub fn build(ops: &[OpNode]) -> Self {
+    /// Pair every send with its receive by tag. A half-paired tag means
+    /// the recorded (or aggregation-rewritten) stream is malformed —
+    /// reported as [`SchedError::Stall`] so a bad batch fails the flush
+    /// loudly instead of aborting the process.
+    pub fn build(ops: &[OpNode]) -> Result<Self, SchedError> {
         let mut half: FxHashMap<Tag, TransferInfo> = FxHashMap::default();
         for op in ops {
             match &op.payload {
@@ -248,13 +274,27 @@ impl TransferTable {
             }
         }
         for (tag, t) in &half {
-            assert!(
-                t.send_op != OpId(u32::MAX) && t.recv_op != OpId(u32::MAX),
-                "unpaired transfer {tag:?}"
-            );
+            if t.send_op == OpId(u32::MAX) || t.recv_op == OpId(u32::MAX) {
+                let side = if t.send_op == OpId(u32::MAX) {
+                    "send"
+                } else {
+                    "recv"
+                };
+                return Err(SchedError::Stall(format!(
+                    "unpaired transfer {tag:?}: missing {side} half"
+                )));
+            }
         }
-        TransferTable { info: half }
+        Ok(TransferTable { info: half })
     }
+}
+
+/// Fold one executed epoch's operation counters into the state.
+pub(crate) fn count_epoch_ops(state: &mut ExecState, ops: &[OpNode]) {
+    let n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
+    state.ops_executed += ops.len() as u64;
+    state.n_compute += n_compute;
+    state.n_comm += ops.len() as u64 - n_compute;
 }
 
 /// Per-rank recording/bookkeeping overhead of a flush batch: every
@@ -362,5 +402,91 @@ mod tests {
         assert_eq!(Policy::parse("blocking"), Some(Policy::Blocking));
         assert_eq!(Policy::parse("naive"), Some(Policy::Naive));
         assert_eq!(Policy::parse("x"), None);
+    }
+
+    /// A send whose matching recv is missing (a malformed or
+    /// mis-aggregated stream).
+    fn half_paired_batch() -> Vec<OpNode> {
+        use crate::ufunc::Access;
+        vec![OpNode {
+            id: OpId(0),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Send {
+                peer: Rank(1),
+                tag: Tag(7),
+                bytes: 16,
+                src: SendSrc::Stage(Tag(7)),
+            },
+            accesses: vec![Access::read_stage(Tag(7))],
+        }]
+    }
+
+    #[test]
+    fn unpaired_transfer_is_a_stall_not_a_panic() {
+        let ops = half_paired_batch();
+        match TransferTable::build(&ops) {
+            Err(SchedError::Stall(msg)) => assert!(msg.contains("unpaired"), "{msg}"),
+            other => panic!("expected Stall, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_policies_propagate_unpaired_transfer_stall() {
+        let ops = half_paired_batch();
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            match execute(policy, &ops, &cfg, &mut crate::exec::SimBackend) {
+                Err(SchedError::Stall(_)) => {}
+                other => panic!("{policy:?}: expected Stall, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn execute_epoch_resumes_clocks_and_frontiers() {
+        use crate::array::Registry;
+        use crate::types::DType;
+        use crate::ufunc::{Kernel, OpBuilder};
+        // Two identical aligned batches: resuming must accumulate the
+        // timeline instead of restarting it.
+        let batch = || {
+            let mut reg = Registry::new(2);
+            let x = reg.alloc(vec![64], 8, DType::F32);
+            let xv = reg.full_view(x);
+            let mut bld = OpBuilder::new();
+            bld.ufunc(&reg, Kernel::Scale(2.0), &xv, &[&xv]);
+            bld.finish()
+        };
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let ops = batch();
+        execute_epoch(
+            Policy::LatencyHiding,
+            &ops,
+            &cfg,
+            &mut crate::exec::SimBackend,
+            &mut st,
+        )
+        .unwrap();
+        let t1 = st.max_clock();
+        assert!(t1 > 0.0);
+        assert_eq!(st.n_epochs, 1);
+        let ops2 = batch();
+        execute_epoch(
+            Policy::LatencyHiding,
+            &ops2,
+            &cfg,
+            &mut crate::exec::SimBackend,
+            &mut st,
+        )
+        .unwrap();
+        assert_eq!(st.n_epochs, 2);
+        assert!(st.max_clock() > t1, "second epoch extends the timeline");
+        assert_eq!(st.ops_executed, (ops.len() + ops2.len()) as u64);
+        // One continuous report, not a sum of per-flush makespans.
+        let rep = st.report();
+        assert_eq!(rep.n_epochs, 2);
+        assert!((rep.makespan - st.max_clock()).abs() < 1e-12);
     }
 }

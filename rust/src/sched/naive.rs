@@ -9,34 +9,46 @@
 //! [`SchedError::Deadlock`] instead of hanging, which the test-suite and
 //! `examples/quickstart.rs` demonstrate against the latency-hiding
 //! scheduler that completes the same batch.
+//!
+//! Runs as one epoch of a persistent [`ExecState`] like the other
+//! policies. A deadlocked epoch leaves the state with pending work; the
+//! lazy context poisons itself on the error, so the torn state is never
+//! resumed.
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use super::{compute_costs, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
-use crate::net::Network;
 use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
 
+/// One-shot convenience: run `ops` as the single epoch of a fresh
+/// [`ExecState`] and report it.
 pub fn run_naive(
     ops: &[OpNode],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
 ) -> Result<RunReport, SchedError> {
-    let n = cfg.nprocs as usize;
-    let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
-    let mut net = Network::new(&cfg.spec, node_of);
-    let xfers = TransferTable::build(ops);
-    let costs = compute_costs(ops, cfg);
-    let mut deps = cfg.deps.build();
-    deps.insert_all(ops);
+    let mut state = ExecState::new(cfg);
+    state.n_epochs = 1;
+    run_naive_epoch(ops, cfg, backend, &mut state)?;
+    Ok(state.report())
+}
 
-    let overhead = super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec);
-    let mut clock = vec![overhead; n];
-    let mut wait = vec![0.0f64; n];
-    let mut busy = vec![0.0f64; n];
+pub(crate) fn run_naive_epoch(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    st: &mut ExecState,
+) -> Result<(), SchedError> {
+    let n = cfg.nprocs as usize;
+    let xfers = TransferTable::build(ops)?;
+    let costs = compute_costs(ops, cfg);
+    st.deps.insert_all(ops);
+
+    st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
     // FIFO of ready ops per rank, in becoming-ready order — the naive
     // evaluator draws no distinction between communication and compute.
     let mut fifo: Vec<VecDeque<usize>> = vec![VecDeque::new(); n];
@@ -51,9 +63,9 @@ pub fn run_naive(
         ($rank:expr, $t:expr) => {{
             let r: Rank = $rank;
             if !queued[r.idx()] && !fifo[r.idx()].is_empty() {
-                clock[r.idx()] = clock[r.idx()].max($t);
+                st.clock[r.idx()] = st.clock[r.idx()].max($t);
                 heap.push(TEvent {
-                    t: clock[r.idx()],
+                    t: st.clock[r.idx()],
                     seq,
                     ev: r,
                 });
@@ -63,12 +75,12 @@ pub fn run_naive(
         }};
     }
 
-    let initial = deps.take_ready();
+    let initial = st.deps.take_ready();
     for id in initial {
         fifo[ops[id.idx()].rank.idx()].push_back(id.idx());
     }
     for r in 0..n {
-        enqueue!(Rank(r as u32), overhead);
+        enqueue!(Rank(r as u32), st.clock[r]);
     }
 
     while let Some(TEvent { ev: rank, .. }) = heap.pop() {
@@ -82,8 +94,8 @@ pub fn run_naive(
         match &op.payload {
             OpPayload::Compute(task) => {
                 backend.exec_compute(rank, task);
-                busy[r] += costs[i];
-                clock[r] += costs[i];
+                st.busy[r] += costs[i];
+                st.clock[r] += costs[i];
                 fifo[r].pop_front();
                 executed += 1;
                 done_ids.push(op.id);
@@ -91,14 +103,14 @@ pub fn run_naive(
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let t0 = clock[r];
-                let res = net.post_send(t0, rank, *peer, *tag, *bytes);
+                let t0 = st.clock[r];
+                let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time (see lh.rs).
                 let info = &xfers.info[tag];
                 backend.exec_transfer(info.from, info.to, *tag, &info.src);
                 let done = res.send_done.unwrap();
-                wait[r] += done - t0;
-                clock[r] = done;
+                st.wait[r] += done - t0;
+                st.clock[r] = done;
                 fifo[r].pop_front();
                 executed += 1;
                 done_ids.push(op.id);
@@ -106,28 +118,28 @@ pub fn run_naive(
                     if let Some((peer_rank, parked_at)) = parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
-                        wait[pr] += resume - parked_at;
-                        clock[pr] = resume;
+                        st.wait[pr] += resume - parked_at;
+                        st.clock[pr] = resume;
                         fifo[pr].pop_front(); // the blocked recv
                         executed += 1;
                         done_ids.push(ops[xfers.info[tag].recv_op.idx()].id);
-                        enqueue!(peer_rank, clock[pr]);
+                        enqueue!(peer_rank, st.clock[pr]);
                     }
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let t0 = clock[r];
-                if net.send_posted(*tag) {
-                    let res = net.post_recv(t0, rank, *tag);
+                let t0 = st.clock[r];
+                if st.net.send_posted(*tag) {
+                    let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();
-                    wait[r] += rd - t0;
-                    clock[r] = rd;
+                    st.wait[r] += rd - t0;
+                    st.clock[r] = rd;
                     fifo[r].pop_front();
                     executed += 1;
                     done_ids.push(op.id);
                 } else if !parked.contains_key(tag) {
                     // Blocking recv with no matching send posted: park.
-                    net.post_recv(t0, rank, *tag);
+                    st.net.post_recv(t0, rank, *tag);
                     parked.insert(*tag, (rank, t0));
                     continue;
                 } else {
@@ -135,17 +147,15 @@ pub fn run_naive(
                 }
             }
         }
-        let mut latest = clock[r];
         for id in done_ids {
-            deps.complete(id);
-            for nr in deps.take_ready() {
+            st.deps.complete(id);
+            for nr in st.deps.take_ready() {
                 let owner = ops[nr.idx()].rank;
                 fifo[owner.idx()].push_back(nr.idx());
-                latest = latest.max(clock[owner.idx()]);
-                enqueue!(owner, clock[r]);
+                enqueue!(owner, st.clock[r]);
             }
         }
-        enqueue!(rank, clock[r]);
+        enqueue!(rank, st.clock[r]);
     }
 
     if executed as usize != ops.len() {
@@ -169,19 +179,8 @@ pub fn run_naive(
         });
     }
 
-    let makespan = clock.iter().cloned().fold(0.0, f64::max);
-    let mut report = RunReport::new(n);
-    report.makespan = makespan;
-    report.wait = wait;
-    report.busy = busy;
-    report.overhead = overhead;
-    report.ops_executed = executed;
-    report.n_compute = ops.iter().filter(|o| !o.is_comm()).count() as u64;
-    report.n_comm = ops.len() as u64 - report.n_compute;
-    report.bytes_inter = net.bytes_inter;
-    report.bytes_intra = net.bytes_intra;
-    report.n_messages = net.n_transfers;
-    Ok(report)
+    super::count_epoch_ops(st, ops);
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1,0 +1,186 @@
+//! Persistent cross-flush execution state — the *epoch* model.
+//!
+//! Historically every flush simulated on a fresh [`Network`] with all
+//! per-rank clocks reset to the batch overhead, and the per-flush
+//! reports were summed makespan-by-makespan. That makes every flush a
+//! full global barrier: communication initiated in flush *k* can never
+//! drain behind flush *k+1*'s computation, and a convergence read per
+//! iteration (Jacobi's `sum_absdiff`) forfeits the paper's headline
+//! latency-hiding effect exactly where it matters most.
+//!
+//! [`ExecState`] fixes this by extracting everything that must survive a
+//! flush out of the schedulers:
+//!
+//! * per-rank **virtual clocks** — a flush becomes an *epoch* in one
+//!   continuous timeline; ranks resume where they left off;
+//! * the **NIC egress/ingress FIFO frontiers** (inside the owned
+//!   [`Network`]) — a transfer injected late in epoch *k* still occupies
+//!   the wire while epoch *k+1* computes;
+//! * accumulated **waiting/busy time** and counters;
+//! * the **live dependency system** — operation ids recycle once an
+//!   epoch fully drains (see `deps`), so one system serves the whole run.
+//!
+//! The only remaining global synchronization is an explicit
+//! [`ExecState::barrier`], issued by the lazy context when the program
+//! actually *forces* a scalar (an immediate `sum`, a `ScalarFuture::wait`
+//! or a `gather`): every rank joins the global maximum clock and the
+//! joined idle time is accounted as `wait_at_barrier`. Deferring reads
+//! through futures therefore directly removes barriers from the
+//! timeline — the ablation in `benches/ablation_epochs.rs` measures it.
+
+use crate::deps::DepSystem;
+use crate::metrics::RunReport;
+use crate::net::Network;
+use crate::types::{BaseId, VTime};
+
+use super::SchedCfg;
+
+/// Execution state that persists across flush epochs.
+pub struct ExecState {
+    /// Per-rank virtual clocks, continuous across epochs.
+    pub clock: Vec<VTime>,
+    /// Accumulated per-rank waiting time (comm stalls + barriers).
+    pub wait: Vec<VTime>,
+    /// Accumulated per-rank busy compute time.
+    pub busy: Vec<VTime>,
+    /// Accumulated recording/dependency overhead (charged every epoch).
+    pub overhead: VTime,
+    /// The simulated interconnect: NIC frontiers and in-flight transfer
+    /// halves survive across epochs.
+    pub net: Network,
+    /// The live dependency system, reused epoch after epoch.
+    pub deps: Box<dyn DepSystem>,
+    /// Per-rank most recently touched base-block (§7 cache key) — cache
+    /// residency is physical state, so it survives the flush boundary.
+    pub last_block: Vec<Option<(BaseId, u64)>>,
+    /// Executed flush epochs.
+    pub n_epochs: u64,
+    /// Wait accumulated at explicit barriers (forced scalar reads).
+    pub wait_at_barrier: VTime,
+    // -- accumulated counters (per-epoch deltas folded in by the
+    // -- schedulers; byte/message totals live in `net`) --
+    pub ops_executed: u64,
+    pub n_compute: u64,
+    pub n_comm: u64,
+    pub agg_msgs: u64,
+    pub agg_parts: u64,
+}
+
+impl ExecState {
+    pub fn new(cfg: &SchedCfg) -> Self {
+        let n = cfg.nprocs as usize;
+        let node_of = cfg.placement.assign(cfg.nprocs, &cfg.spec);
+        ExecState {
+            clock: vec![0.0; n],
+            wait: vec![0.0; n],
+            busy: vec![0.0; n],
+            overhead: 0.0,
+            net: Network::new(&cfg.spec, node_of),
+            deps: cfg.deps.build(),
+            last_block: vec![None; n],
+            n_epochs: 0,
+            wait_at_barrier: 0.0,
+            ops_executed: 0,
+            n_compute: 0,
+            n_comm: 0,
+            agg_msgs: 0,
+            agg_parts: 0,
+        }
+    }
+
+    /// Latest rank clock — the makespan of the run so far.
+    pub fn max_clock(&self) -> VTime {
+        self.clock.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Global barrier: every rank joins the maximum clock. The joined
+    /// idle time is charged to per-rank wait *and* to `wait_at_barrier`
+    /// so the cost of forcing a scalar is visible in the metrics.
+    /// Returns the barrier time.
+    pub fn barrier(&mut self) -> VTime {
+        let tmax = self.max_clock();
+        for r in 0..self.clock.len() {
+            let d = tmax - self.clock[r];
+            if d > 0.0 {
+                self.wait[r] += d;
+                self.wait_at_barrier += d;
+                self.clock[r] = tmax;
+            }
+        }
+        tmax
+    }
+
+    /// Snapshot the continuous timeline as a [`RunReport`]: the makespan
+    /// is the *latest clock*, not a sum of per-flush makespans — epochs
+    /// overlap wherever the schedules allow it.
+    pub fn report(&self) -> RunReport {
+        let mut rep = RunReport::new(self.clock.len());
+        rep.makespan = self.max_clock();
+        rep.wait = self.wait.clone();
+        rep.busy = self.busy.clone();
+        rep.overhead = self.overhead;
+        rep.ops_executed = self.ops_executed;
+        rep.n_compute = self.n_compute;
+        rep.n_comm = self.n_comm;
+        rep.bytes_inter = self.net.bytes_inter;
+        rep.bytes_intra = self.net.bytes_intra;
+        rep.n_messages = self.net.n_transfers;
+        rep.agg_msgs = self.agg_msgs;
+        rep.agg_parts = self.agg_parts;
+        rep.n_epochs = self.n_epochs;
+        rep.wait_at_barrier = self.wait_at_barrier;
+        rep
+    }
+
+    /// Charge one epoch's recording/bookkeeping overhead to every rank.
+    pub(crate) fn charge_overhead(&mut self, per_epoch: VTime) {
+        self.overhead += per_epoch;
+        for c in self.clock.iter_mut() {
+            *c += per_epoch;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineSpec;
+
+    #[test]
+    fn barrier_joins_clocks_and_accounts_wait() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 3);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![1.0, 3.0, 2.0];
+        let t = st.barrier();
+        assert_eq!(t, 3.0);
+        assert_eq!(st.clock, vec![3.0, 3.0, 3.0]);
+        assert_eq!(st.wait, vec![2.0, 0.0, 1.0]);
+        assert!((st.wait_at_barrier - 3.0).abs() < 1e-12);
+        // Idempotent: a second barrier at the same frontier is free.
+        st.barrier();
+        assert!((st.wait_at_barrier - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_snapshots_continuous_timeline() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![4.0, 5.0];
+        st.n_epochs = 3;
+        st.ops_executed = 7;
+        let rep = st.report();
+        assert_eq!(rep.makespan, 5.0);
+        assert_eq!(rep.n_epochs, 3);
+        assert_eq!(rep.ops_executed, 7);
+    }
+
+    #[test]
+    fn charge_overhead_advances_every_rank() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![1.0, 2.0];
+        st.charge_overhead(0.5);
+        assert_eq!(st.clock, vec![1.5, 2.5]);
+        assert_eq!(st.overhead, 0.5);
+    }
+}

@@ -28,8 +28,13 @@ use crate::layout::{sub_view_blocks, ViewSpec};
 use crate::types::{OpId, Rank, Tag};
 
 /// Builds operation-nodes from array-level requests. One builder per
-/// flush batch; tags are unique within it. The registry is passed per
-/// call so the owning context can keep allocating arrays mid-recording.
+/// context; operation ids and §5.3 groups restart every flush batch,
+/// but **tags are unique across the whole run** — staging buffers (and
+/// therefore [`crate::lazy::ScalarFuture`]s) stay addressable across
+/// later flush epochs, and the persistent network never sees a tag
+/// reused while its transfer could still matter. The registry is passed
+/// per call so the owning context can keep allocating arrays
+/// mid-recording.
 #[derive(Default)]
 pub struct OpBuilder {
     pub ops: Vec<OpNode>,
@@ -42,9 +47,9 @@ impl OpBuilder {
         Self::default()
     }
 
-    /// Drain the recorded batch, resetting ids and tags for the next one.
+    /// Drain the recorded batch, resetting ids and groups for the next
+    /// one. The tag counter is *not* reset (run-unique tags, see above).
     pub fn take(&mut self) -> Vec<OpNode> {
-        self.next_tag = 0;
         self.group = 0;
         std::mem::take(&mut self.ops)
     }

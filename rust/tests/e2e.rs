@@ -31,7 +31,7 @@ fn distributed_reduction_matches_serial_sum() {
                 let mut rng = Rng::new(p as u64);
                 let data = rng.fill_f32(1000, -1.0, 1.0);
                 let x = ctx.array(&[1000], 32, &data);
-                let got = ctx.sum(&x);
+                let got = ctx.sum(&x).expect("flush must complete");
                 let want: f64 = data.iter().map(|&v| v as f64).sum();
                 assert!(
                     (got - want).abs() < 1e-3,
@@ -60,7 +60,10 @@ fn fig3_stencil_native_roundtrip() {
             let c = n.slice(&[(1, 5)]);
             ctx.add(&c, &a, &b);
             ctx.flush();
-            let got = ctx.gather(n.base).unwrap();
+            let got = ctx
+                .gather(n.base)
+                .expect("flush must complete")
+                .expect("data backend materializes");
             assert_eq!(
                 got,
                 vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0],
@@ -181,7 +184,10 @@ mod pjrt {
             let c = n.slice(&[(1, 5)]);
             ctx.add(&c, &a, &b);
             ctx.flush();
-            let got = ctx.gather(n.base).unwrap();
+            let got = ctx
+                .gather(n.base)
+                .expect("flush must complete")
+                .expect("data backend materializes");
             assert_eq!(got, vec![0.0, 4.0, 6.0, 8.0, 10.0, 0.0], "{policy:?}");
             ctx.finish().unwrap();
         }
@@ -218,7 +224,10 @@ mod pjrt {
             ctx.add(&z, &x, &y);
             ctx.ufunc(Kernel::Axpy(0.2), &z, &[&z, &x]);
             ctx.flush();
-            let out = ctx.gather(z.base).unwrap();
+            let out = ctx
+                .gather(z.base)
+                .expect("flush must complete")
+                .expect("data backend materializes");
             let dispatched = ctx
                 .backend
                 .as_any()

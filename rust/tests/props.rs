@@ -653,6 +653,140 @@ fn naive_reports_cycle_through_aggregated_message() {
 }
 
 // ---------------------------------------------------------------------
+// Epoch / flush-boundary properties
+// ---------------------------------------------------------------------
+
+/// Numerics on data backends are invariant to where the flush
+/// boundaries fall and to how scalars are read: one big flush vs many
+/// small epochs, immediate (barrier-per-read) vs deferred futures —
+/// under all three policies and both collective schedules. The programs
+/// are aligned (full-view ufuncs + reductions), which every policy
+/// completes; scheduling and epoch partitioning must be invisible to
+/// the results (§5: the user sees sequential semantics).
+#[test]
+fn prop_numerics_invariant_to_flush_threshold_and_deferral() {
+    use distnumpy::lazy::ScalarFuture;
+
+    let mut rng = Rng::new(0xE90C);
+    for trial in 0..25 {
+        let p = 1 + (trial % 4) as u32;
+        let rows = 8 + rng.below(120);
+        let br = 1 + rng.below(12);
+        let n_arrays = 2 + rng.range(0, 2);
+        // Program script: shared across configs.
+        #[derive(Clone, Copy)]
+        enum Step {
+            Ufunc(usize, usize, usize, u8), // out, a, b, kernel id
+            Sum(usize),
+        }
+        let n_steps = rng.range(3, 10);
+        let steps: Vec<Step> = (0..n_steps)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    Step::Sum(rng.range(0, n_arrays))
+                } else {
+                    Step::Ufunc(
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, 3) as u8,
+                    )
+                }
+            })
+            .collect();
+        let data: Vec<Vec<f32>> = {
+            let mut data_rng = Rng::new(0xDA7A + trial as u64);
+            (0..n_arrays)
+                .map(|_| data_rng.fill_f32(rows as usize, -1.0, 1.0))
+                .collect()
+        };
+
+        let run = |policy: Policy,
+                   collective: Collective,
+                   threshold: usize,
+                   deferred: bool|
+         -> (Vec<Vec<f32>>, Vec<f64>) {
+            let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            cfg.collective = collective;
+            let mut ctx = Context::new(
+                cfg,
+                policy,
+                Box::new(NativeBackend::new(ClusterStore::new(p))),
+            );
+            ctx.flush_threshold = threshold;
+            let views: Vec<_> = data.iter().map(|d| ctx.array(&[rows], br, d)).collect();
+            let mut pending: Vec<ScalarFuture> = Vec::new();
+            let mut sums = Vec::new();
+            for s in &steps {
+                match *s {
+                    Step::Ufunc(o, a, b, k) => {
+                        let kernel = match k {
+                            0 => Kernel::Add,
+                            1 => Kernel::Mul,
+                            _ => Kernel::Axpy(0.25),
+                        };
+                        ctx.ufunc(kernel, &views[o], &[&views[a], &views[b]]);
+                    }
+                    Step::Sum(a) => {
+                        if deferred {
+                            pending.push(ctx.sum_deferred(&views[a]));
+                        } else {
+                            sums.push(ctx.sum(&views[a]).unwrap_or_else(|e| {
+                                panic!("{policy:?}/{collective:?} trial {trial}: {e}")
+                            }));
+                        }
+                    }
+                }
+            }
+            for f in pending {
+                sums.push(ctx.wait_scalar(&f).unwrap_or_else(|e| {
+                    panic!("{policy:?}/{collective:?} trial {trial}: {e}")
+                }));
+            }
+            ctx.flush();
+            assert!(
+                ctx.error.is_none(),
+                "{policy:?}/{collective:?} trial {trial}: aligned program must complete"
+            );
+            // Read the final blocks straight from the store (recording a
+            // gather collective here would add a ring allgather, which
+            // the naive evaluator legitimately deadlocks on at P >= 3 —
+            // that behaviour has its own tests).
+            let gathers = views
+                .iter()
+                .map(|v| {
+                    ctx.backend
+                        .gather(ctx.reg.layout(v.base))
+                        .expect("data backend")
+                })
+                .collect();
+            (gathers, sums)
+        };
+
+        for collective in [Collective::Flat, Collective::Tree] {
+            let want = run(Policy::LatencyHiding, collective, usize::MAX, false);
+            for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+                for (threshold, deferred) in
+                    [(usize::MAX, false), (usize::MAX, true), (3, false), (3, true)]
+                {
+                    let got = run(policy, collective, threshold, deferred);
+                    assert_eq!(
+                        got.0, want.0,
+                        "trial {trial} {policy:?}/{collective:?} \
+                         threshold={threshold} deferred={deferred}: arrays diverge"
+                    );
+                    assert_eq!(
+                        got.1, want.1,
+                        "trial {trial} {policy:?}/{collective:?} \
+                         threshold={threshold} deferred={deferred}: sums diverge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Lazy-evaluation context properties
 // ---------------------------------------------------------------------
 
