@@ -25,14 +25,19 @@ use distnumpy::cluster::MachineSpec;
 use distnumpy::exec::NativeBackend;
 use distnumpy::lazy::Context;
 use distnumpy::metrics::RunReport;
-use distnumpy::sched::{Policy, SchedCfg, SchedError};
+use distnumpy::sched::{Policy, SchedCfg, SchedError, SyncMode};
 use distnumpy::util::json::Json;
 use distnumpy::util::rng::Rng;
 
 const CHECK_EVERY: u32 = 4;
 
+/// This ablation isolates *where the barriers fall* (per iteration vs
+/// per check interval), so both configurations run under the global
+/// `SyncMode::Barrier`; the barrier-vs-cone comparison is
+/// `ablation_sync`'s job.
 fn run(p: u32, conv: Convergence, spec: &MachineSpec, params: &AppParams) -> RunReport {
-    let cfg = SchedCfg::new(spec.clone(), p);
+    let mut cfg = SchedCfg::new(spec.clone(), p);
+    cfg.sync = SyncMode::Barrier;
     let mut ctx = Context::sim(cfg, Policy::LatencyHiding);
     record_jacobi_with(&mut ctx, params, conv);
     ctx.finish().expect("jacobi completes under latency-hiding")

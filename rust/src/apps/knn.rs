@@ -6,8 +6,13 @@
 //! The paper notes its modest speedup comes from load imbalance when the
 //! problem does not divide evenly at 8 and 16 ranks; the same effect
 //! falls out of the block layout here.
+//!
+//! The per-sweep best-distance read is a deferred [`ScalarFuture`]
+//! forced one sweep late, so the reduction fan-in drains behind the
+//! next sweep's SUMMA panels and forcing it settles only the
+//! reduction's cone ([`crate::sync`]).
 
-use crate::lazy::Context;
+use crate::lazy::{Context, ScalarFuture};
 use crate::summa::record_matmul;
 use crate::ufunc::Kernel;
 
@@ -26,6 +31,7 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
     let qq = ctx.zeros(&[n], br);
     let pp = ctx.zeros(&[n], br);
 
+    let mut best: Option<ScalarFuture> = None;
     for _ in 0..p.iters.max(1) {
         // Norms: aligned elementwise.
         ctx.ufunc(Kernel::Mul, &qq, &[&qq, &qq]);
@@ -33,8 +39,15 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
         // -2 q pᵀ via SUMMA.
         let collective = ctx.cfg.collective;
         record_matmul(&mut ctx.builder, &ctx.reg, q.base, c.base, d.base, collective);
-        // Assemble distances and extract the best per sweep (reduction).
+        // Assemble distances and extract the best per sweep: force the
+        // previous sweep's deferred reduction, issue this sweep's.
         ctx.ufunc(Kernel::Scale(-2.0), &d, &[&d]);
-        let _ = ctx.sum(&d);
+        if let Some(fut) = best.take() {
+            let _ = ctx.wait_scalar(&fut);
+        }
+        best = Some(ctx.sum_deferred(&d));
+    }
+    if let Some(fut) = best.take() {
+        let _ = ctx.wait_scalar(&fut);
     }
 }

@@ -8,7 +8,12 @@
 //! latency-hiding vs blocking curves (blocking marginally ahead due to
 //! runtime overhead).
 
-use crate::lazy::Context;
+//! The per-step energy check is a deferred [`ScalarFuture`] forced one
+//! step late: its fan-in drains behind the next step's SUMMA products
+//! and the forced read settles only the reduction's dependency cone
+//! ([`crate::sync`]).
+
+use crate::lazy::{Context, ScalarFuture};
 use crate::summa::record_matmul;
 use crate::ufunc::Kernel;
 
@@ -26,6 +31,7 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
     let vel = ctx.zeros(&[n], br);
     let acc = ctx.zeros(&[n], br);
 
+    let mut energy: Option<ScalarFuture> = None;
     for _ in 0..p.iters {
         // Pairwise geometry + force tiles: two SUMMA products, as in the
         // MATLAB translation (distance matrix, then force aggregation).
@@ -36,7 +42,14 @@ pub fn record(ctx: &mut Context, p: &AppParams) {
         ctx.ufunc(Kernel::Axpy(0.5), &acc, &[&acc, &pos]);
         ctx.ufunc(Kernel::Axpy(0.01), &vel, &[&vel, &acc]);
         ctx.ufunc(Kernel::Axpy(0.01), &pos, &[&pos, &vel]);
-        // Energy check each step: a read of distributed data.
-        let _ = ctx.sum(&vel);
+        // Energy check each step: force the previous step's deferred
+        // read, issue this step's.
+        if let Some(fut) = energy.take() {
+            let _ = ctx.wait_scalar(&fut);
+        }
+        energy = Some(ctx.sum_deferred(&vel));
+    }
+    if let Some(fut) = energy.take() {
+        let _ = ctx.wait_scalar(&fut);
     }
 }

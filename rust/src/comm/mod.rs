@@ -43,8 +43,33 @@ use crate::ufunc::{
 };
 
 /// Bytes on the wire per staged reduction scalar (matches the flat
-/// gather of `OpBuilder::reduce`).
-const SCALAR_BYTES: u64 = 8;
+/// gather of `OpBuilder::reduce`; also the payload of the value
+/// broadcast a cone-wait rides, see [`crate::sync`]).
+pub const SCALAR_BYTES: u64 = 8;
+
+/// The binomial-tree broadcast schedule in *virtual-id* space (vid 0 is
+/// the root): rounds of `(from_vid, to_vid)` hops, doubling the covered
+/// set each round. Shared by [`broadcast_tree`] (which emits the hops as
+/// dependency-tracked operation nodes) and by the cone-wait value
+/// broadcast in [`crate::sync::settle_cone`] (which times the same hops
+/// directly against the persistent network).
+pub fn bcast_rounds(p: u32) -> Vec<Vec<(u32, u32)>> {
+    let mut rounds = Vec::new();
+    let mut k = 1u32;
+    while k < p {
+        let mut hops = Vec::new();
+        for vid in 0..k {
+            let dst = vid + k;
+            if dst >= p {
+                break;
+            }
+            hops.push((vid, dst));
+        }
+        rounds.push(hops);
+        k *= 2;
+    }
+    rounds
+}
 
 /// Which schedule the cross-rank phase of a collective uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -175,14 +200,9 @@ pub fn broadcast_tree(
     let mut tags: Vec<Option<Tag>> = vec![None; p as usize];
     let bytes = region.elems() * 4;
     let rank_of = |vid: u32| Rank((owner.0 + vid) % p);
-    let mut k = 1u32;
-    while k < p {
+    for round in bcast_rounds(p) {
         bld.begin_group();
-        for vid in 0..k {
-            let dst_vid = vid + k;
-            if dst_vid >= p {
-                break;
-            }
+        for (vid, dst_vid) in round {
             let from = rank_of(vid);
             let to = rank_of(dst_vid);
             let wire = bld.fresh_tag();
@@ -216,14 +236,14 @@ pub fn broadcast_tree(
             );
             tags[to.idx()] = Some(wire);
         }
-        k *= 2;
     }
     tags
 }
 
 /// Full-block region of base-block `block` (helper for whole-base
-/// collectives).
-fn block_region(reg: &Registry, base: BaseId, block: u64) -> (Region, (u64, u64)) {
+/// collectives and the gather snapshots of
+/// [`crate::lazy::Context::gather_deferred`]).
+pub(crate) fn block_region(reg: &Registry, base: BaseId, block: u64) -> (Region, (u64, u64)) {
     let layout = reg.layout(base);
     let nrows = layout.block_nrows(block);
     let re = layout.row_elems();
@@ -485,6 +505,26 @@ mod tests {
             if let OpPayload::Recv { .. } = op.payload {
                 assert_eq!(op.rank, Rank(0));
             }
+        }
+    }
+
+    #[test]
+    fn bcast_rounds_cover_everyone_once() {
+        for p in [1u32, 2, 3, 5, 8, 13] {
+            let rounds = bcast_rounds(p);
+            let mut have = vec![false; p as usize];
+            have[0] = true;
+            for round in &rounds {
+                for &(from, to) in round {
+                    assert!(have[from as usize], "P={p}: forwarder {from} has the value");
+                    assert!(!have[to as usize], "P={p}: {to} delivered twice");
+                    have[to as usize] = true;
+                }
+            }
+            assert!(have.iter().all(|&h| h), "P={p}: everyone covered");
+            let hops: usize = rounds.iter().map(|r| r.len()).sum();
+            assert_eq!(hops, p as usize - 1, "P={p}: P-1 messages");
+            assert_eq!(rounds.len(), (p as f64).log2().ceil() as usize, "P={p}: log2 depth");
         }
     }
 

@@ -16,7 +16,7 @@ use crate::apps::{AppId, AppParams};
 use crate::cluster::{MachineSpec, Placement};
 use crate::comm::Collective;
 use crate::harness;
-use crate::sched::{Policy, SchedCfg};
+use crate::sched::{Policy, SchedCfg, SyncMode};
 use crate::util::json::Json;
 
 /// Parsed command line.
@@ -94,8 +94,11 @@ distnumpy — runtime-managed communication latency-hiding (HPCC'12 repro)
 USAGE:
   distnumpy run    --app <name> --procs <P> [--policy lh|blocking|naive]
                    [--placement by-node|by-core] [--scale S] [--iters N]
-                   [--locality] [--collective flat|tree] [--agg N] [--json]
+                   [--locality] [--collective flat|tree] [--agg N]
+                   [--sync cone|barrier] [--json]
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
+  distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
+                                             # Jacobi staleness/wait trade-off (JSON)
   distnumpy report wait [--procs P]          # Section 6.1.1 waiting-time table
   distnumpy fig19  [--procs 8,16,...]        # by-node vs by-core (N-body)
   distnumpy machine                          # print the Table 1 machine model
@@ -148,6 +151,7 @@ fn run(cli: &Cli) -> Result<String, String> {
             if let Some(a) = cli.flag("agg") {
                 cfg.aggregation = a.parse().map_err(|_| "bad --agg")?;
             }
+            cfg.sync = SyncMode::parse(cli.flag("sync").unwrap_or("cone")).ok_or("bad --sync")?;
             let (report, baseline) = harness::run_once_full(app, policy, &params, cfg);
             if cli.flag("json").is_some() {
                 let mut o = report.to_json();
@@ -175,6 +179,18 @@ fn run(cli: &Cli) -> Result<String, String> {
             } else {
                 Ok(fig.render_table())
             }
+        }
+        "pipeline" => {
+            let ps = cli.procs_list(&[4, 16, 32, 64]);
+            let ks: Vec<u32> = match cli.flag("ks") {
+                None => vec![1, 2, 4, 8, 16],
+                Some(s) => s
+                    .split(',')
+                    .filter_map(|x| x.trim().parse().ok())
+                    .collect(),
+            };
+            let params = cli.params();
+            Ok(harness::pipelined_sweep(&ps, &ks, &spec, &params).render())
         }
         "report" => {
             if cli.positional.first().map(|s| s.as_str()) != Some("wait") {
@@ -281,6 +297,28 @@ mod tests {
         assert!(out.contains("n_messages"));
         assert!(out.contains("agg_parts"));
         assert!(run(&Cli::parse(&args("run --app jacobi --collective ring")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_with_sync_modes() {
+        for sync in ["cone", "barrier"] {
+            let cmd =
+                format!("run --app jacobi --procs 4 --scale 0.05 --iters 1 --sync {sync} --json");
+            let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+            assert!(out.contains("wait_at_cone"), "{sync}: {out}");
+        }
+        assert!(run(&Cli::parse(&args("run --app jacobi --sync maybe")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn pipeline_sweep_renders_json() {
+        let out = run(&Cli::parse(&args(
+            "pipeline --procs 2 --ks 1,2 --scale 0.05 --iters 2",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("staleness_k"));
+        assert!(out.contains("wait_at_cone"));
     }
 
     #[test]

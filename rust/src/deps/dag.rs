@@ -9,6 +9,7 @@
 //! overhead ablation (`benches/ablation_deps.rs`).
 
 use super::DepSystem;
+use crate::sync::{Cone, ConeSource};
 use crate::types::OpId;
 use crate::ufunc::{Access, OpNode};
 
@@ -18,6 +19,10 @@ pub struct DagDeps {
     accesses: Vec<Vec<Access>>,
     /// Outgoing edges: completed(op) unlocks these.
     succs: Vec<Vec<OpId>>,
+    /// Incoming edges, retained after completion: the backward cone of
+    /// a forced value is walked at wait time, when the epoch has
+    /// already drained ([`ConeSource`]).
+    preds: Vec<Vec<OpId>>,
     indeg: Vec<u32>,
     live: Vec<bool>,
     inserted: Vec<bool>,
@@ -35,6 +40,7 @@ impl DagDeps {
         if self.accesses.len() < need {
             self.accesses.resize_with(need, Vec::new);
             self.succs.resize_with(need, Vec::new);
+            self.preds.resize_with(need, Vec::new);
             self.indeg.resize(need, 0);
             self.live.resize(need, false);
             self.inserted.resize(need, false);
@@ -51,6 +57,32 @@ fn conflict(a: &[Access], b: &[Access]) -> bool {
     a.iter().any(|x| b.iter().any(|y| x.conflicts(y)))
 }
 
+impl ConeSource for DagDeps {
+    /// Exact backward cone: walk the retained predecessor edges from
+    /// the target. Edges survive completion (only `recycle` drops
+    /// them), so the query works at wait time, after the epoch drained.
+    fn cone_of(&self, target: OpId) -> Cone {
+        if target.idx() >= self.inserted.len() || !self.inserted[target.idx()] {
+            // Unknown op (already recycled): be conservative.
+            return Cone::Prefix;
+        }
+        let mut seen = vec![false; self.preds.len()];
+        let mut stack = vec![target];
+        let mut cone = Vec::new();
+        seen[target.idx()] = true;
+        while let Some(id) = stack.pop() {
+            cone.push(id);
+            for &p in &self.preds[id.idx()] {
+                if !seen[p.idx()] {
+                    seen[p.idx()] = true;
+                    stack.push(p);
+                }
+            }
+        }
+        Cone::Exact(cone)
+    }
+}
+
 impl DepSystem for DagDeps {
     fn insert(&mut self, op: &OpNode) {
         // Epoch recycling (mirrors `HeuristicDeps::recycle`): once an
@@ -59,22 +91,31 @@ impl DepSystem for DagDeps {
         if self.pending == 0 && !self.inserted.is_empty() {
             self.accesses.clear();
             self.succs.clear();
+            self.preds.clear();
             self.indeg.clear();
             self.live.clear();
             self.inserted.clear();
         }
         self.ensure(op.id);
         let mut indeg = 0u32;
-        // The O(n) scan the paper's Section 4 complains about.
+        let mut preds = Vec::new();
+        // The O(n) scan the paper's Section 4 complains about. Edges to
+        // *live* nodes gate readiness; predecessor edges additionally
+        // cover completed nodes so the retained graph yields the full
+        // backward cone (a value's cone includes retired work).
         for prev in 0..self.accesses.len() {
-            if !self.live[prev] || prev == op.id.idx() {
+            if !self.inserted[prev] || prev == op.id.idx() {
                 continue;
             }
             if conflict(&self.accesses[prev], &op.accesses) {
-                self.succs[prev].push(op.id);
-                indeg += 1;
+                preds.push(OpId(prev as u32));
+                if self.live[prev] {
+                    self.succs[prev].push(op.id);
+                    indeg += 1;
+                }
             }
         }
+        self.preds[op.id.idx()] = preds;
         self.accesses[op.id.idx()] = op.accesses.clone();
         self.indeg[op.id.idx()] = indeg;
         self.live[op.id.idx()] = true;

@@ -18,6 +18,7 @@
 //! versus O(n) for the full DAG (measured in benches/ablation_deps.rs).
 
 use super::DepSystem;
+use crate::sync::{Cone, ConeSource};
 use crate::types::OpId;
 use crate::ufunc::{Loc, OpNode};
 use crate::util::fxhash::FxHashMap;
@@ -129,6 +130,18 @@ impl HeuristicDeps {
         self.refcount.clear();
         self.spans.clear();
         self.completed.clear();
+    }
+}
+
+impl ConeSource for HeuristicDeps {
+    /// The heuristic stores no graph — that is its whole point
+    /// (Section 5.7.2) — so it answers cone queries with the safe
+    /// over-approximation: everything recorded up to the target.
+    /// Conflict edges always point forward in recording order, so the
+    /// prefix is a superset of the true cone; a wait settled on it can
+    /// only be late, never early.
+    fn cone_of(&self, _target: OpId) -> Cone {
+        Cone::Prefix
     }
 }
 

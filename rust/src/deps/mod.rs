@@ -22,11 +22,15 @@ mod heuristic;
 pub use dag::DagDeps;
 pub use heuristic::HeuristicDeps;
 
+use crate::sync::ConeSource;
 use crate::types::OpId;
 use crate::ufunc::OpNode;
 
-/// Common interface of the dependency systems.
-pub trait DepSystem {
+/// Common interface of the dependency systems. The [`ConeSource`]
+/// supertrait lets the `sync/` engine ask either system for the
+/// backward dependency cone of a forced value — exactly from the DAG,
+/// conservatively from the heuristic.
+pub trait DepSystem: ConeSource {
     /// Insert one recorded operation (in recording order).
     fn insert(&mut self, op: &OpNode);
 

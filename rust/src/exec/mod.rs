@@ -32,6 +32,12 @@ pub trait Backend {
         None
     }
 
+    /// Read a whole staged buffer (gather snapshots) after a flush.
+    fn staged_data(&self, rank: Rank, tag: Tag) -> Option<Vec<f32>> {
+        let _ = (rank, tag);
+        None
+    }
+
     /// Does this backend hold real array data? Data backends return
     /// `true`; the default `false` marks timing-only simulation, where
     /// scalar reads legitimately have no staged value and read as 0.0.
@@ -55,6 +61,14 @@ pub trait Backend {
     fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
         let _ = layout;
         None
+    }
+
+    /// Drop one staging buffer — reference-counted reclamation
+    /// ([`crate::sync::StageTable`]): called the moment a stage's last
+    /// reader (operation or pinned future) retires. Data backends free
+    /// the bytes; the default is a no-op.
+    fn drop_stage(&mut self, rank: Rank, tag: Tag) {
+        let _ = (rank, tag);
     }
 
     /// Drop every staging buffer. Tags are run-unique, so stages are
@@ -149,6 +163,14 @@ impl Backend for NativeBackend {
         }
     }
 
+    fn staged_data(&self, rank: Rank, tag: Tag) -> Option<Vec<f32>> {
+        if self.store.ranks[rank.idx()].has_stage(tag) {
+            Some(self.store.ranks[rank.idx()].stage(tag).to_vec())
+        } else {
+            None
+        }
+    }
+
     fn materializes_data(&self) -> bool {
         true
     }
@@ -163,6 +185,10 @@ impl Backend for NativeBackend {
 
     fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
         Some(self.store.gather(layout))
+    }
+
+    fn drop_stage(&mut self, rank: Rank, tag: Tag) {
+        self.store.ranks[rank.idx()].take_stage(tag);
     }
 
     fn clear_stages(&mut self) {

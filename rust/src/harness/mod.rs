@@ -37,6 +37,11 @@ pub struct RunMetrics {
     /// Wait paid at explicit barriers (forced scalar reads), summed
     /// over ranks (s).
     pub wait_at_barrier: VTime,
+    /// Wait paid at targeted cone settles (forced reads under
+    /// `SyncMode::Cone`), summed over ranks (s).
+    pub wait_at_cone: VTime,
+    /// High-water mark of live staging buffers.
+    pub peak_live_stages: u64,
 }
 
 impl RunMetrics {
@@ -52,6 +57,8 @@ impl RunMetrics {
             agg_parts: report.agg_parts,
             n_epochs: report.n_epochs,
             wait_at_barrier: report.wait_at_barrier,
+            wait_at_cone: report.wait_at_cone,
+            peak_live_stages: report.peak_live_stages,
         }
     }
 
@@ -67,6 +74,8 @@ impl RunMetrics {
         o.push("agg_parts", self.agg_parts.into());
         o.push("n_epochs", self.n_epochs.into());
         o.push("wait_at_barrier", self.wait_at_barrier.into());
+        o.push("wait_at_cone", self.wait_at_cone.into());
+        o.push("peak_live_stages", self.peak_live_stages.into());
         o
     }
 }
@@ -242,6 +251,47 @@ impl FigureData {
     }
 }
 
+/// The staleness/wait trade-off of pipelined convergence checking:
+/// Jacobi (Fig. 17) under `Convergence::Pipelined { every: k }` for
+/// each k — a delta observed k iterations late buys ~iters/k forced
+/// reads instead of iters. One row per (P, k) with the wait metrics of
+/// both synchronization modes (`wait_at_barrier` under the global join,
+/// `wait_at_cone` under the targeted settle), so the chart shows how
+/// much of the barrier cost deferral removes and how much of the rest
+/// the cone wait removes.
+pub fn pipelined_sweep(ps: &[u32], ks: &[u32], spec: &MachineSpec, params: &AppParams) -> Json {
+    use crate::apps::{record_jacobi_with, Convergence};
+    use crate::sched::SyncMode;
+    let mut rows = Vec::new();
+    for &p in ps {
+        for &k in ks {
+            let run = |sync: SyncMode| -> RunReport {
+                let mut cfg = SchedCfg::new(spec.clone(), p);
+                cfg.sync = sync;
+                let mut ctx = Context::sim(cfg, Policy::LatencyHiding);
+                record_jacobi_with(&mut ctx, params, Convergence::Pipelined { every: k });
+                ctx.finish().expect("jacobi completes under latency-hiding")
+            };
+            let barrier = run(SyncMode::Barrier);
+            let cone = run(SyncMode::Cone);
+            let mut o = Json::obj();
+            o.push("p", (p as u64).into());
+            o.push("staleness_k", (k as u64).into());
+            o.push("checks", ((params.iters / k.max(1)) as u64).into());
+            o.push("makespan_barrier", barrier.makespan.into());
+            o.push("makespan_cone", cone.makespan.into());
+            o.push("wait_pct_barrier", barrier.wait_pct().into());
+            o.push("wait_pct_cone", cone.wait_pct().into());
+            o.push("wait_at_barrier", barrier.wait_at_barrier.into());
+            o.push("wait_at_cone", cone.wait_at_cone.into());
+            o.push("n_epochs", cone.n_epochs.into());
+            o.push("peak_live_stages", cone.peak_live_stages.into());
+            rows.push(o);
+        }
+    }
+    Json::Arr(rows)
+}
+
 /// The Section 6.1.1 waiting-time summary at P ranks: for each
 /// communication-bound app, wait% with blocking vs latency-hiding.
 pub fn wait_table(
@@ -409,6 +459,21 @@ mod tests {
         );
         assert!(tree.agg_parts > tree.agg_msgs, "aggregation engaged");
         assert_eq!(flat.agg_msgs, 0, "flat config runs unaggregated");
+    }
+
+    #[test]
+    fn pipelined_sweep_charts_staleness_and_wait() {
+        let spec = MachineSpec::paper();
+        let params = AppParams {
+            scale: 0.1,
+            iters: 8,
+        };
+        let json = pipelined_sweep(&[4], &[1, 4], &spec, &params).render();
+        assert!(json.contains("staleness_k"));
+        assert!(json.contains("wait_at_cone"));
+        assert!(json.contains("wait_at_barrier"));
+        // Two rows: k=1 and k=4.
+        assert_eq!(json.matches("staleness_k").count(), 2);
     }
 
     #[test]

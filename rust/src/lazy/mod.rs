@@ -12,19 +12,22 @@
 //!    [`Context::flush_threshold`];
 //! 3. the program ends — [`Context::flush`] called by the apps at exit.
 //!
-//! ## Epochs and scalar futures
+//! ## Epochs, futures and targeted waits
 //!
 //! A flush is *not* a barrier: every flush executes as one epoch of a
 //! persistent [`ExecState`] — per-rank clocks, NIC frontiers and the
 //! dependency system resume across epochs, so communication initiated in
 //! epoch *k* keeps draining while epoch *k+1* records and computes. The
-//! only global synchronization is *forcing* a scalar: an immediate
-//! [`Context::sum`] barriers every rank (the interpreter is replicated,
-//! §5.5 — every rank needs the value to take the branch), whereas the
-//! deferred forms ([`Context::sum_deferred`],
-//! [`Context::sum_absdiff_deferred`]) return a [`ScalarFuture`] whose
-//! recorded reduction flows through the normal schedule and whose value
-//! — and barrier — materialize only at [`ScalarFuture::wait`].
+//! only synchronization is *forcing* a value — an immediate
+//! [`Context::sum`] or [`Context::gather`], or the deferred forms
+//! ([`Context::sum_deferred`], [`Context::sum_absdiff_deferred`],
+//! [`Context::gather_deferred`]) whose [`ScalarFuture`] /
+//! [`ArrayFuture`] postpone the cost to `.wait()`. Every rank consumes
+//! the forced value (the interpreter is replicated, §5.5), but under
+//! the default [`crate::sync::SyncMode::Cone`] that costs only a settle
+//! of the value's *dependency cone* plus a broadcast of the value back
+//! out ([`crate::sync`]) — not the global clock join of
+//! [`crate::sync::SyncMode::Barrier`].
 //!
 //! ## Error handling
 //!
@@ -39,31 +42,14 @@ use crate::comm::Collective;
 use crate::exec::Backend;
 use crate::layout::ViewSpec;
 use crate::metrics::RunReport;
-use crate::sched::{execute_epoch, ExecState, Policy, SchedCfg, SchedError};
-use crate::types::{BaseId, DType, Rank, Tag};
-use crate::ufunc::{Kernel, OpBuilder};
+use crate::sched::{execute_epoch, ExecState, Policy, SchedCfg, SchedError, SyncMode};
+use crate::types::{BaseId, DType, OpId, Rank, Tag, VTime};
+use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpBuilder, Operand};
+
+pub use crate::sync::{ArrayFuture, ScalarFuture};
 
 /// Default flush threshold (paper: "a user-defined threshold").
 pub const DEFAULT_FLUSH_THRESHOLD: usize = 50_000;
-
-/// A deferred scalar read: the reduction is recorded (and executes with
-/// whatever flush epoch it lands in), but the value is only forced — and
-/// the global barrier only paid — at [`ScalarFuture::wait`]. Staging
-/// buffers are keyed by run-unique tags, so a future stays readable
-/// across later flushes until it is waited on.
-#[must_use = "a deferred read does nothing until .wait(ctx)"]
-#[derive(Clone, Copy, Debug)]
-pub struct ScalarFuture {
-    tag: Tag,
-}
-
-impl ScalarFuture {
-    /// Force the value: flush everything recorded so far, barrier, read.
-    /// Fails if any flush epoch has failed (the context is poisoned).
-    pub fn wait(&self, ctx: &mut Context) -> Result<f64, SchedError> {
-        ctx.wait_scalar(self)
-    }
-}
 
 /// The DistNumPy programming context: array registry + lazy recorder +
 /// persistent execution state + backend.
@@ -95,7 +81,12 @@ pub struct Context {
 impl Context {
     pub fn new(cfg: SchedCfg, policy: Policy, backend: Box<dyn Backend>) -> Self {
         let n = cfg.nprocs as usize;
-        let state = ExecState::new(&cfg);
+        let mut state = ExecState::new(&cfg);
+        // The lazy context owns stage lifetime (it pins future results),
+        // so reference-counted reclamation is safe — and on. Standalone
+        // scheduler runs leave it off: their callers read staged
+        // results out-of-band (see sync/stages.rs).
+        state.stages.reclaim = true;
         Context {
             reg: Registry::new(cfg.nprocs),
             builder: OpBuilder::new(),
@@ -205,9 +196,10 @@ impl Context {
         let tag = self
             .builder
             .reduce(&self.reg, Kernel::PartialSum, &[v], collective);
+        self.state.stages.pin(Rank(0), tag);
         self.array_ops_since_flush += 1;
         self.maybe_flush();
-        ScalarFuture { tag }
+        ScalarFuture::new(tag)
     }
 
     /// Deferred `sum(|a - b|)` — the Jacobi convergence delta, checkable
@@ -217,39 +209,111 @@ impl Context {
         let tag =
             self.builder
                 .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b], collective);
+        self.state.stages.pin(Rank(0), tag);
         self.array_ops_since_flush += 1;
         self.maybe_flush();
-        ScalarFuture { tag }
+        ScalarFuture::new(tag)
     }
 
-    /// Force a deferred scalar: flush, check for poisoning, barrier
-    /// (every rank joins the timeline frontier — the interpreter is
-    /// replicated, so the value gates every rank's control flow), read.
+    /// Synchronize the timeline for a forced read whose results live in
+    /// the given delivery stages, per the configured
+    /// [`crate::sync::SyncMode`]:
+    ///
+    /// * `Barrier` — every rank joins the global clock frontier
+    ///   (`wait_at_barrier`), PR 2's semantics;
+    /// * `Cone` — each delivery rank joins its stage's completion time,
+    ///   the value's dependency cone ([`crate::sync::ConeSource`]: exact
+    ///   under the DAG system, a conservative prefix under the
+    ///   heuristic) joins the cone frontier, and the value rides a
+    ///   broadcast back out to every rank (`wait_at_cone`). A stage
+    ///   with no recorded provenance (already reclaimed — e.g. a future
+    ///   waited twice — or a foreign context) synchronizes nothing: the
+    ///   timeline already settled when the value was first forced, and
+    ///   the read itself errors on data backends.
+    fn settle(&mut self, root: Rank, tags: &[(Rank, Tag)]) {
+        if self.cfg.sync == SyncMode::Barrier {
+            self.state.barrier();
+            return;
+        }
+        let mut writers = Vec::with_capacity(tags.len());
+        for (rank, tag) in tags {
+            match self.state.stages.writer(*rank, *tag) {
+                Some(w) => writers.push((*rank, w)),
+                None => return,
+            }
+        }
+        let mut frontier: VTime = 0.0;
+        let mut target: Option<OpId> = None;
+        for (rank, w) in writers {
+            self.state.join_at(rank, w.done);
+            if w.done >= frontier {
+                frontier = w.done;
+                target = (w.epoch == self.state.n_epochs).then_some(w.op);
+            }
+        }
+        let nprocs = self.cfg.nprocs as usize;
+        // A value produced by an *earlier* epoch has a fully retired
+        // cone: nothing to join beyond the frontier itself. For the
+        // current epoch the dependency system reports the cone; an
+        // over-approximate cone (the heuristic's prefix) may push the
+        // frontier later than the value's completion — conservative,
+        // never early.
+        let cone = match target {
+            Some(op) => {
+                let (ranks, cone_frontier) = crate::sync::resolve_cone(&self.state, op);
+                frontier = frontier.max(cone_frontier);
+                ranks
+            }
+            None => vec![false; nprocs],
+        };
+        crate::sync::settle_cone(
+            &mut self.state,
+            &mut self.builder,
+            self.cfg.collective,
+            root,
+            frontier,
+            &cone,
+        );
+    }
+
+    /// Force a deferred scalar: flush, check for poisoning, settle the
+    /// value's cone (or barrier, per [`crate::sync::SyncMode`]), read.
     /// Returns the real value under a data backend, 0.0 in simulation.
-    /// A data backend with *no* staged value for the future's tag is an
-    /// error (e.g. the future was waited on a different context), never
-    /// a silent 0.0.
+    /// Forcing releases the future's pin on its result stage — the
+    /// buffer reclaims, so a second wait on a data backend errors
+    /// rather than reading stale data. (A future carried to a *different*
+    /// context is detected only when its tag names no stage there; tags
+    /// are per-context counters, so a collision can go unnoticed — keep
+    /// futures with the context that made them.)
     pub fn wait_scalar(&mut self, f: &ScalarFuture) -> Result<f64, SchedError> {
         self.flush();
         if let Some(e) = &self.error {
+            // The poisoned run never delivers; release the pin so the
+            // stage accounting does not leak.
+            self.unpin_all(&[(Rank(0), f.tag)]);
             return Err(e.clone());
         }
-        self.state.barrier();
+        self.settle(Rank(0), &[(Rank(0), f.tag)]);
         self.report = self.state.report();
-        match self.backend.staged_scalar(Rank(0), f.tag) {
+        let value = match self.backend.staged_scalar(Rank(0), f.tag) {
             Some(v) => Ok(v),
             None if !self.backend.materializes_data() => Ok(0.0),
             None => Err(SchedError::Stall(format!(
                 "scalar future {:?} has no staged value on rank 0 \
-                 (waited on the wrong context?)",
+                 (waited on the wrong context, or twice?)",
                 f.tag
             ))),
+        };
+        if self.state.stages.unpin(Rank(0), f.tag) {
+            self.backend.drop_stage(Rank(0), f.tag);
         }
+        value
     }
 
-    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush *and* a
-    /// barrier; equivalent to `self.sum_deferred(v).wait(self)`.
-    /// Fails loudly if any flush epoch failed (poisoned context).
+    /// Trigger 1: read a scalar — `sum(view)`. Forces a flush *and* the
+    /// configured synchronization; equivalent to
+    /// `self.sum_deferred(v).wait(self)`. Fails loudly if any flush
+    /// epoch failed (poisoned context).
     pub fn sum(&mut self, v: &ViewSpec) -> Result<f64, SchedError> {
         let f = self.sum_deferred(v);
         self.wait_scalar(&f)
@@ -261,35 +325,138 @@ impl Context {
         self.wait_scalar(&f)
     }
 
-    /// Trigger 1: gather a whole base to a dense buffer.
+    /// Record a deferred whole-base gather and return its
+    /// [`ArrayFuture`] — the "deferred gathers" of the ROADMAP:
+    /// checkpointing and in-situ analysis pipeline whole-array reads
+    /// through the same cone machinery as scalar futures.
     ///
-    /// The data movement is recorded as a first-class collective — a
-    /// flat fan-in to rank 0 or a ring allgather, per `cfg.collective` —
-    /// so it is dependency-tracked, scheduled and timed like every other
-    /// operation. The dense assembly below then reads the block contents
-    /// through the store oracle (bit-identical to the staged copies the
-    /// collective delivered). A gather is a forced read: it flushes,
-    /// fails on a poisoned context, and barriers. `Ok(None)` means the
-    /// backend holds no real data (simulation).
-    pub fn gather(&mut self, base: BaseId) -> Result<Option<Vec<f32>>, SchedError> {
+    /// The data movement is recorded immediately as a first-class
+    /// collective — a flat fan-in to rank 0 or a ring allgather, per
+    /// `cfg.collective` — so it is dependency-tracked, scheduled and
+    /// timed like every other operation, and its transfers drain behind
+    /// whatever the program records next. Additionally every block is
+    /// snapshotted into a staging buffer on its owner: the dependency
+    /// system orders those copies against later overwrites, so the
+    /// forced array observes the data *as of this record position*
+    /// (sequential semantics) even when later epochs rewrite the base.
+    /// All stages are pinned until the future is forced.
+    pub fn gather_deferred(&mut self, base: BaseId) -> ArrayFuture {
+        let mut tags: Vec<(Rank, Tag)> = Vec::new();
         if self.cfg.nprocs > 1 {
+            let bld = &mut self.builder;
             match self.cfg.collective {
                 Collective::Flat => {
-                    let _ = crate::comm::gather_flat(&mut self.builder, &self.reg, base, Rank(0));
+                    let root = Rank(0);
+                    let delivered = crate::comm::gather_flat(bld, &self.reg, base, root);
+                    for t in delivered.into_iter().flatten() {
+                        tags.push((root, t));
+                    }
                 }
                 Collective::Tree => {
-                    let _ = crate::comm::allgather_ring(&mut self.builder, &self.reg, base);
+                    let per_rank = crate::comm::allgather_ring(bld, &self.reg, base);
+                    for (r, blocks) in per_rank.into_iter().enumerate() {
+                        for t in blocks.into_iter().flatten() {
+                            tags.push((Rank(r as u32), t));
+                        }
+                    }
                 }
             }
-            self.array_ops_since_flush += 1;
         }
+        // Record-position snapshots: one local copy per block, staged
+        // on its owner (its own §5.3 group; pure local compute, so it
+        // is deadlock-free under every policy).
+        self.builder.begin_group();
+        let layout = self.reg.layout(base).clone();
+        let mut snap: Vec<(u64, Rank, Tag)> = Vec::new();
+        for b in 0..layout.nblocks() {
+            let owner = layout.owner(b);
+            let (region, intra) = crate::comm::block_region(&self.reg, base, b);
+            let tag = self.builder.fresh_tag();
+            let elems = region.elems();
+            self.builder.compute(
+                owner,
+                ComputeTask {
+                    kernel: Kernel::Copy,
+                    inputs: vec![Operand::Local(region)],
+                    dst: Dst::Stage(tag),
+                    elems,
+                },
+                vec![Access::read_block(base, b, intra), Access::write_stage(tag)],
+            );
+            snap.push((b, owner, tag));
+        }
+        for &(_, r, t) in &snap {
+            tags.push((r, t));
+        }
+        for (r, t) in &tags {
+            self.state.stages.pin(*r, *t);
+        }
+        // No `array_ops_since_flush` charge: a gather is runtime-internal
+        // data movement with no NumPy counterpart (the sequential array
+        // is already dense), so it must not enter the speedup baseline —
+        // matching `numpy_baseline`'s exclusion of the snapshot copies.
+        self.maybe_flush();
+        ArrayFuture::new(base, tags, snap)
+    }
+
+    /// Force a deferred gather: flush, check for poisoning, settle the
+    /// gather's cone (each delivery rank joins its own arrival; the
+    /// completion rides the value broadcast), assemble the dense array
+    /// from the record-position block snapshots — bit-identical to what
+    /// an immediate gather at the record point would have returned.
+    /// Forcing releases the pins, so the delivery and snapshot stages
+    /// reclaim; a second wait on a data backend errors. `Ok(None)`
+    /// means the backend holds no real data (simulation).
+    pub fn wait_array(&mut self, f: &ArrayFuture) -> Result<Option<Vec<f32>>, SchedError> {
         self.flush();
         if let Some(e) = &self.error {
+            // The poisoned run never delivers; release the pins so the
+            // stage accounting does not leak.
+            self.unpin_all(&f.tags);
             return Err(e.clone());
         }
-        self.state.barrier();
+        self.settle(Rank(0), &f.tags);
         self.report = self.state.report();
-        Ok(self.backend.gather(self.reg.layout(base)))
+        let out = if self.backend.materializes_data() {
+            let layout = self.reg.layout(f.base).clone();
+            let re = layout.row_elems();
+            let mut dense = vec![0.0f32; (layout.rows() * re) as usize];
+            for &(block, rank, tag) in &f.snap {
+                let Some(data) = self.backend.staged_data(rank, tag) else {
+                    self.unpin_all(&f.tags);
+                    return Err(SchedError::Stall(format!(
+                        "gather future for {:?} has no staged snapshot for \
+                         block {block} (waited twice?)",
+                        f.base
+                    )));
+                };
+                let (lo, hi) = layout.block_rows_range(block);
+                dense[(lo * re) as usize..(hi * re) as usize].copy_from_slice(&data);
+            }
+            Some(dense)
+        } else {
+            None
+        };
+        self.unpin_all(&f.tags);
+        Ok(out)
+    }
+
+    /// Release a future's pins, dropping any stage this leaves
+    /// reader-free.
+    fn unpin_all(&mut self, tags: &[(Rank, Tag)]) {
+        for (r, t) in tags {
+            if self.state.stages.unpin(*r, *t) {
+                self.backend.drop_stage(*r, *t);
+            }
+        }
+    }
+
+    /// Trigger 1: gather a whole base to a dense buffer — a forced
+    /// read, equivalent to `self.gather_deferred(base)` followed
+    /// immediately by `.wait()`.
+    pub fn gather(&mut self, base: BaseId) -> Result<Option<Vec<f32>>, SchedError> {
+        let f = self.gather_deferred(base);
+        self.wait_array(&f)
     }
 
     /// Finish the program: final flush, return the accumulated report of
@@ -379,9 +546,15 @@ mod tests {
         assert_eq!(c.flushes, 2);
     }
 
+    fn ctx_sync(p: u32, sync: SyncMode) -> Context {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.sync = sync;
+        Context::sim(cfg, Policy::LatencyHiding)
+    }
+
     #[test]
     fn deferred_sum_postpones_the_barrier() {
-        let mut c = ctx(4);
+        let mut c = ctx_sync(4, SyncMode::Barrier);
         let x = c.zeros(&[64], 4);
         let f = c.sum_deferred(&x);
         c.flush();
@@ -406,11 +579,105 @@ mod tests {
 
     #[test]
     fn immediate_sum_barriers_the_timeline() {
-        let mut c = ctx(4);
+        let mut c = ctx_sync(4, SyncMode::Barrier);
         let x = c.zeros(&[64], 4);
         let _ = c.sum(&x).unwrap();
         let t = c.state.max_clock();
         assert!(c.state.clock.iter().all(|&cl| (cl - t).abs() < 1e-15));
+    }
+
+    /// The tentpole behaviour, in the shape that matters (pipelined
+    /// futures): a value produced epochs ago costs *nothing* to force
+    /// under cone sync — its broadcast arrived long before anyone asks
+    /// — while the barrier it replaces still charges every rank a join
+    /// to the global frontier.
+    #[test]
+    fn cone_wait_replaces_the_global_barrier() {
+        let run = |sync: SyncMode| {
+            let mut c = ctx_sync(4, sync);
+            // Big enough that one epoch's compute dwarfs the value
+            // broadcast's wire latency.
+            let x = c.zeros(&[1 << 14], 64);
+            let f = c.sum_deferred(&x);
+            c.flush();
+            // Several epochs of unrelated work the wait must NOT settle.
+            for _ in 0..10 {
+                c.add(&x.clone(), &x, &x);
+                c.flush();
+            }
+            let v = f.wait(&mut c).unwrap();
+            assert_eq!(v, 0.0, "simulation backends read 0.0");
+            c
+        };
+        let cone = run(SyncMode::Cone);
+        assert_eq!(cone.state.wait_at_barrier, 0.0, "no global join paid");
+        assert_eq!(
+            cone.state.wait_at_cone, 0.0,
+            "an old value's broadcast already arrived: the force is free"
+        );
+        let barrier = run(SyncMode::Barrier);
+        assert!(
+            barrier.state.wait_at_barrier > 0.0,
+            "the global join the cone wait removes was a real cost"
+        );
+    }
+
+    /// Forcing a *fresh* value pays the targeted cost: non-root ranks
+    /// wait for the value's broadcast arrival (`wait_at_cone`), and the
+    /// timeline is NOT equalized — ranks keep their own clocks.
+    #[test]
+    fn fresh_force_pays_cone_wait_without_equalizing_clocks() {
+        let mut c = ctx(4);
+        let x = c.zeros(&[64], 4);
+        let f = c.sum_deferred(&x);
+        let _ = f.wait(&mut c).unwrap();
+        assert!(
+            c.state.wait_at_cone > 0.0,
+            "non-root ranks wait for the value to arrive"
+        );
+        assert_eq!(c.state.wait_at_barrier, 0.0);
+        let t = c.state.max_clock();
+        assert!(
+            c.state.clock.iter().any(|&cl| cl < t),
+            "no global clock join: ranks keep distinct clocks {:?}",
+            c.state.clock
+        );
+    }
+
+    /// Forcing a future consumes its pinned result stage; every other
+    /// read stage of the epoch reclaims as its last reader retires.
+    #[test]
+    fn futures_pin_stages_until_forced() {
+        let mut c = ctx(4);
+        let x = c.zeros(&[64], 4);
+        let f = c.sum_deferred(&x);
+        c.flush();
+        assert!(
+            c.state.stages.writer(Rank(0), f.tag).is_some(),
+            "pinned result survives the flush"
+        );
+        let _ = f.wait(&mut c).unwrap();
+        assert!(
+            c.state.stages.writer(Rank(0), f.tag).is_none(),
+            "forcing reclaims the result stage"
+        );
+        assert!(c.state.stages.dropped > 0, "intermediates reclaimed");
+    }
+
+    /// `gather_deferred` pipelines a whole-array read: recording it does
+    /// not synchronize, forcing it does — through the same cone
+    /// machinery as scalars.
+    #[test]
+    fn deferred_gather_postpones_synchronization() {
+        let mut c = ctx(3);
+        let x = c.zeros(&[24], 4);
+        c.add(&x.clone(), &x, &x);
+        let f = c.gather_deferred(x.base);
+        c.flush();
+        assert_eq!(c.state.wait_at_cone + c.state.wait_at_barrier, 0.0);
+        let got = c.wait_array(&f).unwrap();
+        assert!(got.is_none(), "simulation holds no data");
+        assert!(c.state.wait_at_cone > 0.0, "forcing settles the gather");
     }
 
     /// The headline regression: a naive-policy deadlock must surface as

@@ -13,11 +13,14 @@
 //! This crate is the Layer-3 coordinator of a three-layer stack:
 //!
 //! * **L3 (here)**: the lazy-evaluation runtime — [`array`], [`layout`],
-//!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`], plus the
+//!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`], the
 //!   collective-communication engine [`comm`] (tree/ring collective
 //!   schedules and message aggregation, layered between recording and
-//!   scheduling) — executing over a discrete-event simulated cluster
-//!   ([`cluster`], [`net`]) or with real numerics ([`exec`]).
+//!   scheduling), plus the targeted synchronization engine [`sync`]
+//!   (dependency-cone waits, scalar/array futures and reference-counted
+//!   stage reclamation, layered between [`lazy`] and [`sched`]) —
+//!   executing over a discrete-event simulated cluster ([`cluster`],
+//!   [`net`]) or with real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call
@@ -45,6 +48,7 @@ pub mod net;
 pub mod runtime;
 pub mod sched;
 pub mod summa;
+pub mod sync;
 pub mod types;
 pub mod ufunc;
 pub mod util;

@@ -36,9 +36,20 @@ pub struct RunReport {
     /// [`crate::sched::ExecState`] timeline.
     pub n_epochs: u64,
     /// Wait accumulated at explicit global barriers — the cost of
-    /// *forcing* scalar reads (immediate `sum`/`gather`/future waits),
+    /// *forcing* reads under [`crate::sync::SyncMode::Barrier`],
     /// already included in the per-rank `wait` vectors.
     pub wait_at_barrier: VTime,
+    /// Wait accumulated at targeted cone settles — the cost of forcing
+    /// reads under [`crate::sync::SyncMode::Cone`] (joining the value's
+    /// dependency cone plus riding its broadcast), also included in the
+    /// per-rank `wait` vectors.
+    pub wait_at_cone: VTime,
+    /// Staging buffers alive when the report was taken.
+    pub live_stages: u64,
+    /// High-water mark of live staging buffers — bounded by
+    /// reference-counted reclamation ([`crate::sync::StageTable`])
+    /// where it previously grew with run length.
+    pub peak_live_stages: u64,
 }
 
 impl RunReport {
@@ -90,6 +101,11 @@ impl RunReport {
         self.agg_parts += other.agg_parts;
         self.n_epochs += other.n_epochs;
         self.wait_at_barrier += other.wait_at_barrier;
+        self.wait_at_cone += other.wait_at_cone;
+        // Back-to-back independent runs: leftover live stages add up;
+        // the combined peak is whichever run's was higher.
+        self.live_stages += other.live_stages;
+        self.peak_live_stages = self.peak_live_stages.max(other.peak_live_stages);
     }
 
     /// Wait time of the collective root (rank 0) — the hot spot flat
@@ -134,6 +150,9 @@ impl RunReport {
         o.push("wait_root", self.wait_root().into());
         o.push("n_epochs", self.n_epochs.into());
         o.push("wait_at_barrier", self.wait_at_barrier.into());
+        o.push("wait_at_cone", self.wait_at_cone.into());
+        o.push("live_stages", self.live_stages.into());
+        o.push("peak_live_stages", self.peak_live_stages.into());
         o
     }
 }
@@ -183,6 +202,8 @@ mod tests {
         assert!(s.contains("wait_root"));
         assert!(s.contains("n_epochs"));
         assert!(s.contains("wait_at_barrier"));
+        assert!(s.contains("wait_at_cone"));
+        assert!(s.contains("peak_live_stages"));
     }
 
     #[test]

@@ -191,6 +191,10 @@ impl Backend for PjrtBackend {
         self.native.staged_scalar(rank, tag)
     }
 
+    fn staged_data(&self, rank: Rank, tag: Tag) -> Option<Vec<f32>> {
+        self.native.staged_data(rank, tag)
+    }
+
     fn materializes_data(&self) -> bool {
         true
     }
@@ -205,6 +209,10 @@ impl Backend for PjrtBackend {
 
     fn gather(&self, layout: &Layout) -> Option<Vec<f32>> {
         self.native.gather(layout)
+    }
+
+    fn drop_stage(&mut self, rank: Rank, tag: Tag) {
+        self.native.drop_stage(rank, tag);
     }
 
     fn clear_stages(&mut self) {

@@ -56,6 +56,7 @@ pub(crate) fn run_blocking_epoch(
     let n = cfg.nprocs as usize;
     let xfers = TransferTable::build(ops)?;
     let costs = compute_costs(ops, cfg);
+    st.begin_epoch(ops);
 
     // Per-rank program: indices into `ops`, phased per §5.3 — groups in
     // recording order; within a group sends, then recvs, then computes
@@ -108,6 +109,7 @@ pub(crate) fn run_blocking_epoch(
                 backend.exec_compute(rank, task);
                 st.busy[r] += costs[i];
                 st.clock[r] += costs[i];
+                st.note_retire(op, st.clock[r], backend);
                 ptr[r] += 1;
                 executed += 1;
             }
@@ -126,6 +128,7 @@ pub(crate) fn run_blocking_epoch(
                 let done = res.send_done.unwrap();
                 st.wait[r] += done - t0;
                 st.clock[r] = done;
+                st.note_retire(op, done, backend);
                 ptr[r] += 1;
                 executed += 1;
                 if let Some(rd) = res.recv_done {
@@ -135,6 +138,7 @@ pub(crate) fn run_blocking_epoch(
                         let resume = rd.max(parked_at);
                         st.wait[pr] += resume - parked_at;
                         st.clock[pr] = resume;
+                        st.note_retire(&ops[xfers.info[tag].recv_op.idx()], resume, backend);
                         ptr[pr] += 1;
                         executed += 1;
                         heap.push(TEvent {
@@ -153,6 +157,7 @@ pub(crate) fn run_blocking_epoch(
                     let rd = res.recv_done.unwrap();
                     st.wait[r] += rd - t0;
                     st.clock[r] = rd;
+                    st.note_retire(op, rd, backend);
                     ptr[r] += 1;
                     executed += 1;
                 } else {

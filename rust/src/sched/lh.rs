@@ -99,6 +99,7 @@ impl<'a> Lh<'a> {
 
     /// Mark `op` complete in the dependency system and release dependents.
     fn complete_op(&mut self, op: OpId, t: VTime) {
+        self.st.note_retire(&self.ops[op.idx()], t, &mut *self.backend);
         self.st.deps.complete(op);
         self.remaining[self.ops[op.idx()].rank.idx()] -= 1;
         self.completed += 1;
@@ -243,6 +244,7 @@ pub(crate) fn run_latency_hiding_epoch(
 ) -> Result<(), SchedError> {
     let n = cfg.nprocs as usize;
     let xfers = TransferTable::build(ops)?;
+    st.begin_epoch(ops);
     st.deps.insert_all(ops);
     let initial = st.deps.take_ready();
 

@@ -28,6 +28,7 @@ pub use blocking::run_blocking;
 pub use lh::run_latency_hiding;
 pub use naive::run_naive;
 pub use state::ExecState;
+pub use crate::sync::SyncMode;
 
 use crate::cluster::{MachineSpec, Placement};
 use crate::comm::Collective;
@@ -36,7 +37,7 @@ use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::types::{OpId, Rank, Tag, VTime};
 use crate::util::fxhash::FxHashMap;
-use crate::ufunc::{OpNode, OpPayload, SendSrc};
+use crate::ufunc::{Dst, Kernel, OpNode, OpPayload, SendSrc};
 
 /// Which dependency system backs the scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,6 +91,10 @@ pub struct SchedCfg {
     /// Message-aggregation threshold: maximum constituent transfers per
     /// packed wire message (`comm::aggregate`). `0` or `1` disables.
     pub aggregation: usize,
+    /// How forcing a value synchronizes the timeline: the global clock
+    /// join of PR 2, or the targeted dependency-cone settle of
+    /// [`crate::sync`] (the default).
+    pub sync: SyncMode,
 }
 
 impl SchedCfg {
@@ -102,6 +107,7 @@ impl SchedCfg {
             locality: false,
             collective: Collective::Flat,
             aggregation: 0,
+            sync: SyncMode::Cone,
         }
     }
 }
@@ -196,6 +202,15 @@ pub fn execute_epoch(
 pub fn numpy_baseline(ops: &[OpNode], spec: &MachineSpec) -> VTime {
     let mut t = 0.0;
     for op in ops {
+        // Runtime-internal staging copies (the gather snapshots of
+        // `lazy::Context::gather_deferred`) have no NumPy counterpart —
+        // the sequential array is already dense — so they must not
+        // inflate the speedup denominator.
+        if let OpPayload::Compute(task) = &op.payload {
+            if task.kernel == Kernel::Copy && matches!(task.dst, Dst::Stage(_)) {
+                continue;
+            }
+        }
         if let Some((flops, bytes)) = op.compute_cost() {
             t += spec.compute_time(flops, bytes, 1);
             // Fresh output temporary per ufunc: first-touch cost.

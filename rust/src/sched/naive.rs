@@ -46,6 +46,7 @@ pub(crate) fn run_naive_epoch(
     let n = cfg.nprocs as usize;
     let xfers = TransferTable::build(ops)?;
     let costs = compute_costs(ops, cfg);
+    st.begin_epoch(ops);
     st.deps.insert_all(ops);
 
     st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
@@ -96,6 +97,7 @@ pub(crate) fn run_naive_epoch(
                 backend.exec_compute(rank, task);
                 st.busy[r] += costs[i];
                 st.clock[r] += costs[i];
+                st.note_retire(op, st.clock[r], backend);
                 fifo[r].pop_front();
                 executed += 1;
                 done_ids.push(op.id);
@@ -111,6 +113,7 @@ pub(crate) fn run_naive_epoch(
                 let done = res.send_done.unwrap();
                 st.wait[r] += done - t0;
                 st.clock[r] = done;
+                st.note_retire(op, done, backend);
                 fifo[r].pop_front();
                 executed += 1;
                 done_ids.push(op.id);
@@ -120,6 +123,7 @@ pub(crate) fn run_naive_epoch(
                         let resume = rd.max(parked_at);
                         st.wait[pr] += resume - parked_at;
                         st.clock[pr] = resume;
+                        st.note_retire(&ops[xfers.info[tag].recv_op.idx()], resume, backend);
                         fifo[pr].pop_front(); // the blocked recv
                         executed += 1;
                         done_ids.push(ops[xfers.info[tag].recv_op.idx()].id);
@@ -134,6 +138,7 @@ pub(crate) fn run_naive_epoch(
                     let rd = res.recv_done.unwrap();
                     st.wait[r] += rd - t0;
                     st.clock[r] = rd;
+                    st.note_retire(op, rd, backend);
                     fifo[r].pop_front();
                     executed += 1;
                     done_ids.push(op.id);

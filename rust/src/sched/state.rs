@@ -20,18 +20,30 @@
 //! * the **live dependency system** — operation ids recycle once an
 //!   epoch fully drains (see `deps`), so one system serves the whole run.
 //!
-//! The only remaining global synchronization is an explicit
-//! [`ExecState::barrier`], issued by the lazy context when the program
-//! actually *forces* a scalar (an immediate `sum`, a `ScalarFuture::wait`
-//! or a `gather`): every rank joins the global maximum clock and the
-//! joined idle time is accounted as `wait_at_barrier`. Deferring reads
-//! through futures therefore directly removes barriers from the
-//! timeline — the ablation in `benches/ablation_epochs.rs` measures it.
+//! Forcing a value synchronizes the timeline one of two ways
+//! ([`crate::sync::SyncMode`]): the explicit global [`ExecState::barrier`]
+//! (every rank joins the maximum clock; idle accounted as
+//! `wait_at_barrier`) or — the default since the `sync/` engine — a
+//! *targeted* settle of just the value's dependency cone
+//! ([`crate::sync::settle_cone`]; idle accounted as `wait_at_cone`).
+//! Either way, deferring reads through futures directly removes
+//! synchronization points from the timeline — the ablations in
+//! `benches/ablation_epochs.rs` and `benches/ablation_sync.rs` measure
+//! it.
+//!
+//! To support the targeted settle, the state additionally records **when
+//! each operation retires** (`note_retire`, reported by all three
+//! policies) and runs the reference-counted stage accounting
+//! ([`crate::sync::StageTable`]): a staging buffer drops the moment its
+//! last reader — operation or pinned future — retires.
 
 use crate::deps::DepSystem;
+use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::net::Network;
-use crate::types::{BaseId, VTime};
+use crate::sync::StageTable;
+use crate::types::{BaseId, OpId, Rank, VTime};
+use crate::ufunc::{Loc, OpNode};
 
 use super::SchedCfg;
 
@@ -55,8 +67,20 @@ pub struct ExecState {
     pub last_block: Vec<Option<(BaseId, u64)>>,
     /// Executed flush epochs.
     pub n_epochs: u64,
-    /// Wait accumulated at explicit barriers (forced scalar reads).
+    /// Wait accumulated at explicit global barriers (forced reads under
+    /// [`crate::sync::SyncMode::Barrier`]).
     pub wait_at_barrier: VTime,
+    /// Wait accumulated at targeted cone settles (forced reads under
+    /// [`crate::sync::SyncMode::Cone`]): joining the value's dependency
+    /// cone plus riding its broadcast back out.
+    pub wait_at_cone: VTime,
+    /// Retirement log of the *current* epoch: `(rank, time)` per
+    /// operation id, `NaN` until the operation retires. Reset by
+    /// `begin_epoch`; consumed by the cone-wait machinery.
+    pub retire: Vec<(Rank, VTime)>,
+    /// Reference-counted staging-buffer accounting (liveness, completion
+    /// times, pins) — see [`crate::sync::stages`].
+    pub stages: StageTable,
     // -- accumulated counters (per-epoch deltas folded in by the
     // -- schedulers; byte/message totals live in `net`) --
     pub ops_executed: u64,
@@ -80,6 +104,9 @@ impl ExecState {
             last_block: vec![None; n],
             n_epochs: 0,
             wait_at_barrier: 0.0,
+            wait_at_cone: 0.0,
+            retire: Vec::new(),
+            stages: StageTable::new(),
             ops_executed: 0,
             n_compute: 0,
             n_comm: 0,
@@ -110,6 +137,70 @@ impl ExecState {
         tmax
     }
 
+    /// Join one rank to virtual time `t` on behalf of a targeted cone
+    /// settle; the idle time is charged to per-rank wait *and* to
+    /// `wait_at_cone`. A rank already past `t` is untouched (the value
+    /// was waiting in its buffers). Returns the rank's clock after.
+    pub fn join_at(&mut self, r: Rank, t: VTime) -> VTime {
+        let d = t - self.clock[r.idx()];
+        if d > 0.0 {
+            self.wait[r.idx()] += d;
+            self.wait_at_cone += d;
+            self.clock[r.idx()] = t;
+        }
+        self.clock[r.idx()]
+    }
+
+    /// Start one epoch's retirement bookkeeping: reset the per-op
+    /// retirement log and register every stage *reader* of the batch in
+    /// the stage table (so reclamation can never drop a stage a later
+    /// operation of the same epoch still reads). Called by every policy
+    /// at the top of its epoch run, on the batch it will execute (i.e.
+    /// post-aggregation).
+    pub fn begin_epoch(&mut self, ops: &[OpNode]) {
+        self.retire.clear();
+        self.retire.resize(ops.len(), (Rank(0), f64::NAN));
+        for op in ops {
+            self.retire[op.id.idx()].0 = op.rank;
+            for a in &op.accesses {
+                if let Loc::Stage(tag) = a.loc {
+                    if !a.write {
+                        self.stages.register_reader(op.rank, tag);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record that `op` retired at virtual time `t` — called by all
+    /// three policies the moment an operation completes. Stage-writing
+    /// retirements materialize their buffers (capturing the completion
+    /// time the cone-wait settles on); stage-reading retirements repay
+    /// the reference counts, dropping buffers whose last reader this
+    /// was.
+    pub fn note_retire(&mut self, op: &OpNode, t: VTime, backend: &mut dyn Backend) {
+        if let Some(slot) = self.retire.get_mut(op.id.idx()) {
+            *slot = (op.rank, t);
+        }
+        for a in &op.accesses {
+            let Loc::Stage(tag) = a.loc else { continue };
+            if a.write {
+                self.stages.materialized(op.rank, tag, t, self.n_epochs, op.id);
+            } else if self.stages.reader_retired(op.rank, tag) {
+                backend.drop_stage(op.rank, tag);
+            }
+        }
+    }
+
+    /// Rank and retirement time of an operation of the current epoch,
+    /// if it has retired.
+    pub fn retired(&self, id: OpId) -> Option<(Rank, VTime)> {
+        match self.retire.get(id.idx()) {
+            Some(&(rank, t)) if !t.is_nan() => Some((rank, t)),
+            _ => None,
+        }
+    }
+
     /// Snapshot the continuous timeline as a [`RunReport`]: the makespan
     /// is the *latest clock*, not a sum of per-flush makespans — epochs
     /// overlap wherever the schedules allow it.
@@ -129,6 +220,9 @@ impl ExecState {
         rep.agg_parts = self.agg_parts;
         rep.n_epochs = self.n_epochs;
         rep.wait_at_barrier = self.wait_at_barrier;
+        rep.wait_at_cone = self.wait_at_cone;
+        rep.live_stages = self.stages.live;
+        rep.peak_live_stages = self.stages.peak_live;
         rep
     }
 
@@ -172,6 +266,72 @@ mod tests {
         assert_eq!(rep.makespan, 5.0);
         assert_eq!(rep.n_epochs, 3);
         assert_eq!(rep.ops_executed, 7);
+    }
+
+    #[test]
+    fn join_at_accounts_cone_wait_and_never_rewinds() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![1.0, 5.0];
+        st.join_at(Rank(0), 3.0);
+        st.join_at(Rank(1), 3.0);
+        assert_eq!(st.clock, vec![3.0, 5.0], "fast rank untouched");
+        assert_eq!(st.wait, vec![2.0, 0.0]);
+        assert!((st.wait_at_cone - 2.0).abs() < 1e-12);
+        assert_eq!(st.wait_at_barrier, 0.0);
+    }
+
+    #[test]
+    fn retire_log_and_stage_lifecycle() {
+        use crate::exec::SimBackend;
+        use crate::types::{OpId, Tag};
+        use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpNode, OpPayload, Operand};
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 1);
+        let mut st = ExecState::new(&cfg);
+        st.stages.reclaim = true;
+        st.n_epochs = 1;
+        let writer = OpNode {
+            id: OpId(0),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::PartialSum,
+                inputs: vec![Operand::Staged(Tag(99))],
+                dst: Dst::Stage(Tag(7)),
+                elems: 1,
+            }),
+            accesses: vec![Access::write_stage(Tag(7))],
+        };
+        let reader = OpNode {
+            id: OpId(1),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::AccumSum,
+                inputs: vec![Operand::Staged(Tag(7))],
+                dst: Dst::Stage(Tag(8)),
+                elems: 1,
+            }),
+            accesses: vec![Access::read_stage(Tag(7)), Access::write_stage(Tag(8))],
+        };
+        st.begin_epoch(&[writer.clone(), reader.clone()]);
+        assert!(st.retired(OpId(0)).is_none(), "nothing retired yet");
+        let mut be = SimBackend;
+        st.note_retire(&writer, 1.5, &mut be);
+        assert_eq!(st.retired(OpId(0)), Some((Rank(0), 1.5)));
+        let w = st.stages.writer(Rank(0), Tag(7)).unwrap();
+        assert_eq!(w.done, 1.5);
+        assert_eq!(w.epoch, 1);
+        st.note_retire(&reader, 2.0, &mut be);
+        assert!(
+            st.stages.writer(Rank(0), Tag(7)).is_none(),
+            "last reader retired: the stage reclaimed"
+        );
+        assert!(
+            st.stages.writer(Rank(0), Tag(8)).is_some(),
+            "the unread result persists"
+        );
+        assert_eq!(st.stages.dropped, 1);
     }
 
     #[test]

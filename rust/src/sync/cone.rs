@@ -1,0 +1,153 @@
+//! Dependency-cone extraction — what a targeted wait actually settles.
+//!
+//! A forced value depends on a *backward cone* of operations: the
+//! transitive predecessors of the operation that produced it. Joining
+//! only that cone's ranks at the cone's completion frontier — instead of
+//! joining every rank to the global clock frontier — is the whole point
+//! of the `sync/` engine (Eijkhout's task-graph-transformation framing,
+//! arXiv:1811.05077: a wait is a graph transformation local to the
+//! value's cone, not a program-wide barrier).
+//!
+//! Both dependency systems answer the cone query through one trait,
+//! with the fidelity they can afford:
+//!
+//! * [`crate::deps::DagDeps`] keeps the full conflict graph, so it walks
+//!   retained predecessor edges and returns the **exact** cone;
+//! * [`crate::deps::HeuristicDeps`] — the paper's point is precisely
+//!   that it stores *no* graph — answers with the **conservative
+//!   over-approximation** [`Cone::Prefix`]: every operation recorded up
+//!   to and including the target. Insertion order bounds the true cone
+//!   from above (conflict edges always point forward in recording
+//!   order), so the prefix can only *delay* a wait, never settle it too
+//!   early — safe, at the cost of joining more ranks than strictly
+//!   necessary within the producing epoch. Values produced by *earlier*
+//!   epochs (the pipelined-futures case that matters) bypass the cone
+//!   query entirely: their whole cone has retired, so the frontier is
+//!   just the recorded completion time.
+
+use crate::types::OpId;
+
+/// A backward dependency cone, as precisely as the dependency system
+/// can report it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Cone {
+    /// Exactly the transitive predecessors of the target (target
+    /// included) — the full-DAG answer.
+    Exact(Vec<OpId>),
+    /// Every operation with an id ≤ the target's — the heuristic's
+    /// conservative over-approximation (ids follow recording order, so
+    /// this is a superset of the exact cone).
+    Prefix,
+}
+
+/// How a dependency system reports the backward cone of an operation it
+/// has seen this epoch. Supertrait of [`crate::deps::DepSystem`], so the
+/// scheduler's boxed system answers cone queries without downcasting.
+pub trait ConeSource {
+    /// The backward cone of `target` among the operations inserted this
+    /// epoch. Implementations may over-approximate (up to
+    /// [`Cone::Prefix`]) but must never under-approximate.
+    fn cone_of(&self, target: OpId) -> Cone;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deps::{DagDeps, DepSystem, HeuristicDeps};
+    use crate::types::BaseId;
+    use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpNode, OpPayload, Operand, Region};
+    use crate::types::{Rank, Tag};
+
+    fn op(id: u32, accesses: Vec<Access>) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::Add,
+                inputs: vec![Operand::Local(Region::scalar())],
+                dst: Dst::Stage(Tag(u64::MAX)),
+                elems: 1,
+            }),
+            accesses,
+        }
+    }
+
+    /// Two independent chains; the exact cone of one chain's tail must
+    /// exclude the other chain entirely, while the heuristic answers
+    /// with the safe prefix.
+    #[test]
+    fn dag_cone_is_exact_heuristic_is_prefix() {
+        let a = BaseId(0);
+        let b = BaseId(1);
+        let ops = vec![
+            op(0, vec![Access::write_block(a, 0, (0, 10))]),
+            op(1, vec![Access::write_block(b, 0, (0, 10))]),
+            op(2, vec![Access::read_block(a, 0, (0, 10))]),
+            op(3, vec![Access::read_block(b, 0, (0, 10))]),
+        ];
+        let mut dag = DagDeps::new();
+        let mut heu = HeuristicDeps::new();
+        for o in &ops {
+            dag.insert(o);
+            heu.insert(o);
+        }
+        match dag.cone_of(OpId(2)) {
+            Cone::Exact(mut ids) => {
+                ids.sort();
+                assert_eq!(ids, vec![OpId(0), OpId(2)], "chain B excluded");
+            }
+            other => panic!("dag must answer exactly, got {other:?}"),
+        }
+        assert_eq!(heu.cone_of(OpId(2)), Cone::Prefix);
+    }
+
+    /// The exact cone is transitive: w -> r -> w chains pull in every
+    /// ancestor, not just direct predecessors.
+    #[test]
+    fn dag_cone_is_transitive() {
+        let a = BaseId(0);
+        let ops = vec![
+            op(0, vec![Access::write_block(a, 0, (0, 10))]),
+            op(1, vec![Access::write_block(a, 0, (0, 10))]),
+            op(2, vec![Access::read_block(a, 0, (0, 10))]),
+        ];
+        let mut dag = DagDeps::new();
+        for o in &ops {
+            dag.insert(o);
+        }
+        match dag.cone_of(OpId(2)) {
+            Cone::Exact(mut ids) => {
+                ids.sort();
+                assert_eq!(ids, vec![OpId(0), OpId(1), OpId(2)]);
+            }
+            other => panic!("expected exact cone, got {other:?}"),
+        }
+    }
+
+    /// The cone survives completion: cone queries happen at wait time,
+    /// after the epoch drained.
+    #[test]
+    fn dag_cone_survives_drain() {
+        let a = BaseId(0);
+        let ops = vec![
+            op(0, vec![Access::write_block(a, 0, (0, 10))]),
+            op(1, vec![Access::read_block(a, 0, (0, 10))]),
+        ];
+        let mut dag = DagDeps::new();
+        for o in &ops {
+            dag.insert(o);
+        }
+        for id in [OpId(0), OpId(1)] {
+            dag.take_ready();
+            dag.complete(id);
+        }
+        match dag.cone_of(OpId(1)) {
+            Cone::Exact(mut ids) => {
+                ids.sort();
+                assert_eq!(ids, vec![OpId(0), OpId(1)]);
+            }
+            other => panic!("expected exact cone post-drain, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Targeted synchronization engine — dependency-cone waits, array
+//! futures and stage reclamation.
+//!
+//! The paper's thesis is "aggressively initiate communication, lazily
+//! wait" — yet through PR 2 every *forced* value still joined all ranks
+//! to the global clock frontier ([`crate::sched::ExecState::barrier`]),
+//! so one scalar read paid for communication it never depended on. This
+//! module replaces that global join with a **targeted** one:
+//!
+//! 1. Every operation's retirement time is recorded in the execution
+//!    state ([`crate::sched::ExecState::note_retire`], fed by all three
+//!    policies); stage-writing retirements also land in the
+//!    reference-counted [`stages::StageTable`].
+//! 2. Forcing a value extracts the **backward dependency cone** of the
+//!    operation that produced it — exactly from [`crate::deps::DagDeps`],
+//!    conservatively from [`crate::deps::HeuristicDeps`], both behind
+//!    the [`cone::ConeSource`] trait.
+//! 3. [`settle_cone`] joins only the cone's ranks at the cone's
+//!    completion frontier, then rides a broadcast of the value back out
+//!    to every rank through the persistent [`crate::net::Network`] —
+//!    the binomial shape of [`crate::comm::broadcast_tree`] (or a flat
+//!    fan-out under [`crate::comm::Collective::Flat`]). The idle time
+//!    each rank pays is accounted as `wait_at_cone`, alongside the old
+//!    `wait_at_barrier` of the global-join path.
+//!
+//! Where the old barrier equalized every clock, a cone wait leaves the
+//! ranks wherever the broadcast arrival put them: unrelated transfers
+//! keep draining and unrelated compute keeps its head start. The value
+//! read is **bit-identical** either way — the reduction captured its
+//! operands at record position; only the timing differs
+//! (`rust/tests/props.rs` asserts it across all three policies and both
+//! dependency systems, `benches/ablation_sync.rs` measures the win).
+//!
+//! [`ScalarFuture`] and [`ArrayFuture`] are the two deferred-read
+//! handles: a scalar reduction and a whole-array gather
+//! ([`crate::lazy::Context::gather_deferred`] — checkpointing, in-situ
+//! analysis) pipelining through the same machinery. Both pin their
+//! staging buffers in the [`stages::StageTable`] until forced, which is
+//! what lets reclamation drop every *other* stage the moment its last
+//! reader retires (DESIGN.md §4's unbounded-accretion fix).
+
+pub mod cone;
+pub mod stages;
+
+pub use cone::{Cone, ConeSource};
+pub use stages::{StageTable, StageWriter};
+
+use crate::comm::{bcast_rounds, Collective, SCALAR_BYTES};
+use crate::sched::ExecState;
+use crate::types::{BaseId, OpId, Rank, Tag, VTime};
+use crate::ufunc::OpBuilder;
+
+/// A deferred scalar read: the reduction is recorded (and executes with
+/// whatever flush epoch it lands in), but the value is only forced — and
+/// the (targeted) synchronization only paid — at [`ScalarFuture::wait`].
+/// The result stage is pinned until then, so the future stays readable
+/// across later flush epochs while every unpinned stage reclaims.
+#[must_use = "a deferred read does nothing until .wait(ctx)"]
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarFuture {
+    pub(crate) tag: Tag,
+}
+
+impl ScalarFuture {
+    pub(crate) fn new(tag: Tag) -> Self {
+        ScalarFuture { tag }
+    }
+
+    /// Force the value: flush everything recorded so far, settle the
+    /// value's dependency cone (or the global barrier, under
+    /// [`SyncMode::Barrier`]), read. Fails if any flush epoch has
+    /// failed (the context is poisoned). Forcing consumes the pinned
+    /// result stage: a second wait on a data backend is an error.
+    pub fn wait(&self, ctx: &mut crate::lazy::Context) -> Result<f64, crate::sched::SchedError> {
+        ctx.wait_scalar(self)
+    }
+}
+
+/// A deferred whole-array read ([`crate::lazy::Context::gather_deferred`]):
+/// the gather collective is recorded immediately — its transfers drain
+/// with the normal flush flow — and the dense result materializes at
+/// [`ArrayFuture::wait`], which settles only the gather's cone instead
+/// of barriering the timeline. Delivery stages are pinned until then.
+#[must_use = "a deferred gather does nothing until .wait(ctx)"]
+#[derive(Clone, Debug)]
+pub struct ArrayFuture {
+    pub(crate) base: BaseId,
+    /// Every stage the future pins and settles on: the collective's
+    /// per-destination deliveries (root-only under the flat schedule,
+    /// every rank under the ring) plus the per-block owner snapshots.
+    pub(crate) tags: Vec<(Rank, Tag)>,
+    /// Per-block owner snapshots `(block, rank, tag)` — staged copies
+    /// taken at record position, which the dense assembly reads so the
+    /// forced array reflects the data as of `gather_deferred`, not
+    /// whatever later epochs wrote into the base.
+    pub(crate) snap: Vec<(u64, Rank, Tag)>,
+}
+
+impl ArrayFuture {
+    pub(crate) fn new(base: BaseId, tags: Vec<(Rank, Tag)>, snap: Vec<(u64, Rank, Tag)>) -> Self {
+        ArrayFuture { base, tags, snap }
+    }
+
+    /// Force the gather: flush, settle the cone, assemble the dense
+    /// array (`Ok(None)` in pure simulation). Fails on a poisoned
+    /// context.
+    pub fn wait(
+        &self,
+        ctx: &mut crate::lazy::Context,
+    ) -> Result<Option<Vec<f32>>, crate::sched::SchedError> {
+        ctx.wait_array(self)
+    }
+}
+
+/// How forcing a value synchronizes the timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// PR 2's global join: every rank meets the maximum clock
+    /// (`wait_at_barrier`). Kept as the ablation baseline.
+    Barrier,
+    /// Targeted: join the value's dependency cone at its completion
+    /// frontier, broadcast the value back out (`wait_at_cone`).
+    Cone,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s {
+            "barrier" => Some(SyncMode::Barrier),
+            "cone" => Some(SyncMode::Cone),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve a cone reported by the dependency system against the current
+/// epoch's retirement log: which ranks participated, and when the cone
+/// finished. Unretired cone members (only possible on a torn, poisoned
+/// epoch) are skipped.
+pub fn resolve_cone(st: &ExecState, target: OpId) -> (Vec<bool>, VTime) {
+    let nprocs = st.clock.len();
+    let mut ranks = vec![false; nprocs];
+    let mut frontier: VTime = 0.0;
+    let mut visit = |id: OpId| {
+        if let Some((rank, t)) = st.retired(id) {
+            ranks[rank.idx()] = true;
+            frontier = frontier.max(t);
+        }
+    };
+    match st.deps.cone_of(target) {
+        Cone::Exact(ids) => ids.into_iter().for_each(&mut visit),
+        Cone::Prefix => (0..=target.idx() as u32).map(OpId).for_each(&mut visit),
+    }
+    (ranks, frontier)
+}
+
+/// The targeted settle: join the cone's ranks at the cone's completion
+/// `frontier`, then broadcast the value from `root` to every rank
+/// through the persistent network — binomial rounds under
+/// [`Collective::Tree`] (the shape of [`crate::comm::broadcast_tree`]),
+/// a flat fan-out under [`Collective::Flat`]. Every join is accounted
+/// as `wait_at_cone`. The broadcast messages occupy real NIC frontiers
+/// (and count as wire traffic), so a congested ingress delays the
+/// value's arrival exactly as it would a data transfer. Returns the
+/// latest arrival.
+///
+/// Note on the cone-rank joins: while the replicated interpreter
+/// (§5.5) broadcasts to *every* rank, each non-root rank's broadcast
+/// arrival is ≥ the frontier, so the cone joins are subsumed in the
+/// final clocks — what the cone query observably contributes today is
+/// the *frontier itself* (the heuristic's over-approximate prefix can
+/// only push it later than the exact DAG cone, never earlier). The
+/// rank set is kept because partial forces (a future consumed by a
+/// subset of ranks — see ROADMAP) settle the cone without the global
+/// broadcast, where the distinction becomes load-bearing.
+pub fn settle_cone(
+    st: &mut ExecState,
+    bld: &mut OpBuilder,
+    collective: Collective,
+    root: Rank,
+    frontier: VTime,
+    cone_ranks: &[bool],
+) -> VTime {
+    let p = st.clock.len() as u32;
+    // The cone's ranks cannot observe the value before the cone is
+    // complete; the root holds the value at the frontier.
+    for r in 0..p {
+        if cone_ranks[r as usize] {
+            st.join_at(Rank(r), frontier);
+        }
+    }
+    st.join_at(root, frontier);
+    if p == 1 {
+        return frontier;
+    }
+    // Ride the value back out. Arrival times compound hop by hop; a
+    // forwarding rank's NIC can only inject once its own copy arrived.
+    let rank_of = |vid: u32| Rank((root.0 + vid) % p);
+    let mut arrival: Vec<VTime> = vec![frontier; p as usize];
+    let hop = |st: &mut ExecState, bld: &mut OpBuilder, from: Rank, to: Rank, t0: VTime| {
+        let tag = bld.fresh_tag();
+        st.net.post_recv(t0, to, tag);
+        let ps = st.net.post_send(t0, from, to, tag, SCALAR_BYTES);
+        ps.recv_done.expect("both halves posted")
+    };
+    match collective {
+        Collective::Tree => {
+            for round in bcast_rounds(p) {
+                for (vf, vt) in round {
+                    let (from, to) = (rank_of(vf), rank_of(vt));
+                    let t0 = arrival[vf as usize];
+                    arrival[vt as usize] = hop(st, bld, from, to, t0);
+                }
+            }
+        }
+        Collective::Flat => {
+            for vid in 1..p {
+                arrival[vid as usize] = hop(st, bld, root, rank_of(vid), frontier);
+            }
+        }
+    }
+    let mut latest = frontier;
+    for vid in 1..p {
+        let r = rank_of(vid);
+        st.join_at(r, arrival[vid as usize]);
+        latest = latest.max(arrival[vid as usize]);
+    }
+    latest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineSpec;
+    use crate::sched::SchedCfg;
+
+    fn state(p: u32) -> ExecState {
+        ExecState::new(&SchedCfg::new(MachineSpec::tiny(), p))
+    }
+
+    #[test]
+    fn settle_joins_cone_and_broadcast_only() {
+        let mut st = state(4);
+        st.clock = vec![5.0, 1.0, 9.0, 1.0];
+        let mut bld = OpBuilder::new();
+        // Cone = {0, 1}, frontier 4.0: rank 1 joins the frontier; rank 2
+        // (ahead, outside the cone) is never dragged back or forward to
+        // anyone else's clock.
+        let cone = vec![true, true, false, false];
+        let latest = settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 4.0, &cone);
+        assert!(st.clock[0] >= 5.0, "root already past the frontier");
+        assert!(st.clock[1] >= 4.0, "cone rank joined the frontier");
+        assert_eq!(st.clock[2], 9.0, "non-cone rank keeps its head start");
+        assert!(st.clock[3] > 1.0, "broadcast arrival reached rank 3");
+        assert!(st.clock[3] < 9.0, "no global join to the max clock");
+        assert!(st.wait_at_cone > 0.0);
+        assert_eq!(st.wait_at_barrier, 0.0, "no global barrier was paid");
+        assert!(latest >= 4.0);
+    }
+
+    #[test]
+    fn settle_is_cheaper_than_barrier_when_value_is_old() {
+        // The pipelined-futures case: the value finished long ago
+        // (frontier 1.0) while clocks ran ahead. The cone settle costs
+        // (almost) nothing; a barrier would charge every rank up to the
+        // maximum clock.
+        let clocks = vec![30.0, 20.0, 40.0, 25.0];
+        let mut st = state(4);
+        st.clock = clocks.clone();
+        let mut bld = OpBuilder::new();
+        settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 1.0, &[false; 4]);
+        let cone_wait = st.wait_at_cone;
+
+        let mut stb = state(4);
+        stb.clock = clocks;
+        stb.barrier();
+        assert!(
+            cone_wait < stb.wait_at_barrier,
+            "cone {cone_wait} must undercut barrier {}",
+            stb.wait_at_barrier
+        );
+        assert_eq!(st.clock[2], 40.0, "fast rank untouched");
+    }
+
+    #[test]
+    fn flat_and_tree_broadcasts_deliver_everyone() {
+        for collective in [Collective::Flat, Collective::Tree] {
+            let mut st = state(8);
+            let mut bld = OpBuilder::new();
+            let latest = settle_cone(&mut st, &mut bld, collective, Rank(0), 1.0, &[false; 8]);
+            assert!(latest > 1.0, "{collective:?}: arrivals take wire time");
+            for r in 0..8 {
+                assert!(
+                    st.clock[r] >= 1.0,
+                    "{collective:?}: rank {r} must hold the value"
+                );
+            }
+            assert_eq!(st.net.n_transfers, 7, "{collective:?}: P-1 messages");
+        }
+    }
+
+    #[test]
+    fn single_rank_settles_at_frontier() {
+        let mut st = state(1);
+        let mut bld = OpBuilder::new();
+        let t = settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 2.5, &[true]);
+        assert_eq!(t, 2.5);
+        assert_eq!(st.clock[0], 2.5);
+    }
+
+    #[test]
+    fn sync_mode_parse() {
+        assert_eq!(SyncMode::parse("barrier"), Some(SyncMode::Barrier));
+        assert_eq!(SyncMode::parse("cone"), Some(SyncMode::Cone));
+        assert_eq!(SyncMode::parse("x"), None);
+    }
+}

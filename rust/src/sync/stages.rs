@@ -1,0 +1,288 @@
+//! Reference-counted staging buffers — stage reclamation.
+//!
+//! Tags are run-unique (see [`crate::ufunc::OpBuilder`]), so staging
+//! buffers are never overwritten and — before this module — were never
+//! *dropped* either: DESIGN.md §4 documented the resulting unbounded
+//! stage accretion on long data-backed runs. The [`StageTable`] fixes it
+//! with plain reference counting over information the recorded stream
+//! already carries:
+//!
+//! * every operation that **reads** a stage (`Access::read_stage`) is
+//!   registered as a reader when its epoch begins;
+//! * every operation that **writes** a stage materializes it when the
+//!   operation retires (which also records the stage's completion time —
+//!   the datum the cone-wait machinery in [`crate::sync`] settles on);
+//! * when the last reader retires, the stage drops — unless a live
+//!   future has **pinned** it, in which case it drops at
+//!   [`StageTable::unpin`] (the future's `wait`).
+//!
+//! A stage with *no* registered readers (a delivered gather block, a
+//! test oracle's transfer target) is a result, not an intermediate: it
+//! is kept until something claims it. Only stages that were read — halo
+//! fragments, reduction partials, collective forwarding hops — reclaim,
+//! which is exactly the population that grows with run length.
+//!
+//! Stages are keyed by `(rank, tag)`: the flat reduction fan-in reuses
+//! one tag for the sender's partial and the root's received copy, which
+//! are distinct buffers on distinct ranks.
+
+use crate::types::{Rank, Tag, VTime};
+use crate::util::fxhash::FxHashMap;
+
+/// What is known about one staging buffer.
+#[derive(Clone, Copy, Debug)]
+struct StageEntry {
+    /// Outstanding reader operations (registered at epoch start,
+    /// repaid as they retire).
+    readers: u32,
+    /// The writing operation has retired: the buffer exists and `done`
+    /// is meaningful.
+    materialized: bool,
+    /// Virtual time the writer retired (the stage's completion time).
+    done: VTime,
+    /// Epoch the writer retired in (`ExecState::n_epochs` at the time).
+    epoch: u64,
+    /// The writer's operation id *within that epoch* — valid for cone
+    /// extraction only while `epoch` is still the live epoch.
+    op: crate::types::OpId,
+}
+
+/// A materialized stage's provenance, as the cone-wait machinery needs
+/// it: when the value was done, which epoch produced it, and which
+/// operation-node wrote it.
+#[derive(Clone, Copy, Debug)]
+pub struct StageWriter {
+    pub done: VTime,
+    pub epoch: u64,
+    pub op: crate::types::OpId,
+}
+
+/// Reference-counted staging-buffer accounting, shared by every backend
+/// (the table tracks *liveness*; backends own the bytes).
+#[derive(Default)]
+pub struct StageTable {
+    entries: FxHashMap<(Rank, Tag), StageEntry>,
+    /// Stages pinned by live futures (pins may precede materialization:
+    /// a deferred read pins its result tag at record time).
+    pinned: FxHashMap<(Rank, Tag), u32>,
+    /// Whether stages actually reclaim. Stage *lifetime* is owned by
+    /// the lazy context — it knows which stages futures pin — so
+    /// [`crate::lazy::Context`] enables this; standalone scheduler runs
+    /// (`sched::execute`, raw epoch drivers) keep every stage, since
+    /// their callers read staged results out-of-band (test oracles).
+    /// Completion-time bookkeeping happens either way.
+    pub reclaim: bool,
+    /// Currently materialized stages.
+    pub live: u64,
+    /// High-water mark of `live` — the §4 memory-note metric.
+    pub peak_live: u64,
+    /// Stages ever materialized.
+    pub created: u64,
+    /// Stages reclaimed (last reader or last pin released).
+    pub dropped: u64,
+}
+
+impl StageTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one reader of `(rank, tag)` — called for every
+    /// `read_stage` access of an epoch's batch before execution starts,
+    /// so a stage can never drop while a later operation of the same
+    /// epoch still needs it.
+    pub fn register_reader(&mut self, rank: Rank, tag: Tag) {
+        let e = self.entries.entry((rank, tag)).or_insert(StageEntry {
+            readers: 0,
+            materialized: false,
+            done: 0.0,
+            epoch: 0,
+            op: crate::types::OpId(0),
+        });
+        e.readers += 1;
+    }
+
+    /// The writer of `(rank, tag)` retired at `done` in `epoch` as
+    /// operation `op`: the stage is now materialized. Under the lazy
+    /// context tags are run-unique, so each stage materializes once;
+    /// standalone batches built by independent `OpBuilder`s may reuse
+    /// tags across epochs, in which case the new buffer simply replaces
+    /// the old one (no double-counting).
+    pub fn materialized(
+        &mut self,
+        rank: Rank,
+        tag: Tag,
+        done: VTime,
+        epoch: u64,
+        op: crate::types::OpId,
+    ) {
+        let e = self.entries.entry((rank, tag)).or_insert(StageEntry {
+            readers: 0,
+            materialized: false,
+            done: 0.0,
+            epoch: 0,
+            op: crate::types::OpId(0),
+        });
+        if !e.materialized {
+            e.materialized = true;
+            self.live += 1;
+            self.created += 1;
+            self.peak_live = self.peak_live.max(self.live);
+        }
+        e.done = done;
+        e.epoch = epoch;
+        e.op = op;
+    }
+
+    /// A reader of `(rank, tag)` retired. Returns `true` when this was
+    /// the last reader and no future pins the stage — the caller must
+    /// then drop the backend buffer.
+    pub fn reader_retired(&mut self, rank: Rank, tag: Tag) -> bool {
+        let key = (rank, tag);
+        let Some(e) = self.entries.get_mut(&key) else {
+            return false;
+        };
+        debug_assert!(e.readers > 0, "reader underflow on ({rank:?},{tag:?})");
+        e.readers -= 1;
+        if self.reclaim && e.readers == 0 && e.materialized && !self.pinned.contains_key(&key) {
+            self.entries.remove(&key);
+            self.live -= 1;
+            self.dropped += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Pin `(rank, tag)` on behalf of a live future: the stage must
+    /// survive until [`StageTable::unpin`], whatever its reader count.
+    pub fn pin(&mut self, rank: Rank, tag: Tag) {
+        *self.pinned.entry((rank, tag)).or_insert(0) += 1;
+    }
+
+    /// Release one pin. Returns `true` when the stage is now
+    /// reclaimable (materialized, no readers, no remaining pins) — the
+    /// caller must then drop the backend buffer.
+    pub fn unpin(&mut self, rank: Rank, tag: Tag) -> bool {
+        let key = (rank, tag);
+        match self.pinned.get_mut(&key) {
+            None => return false,
+            Some(n) => {
+                *n -= 1;
+                if *n == 0 {
+                    self.pinned.remove(&key);
+                } else {
+                    return false;
+                }
+            }
+        }
+        if self.reclaim {
+            if let Some(e) = self.entries.get(&key) {
+                if e.materialized && e.readers == 0 {
+                    self.entries.remove(&key);
+                    self.live -= 1;
+                    self.dropped += 1;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Provenance of a materialized stage, if it is still tracked.
+    pub fn writer(&self, rank: Rank, tag: Tag) -> Option<StageWriter> {
+        self.entries.get(&(rank, tag)).and_then(|e| {
+            e.materialized.then_some(StageWriter {
+                done: e.done,
+                epoch: e.epoch,
+                op: e.op,
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::OpId;
+
+    fn reclaiming() -> StageTable {
+        let mut t = StageTable::new();
+        t.reclaim = true;
+        t
+    }
+
+    #[test]
+    fn read_stage_drops_at_last_reader() {
+        let mut t = reclaiming();
+        t.register_reader(Rank(0), Tag(1));
+        t.register_reader(Rank(0), Tag(1));
+        t.materialized(Rank(0), Tag(1), 1.0, 1, OpId(0));
+        assert_eq!(t.live, 1);
+        assert!(!t.reader_retired(Rank(0), Tag(1)), "one reader left");
+        assert!(t.reader_retired(Rank(0), Tag(1)), "last reader drops it");
+        assert_eq!(t.live, 0);
+        assert_eq!(t.dropped, 1);
+        assert!(t.writer(Rank(0), Tag(1)).is_none());
+    }
+
+    #[test]
+    fn unread_stage_persists() {
+        let mut t = StageTable::new();
+        t.materialized(Rank(1), Tag(2), 2.0, 1, OpId(3));
+        assert_eq!(t.live, 1);
+        let w = t.writer(Rank(1), Tag(2)).unwrap();
+        assert_eq!(w.done, 2.0);
+        assert_eq!(w.op, OpId(3));
+    }
+
+    #[test]
+    fn pin_outlives_last_reader() {
+        let mut t = reclaiming();
+        t.pin(Rank(0), Tag(5));
+        t.register_reader(Rank(0), Tag(5));
+        t.materialized(Rank(0), Tag(5), 1.0, 1, OpId(0));
+        assert!(!t.reader_retired(Rank(0), Tag(5)), "pin holds the stage");
+        assert_eq!(t.live, 1);
+        assert!(t.writer(Rank(0), Tag(5)).is_some());
+        assert!(t.unpin(Rank(0), Tag(5)), "unpin reclaims it");
+        assert_eq!(t.live, 0);
+    }
+
+    #[test]
+    fn rank_keys_are_distinct() {
+        // Flat reduce: sender partial and root copy share the tag.
+        let mut t = StageTable::new();
+        t.materialized(Rank(1), Tag(9), 1.0, 1, OpId(0));
+        t.materialized(Rank(0), Tag(9), 2.0, 1, OpId(1));
+        assert_eq!(t.live, 2);
+        assert_eq!(t.writer(Rank(0), Tag(9)).unwrap().done, 2.0);
+        assert_eq!(t.writer(Rank(1), Tag(9)).unwrap().done, 1.0);
+    }
+
+    #[test]
+    fn without_reclaim_reads_only_bookkeep() {
+        // Standalone scheduler runs: completion times recorded, buffers
+        // retained (their callers read staged results out-of-band).
+        let mut t = StageTable::new();
+        t.register_reader(Rank(0), Tag(1));
+        t.materialized(Rank(0), Tag(1), 1.0, 1, OpId(0));
+        assert!(!t.reader_retired(Rank(0), Tag(1)), "no drop when gated off");
+        assert_eq!(t.live, 1);
+        assert!(t.writer(Rank(0), Tag(1)).is_some());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut t = reclaiming();
+        for i in 0..4 {
+            t.register_reader(Rank(0), Tag(i));
+            t.materialized(Rank(0), Tag(i), 1.0, 1, OpId(i as u32));
+        }
+        assert_eq!(t.peak_live, 4);
+        for i in 0..4 {
+            t.reader_retired(Rank(0), Tag(i));
+        }
+        assert_eq!(t.live, 0);
+        assert_eq!(t.peak_live, 4);
+    }
+}

@@ -787,6 +787,172 @@ fn prop_numerics_invariant_to_flush_threshold_and_deferral() {
 }
 
 // ---------------------------------------------------------------------
+// Targeted-synchronization properties (sync/)
+// ---------------------------------------------------------------------
+
+/// Forced values — scalars *and* gathered arrays — are bit-identical
+/// under the global barrier and the targeted cone wait, across all
+/// three policies and both dependency systems: synchronization strategy
+/// is pure timing, invisible to the numerics (§5 sequential semantics).
+/// Programs are aligned (full-view ufuncs + flat-collective reductions
+/// and gathers), which every policy completes.
+#[test]
+fn prop_forced_values_identical_under_barrier_and_cone() {
+    use distnumpy::sched::{DepsKind, SyncMode};
+
+    let mut rng = Rng::new(0xC03E);
+    for trial in 0..15 {
+        let p = 1 + (trial % 4) as u32;
+        let rows = 8 + rng.below(100);
+        let br = 1 + rng.below(10);
+        let n_arrays = 2usize;
+        #[derive(Clone, Copy)]
+        enum Step {
+            Ufunc(usize, usize, usize, u8),
+            Sum(usize),
+        }
+        let n_steps = rng.range(3, 9);
+        let steps: Vec<Step> = (0..n_steps)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    Step::Sum(rng.range(0, n_arrays))
+                } else {
+                    Step::Ufunc(
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, 3) as u8,
+                    )
+                }
+            })
+            .collect();
+        let data: Vec<Vec<f32>> = {
+            let mut data_rng = Rng::new(0x5EAF + trial as u64);
+            (0..n_arrays)
+                .map(|_| data_rng.fill_f32(rows as usize, -1.0, 1.0))
+                .collect()
+        };
+
+        let run = |policy: Policy, deps: DepsKind, sync: SyncMode| -> (Vec<f64>, Vec<f32>) {
+            let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            cfg.deps = deps;
+            cfg.sync = sync;
+            let mut ctx = Context::new(
+                cfg,
+                policy,
+                Box::new(NativeBackend::new(ClusterStore::new(p))),
+            );
+            ctx.flush_threshold = 6; // small epochs: cross-epoch futures
+            let views: Vec<_> = data.iter().map(|d| ctx.array(&[rows], br, d)).collect();
+            let mut sums = Vec::new();
+            for s in &steps {
+                match *s {
+                    Step::Ufunc(o, a, b, k) => {
+                        let kernel = match k {
+                            0 => Kernel::Add,
+                            1 => Kernel::Mul,
+                            _ => Kernel::Axpy(0.25),
+                        };
+                        ctx.ufunc(kernel, &views[o], &[&views[a], &views[b]]);
+                    }
+                    Step::Sum(a) => {
+                        sums.push(ctx.sum(&views[a]).unwrap_or_else(|e| {
+                            panic!("{policy:?}/{deps:?}/{sync:?} trial {trial}: {e}")
+                        }));
+                    }
+                }
+            }
+            // A forced whole-array read through the ArrayFuture path.
+            let gathered = ctx
+                .gather(views[0].base)
+                .unwrap_or_else(|e| panic!("{policy:?}/{deps:?}/{sync:?} trial {trial}: {e}"))
+                .expect("data backend");
+            (sums, gathered)
+        };
+
+        let want = run(Policy::LatencyHiding, DepsKind::Heuristic, SyncMode::Barrier);
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            for deps in [DepsKind::Heuristic, DepsKind::Dag] {
+                for sync in [SyncMode::Barrier, SyncMode::Cone] {
+                    let got = run(policy, deps, sync);
+                    assert_eq!(
+                        got.0, want.0,
+                        "trial {trial} {policy:?}/{deps:?}/{sync:?}: scalars diverge"
+                    );
+                    assert_eq!(
+                        got.1, want.1,
+                        "trial {trial} {policy:?}/{deps:?}/{sync:?}: arrays diverge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Regression: reference-counted stage reclamation must never drop a
+/// stage a live future still reads. A deferred scalar and a deferred
+/// gather are recorded, then several epochs of unrelated stencil work
+/// create and reclaim their own stages; forcing the futures afterwards
+/// must still read the correct values.
+#[test]
+fn stage_reclamation_never_drops_a_live_futures_stage() {
+    let p = 2u32;
+    let rows = 24u64;
+    let mut ctx = Context::new(
+        SchedCfg::new(MachineSpec::tiny(), p),
+        Policy::LatencyHiding,
+        Box::new(NativeBackend::new(ClusterStore::new(p))),
+    );
+    let mut rng = Rng::new(0x91A);
+    let data = rng.fill_f32(rows as usize, -1.0, 1.0);
+    let x = ctx.array(&[rows], 3, &data);
+    let scratch = ctx.zeros(&[rows], 3);
+    let want_sum: f64 = data.iter().map(|&v| v as f64).sum();
+
+    let scalar = ctx.sum_deferred(&x);
+    let array = ctx.gather_deferred(x.base);
+    ctx.flush();
+
+    // Stencil epochs churn halo stages (created AND reclaimed) while
+    // the futures stay pinned — and deliberately OVERWRITE `x`, the
+    // futures' source: both futures captured their operands at record
+    // position, so the mutations must be invisible to them.
+    let dropped_before = ctx.state.stages.dropped;
+    for _ in 0..5 {
+        ctx.copy(&scratch.slice(&[(1, rows - 1)]), &x.slice(&[(0, rows - 2)]));
+        ctx.add(
+            &scratch.slice(&[(1, rows - 1)]),
+            &scratch.slice(&[(2, rows)]),
+            &x.slice(&[(2, rows)]),
+        );
+        ctx.ufunc(Kernel::Scale(2.0), &x, &[&x]);
+        ctx.flush();
+    }
+    assert!(
+        ctx.state.stages.dropped > dropped_before,
+        "the stencil epochs must exercise reclamation"
+    );
+
+    // The pinned futures survived every reclamation pass, and read the
+    // record-position data despite the later overwrites of `x`.
+    let got_sum = ctx.wait_scalar(&scalar).expect("pinned scalar readable");
+    let tol = 1e-3 * want_sum.abs().max(1.0);
+    assert!((got_sum - want_sum).abs() < tol, "deferred sum {got_sum} vs reference {want_sum}");
+    let got = ctx
+        .wait_array(&array)
+        .expect("pinned gather readable")
+        .expect("data backend");
+    assert_eq!(got, data, "gathered array reads the record-position snapshot");
+
+    // Forcing released the pins: a second wait on a data backend is a
+    // loud error, not a stale read.
+    assert!(
+        ctx.wait_scalar(&scalar).is_err(),
+        "a consumed future must not read reclaimed stages silently"
+    );
+}
+
+// ---------------------------------------------------------------------
 // Lazy-evaluation context properties
 // ---------------------------------------------------------------------
 
