@@ -11,7 +11,8 @@
 use distnumpy::array::Registry;
 use distnumpy::deps::{DagDeps, DepSystem, HeuristicDeps};
 use distnumpy::summa::record_matmul;
-use distnumpy::types::DType;
+use distnumpy::sync::{Cone, ConeSource};
+use distnumpy::types::{DType, OpId};
 use distnumpy::ufunc::{Kernel, OpBuilder, OpNode};
 use distnumpy::util::bench::Bench;
 
@@ -152,6 +153,59 @@ fn main() {
             wl.name(),
         );
     }
+
+    // -- cone queries: predecessor hints vs the full DAG --------------
+    //
+    // The ROADMAP's "cheaper exact cones" claim: the hints the
+    // heuristic's insert scan records for free answer the sync/
+    // engine's cone queries exactly like the DAG — and far below the
+    // conservative epoch-prefix it used to return.
+    println!("\n=== Cone queries: heuristic predecessor hints vs DAG (sync/) ===\n");
+    println!(
+        "{:>8} {:>10} {:>10} {:>10}   probe",
+        "ops", "dag cone", "hint cone", "prefix"
+    );
+    let wl = Workload::Stencil { n: 2048, sweeps: 4 };
+    let ops = wl.stream(16);
+    let mut dag = DagDeps::new();
+    let mut heu = HeuristicDeps::new();
+    dag.insert_all(&ops);
+    heu.insert_all(&ops);
+    let cone_ids = |c: Cone, probe: OpId| -> Vec<OpId> {
+        match c {
+            Cone::Exact(mut ids) => {
+                ids.sort();
+                ids
+            }
+            Cone::Prefix => (0..=probe.idx() as u32).map(OpId).collect(),
+        }
+    };
+    for frac in [4usize, 2, 1] {
+        let probe = OpId((ops.len() / frac - 1) as u32);
+        let d = cone_ids(dag.cone_of(probe), probe);
+        let h = cone_ids(heu.cone_of(probe), probe);
+        let prefix = probe.idx() + 1;
+        println!(
+            "{:>8} {:>10} {:>10} {:>10}   op {}",
+            ops.len(),
+            d.len(),
+            h.len(),
+            prefix,
+            probe.idx(),
+        );
+        assert_eq!(
+            h, d,
+            "hints must reproduce the DAG's exact cone at {probe:?}"
+        );
+        assert!(
+            h.len() < prefix,
+            "the hint cone must shrink below the epoch prefix at {probe:?} \
+             ({} vs {prefix})",
+            h.len()
+        );
+    }
+    println!("\nhint cones match the exact DAG cone, at dependency-list cost;");
+    println!("the old answer joined the whole recorded prefix.");
 
     println!("\npaper: the DAG is 'very time consuming … the dominating performance");
     println!("factor'; the heuristic makes recording O(1) amortized per operation.");

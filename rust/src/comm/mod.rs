@@ -47,6 +47,52 @@ use crate::ufunc::{
 /// broadcast a cone-wait rides, see [`crate::sync`]).
 pub const SCALAR_BYTES: u64 = 8;
 
+/// Payload size above which a cone-settle value broadcast switches
+/// from the latency-optimal binomial tree to the bandwidth-optimal
+/// pipelined ring ([`bcast_shape_for`]). Tree moves the full payload
+/// ⌈log₂P⌉ sequential times; a ring pipelined into
+/// [`RING_BCAST_SEGMENTS`] segments approaches one payload time once
+/// `bytes·β` dominates `α` — the crossover sits around the point where
+/// per-hop serialization stops being latency-bound.
+pub const RING_BCAST_MIN_BYTES: u64 = 1 << 16;
+
+/// Segments a pipelined ring broadcast cuts its payload into. Each
+/// segment chases the previous one around the ring, so the pipeline
+/// fill costs `(P-2)` segment hops and the drain `SEGMENTS` — total
+/// `≈ (P + S - 2)·(α + bytes/S·β)` versus the tree's
+/// `⌈log₂P⌉·(α + bytes·β)`.
+pub const RING_BCAST_SEGMENTS: u64 = 8;
+
+/// Shape of the value broadcast a forced read rides back out of its
+/// cone settle ([`crate::sync::settle_cone`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastShape {
+    /// Root injects P-1 messages directly (the paper's scheme).
+    Flat,
+    /// Binomial tree: ⌈log₂P⌉ rounds, latency-optimal for scalars.
+    Tree,
+    /// Pipelined ring: bandwidth-optimal for dense payloads (deferred
+    /// array gathers, [`crate::sync::ArrayFuture`]).
+    Ring,
+}
+
+/// Choose the broadcast shape for a `bytes`-sized forced value at
+/// P = `p`, given the configured collective schedule. Scalar-sized
+/// notifications keep the configured shape (flat fan-out or binomial
+/// tree); dense payloads — a forced [`crate::sync::ArrayFuture`] under
+/// the flat gather, where every rank consumes the array (§5.5) — ride
+/// the pipelined ring once the volume crosses
+/// [`RING_BCAST_MIN_BYTES`].
+pub fn bcast_shape_for(collective: Collective, p: u32, bytes: u64) -> BcastShape {
+    if p >= 4 && bytes >= RING_BCAST_MIN_BYTES {
+        return BcastShape::Ring;
+    }
+    match collective {
+        Collective::Flat => BcastShape::Flat,
+        Collective::Tree => BcastShape::Tree,
+    }
+}
+
 /// The binomial-tree broadcast schedule in *virtual-id* space (vid 0 is
 /// the root): rounds of `(from_vid, to_vid)` hops, doubling the covered
 /// set each round. Shared by [`broadcast_tree`] (which emits the hops as
@@ -526,6 +572,24 @@ mod tests {
             assert_eq!(hops, p as usize - 1, "P={p}: P-1 messages");
             assert_eq!(rounds.len(), (p as f64).log2().ceil() as usize, "P={p}: log2 depth");
         }
+    }
+
+    #[test]
+    fn bcast_shape_chooser_is_volume_aware() {
+        for collective in [Collective::Flat, Collective::Tree] {
+            assert_eq!(
+                bcast_shape_for(collective, 16, RING_BCAST_MIN_BYTES),
+                BcastShape::Ring,
+                "dense payloads ride the ring"
+            );
+            assert_ne!(
+                bcast_shape_for(collective, 2, 1 << 30),
+                BcastShape::Ring,
+                "a 2-rank ring is pointless"
+            );
+        }
+        assert_eq!(bcast_shape_for(Collective::Flat, 16, SCALAR_BYTES), BcastShape::Flat);
+        assert_eq!(bcast_shape_for(Collective::Tree, 16, SCALAR_BYTES), BcastShape::Tree);
     }
 
     #[test]

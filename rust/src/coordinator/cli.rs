@@ -95,7 +95,9 @@ USAGE:
   distnumpy run    --app <name> --procs <P> [--policy lh|blocking|naive]
                    [--placement by-node|by-core] [--scale S] [--iters N]
                    [--locality] [--collective flat|tree] [--agg N]
-                   [--sync cone|barrier] [--json]
+                   [--sync cone|barrier] [--flush-threshold N]
+                   [--flow [W|flow|batch]]  # incremental flush engine, window W (default 2)
+                   [--json]
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
                                              # Jacobi staleness/wait trade-off (JSON)
@@ -152,11 +154,39 @@ fn run(cli: &Cli) -> Result<String, String> {
                 cfg.aggregation = a.parse().map_err(|_| "bad --agg")?;
             }
             cfg.sync = SyncMode::parse(cli.flag("sync").unwrap_or("cone")).ok_or("bad --sync")?;
+            if let Some(t) = cli.flag("flush-threshold") {
+                cfg.flush_threshold = t.parse().map_err(|_| "bad --flush-threshold")?;
+            }
+            if let Some(w) = cli.flag("flow") {
+                // `--flow` alone parses as "true": default window.
+                // Also accepts a mode by name (`--flow batch` pins the
+                // reference path, `--flow flow` = default window).
+                cfg.flow = if w == "true" {
+                    crate::flow::FlowCfg::flow(2)
+                } else if let Some(mode) = crate::flow::FlowMode::parse(w) {
+                    crate::flow::FlowCfg {
+                        mode,
+                        ..crate::flow::FlowCfg::flow(2)
+                    }
+                } else {
+                    let window = w.parse().map_err(|_| "bad --flow window")?;
+                    crate::flow::FlowCfg::flow(window)
+                };
+            }
+            let flow_cfg = cfg.flow;
+            let flush_threshold = cfg.flush_threshold;
             let (report, baseline) = harness::run_once_full(app, policy, &params, cfg);
             if cli.flag("json").is_some() {
                 let mut o = report.to_json();
                 o.push("baseline", baseline.into());
                 o.push("speedup", (baseline / report.makespan.max(1e-12)).into());
+                // Run metadata: the knobs that shaped the flush stream.
+                o.push("flush_threshold", (flush_threshold as u64).into());
+                o.push(
+                    "flow_mode",
+                    (if flow_cfg.is_flow() { "flow" } else { "batch" }).into(),
+                );
+                o.push("flow_window", (flow_cfg.window as u64).into());
                 Ok(o.render())
             } else {
                 Ok(format!(
@@ -297,6 +327,45 @@ mod tests {
         assert!(out.contains("n_messages"));
         assert!(out.contains("agg_parts"));
         assert!(run(&Cli::parse(&args("run --app jacobi --collective ring")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_with_flow_and_flush_threshold() {
+        let out = run(&Cli::parse(&args(
+            "run --app jacobi --procs 4 --scale 0.05 --iters 2 \
+             --flow 2 --flush-threshold 64 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("\"flow_mode\":\"flow\""), "{out}");
+        assert!(out.contains("\"flow_window\":2"), "{out}");
+        assert!(out.contains("\"flush_threshold\":64"), "{out}");
+        assert!(out.contains("overlap_pct"), "{out}");
+        assert!(out.contains("wait_at_admission"), "{out}");
+        // Bare `--flow` means window 2; the default stays batch.
+        let bare = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --flow --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(bare.contains("\"flow_mode\":\"flow\""), "{bare}");
+        let batch = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(batch.contains("\"flow_mode\":\"batch\""), "{batch}");
+        // A mode by name: `--flow batch` pins the reference path.
+        let pinned = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --flow batch --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(pinned.contains("\"flow_mode\":\"batch\""), "{pinned}");
+        assert!(
+            run(&Cli::parse(&args("run --app jacobi --flow nope")).unwrap()).is_err(),
+            "a bad window errors"
+        );
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //! In the common case — operations spread evenly over the blocks of the
 //! involved arrays — each list stays short, so insertion is O(1) amortized
 //! versus O(n) for the full DAG (measured in benches/ablation_deps.rs).
+//!
+//! The insert scan additionally records **location-level predecessor
+//! hints** — the ids of the conflicting access-nodes it walked anyway —
+//! so the `sync/` engine's cone queries ([`ConeSource`]) get a
+//! transitive-predecessor walk (matching the DAG's exact cone on the
+//! epoch drivers) instead of the conservative whole-epoch prefix,
+//! without the heuristic ever building a graph. Measured against
+//! `DagDeps::cone_of` in benches/ablation_deps.rs.
 
 use super::DepSystem;
 use crate::sync::{Cone, ConeSource};
@@ -63,6 +71,15 @@ pub struct HeuristicDeps {
     entry_data: Vec<(u32, u32)>,
     /// Per-op `[start, end)` into `entry_data`.
     spans: Vec<(u32, u32)>,
+    /// Flat arena of direct-predecessor *hints*: the conflicting
+    /// location-level access-nodes each insert scan walked anyway
+    /// (ROADMAP "cheaper exact cones"). Costs no extra scan — only the
+    /// ids the existing conflict checks already computed — and lets
+    /// [`ConeSource::cone_of`] answer with a transitive-predecessor
+    /// walk instead of the whole epoch prefix.
+    pred_data: Vec<OpId>,
+    /// Per-op `[start, end)` into `pred_data`.
+    pred_spans: Vec<(u32, u32)>,
     ready: Vec<OpId>,
     pending: usize,
     completed: Vec<bool>,
@@ -78,6 +95,7 @@ impl HeuristicDeps {
         if self.refcount.len() < need {
             self.refcount.resize(need, 0);
             self.spans.resize(need, (0, 0));
+            self.pred_spans.resize(need, (0, 0));
             self.completed.resize(need, false);
         }
     }
@@ -129,19 +147,50 @@ impl HeuristicDeps {
         self.entry_data.clear();
         self.refcount.clear();
         self.spans.clear();
+        self.pred_data.clear();
+        self.pred_spans.clear();
         self.completed.clear();
     }
 }
 
 impl ConeSource for HeuristicDeps {
     /// The heuristic stores no graph — that is its whole point
-    /// (Section 5.7.2) — so it answers cone queries with the safe
-    /// over-approximation: everything recorded up to the target.
-    /// Conflict edges always point forward in recording order, so the
-    /// prefix is a superset of the true cone; a wait settled on it can
-    /// only be late, never early.
-    fn cone_of(&self, _target: OpId) -> Cone {
-        Cone::Prefix
+    /// (Section 5.7.2) — but its insert scan walks exactly the
+    /// conflicting access-nodes a graph edge would record, so since the
+    /// ROADMAP's "cheaper exact cones" item it keeps those ids as
+    /// **predecessor hints** (`pred_data`) and answers cone queries
+    /// with a transitive walk over them, like the DAG but without ever
+    /// scanning non-conflicting nodes.
+    ///
+    /// Precision: under the epoch drivers every insert happens before
+    /// any completion (insert_all, then execute), so the hints capture
+    /// *every* conflicting predecessor and the walk equals
+    /// `DagDeps::cone_of`. If insertion ever interleaved with
+    /// completion, hints to access-nodes dropped by list compaction
+    /// could be missing — which is frontier-safe: a *completed*
+    /// predecessor retires before its dependent starts, so it can only
+    /// lower, never raise, the cone frontier, and the target itself is
+    /// always in the cone. Unknown targets (already recycled) fall back
+    /// to the conservative epoch prefix.
+    fn cone_of(&self, target: OpId) -> Cone {
+        if target.idx() >= self.pred_spans.len() {
+            return Cone::Prefix;
+        }
+        let mut seen = vec![false; self.pred_spans.len()];
+        let mut stack = vec![target];
+        let mut cone = Vec::new();
+        seen[target.idx()] = true;
+        while let Some(id) = stack.pop() {
+            cone.push(id);
+            let (s, e) = self.pred_spans[id.idx()];
+            for &p in &self.pred_data[s as usize..e as usize] {
+                if !seen[p.idx()] {
+                    seen[p.idx()] = true;
+                    stack.push(p);
+                }
+            }
+        }
+        Cone::Exact(cone)
     }
 }
 
@@ -152,6 +201,7 @@ impl DepSystem for HeuristicDeps {
         }
         self.ensure(op.id);
         let start = self.entry_data.len() as u32;
+        let pred_start = self.pred_data.len() as u32;
         let mut count = 0u32;
         for a in &op.accesses {
             let node = AccessNode {
@@ -167,14 +217,22 @@ impl DepSystem for HeuristicDeps {
             });
             let list = &mut self.lists[lid as usize];
             for e in &list.nodes {
-                if e.alive && e.op != op.id && e.conflicts(&node) {
-                    count += 1;
+                if e.op != op.id && e.conflicts(&node) {
+                    // Location-level predecessor hint — live *or*
+                    // tombstoned: a retired predecessor still bounds
+                    // the cone (its rank belongs to it), it just no
+                    // longer gates readiness.
+                    self.pred_data.push(e.op);
+                    if e.alive {
+                        count += 1;
+                    }
                 }
             }
             self.entry_data.push((lid, list.nodes.len() as u32));
             list.nodes.push(node);
         }
         self.spans[op.id.idx()] = (start, self.entry_data.len() as u32);
+        self.pred_spans[op.id.idx()] = (pred_start, self.pred_data.len() as u32);
         self.refcount[op.id.idx()] = count;
         self.pending += 1;
         if count == 0 {
@@ -306,6 +364,61 @@ mod tests {
             }
         }
         assert_eq!(order, (0..10).map(OpId).collect::<Vec<_>>());
+    }
+
+    /// The predecessor hints reproduce the DAG's exact cone on
+    /// insert-then-drain streams (the only pattern the epoch drivers
+    /// produce), shrinking well below the epoch prefix.
+    #[test]
+    fn pred_hint_cone_matches_dag_and_undercuts_prefix() {
+        use crate::deps::DagDeps;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0DE5);
+        for trial in 0..30 {
+            let n_ops = 24;
+            let ops: Vec<OpNode> = (0..n_ops)
+                .map(|i| {
+                    let n_acc = rng.range(1, 4);
+                    let accesses = (0..n_acc)
+                        .map(|_| {
+                            let base = BaseId(rng.range(0, 3) as u32);
+                            let block = rng.below(3);
+                            let lo = rng.below(40);
+                            let hi = lo + 1 + rng.below(20);
+                            if rng.chance(0.4) {
+                                Access::write_block(base, block, (lo, hi))
+                            } else {
+                                Access::read_block(base, block, (lo, hi))
+                            }
+                        })
+                        .collect();
+                    op(i, accesses)
+                })
+                .collect();
+            let mut heu = HeuristicDeps::new();
+            let mut dag = DagDeps::new();
+            for o in &ops {
+                heu.insert(o);
+                dag.insert(o);
+            }
+            for probe in [OpId(n_ops / 2), OpId(n_ops - 1)] {
+                let mut h = match heu.cone_of(probe) {
+                    Cone::Exact(ids) => ids,
+                    other => panic!("trial {trial}: hints must answer exactly, got {other:?}"),
+                };
+                let mut d = match dag.cone_of(probe) {
+                    Cone::Exact(ids) => ids,
+                    other => panic!("trial {trial}: dag answers exactly, got {other:?}"),
+                };
+                h.sort();
+                d.sort();
+                assert_eq!(h, d, "trial {trial}: cones diverge at {probe:?}");
+                assert!(
+                    h.len() <= probe.idx() + 1,
+                    "trial {trial}: cone must not exceed the prefix"
+                );
+            }
+        }
     }
 
     #[test]

@@ -28,8 +28,10 @@ use crate::ufunc::OpNode;
 
 /// Common interface of the dependency systems. The [`ConeSource`]
 /// supertrait lets the `sync/` engine ask either system for the
-/// backward dependency cone of a forced value — exactly from the DAG,
-/// conservatively from the heuristic.
+/// backward dependency cone of a forced value — from the DAG's
+/// retained edges, or from the heuristic's location-level predecessor
+/// hints (exact on epoch streams, conservative prefix for recycled
+/// targets).
 pub trait DepSystem: ConeSource {
     /// Insert one recorded operation (in recording order).
     fn insert(&mut self, op: &OpNode);

@@ -1,0 +1,210 @@
+//! The streaming admission engine: bounded window of in-flight epochs.
+//!
+//! [`FlowEngine`] sits between the lazy context's threshold trigger and
+//! the schedulers. `submit` is non-blocking: the batch is aggregated
+//! (per epoch — aggregation never crosses a flush boundary, §3), priced
+//! on the recorder clock ([`super::overlap`]), logged in the continuous
+//! [`super::frontier::AdmissionLog`] and queued. Once
+//! [`crate::flow::FlowCfg::window`] epochs are in flight the queue
+//! drains: the epochs merge into one [`super::frontier::Wave`] and
+//! execute under per-epoch admission gates, so cross-epoch dependency
+//! streaming happens inside the existing discrete-event schedulers with
+//! no special cases. `drain` is the synchronous half `flush` keeps.
+//!
+//! The naive evaluator is the exception ([`crate::flow`] module docs): merged
+//! waves could park it on receives the per-batch stream never exposes
+//! it to, so under [`crate::sched::Policy::Naive`] every submit drains
+//! immediately — Batch wave-granularity, streamed recording clock.
+
+use crate::exec::Backend;
+use crate::sched::{ExecState, Policy, SchedCfg, SchedError};
+use crate::ufunc::OpNode;
+
+use super::frontier;
+use super::overlap::{record_cost, Recorder};
+use super::FlowCfg;
+
+/// The incremental flush engine owned by a lazy
+/// [`crate::lazy::Context`].
+pub struct FlowEngine {
+    pub cfg: FlowCfg,
+    recorder: Recorder,
+    /// Submitted, not yet executed epochs: `(ops, admission-log idx)`.
+    queue: Vec<(Vec<OpNode>, usize)>,
+}
+
+impl FlowEngine {
+    pub fn new(cfg: FlowCfg) -> Self {
+        FlowEngine {
+            cfg,
+            recorder: Recorder::default(),
+            queue: Vec::new(),
+        }
+    }
+
+    /// Submitted epochs not yet executed (in flight in the queue).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The recorder clock — when the last submitted epoch finished
+    /// recording.
+    pub fn record_clock(&self) -> crate::types::VTime {
+        self.recorder.clock
+    }
+
+    /// Drop everything queued (poisoned context: later batches are
+    /// dropped unexecuted, exactly like Batch mode's dropped batches).
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+
+    /// Non-blocking submit: price the batch on the recorder clock,
+    /// queue it, and execute a merged wave once the admission window
+    /// is full. Under [`Policy::Naive`] the wave drains immediately
+    /// (see module docs).
+    pub fn submit(
+        &mut self,
+        ops: Vec<OpNode>,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        // Aggregation is a per-flush-epoch rewrite ("ready in the same
+        // flush epoch"), so it runs before the wave merge.
+        let ops = if cfg.aggregation >= 2 {
+            let (packed, stats) = crate::comm::aggregate(&ops, cfg.aggregation);
+            state.agg_msgs += stats.packed_msgs;
+            state.agg_parts += stats.packed_parts;
+            packed
+        } else {
+            ops
+        };
+        let gate = state.flow_log.window_gate(self.cfg.window);
+        let cost = record_cost(&ops, &cfg.spec);
+        let (start, done) = self.recorder.record(gate, cost);
+        state.overhead += cost;
+        state.overhead_streamed += cost;
+        let idx = state.flow_log.submitted(start, done, ops.len());
+        self.queue.push((ops, idx));
+        if self.queue.len() >= self.cfg.window || policy == Policy::Naive {
+            self.drain(policy, cfg, backend, state)?;
+        }
+        Ok(())
+    }
+
+    /// Execute everything queued as one merged wave. No-op on an empty
+    /// queue.
+    pub fn drain(
+        &mut self,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        if self.queue.is_empty() {
+            return Ok(());
+        }
+        let batches: Vec<(Vec<OpNode>, usize, f64)> = std::mem::take(&mut self.queue)
+            .into_iter()
+            .map(|(ops, idx)| {
+                let admit = state.flow_log.epochs[idx].record_done;
+                (ops, idx, admit)
+            })
+            .collect();
+        state.n_epochs += batches.len() as u64;
+        let wave = frontier::merge(batches);
+        crate::sched::execute_wave(policy, &wave.ops, &wave.admit, cfg, backend, state)?;
+        // Attribute retirement times back to the continuous log — the
+        // window gate of future submits consults them.
+        for &(log_idx, lo, hi) in &wave.epochs {
+            state.flow_log.retire_from(log_idx, &state.retire[lo..hi]);
+        }
+        // Causality of the replicated interpreter: program time cannot
+        // run ahead of its own recording. Lift lagging rank clocks to
+        // the recorder frontier — no wait is charged (the rank's
+        // recorder was busy, not blocked; the cost is already in
+        // `overhead`).
+        for c in state.clock.iter_mut() {
+            if *c < self.recorder.clock {
+                *c = self.recorder.clock;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::cluster::MachineSpec;
+    use crate::exec::SimBackend;
+    use crate::types::DType;
+    use crate::ufunc::{Kernel, OpBuilder};
+
+    fn batch(p: u32, rows: u64) -> Vec<OpNode> {
+        let mut reg = Registry::new(p);
+        let x = reg.alloc(vec![rows], 4, DType::F32);
+        let xv = reg.full_view(x);
+        let mut bld = OpBuilder::new();
+        bld.ufunc(&reg, Kernel::Scale(2.0), &xv, &[&xv]);
+        bld.finish()
+    }
+
+    #[test]
+    fn submit_queues_until_window_fills() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::flow(2));
+        eng.submit(batch(2, 32), Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 1, "first submit stays in flight");
+        assert_eq!(st.ops_executed, 0, "nothing executed yet");
+        assert_eq!(st.flow_log.epochs.len(), 1);
+        assert!(st.overhead_streamed > 0.0, "recording priced on the recorder clock");
+        eng.submit(batch(2, 32), Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 0, "window of 2 drained");
+        assert_eq!(st.n_epochs, 2, "both submits count as epochs");
+        assert!(st.ops_executed > 0);
+        assert!(
+            st.flow_log.epochs.iter().all(|e| e.retired.is_finite()),
+            "drain attributes retirement to every epoch"
+        );
+    }
+
+    #[test]
+    fn naive_degrades_to_per_batch_waves() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::flow(4));
+        eng.submit(batch(2, 32), Policy::Naive, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 0, "naive drains every submit");
+        assert_eq!(st.n_epochs, 1);
+    }
+
+    #[test]
+    fn drain_on_empty_queue_is_noop() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::flow(2));
+        eng.drain(Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(st.n_epochs, 0);
+    }
+
+    #[test]
+    fn clocks_never_lag_the_recorder() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::flow(1));
+        eng.submit(batch(2, 32), Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        for &c in &st.clock {
+            assert!(c >= eng.record_clock(), "clock {c} behind recorder {}", eng.record_clock());
+        }
+    }
+}

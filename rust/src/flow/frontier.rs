@@ -1,0 +1,213 @@
+//! The cross-epoch ready frontier: the continuous admission log and the
+//! wave merge.
+//!
+//! Before the flow engine, every epoch's ready set lived and died with
+//! `begin_epoch`: operation ids restarted at zero and the dependency
+//! system saw one batch at a time, so an epoch boundary was a hard wall
+//! in the ready frontier. The [`AdmissionLog`] replaces those per-epoch
+//! frontiers with **one continuous record** of every submitted epoch —
+//! when its recording started and finished (its *admission time*) and
+//! when its last operation retired — which is what the engine's window
+//! gate consults: recording of epoch *k* may not begin before epoch
+//! *k − window* retired (bounded in-flight graph, Eijkhout's wave
+//! transformation).
+//!
+//! [`merge`] turns a run of submitted batches into one [`Wave`]: ids
+//! and §5.3 groups are renumbered into a single stream (tags are
+//! already run-unique), so both dependency systems ingest the merged
+//! wave exactly like a batch — cross-epoch conflicts become ordinary
+//! conflict edges, and an operation becomes ready the moment its
+//! predecessors complete *regardless of which epoch recorded it*. Each
+//! operation carries the admission time of its epoch; the schedulers
+//! gate execution on it ([`crate::sched::ExecState::gate_admission`]).
+
+use crate::types::{Rank, VTime};
+use crate::ufunc::OpNode;
+
+/// One submitted epoch in the continuous admission log.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochEntry {
+    /// When the (replicated) recorder began recording this epoch.
+    /// `NaN` for Batch-mode epochs, whose recording is charged on the
+    /// rank clocks instead.
+    pub record_start: VTime,
+    /// When recording finished — the epoch's admission time: no
+    /// operation of the epoch may execute earlier. `NaN` in Batch mode.
+    pub record_done: VTime,
+    /// When the epoch's last operation retired; `NaN` until the wave
+    /// containing it drained.
+    pub retired: VTime,
+    /// Operations in the epoch (post-aggregation).
+    pub n_ops: usize,
+}
+
+/// The continuous admission log: one entry per flush epoch of the whole
+/// run, either mode. Lives in [`crate::sched::ExecState`] — it is
+/// execution state, shared by the engine (window gating) and the
+/// metrics.
+#[derive(Default)]
+pub struct AdmissionLog {
+    pub epochs: Vec<EpochEntry>,
+    /// Operations admitted over the whole run.
+    pub admitted_ops: u64,
+}
+
+impl AdmissionLog {
+    /// Log one submitted epoch; returns its index.
+    pub fn submitted(&mut self, record_start: VTime, record_done: VTime, n_ops: usize) -> usize {
+        self.epochs.push(EpochEntry {
+            record_start,
+            record_done,
+            retired: f64::NAN,
+            n_ops,
+        });
+        self.admitted_ops += n_ops as u64;
+        self.epochs.len() - 1
+    }
+
+    /// The wave drained: epoch `idx`'s last operation retired at `t`.
+    pub fn retire(&mut self, idx: usize, t: VTime) {
+        if let Some(e) = self.epochs.get_mut(idx) {
+            e.retired = t;
+        }
+    }
+
+    /// Attribute epoch `idx`'s retirement from the scheduler's
+    /// retirement-log slice covering its operations: the latest finite
+    /// retirement time (0.0 when nothing retired — a torn epoch must
+    /// never gate later recording). The single definition shared by
+    /// Batch epochs and Flow waves, so the two paths cannot drift.
+    pub fn retire_from(&mut self, idx: usize, retire: &[(Rank, VTime)]) {
+        let mut t: VTime = 0.0;
+        for &(_, rt) in retire {
+            if rt.is_finite() {
+                t = t.max(rt);
+            }
+        }
+        self.retire(idx, t);
+    }
+
+    /// Window gate for the epoch about to be recorded (index
+    /// `self.epochs.len()`): recording may not begin before epoch
+    /// `next − window` fully retired. An epoch whose retirement is not
+    /// yet known gates on its admission time instead (conservative for
+    /// memory, never for causality — the gated epoch will also be gated
+    /// by its own recording chain).
+    pub fn window_gate(&self, window: usize) -> VTime {
+        let next = self.epochs.len();
+        if window == 0 || next < window {
+            return 0.0;
+        }
+        let e = &self.epochs[next - window];
+        if e.retired.is_finite() {
+            e.retired
+        } else if e.record_done.is_finite() {
+            e.record_done
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A merged run of submitted epochs, ready for one scheduler dispatch.
+pub struct Wave {
+    /// The merged operation stream: ids renumbered contiguously, §5.3
+    /// groups offset so later epochs' groups stay strictly after
+    /// earlier ones (the blocking baseline's phasing depends on it).
+    pub ops: Vec<OpNode>,
+    /// Per-operation admission time (indexed by merged op id).
+    pub admit: Vec<VTime>,
+    /// Constituent epochs: `(admission-log index, id_lo, id_hi)` — the
+    /// merged-id range `[id_lo, id_hi)` each epoch contributed, used to
+    /// attribute retirement times back to the log.
+    pub epochs: Vec<(usize, usize, usize)>,
+}
+
+/// Merge submitted batches into one [`Wave`]. Each element carries the
+/// batch's ops, its admission-log index and its admission time.
+pub fn merge(batches: Vec<(Vec<OpNode>, usize, VTime)>) -> Wave {
+    let total: usize = batches.iter().map(|(ops, _, _)| ops.len()).sum();
+    let mut wave = Wave {
+        ops: Vec::with_capacity(total),
+        admit: Vec::with_capacity(total),
+        epochs: Vec::with_capacity(batches.len()),
+    };
+    let mut group_base = 0u32;
+    for (ops, log_idx, admit_t) in batches {
+        let lo = wave.ops.len();
+        let mut max_group = 0u32;
+        for mut op in ops {
+            op.id = crate::types::OpId(wave.ops.len() as u32);
+            max_group = max_group.max(op.group);
+            op.group += group_base;
+            wave.ops.push(op);
+            wave.admit.push(admit_t);
+        }
+        group_base += max_group + 1;
+        wave.epochs.push((log_idx, lo, wave.ops.len()));
+    }
+    wave
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BaseId, OpId, Rank, Tag};
+    use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpPayload, Operand, Region};
+
+    fn op(id: u32, group: u32) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(0),
+            group,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::Add,
+                inputs: vec![Operand::Local(Region::scalar())],
+                dst: Dst::Stage(Tag(u64::MAX)),
+                elems: 1,
+            }),
+            accesses: vec![Access::write_block(BaseId(0), 0, (0, 1))],
+        }
+    }
+
+    #[test]
+    fn merge_renumbers_ids_and_offsets_groups() {
+        // Two batches with per-batch ids 0.. and groups 1..=2 each.
+        let b0 = vec![op(0, 1), op(1, 2)];
+        let b1 = vec![op(0, 1), op(1, 1), op(2, 2)];
+        let wave = merge(vec![(b0, 0, 1.0), (b1, 1, 2.5)]);
+        assert_eq!(wave.ops.len(), 5);
+        for (i, o) in wave.ops.iter().enumerate() {
+            assert_eq!(o.id, OpId(i as u32), "contiguous merged ids");
+        }
+        // Batch 1's groups sit strictly after batch 0's.
+        let max_g0 = wave.ops[..2].iter().map(|o| o.group).max().unwrap();
+        let min_g1 = wave.ops[2..].iter().map(|o| o.group).min().unwrap();
+        assert!(min_g1 > max_g0, "epoch groups must not interleave");
+        assert_eq!(wave.admit, vec![1.0, 1.0, 2.5, 2.5, 2.5]);
+        assert_eq!(wave.epochs, vec![(0, 0, 2), (1, 2, 5)]);
+    }
+
+    #[test]
+    fn window_gate_consults_retirement() {
+        let mut log = AdmissionLog::default();
+        assert_eq!(log.window_gate(2), 0.0, "nothing in flight yet");
+        let e0 = log.submitted(0.0, 0.5, 4);
+        let e1 = log.submitted(0.5, 1.0, 4);
+        assert_eq!(log.window_gate(2), 0.5, "epoch 0 not retired: gate on admission");
+        log.retire(e0, 7.0);
+        assert_eq!(log.window_gate(2), 7.0, "window 2: gate on epoch 0's retirement");
+        log.retire(e1, 9.0);
+        assert_eq!(log.window_gate(1), 9.0);
+        assert_eq!(log.window_gate(3), 0.0, "window wider than history: no gate");
+        assert_eq!(log.admitted_ops, 8);
+    }
+
+    #[test]
+    fn batch_mode_entries_keep_the_log_continuous() {
+        let mut log = AdmissionLog::default();
+        let i = log.submitted(f64::NAN, f64::NAN, 3);
+        log.retire(i, 2.0);
+        assert_eq!(log.window_gate(1), 2.0, "retirement known despite NaN recording");
+    }
+}

@@ -1,0 +1,74 @@
+//! Record/execute overlap accounting — the recorder clock.
+//!
+//! In Batch mode the per-epoch recording/bookkeeping overhead
+//! (`sched::batch_overhead`: per-fragment dependency insertion plus
+//! per-array-op CPython dispatch, replicated on every rank per §5.5) is
+//! charged as a lump on every rank's clock at the top of the epoch —
+//! recording strictly alternates with execution. In Flow mode the model
+//! assumes a dedicated recorder thread per rank (the futurized
+//! interpreter of the HPX model): the same overhead is charged on a
+//! separate, monotone **recorder clock**, and execution only observes
+//! it through each epoch's *admission time* — an operation may not
+//! start before its epoch finished recording. Recording that fits under
+//! concurrent execution is thereby hidden; recording that runs long
+//! shows up as `wait_at_admission` on the ranks that stall for it.
+//!
+//! The recorder clock is also where the engine's window gate lands:
+//! recording of epoch *k* may not begin before epoch *k − window*
+//! retired ([`crate::flow::frontier::AdmissionLog::window_gate`]), so
+//! the recorder cannot run unboundedly ahead of execution.
+//!
+//! The overlap actually achieved is reported as
+//! [`crate::metrics::RunReport::overlap_pct`]: the share of streamed
+//! recording overhead that did **not** stall admission. Batch mode
+//! streams nothing, so it reports 0 by construction.
+
+use crate::cluster::MachineSpec;
+use crate::types::VTime;
+use crate::ufunc::OpNode;
+
+/// The replicated interpreter's recording timeline. Recording is
+/// identical on every rank (global knowledge, §5.5), so one clock
+/// serves all of them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Recorder {
+    /// When the recorder finishes the last epoch submitted so far.
+    pub clock: VTime,
+}
+
+impl Recorder {
+    /// Record one epoch costing `cost`, not starting before `gate`
+    /// (the admission window). Returns `(record_start, record_done)`;
+    /// `record_done` is the epoch's admission time.
+    pub fn record(&mut self, gate: VTime, cost: VTime) -> (VTime, VTime) {
+        let start = self.clock.max(gate);
+        let done = start + cost;
+        self.clock = done;
+        (start, done)
+    }
+}
+
+/// The virtual recording cost of one submitted batch — the same
+/// quantity Batch mode charges through `ExecState::charge_overhead`,
+/// with the latency-hiding per-op rate (the flow engine exists to feed
+/// the dependency-tracked schedulers).
+pub fn record_cost(ops: &[OpNode], spec: &MachineSpec) -> VTime {
+    crate::sched::batch_overhead(ops, spec.lh_op_overhead, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_chains_and_respects_gates() {
+        let mut r = Recorder::default();
+        let (s0, d0) = r.record(0.0, 0.5);
+        assert_eq!((s0, d0), (0.0, 0.5));
+        let (s1, d1) = r.record(0.0, 0.25);
+        assert_eq!((s1, d1), (0.5, 0.75), "recording serializes on its own clock");
+        let (s2, d2) = r.record(3.0, 0.1);
+        assert_eq!((s2, d2), (3.0, 3.1), "window gate delays recording");
+        assert_eq!(r.clock, 3.1);
+    }
+}

@@ -40,6 +40,12 @@ pub struct RunMetrics {
     /// Wait paid at targeted cone settles (forced reads under
     /// `SyncMode::Cone`), summed over ranks (s).
     pub wait_at_cone: VTime,
+    /// Wait paid at admission gates (Flow mode: ranks stalled for the
+    /// recorder), summed over ranks (s).
+    pub wait_at_admission: VTime,
+    /// Record/execute overlap achieved by the incremental flush engine
+    /// (0 under Batch mode; see `RunReport::overlap_pct`).
+    pub overlap_pct: f64,
     /// High-water mark of live staging buffers.
     pub peak_live_stages: u64,
 }
@@ -58,6 +64,8 @@ impl RunMetrics {
             n_epochs: report.n_epochs,
             wait_at_barrier: report.wait_at_barrier,
             wait_at_cone: report.wait_at_cone,
+            wait_at_admission: report.wait_at_admission,
+            overlap_pct: report.overlap_pct(),
             peak_live_stages: report.peak_live_stages,
         }
     }
@@ -75,6 +83,8 @@ impl RunMetrics {
         o.push("n_epochs", self.n_epochs.into());
         o.push("wait_at_barrier", self.wait_at_barrier.into());
         o.push("wait_at_cone", self.wait_at_cone.into());
+        o.push("wait_at_admission", self.wait_at_admission.into());
+        o.push("overlap_pct", self.overlap_pct.into());
         o.push("peak_live_stages", self.peak_live_stages.into());
         o
     }

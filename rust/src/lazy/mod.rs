@@ -9,8 +9,14 @@
 //!    gather, …) — [`Context::sum`], [`Context::sum_absdiff`],
 //!    [`Context::gather`];
 //! 2. the number of recorded operations reaches a threshold —
-//!    [`Context::flush_threshold`];
-//! 3. the program ends — [`Context::flush`] called by the apps at exit.
+//!    [`Context::flush_threshold`] (CLI `--flush-threshold`). This
+//!    trigger is a non-blocking [`Context::submit`]: under
+//!    [`crate::flow::FlowMode::Flow`] the batch enters the incremental
+//!    flush engine's admission window and executes while recording
+//!    continues ([`crate::flow`]); under the default Batch mode it
+//!    executes immediately, stop-the-world;
+//! 3. the program ends — [`Context::flush`] (= submit + drain) called
+//!    by the apps at exit.
 //!
 //! ## Epochs, futures and targeted waits
 //!
@@ -38,8 +44,9 @@
 //! converged at delta 0.0.
 
 use crate::array::Registry;
-use crate::comm::Collective;
+use crate::comm::{Collective, SCALAR_BYTES};
 use crate::exec::Backend;
+use crate::flow::FlowEngine;
 use crate::layout::ViewSpec;
 use crate::metrics::RunReport;
 use crate::sched::{execute_epoch, ExecState, Policy, SchedCfg, SchedError, SyncMode};
@@ -48,8 +55,10 @@ use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpBuilder, Operand};
 
 pub use crate::sync::{ArrayFuture, ScalarFuture};
 
-/// Default flush threshold (paper: "a user-defined threshold").
-pub const DEFAULT_FLUSH_THRESHOLD: usize = 50_000;
+/// Default flush threshold (paper: "a user-defined threshold"). The
+/// canonical constant lives with the scheduler configuration so the
+/// CLI and harness can carry it (`SchedCfg::flush_threshold`).
+pub use crate::sched::DEFAULT_FLUSH_THRESHOLD;
 
 /// The DistNumPy programming context: array registry + lazy recorder +
 /// persistent execution state + backend.
@@ -62,6 +71,11 @@ pub struct Context {
     /// Execution state persisting across flush epochs (clocks, NIC
     /// frontiers, dependency system, accumulated wait/busy).
     pub state: ExecState,
+    /// The incremental flush engine ([`crate::flow`]): under
+    /// `FlowMode::Flow` threshold triggers become non-blocking submits
+    /// into its admission window; under the default Batch mode it is
+    /// dormant (every submit executes immediately).
+    pub flow: FlowEngine,
     /// Snapshot of `state` after the most recent flush/barrier.
     pub report: RunReport,
     pub flush_threshold: usize,
@@ -87,6 +101,8 @@ impl Context {
         // scheduler runs leave it off: their callers read staged
         // results out-of-band (see sync/stages.rs).
         state.stages.reclaim = true;
+        let flow = FlowEngine::new(cfg.flow);
+        let flush_threshold = cfg.flush_threshold;
         Context {
             reg: Registry::new(cfg.nprocs),
             builder: OpBuilder::new(),
@@ -94,8 +110,9 @@ impl Context {
             policy,
             backend,
             state,
+            flow,
             report: RunReport::new(n),
-            flush_threshold: DEFAULT_FLUSH_THRESHOLD,
+            flush_threshold,
             flushes: 0,
             baseline: 0.0,
             array_ops_since_flush: 0,
@@ -147,15 +164,20 @@ impl Context {
 
     fn maybe_flush(&mut self) {
         if self.builder.n_recorded() >= self.flush_threshold {
-            self.flush();
+            self.submit();
         }
     }
 
-    /// Trigger 3 (and trigger 2's worker): execute everything recorded
-    /// so far as one more epoch of the persistent timeline. No barrier —
-    /// ranks resume wherever the epoch's dependency structure lets them.
-    /// On a poisoned context the batch is dropped unexecuted.
-    pub fn flush(&mut self) {
+    /// Trigger 2's worker: a **non-blocking submit** of everything
+    /// recorded so far. Under the default Batch mode the batch executes
+    /// immediately as one epoch (the stop-the-world flush); under
+    /// [`crate::flow::FlowMode::Flow`] it is priced on the recorder
+    /// clock and admitted into the incremental flush engine's window —
+    /// execution of the merged wave overlaps continued recording, so a
+    /// threshold trigger no longer stops the world. On a poisoned
+    /// context the batch (and anything still queued) is dropped
+    /// unexecuted.
+    pub fn submit(&mut self) {
         let ops = self.builder.take();
         if ops.is_empty() {
             return;
@@ -164,21 +186,61 @@ impl Context {
             // Poisoned: executing further epochs on torn state would
             // produce garbage timing/numerics. Drop the batch.
             self.array_ops_since_flush = 0;
+            self.flow.clear();
             return;
         }
         self.flushes += 1;
         self.baseline += crate::sched::numpy_baseline(&ops, &self.cfg.spec)
             + self.array_ops_since_flush as f64 * self.cfg.spec.numpy_op_overhead;
         self.array_ops_since_flush = 0;
-        match execute_epoch(
+        let res = if self.cfg.flow.is_flow() {
+            self.flow.submit(
+                ops,
+                self.policy,
+                &self.cfg,
+                self.backend.as_mut(),
+                &mut self.state,
+            )
+        } else {
+            execute_epoch(
+                self.policy,
+                &ops,
+                &self.cfg,
+                self.backend.as_mut(),
+                &mut self.state,
+            )
+        };
+        match res {
+            Ok(()) => self.report = self.state.report(),
+            Err(e) => {
+                self.flow.clear();
+                if self.error.is_none() {
+                    self.error = Some(e);
+                }
+            }
+        }
+    }
+
+    /// Trigger 3 (and the synchronous half of every forced read):
+    /// **submit + drain**. Everything recorded so far executes as one
+    /// or more epochs of the persistent timeline, and any epochs still
+    /// in flight in the flow engine's window drain. No barrier — ranks
+    /// resume wherever the epochs' dependency structure lets them. On a
+    /// poisoned context batches are dropped unexecuted.
+    pub fn flush(&mut self) {
+        self.submit();
+        if self.error.is_some() {
+            return;
+        }
+        match self.flow.drain(
             self.policy,
-            &ops,
             &self.cfg,
             self.backend.as_mut(),
             &mut self.state,
         ) {
             Ok(()) => self.report = self.state.report(),
             Err(e) => {
+                self.flow.clear();
                 if self.error.is_none() {
                     self.error = Some(e);
                 }
@@ -222,15 +284,21 @@ impl Context {
     /// * `Barrier` — every rank joins the global clock frontier
     ///   (`wait_at_barrier`), PR 2's semantics;
     /// * `Cone` — each delivery rank joins its stage's completion time,
-    ///   the value's dependency cone ([`crate::sync::ConeSource`]: exact
-    ///   under the DAG system, a conservative prefix under the
-    ///   heuristic) joins the cone frontier, and the value rides a
+    ///   the value's dependency cone ([`crate::sync::ConeSource`]: the
+    ///   DAG's retained edges, or the heuristic's predecessor hints —
+    ///   exact on epoch streams, conservative prefix for recycled
+    ///   targets) joins the cone frontier, and the value rides a
     ///   broadcast back out to every rank (`wait_at_cone`). A stage
     ///   with no recorded provenance (already reclaimed — e.g. a future
     ///   waited twice — or a foreign context) synchronizes nothing: the
     ///   timeline already settled when the value was first forced, and
     ///   the read itself errors on data backends.
-    fn settle(&mut self, root: Rank, tags: &[(Rank, Tag)]) {
+    ///
+    /// `bytes` is the payload the value broadcast carries back out —
+    /// scalar-sized for [`ScalarFuture`]s, the dense volume for a
+    /// root-delivered [`ArrayFuture`] (the broadcast shape is chosen
+    /// per volume, [`crate::comm::bcast_shape_for`]).
+    fn settle(&mut self, root: Rank, tags: &[(Rank, Tag)], bytes: u64) {
         if self.cfg.sync == SyncMode::Barrier {
             self.state.barrier();
             return;
@@ -248,16 +316,20 @@ impl Context {
             self.state.join_at(rank, w.done);
             if w.done >= frontier {
                 frontier = w.done;
-                target = (w.epoch == self.state.n_epochs).then_some(w.op);
+                // Provenance is valid for the current scheduler *run*
+                // (a Batch epoch or a whole merged Flow wave) — a
+                // future may target any epoch of the wave that just
+                // drained.
+                target = (w.run == self.state.run_id).then_some(w.op);
             }
         }
         let nprocs = self.cfg.nprocs as usize;
-        // A value produced by an *earlier* epoch has a fully retired
+        // A value produced by an *earlier* run has a fully retired
         // cone: nothing to join beyond the frontier itself. For the
-        // current epoch the dependency system reports the cone; an
-        // over-approximate cone (the heuristic's prefix) may push the
-        // frontier later than the value's completion — conservative,
-        // never early.
+        // current run the dependency system reports the cone; an
+        // over-approximate cone (the heuristic's prefix fallback) may
+        // push the frontier later than the value's completion —
+        // conservative, never early.
         let cone = match target {
             Some(op) => {
                 let (ranks, cone_frontier) = crate::sync::resolve_cone(&self.state, op);
@@ -273,6 +345,7 @@ impl Context {
             root,
             frontier,
             &cone,
+            bytes,
         );
     }
 
@@ -293,7 +366,7 @@ impl Context {
             self.unpin_all(&[(Rank(0), f.tag)]);
             return Err(e.clone());
         }
-        self.settle(Rank(0), &[(Rank(0), f.tag)]);
+        self.settle(Rank(0), &[(Rank(0), f.tag)], SCALAR_BYTES);
         self.report = self.state.report();
         let value = match self.backend.staged_scalar(Rank(0), f.tag) {
             Some(v) => Ok(v),
@@ -415,7 +488,21 @@ impl Context {
             self.unpin_all(&f.tags);
             return Err(e.clone());
         }
-        self.settle(Rank(0), &f.tags);
+        // Cone-aware dense costing: the flat gather delivered the
+        // payload to the root only, and every replicated interpreter
+        // (§5.5) consumes the forced array — so the settle broadcasts
+        // the whole dense volume (ring vs tree chosen per volume in
+        // [`crate::comm::bcast_shape_for`]). The ring allgather already
+        // delivered every block to every rank; only the scalar-sized
+        // completion notification rides its settle.
+        let bytes = match self.cfg.collective {
+            Collective::Flat => {
+                let layout = self.reg.layout(f.base);
+                layout.rows() * layout.row_elems() * layout.dtype.size()
+            }
+            Collective::Tree => SCALAR_BYTES,
+        };
+        self.settle(Rank(0), &f.tags, bytes);
         self.report = self.state.report();
         let out = if self.backend.materializes_data() {
             let layout = self.reg.layout(f.base).clone();
@@ -726,6 +813,71 @@ mod tests {
         assert!(
             matches!(got, Err(SchedError::Deadlock { .. })),
             "ring gather under naive must deadlock loudly: {got:?}"
+        );
+    }
+
+    fn ctx_flow(p: u32, window: usize) -> Context {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.flow = crate::flow::FlowCfg::flow(window);
+        Context::sim(cfg, Policy::LatencyHiding)
+    }
+
+    /// The tentpole behaviour: a threshold trigger under Flow mode is a
+    /// non-blocking submit — the batch sits in the admission window,
+    /// nothing executes — and `flush` drains it.
+    #[test]
+    fn flow_submit_is_nonblocking_until_window_fills() {
+        let mut c = ctx_flow(2, 2);
+        let x = c.zeros(&[16], 4);
+        c.add(&x.clone(), &x, &x);
+        c.submit();
+        assert_eq!(c.flushes, 1, "the epoch was recorded and admitted");
+        assert_eq!(c.flow.pending(), 1, "…but is still in flight");
+        assert_eq!(c.state.ops_executed, 0, "nothing executed yet");
+        c.add(&x.clone(), &x, &x);
+        c.submit();
+        assert_eq!(c.flow.pending(), 0, "window of 2 drained as one wave");
+        assert!(c.state.ops_executed > 0);
+        assert_eq!(c.state.n_epochs, 2, "both submits count as epochs");
+        assert_eq!(c.state.run_id, 1, "…executed in one scheduler run");
+    }
+
+    #[test]
+    fn flow_flush_drains_in_flight_epochs() {
+        let mut c = ctx_flow(2, 4);
+        let x = c.zeros(&[16], 4);
+        c.add(&x.clone(), &x, &x);
+        c.submit();
+        assert_eq!(c.flow.pending(), 1);
+        c.flush();
+        assert_eq!(c.flow.pending(), 0);
+        assert!(c.report.ops_executed > 0);
+        assert!(
+            c.state.overhead_streamed > 0.0,
+            "flow charges recording on the recorder clock"
+        );
+    }
+
+    /// A future forced against a still-in-flight epoch (submitted,
+    /// sitting in the flow window, not yet executed) settles correctly:
+    /// the wait drains the window first, then settles the cone.
+    #[test]
+    fn future_forced_against_in_flight_epoch_settles() {
+        let mut c = ctx_flow(4, 8);
+        let x = c.zeros(&[64], 4);
+        let f = c.sum_deferred(&x);
+        c.submit();
+        assert!(c.flow.pending() > 0, "the reduction's epoch is in flight");
+        let v = f.wait(&mut c).unwrap();
+        assert_eq!(v, 0.0, "simulation backends read 0.0");
+        assert_eq!(c.flow.pending(), 0, "forcing drained the window");
+        assert!(
+            c.state.wait_at_cone > 0.0,
+            "a fresh value still pays the targeted settle"
+        );
+        assert!(
+            c.state.stages.writer(Rank(0), f.tag).is_none(),
+            "forcing reclaims the result stage"
         );
     }
 

@@ -16,11 +16,15 @@
 //!   [`lazy`], [`deps`], [`sched`], [`ufunc`], [`summa`], the
 //!   collective-communication engine [`comm`] (tree/ring collective
 //!   schedules and message aggregation, layered between recording and
-//!   scheduling), plus the targeted synchronization engine [`sync`]
+//!   scheduling), the targeted synchronization engine [`sync`]
 //!   (dependency-cone waits, scalar/array futures and reference-counted
-//!   stage reclamation, layered between [`lazy`] and [`sched`]) —
-//!   executing over a discrete-event simulated cluster ([`cluster`],
-//!   [`net`]) or with real numerics ([`exec`]).
+//!   stage reclamation, layered between [`lazy`] and [`sched`]), plus
+//!   the incremental flush engine [`flow`] (streaming admission:
+//!   threshold flushes become non-blocking submits whose execution
+//!   overlaps continued recording, layered between [`lazy`]'s triggers
+//!   and [`sched`]'s epoch drivers) — executing over a discrete-event
+//!   simulated cluster ([`cluster`], [`net`]) or with real numerics
+//!   ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call
@@ -40,6 +44,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod deps;
 pub mod exec;
+pub mod flow;
 pub mod harness;
 pub mod layout;
 pub mod lazy;

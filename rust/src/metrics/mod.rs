@@ -44,6 +44,17 @@ pub struct RunReport {
     /// dependency cone plus riding its broadcast), also included in the
     /// per-rank `wait` vectors.
     pub wait_at_cone: VTime,
+    /// Stall accumulated at admission gates: ranks waiting because the
+    /// recorder had not yet admitted an operation ([`crate::flow`] Flow
+    /// mode). The unhidden share of the streamed recording overhead —
+    /// reported separately from the per-rank `wait` vectors, which keep
+    /// the paper's meaning (communication latency not hidden), exactly
+    /// as Batch mode's serialized recording is not counted there.
+    pub wait_at_admission: VTime,
+    /// Recording overhead charged on the concurrent recorder clock
+    /// (Flow mode) instead of as per-epoch lumps on the rank clocks.
+    /// Included in `overhead`.
+    pub overhead_streamed: VTime,
     /// Staging buffers alive when the report was taken.
     pub live_stages: u64,
     /// High-water mark of live staging buffers — bounded by
@@ -102,6 +113,8 @@ impl RunReport {
         self.n_epochs += other.n_epochs;
         self.wait_at_barrier += other.wait_at_barrier;
         self.wait_at_cone += other.wait_at_cone;
+        self.wait_at_admission += other.wait_at_admission;
+        self.overhead_streamed += other.overhead_streamed;
         // Back-to-back independent runs: leftover live stages add up;
         // the combined peak is whichever run's was higher.
         self.live_stages += other.live_stages;
@@ -122,6 +135,23 @@ impl RunReport {
         }
         let total: f64 = self.wait.iter().sum();
         100.0 * total / (self.makespan * self.wait.len() as f64)
+    }
+
+    /// Share of the streamed recording overhead that execution actually
+    /// hid — the record/execute overlap of the incremental flush engine
+    /// ([`crate::flow::overlap`]). Batch mode streams nothing (its
+    /// recording is serialized onto the rank clocks by construction),
+    /// so it reports 0; Flow mode reports
+    /// `100 · (1 − wait_at_admission / (P · overhead_streamed))`,
+    /// clamped to [0, 100] — 100 means no rank ever stalled for the
+    /// recorder.
+    pub fn overlap_pct(&self) -> f64 {
+        let p = self.wait.len() as f64;
+        let streamed = self.overhead_streamed * p;
+        if streamed <= 0.0 {
+            return 0.0;
+        }
+        (100.0 * (1.0 - self.wait_at_admission / streamed)).clamp(0.0, 100.0)
     }
 
     /// CPU utilization: busy / (P × makespan).
@@ -151,6 +181,8 @@ impl RunReport {
         o.push("n_epochs", self.n_epochs.into());
         o.push("wait_at_barrier", self.wait_at_barrier.into());
         o.push("wait_at_cone", self.wait_at_cone.into());
+        o.push("wait_at_admission", self.wait_at_admission.into());
+        o.push("overlap_pct", self.overlap_pct().into());
         o.push("live_stages", self.live_stages.into());
         o.push("peak_live_stages", self.peak_live_stages.into());
         o
@@ -203,7 +235,21 @@ mod tests {
         assert!(s.contains("n_epochs"));
         assert!(s.contains("wait_at_barrier"));
         assert!(s.contains("wait_at_cone"));
+        assert!(s.contains("wait_at_admission"));
+        assert!(s.contains("overlap_pct"));
         assert!(s.contains("peak_live_stages"));
+    }
+
+    #[test]
+    fn overlap_pct_semantics() {
+        let mut r = RunReport::new(4);
+        assert_eq!(r.overlap_pct(), 0.0, "batch mode streams nothing");
+        r.overhead_streamed = 1.0; // ×4 ranks = 4.0 streamed
+        assert_eq!(r.overlap_pct(), 100.0, "no admission stall: fully hidden");
+        r.wait_at_admission = 2.0;
+        assert!((r.overlap_pct() - 50.0).abs() < 1e-9);
+        r.wait_at_admission = 100.0;
+        assert_eq!(r.overlap_pct(), 0.0, "clamped");
     }
 
     #[test]

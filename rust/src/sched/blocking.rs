@@ -43,6 +43,7 @@ pub fn run_blocking(
 ) -> Result<RunReport, SchedError> {
     let mut state = ExecState::new(cfg);
     state.n_epochs = 1;
+    state.run_id = 1;
     run_blocking_epoch(ops, cfg, backend, &mut state)?;
     Ok(state.report())
 }
@@ -75,11 +76,18 @@ pub(crate) fn run_blocking_epoch(
     }
     let mut ptr = vec![0usize; n];
     // No dependency system: only the (cheaper) recording overhead.
-    st.charge_overhead(super::batch_overhead(
-        ops,
-        cfg.spec.blocking_op_overhead,
-        &cfg.spec,
-    ));
+    // Flow waves pay it on the concurrent recorder clock instead; the
+    // per-op admission gates below are what execution observes. The
+    // blocking baseline still never overlaps across operation
+    // boundaries on a rank — a wave buys it the streamed recording
+    // clock, nothing more.
+    if st.admit.is_empty() {
+        st.charge_overhead(super::batch_overhead(
+            ops,
+            cfg.spec.blocking_op_overhead,
+            &cfg.spec,
+        ));
+    }
 
     // Runnable ranks by clock; receivers parked on an unposted send.
     let mut heap: BinaryHeap<TEvent<Rank>> = BinaryHeap::new();
@@ -106,6 +114,7 @@ pub(crate) fn run_blocking_epoch(
         let op = &ops[i];
         match &op.payload {
             OpPayload::Compute(task) => {
+                st.gate_admission(rank, op.id);
                 backend.exec_compute(rank, task);
                 st.busy[r] += costs[i];
                 st.clock[r] += costs[i];
@@ -116,7 +125,7 @@ pub(crate) fn run_blocking_epoch(
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let t0 = st.clock[r];
+                let t0 = st.gate_admission(rank, op.id);
                 let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Data leaves the sender *now* (eager injection): the
                 // payload must be captured before the sender's later
@@ -151,7 +160,7 @@ pub(crate) fn run_blocking_epoch(
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let t0 = st.clock[r];
+                let t0 = st.gate_admission(rank, op.id);
                 if st.net.send_posted(*tag) {
                     let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();

@@ -107,10 +107,13 @@ impl<'a> Lh<'a> {
         self.distribute(ready, t);
     }
 
-    /// Post one communication op at the rank's current time.
+    /// Post one communication op at the rank's current time — no
+    /// earlier than its admission (a Flow wave's later epochs post
+    /// their comm the moment the recorder admits them; the post itself
+    /// costs the rank nothing, so the clock is not advanced).
     fn post_comm(&mut self, op_id: OpId) {
         let op = &self.ops[op_id.idx()];
-        let now = self.st.clock[op.rank.idx()];
+        let now = self.st.clock[op.rank.idx()].max(self.st.admit_time(op_id));
         match &op.payload {
             OpPayload::Send {
                 peer, tag, bytes, ..
@@ -192,7 +195,8 @@ impl<'a> Lh<'a> {
         self.st.clock[r] = now;
 
         // Invariant 2: all ready communication is initiated before any
-        // compute starts.
+        // compute starts (under a Flow wave, no earlier than each op's
+        // admission — handled inside `post_comm`).
         while let Some(c) = self.ready_comm[r].pop_front() {
             self.post_comm(c);
         }
@@ -202,6 +206,7 @@ impl<'a> Lh<'a> {
         }
         if let Some(op) = self.pick_compute(r) {
             self.state[r] = State::Busy;
+            let now = self.st.gate_admission(rank, op);
             let blk = super::primary_block(&self.ops[op.idx()]);
             let hot = blk.is_some() && blk == self.st.last_block[r];
             self.st.last_block[r] = blk.or(self.st.last_block[r]);
@@ -231,6 +236,7 @@ pub fn run_latency_hiding(
 ) -> Result<RunReport, SchedError> {
     let mut state = ExecState::new(cfg);
     state.n_epochs = 1;
+    state.run_id = 1;
     run_latency_hiding_epoch(ops, cfg, backend, &mut state)?;
     Ok(state.report())
 }
@@ -251,7 +257,12 @@ pub(crate) fn run_latency_hiding_epoch(
     // Every process records + inserts every operation (global knowledge,
     // Section 5.5): the dependency-system overhead is charged to all
     // ranks up front, on top of wherever their clocks already are.
-    st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
+    // Flow waves (`st.admit` non-empty) pay recording on the concurrent
+    // recorder clock instead — execution observes it only through the
+    // per-op admission gates (see `crate::flow::overlap`).
+    if st.admit.is_empty() {
+        st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
+    }
 
     let mut remaining = vec![0u64; n];
     for op in ops {

@@ -34,10 +34,16 @@ use crate::cluster::{MachineSpec, Placement};
 use crate::comm::Collective;
 use crate::deps::{DagDeps, DepSystem, HeuristicDeps};
 use crate::exec::Backend;
+use crate::flow::FlowCfg;
 use crate::metrics::RunReport;
 use crate::types::{OpId, Rank, Tag, VTime};
 use crate::util::fxhash::FxHashMap;
 use crate::ufunc::{Dst, Kernel, OpNode, OpPayload, SendSrc};
+
+/// Default flush threshold of the lazy context (paper: "a user-defined
+/// threshold"). Lives here so [`SchedCfg`] can carry the knob end to
+/// end (CLI `--flush-threshold`, harness JSON metadata).
+pub const DEFAULT_FLUSH_THRESHOLD: usize = 50_000;
 
 /// Which dependency system backs the scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +101,13 @@ pub struct SchedCfg {
     /// join of PR 2, or the targeted dependency-cone settle of
     /// [`crate::sync`] (the default).
     pub sync: SyncMode,
+    /// How threshold triggers turn into execution: stop-the-world
+    /// batches (the reference path) or the incremental flush engine's
+    /// streaming admission ([`crate::flow`]; CLI `--flow`).
+    pub flow: FlowCfg,
+    /// Recorded-operation count that fires flush trigger 2
+    /// ([`crate::lazy::Context`]; CLI `--flush-threshold`).
+    pub flush_threshold: usize,
 }
 
 impl SchedCfg {
@@ -108,6 +121,8 @@ impl SchedCfg {
             collective: Collective::Flat,
             aggregation: 0,
             sync: SyncMode::Cone,
+            flow: FlowCfg::default(),
+            flush_threshold: DEFAULT_FLUSH_THRESHOLD,
         }
     }
 }
@@ -176,22 +191,61 @@ pub fn execute_epoch(
     backend: &mut dyn Backend,
     state: &mut ExecState,
 ) -> Result<(), SchedError> {
-    let dispatch =
-        |ops: &[OpNode], backend: &mut dyn Backend, state: &mut ExecState| match policy {
+    let run = |ops: &[OpNode],
+               backend: &mut dyn Backend,
+               state: &mut ExecState|
+     -> Result<(), SchedError> {
+        // Batch epochs keep the continuous admission log continuous:
+        // recording times are NaN (the overhead lands on the rank
+        // clocks instead), retirement is attributed after the drain.
+        let log_idx = state.flow_log.submitted(f64::NAN, f64::NAN, ops.len());
+        match policy {
             Policy::LatencyHiding => lh::run_latency_hiding_epoch(ops, cfg, backend, state),
             Policy::Blocking => blocking::run_blocking_epoch(ops, cfg, backend, state),
             Policy::Naive => naive::run_naive_epoch(ops, cfg, backend, state),
-        };
+        }?;
+        state.flow_log.retire_from(log_idx, &state.retire);
+        Ok(())
+    };
     state.n_epochs += 1;
+    state.run_id += 1;
     if cfg.aggregation >= 2 {
         let (packed, stats) = crate::comm::aggregate(ops, cfg.aggregation);
-        dispatch(&packed, backend, state)?;
+        run(&packed, backend, state)?;
         state.agg_msgs += stats.packed_msgs;
         state.agg_parts += stats.packed_parts;
         Ok(())
     } else {
-        dispatch(ops, backend, state)
+        run(ops, backend, state)
     }
+}
+
+/// Execute a merged Flow *wave* — one scheduler dispatch spanning
+/// several flush epochs, each operation gated on its epoch's admission
+/// time ([`ExecState::gate_admission`]). The caller (the incremental
+/// flush engine, [`crate::flow::FlowEngine`]) has already counted the
+/// epochs, priced the recording on the recorder clock and filled the
+/// admission log; recording overhead is therefore *not* charged on the
+/// rank clocks here (the runners skip `charge_overhead` whenever
+/// `state.admit` is non-empty).
+pub(crate) fn execute_wave(
+    policy: Policy,
+    ops: &[OpNode],
+    admit: &[VTime],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    state: &mut ExecState,
+) -> Result<(), SchedError> {
+    debug_assert_eq!(ops.len(), admit.len(), "one admission time per op");
+    state.run_id += 1;
+    state.admit = admit.to_vec();
+    let res = match policy {
+        Policy::LatencyHiding => lh::run_latency_hiding_epoch(ops, cfg, backend, state),
+        Policy::Blocking => blocking::run_blocking_epoch(ops, cfg, backend, state),
+        Policy::Naive => naive::run_naive_epoch(ops, cfg, backend, state),
+    };
+    state.admit = Vec::new();
+    res
 }
 
 /// Virtual cost of one sequential NumPy execution of the same compute

@@ -33,6 +33,7 @@ pub fn run_naive(
 ) -> Result<RunReport, SchedError> {
     let mut state = ExecState::new(cfg);
     state.n_epochs = 1;
+    state.run_id = 1;
     run_naive_epoch(ops, cfg, backend, &mut state)?;
     Ok(state.report())
 }
@@ -49,7 +50,13 @@ pub(crate) fn run_naive_epoch(
     st.begin_epoch(ops);
     st.deps.insert_all(ops);
 
-    st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
+    // Flow degrades the naive evaluator to single-epoch waves (see
+    // `crate::flow::engine`): recording still rides the recorder clock
+    // (`st.admit` set), so skip the serial charge exactly like the
+    // other policies.
+    if st.admit.is_empty() {
+        st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
+    }
     // FIFO of ready ops per rank, in becoming-ready order — the naive
     // evaluator draws no distinction between communication and compute.
     let mut fifo: Vec<VecDeque<usize>> = vec![VecDeque::new(); n];
@@ -94,6 +101,7 @@ pub(crate) fn run_naive_epoch(
         let mut done_ids = Vec::new();
         match &op.payload {
             OpPayload::Compute(task) => {
+                st.gate_admission(rank, op.id);
                 backend.exec_compute(rank, task);
                 st.busy[r] += costs[i];
                 st.clock[r] += costs[i];
@@ -105,7 +113,7 @@ pub(crate) fn run_naive_epoch(
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let t0 = st.clock[r];
+                let t0 = st.gate_admission(rank, op.id);
                 let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time (see lh.rs).
                 let info = &xfers.info[tag];
@@ -132,7 +140,7 @@ pub(crate) fn run_naive_epoch(
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let t0 = st.clock[r];
+                let t0 = st.gate_admission(rank, op.id);
                 if st.net.send_posted(*tag) {
                     let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();

@@ -39,6 +39,7 @@
 
 use crate::deps::DepSystem;
 use crate::exec::Backend;
+use crate::flow::AdmissionLog;
 use crate::metrics::RunReport;
 use crate::net::Network;
 use crate::sync::StageTable;
@@ -74,10 +75,33 @@ pub struct ExecState {
     /// [`crate::sync::SyncMode::Cone`]): joining the value's dependency
     /// cone plus riding its broadcast back out.
     pub wait_at_cone: VTime,
-    /// Retirement log of the *current* epoch: `(rank, time)` per
-    /// operation id, `NaN` until the operation retires. Reset by
-    /// `begin_epoch`; consumed by the cone-wait machinery.
+    /// Retirement log of the *current* scheduler run (a Batch epoch or
+    /// a merged Flow wave): `(rank, time)` per operation id, `NaN`
+    /// until the operation retires. Reset by `begin_epoch`; consumed by
+    /// the cone-wait machinery.
     pub retire: Vec<(Rank, VTime)>,
+    /// Scheduler dispatches executed so far (a Flow wave spans several
+    /// epochs but is one run). Stage provenance and the retirement log
+    /// are only valid for the current run — the cone-wait machinery
+    /// keys on this, not on `n_epochs`.
+    pub run_id: u64,
+    /// Per-op admission times of the wave currently executing (indexed
+    /// by op id). Empty for Batch epochs: everything is admitted
+    /// up front and recording overhead is charged on the rank clocks
+    /// instead (`ExecState::charge_overhead`).
+    pub admit: Vec<VTime>,
+    /// Wait accumulated at admission gates: a rank stalled because the
+    /// recorder had not yet admitted the operation (Flow mode only).
+    pub wait_at_admission: VTime,
+    /// Recording overhead charged on the concurrent recorder clock
+    /// (Flow mode) instead of on the rank clocks. Feeds
+    /// [`RunReport::overlap_pct`].
+    pub overhead_streamed: VTime,
+    /// The continuous admission log: one entry per flush epoch across
+    /// the whole run, replacing the old per-epoch ready frontiers as
+    /// the record of when epochs were admitted and retired
+    /// ([`crate::flow::frontier`]).
+    pub flow_log: AdmissionLog,
     /// Reference-counted staging-buffer accounting (liveness, completion
     /// times, pins) — see [`crate::sync::stages`].
     pub stages: StageTable,
@@ -106,6 +130,11 @@ impl ExecState {
             wait_at_barrier: 0.0,
             wait_at_cone: 0.0,
             retire: Vec::new(),
+            run_id: 0,
+            admit: Vec::new(),
+            wait_at_admission: 0.0,
+            overhead_streamed: 0.0,
+            flow_log: AdmissionLog::default(),
             stages: StageTable::new(),
             ops_executed: 0,
             n_compute: 0,
@@ -151,6 +180,35 @@ impl ExecState {
         self.clock[r.idx()]
     }
 
+    /// The admission time of an operation of the current wave — 0.0
+    /// outside Flow waves (everything admitted up front).
+    #[inline]
+    pub fn admit_time(&self, id: OpId) -> VTime {
+        self.admit.get(id.idx()).copied().unwrap_or(0.0)
+    }
+
+    /// Gate rank `r` on operation `id`'s admission: if the recorder has
+    /// not admitted the op yet, the rank's clock advances to the
+    /// admission time and the stall is charged to `wait_at_admission` —
+    /// the *unhidden* part of the streamed recording overhead, the Flow
+    /// analogue of Batch mode's `ExecState::charge_overhead` clock
+    /// advance. Deliberately **not** charged to per-rank `wait`: the
+    /// paper's waiting-time metric means communication latency not
+    /// hidden behind computation, and Batch mode's serialized recording
+    /// is not counted there either — keeping the two modes comparable.
+    /// Returns the rank's clock after the gate. A no-op for Batch
+    /// epochs (`admit` empty).
+    #[inline]
+    pub fn gate_admission(&mut self, r: Rank, id: OpId) -> VTime {
+        let gate = self.admit_time(id);
+        let d = gate - self.clock[r.idx()];
+        if d > 0.0 {
+            self.wait_at_admission += d;
+            self.clock[r.idx()] = gate;
+        }
+        self.clock[r.idx()]
+    }
+
     /// Start one epoch's retirement bookkeeping: reset the per-op
     /// retirement log and register every stage *reader* of the batch in
     /// the stage table (so reclamation can never drop a stage a later
@@ -185,7 +243,7 @@ impl ExecState {
         for a in &op.accesses {
             let Loc::Stage(tag) = a.loc else { continue };
             if a.write {
-                self.stages.materialized(op.rank, tag, t, self.n_epochs, op.id);
+                self.stages.materialized(op.rank, tag, t, self.run_id, op.id);
             } else if self.stages.reader_retired(op.rank, tag) {
                 backend.drop_stage(op.rank, tag);
             }
@@ -221,6 +279,8 @@ impl ExecState {
         rep.n_epochs = self.n_epochs;
         rep.wait_at_barrier = self.wait_at_barrier;
         rep.wait_at_cone = self.wait_at_cone;
+        rep.wait_at_admission = self.wait_at_admission;
+        rep.overhead_streamed = self.overhead_streamed;
         rep.live_stages = self.stages.live;
         rep.peak_live_stages = self.stages.peak_live;
         rep
@@ -282,6 +342,28 @@ mod tests {
     }
 
     #[test]
+    fn gate_admission_charges_only_unadmitted_ops() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![1.0, 5.0];
+        st.admit = vec![3.0, 3.0];
+        st.gate_admission(Rank(0), OpId(0));
+        st.gate_admission(Rank(1), OpId(1));
+        assert_eq!(st.clock, vec![3.0, 5.0], "only the lagging rank stalls");
+        assert!((st.wait_at_admission - 2.0).abs() < 1e-12);
+        assert_eq!(
+            st.wait,
+            vec![0.0, 0.0],
+            "admission stalls are recording overhead, not comm wait"
+        );
+        // Batch epochs (empty admit) never gate.
+        st.admit.clear();
+        st.gate_admission(Rank(0), OpId(99));
+        assert_eq!(st.clock[0], 3.0);
+        assert!((st.wait_at_admission - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn retire_log_and_stage_lifecycle() {
         use crate::exec::SimBackend;
         use crate::types::{OpId, Tag};
@@ -289,7 +371,7 @@ mod tests {
         let cfg = SchedCfg::new(MachineSpec::tiny(), 1);
         let mut st = ExecState::new(&cfg);
         st.stages.reclaim = true;
-        st.n_epochs = 1;
+        st.run_id = 1;
         let writer = OpNode {
             id: OpId(0),
             rank: Rank(0),
@@ -321,7 +403,7 @@ mod tests {
         assert_eq!(st.retired(OpId(0)), Some((Rank(0), 1.5)));
         let w = st.stages.writer(Rank(0), Tag(7)).unwrap();
         assert_eq!(w.done, 1.5);
-        assert_eq!(w.epoch, 1);
+        assert_eq!(w.run, 1);
         st.note_retire(&reader, 2.0, &mut be);
         assert!(
             st.stages.writer(Rank(0), Tag(7)).is_none(),

@@ -8,22 +8,24 @@
 //! arXiv:1811.05077: a wait is a graph transformation local to the
 //! value's cone, not a program-wide barrier).
 //!
-//! Both dependency systems answer the cone query through one trait,
-//! with the fidelity they can afford:
+//! Both dependency systems answer the cone query through one trait:
 //!
 //! * [`crate::deps::DagDeps`] keeps the full conflict graph, so it walks
 //!   retained predecessor edges and returns the **exact** cone;
-//! * [`crate::deps::HeuristicDeps`] — the paper's point is precisely
-//!   that it stores *no* graph — answers with the **conservative
-//!   over-approximation** [`Cone::Prefix`]: every operation recorded up
-//!   to and including the target. Insertion order bounds the true cone
-//!   from above (conflict edges always point forward in recording
-//!   order), so the prefix can only *delay* a wait, never settle it too
-//!   early — safe, at the cost of joining more ranks than strictly
-//!   necessary within the producing epoch. Values produced by *earlier*
-//!   epochs (the pipelined-futures case that matters) bypass the cone
-//!   query entirely: their whole cone has retired, so the frontier is
-//!   just the recorded completion time.
+//! * [`crate::deps::HeuristicDeps`] stores no graph — the paper's point
+//!   — but its insert scan walks the conflicting access-nodes anyway,
+//!   and since the "cheaper exact cones" upgrade it keeps those ids as
+//!   location-level **predecessor hints**: cone queries walk the hints
+//!   transitively and match the DAG's exact cone on insert-then-drain
+//!   streams. Targets the system no longer knows (recycled epochs) fall
+//!   back to the **conservative over-approximation** [`Cone::Prefix`]:
+//!   every operation recorded up to and including the target. Insertion
+//!   order bounds the true cone from above (conflict edges always point
+//!   forward in recording order), so the prefix can only *delay* a
+//!   wait, never settle it too early. Values produced by *earlier*
+//!   scheduler runs (the pipelined-futures case that matters) bypass
+//!   the cone query entirely: their whole cone has retired, so the
+//!   frontier is just the recorded completion time.
 
 use crate::types::OpId;
 
@@ -74,10 +76,12 @@ mod tests {
     }
 
     /// Two independent chains; the exact cone of one chain's tail must
-    /// exclude the other chain entirely, while the heuristic answers
-    /// with the safe prefix.
+    /// exclude the other chain entirely — from the DAG's retained edges
+    /// *and* from the heuristic's predecessor hints, which shrink the
+    /// old whole-prefix answer down to the same exact cone. An unknown
+    /// target still degrades to the safe prefix.
     #[test]
-    fn dag_cone_is_exact_heuristic_is_prefix() {
+    fn both_systems_answer_exact_cones_heuristic_via_hints() {
         let a = BaseId(0);
         let b = BaseId(1);
         let ops = vec![
@@ -92,14 +96,21 @@ mod tests {
             dag.insert(o);
             heu.insert(o);
         }
-        match dag.cone_of(OpId(2)) {
-            Cone::Exact(mut ids) => {
-                ids.sort();
-                assert_eq!(ids, vec![OpId(0), OpId(2)], "chain B excluded");
+        for system in [&dag.cone_of(OpId(2)), &heu.cone_of(OpId(2))] {
+            match system {
+                Cone::Exact(ids) => {
+                    let mut ids = ids.clone();
+                    ids.sort();
+                    assert_eq!(ids, vec![OpId(0), OpId(2)], "chain B excluded");
+                }
+                other => panic!("expected an exact cone, got {other:?}"),
             }
-            other => panic!("dag must answer exactly, got {other:?}"),
         }
-        assert_eq!(heu.cone_of(OpId(2)), Cone::Prefix);
+        assert_eq!(
+            heu.cone_of(OpId(99)),
+            Cone::Prefix,
+            "unknown targets degrade to the conservative prefix"
+        );
     }
 
     /// The exact cone is transitive: w -> r -> w chains pull in every

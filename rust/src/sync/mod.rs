@@ -12,9 +12,10 @@
 //!    policies); stage-writing retirements also land in the
 //!    reference-counted [`stages::StageTable`].
 //! 2. Forcing a value extracts the **backward dependency cone** of the
-//!    operation that produced it — exactly from [`crate::deps::DagDeps`],
-//!    conservatively from [`crate::deps::HeuristicDeps`], both behind
-//!    the [`cone::ConeSource`] trait.
+//!    operation that produced it — from [`crate::deps::DagDeps`]'s
+//!    retained edges or [`crate::deps::HeuristicDeps`]'s predecessor
+//!    hints (exact on epoch streams; conservative prefix fallback for
+//!    recycled targets), both behind the [`cone::ConeSource`] trait.
 //! 3. [`settle_cone`] joins only the cone's ranks at the cone's
 //!    completion frontier, then rides a broadcast of the value back out
 //!    to every rank through the persistent [`crate::net::Network`] —
@@ -45,7 +46,7 @@ pub mod stages;
 pub use cone::{Cone, ConeSource};
 pub use stages::{StageTable, StageWriter};
 
-use crate::comm::{bcast_rounds, Collective, SCALAR_BYTES};
+use crate::comm::{bcast_rounds, BcastShape, Collective, RING_BCAST_SEGMENTS};
 use crate::sched::ExecState;
 use crate::types::{BaseId, OpId, Rank, Tag, VTime};
 use crate::ufunc::OpBuilder;
@@ -154,25 +155,96 @@ pub fn resolve_cone(st: &ExecState, target: OpId) -> (Vec<bool>, VTime) {
     (ranks, frontier)
 }
 
+/// Time the broadcast of a `bytes`-sized forced value out of `root`
+/// (holding it at `frontier`) through the persistent network, along
+/// `shape`. Returns per-*virtual-id* arrival times (vid 0 = root = the
+/// frontier; vid `v` is rank `(root + v) mod P`). The messages occupy
+/// real NIC frontiers (and count as wire traffic), so a congested
+/// ingress delays the value's arrival exactly as it would a data
+/// transfer; a forwarding hop can only inject once its own copy — or,
+/// on the pipelined ring, the segment — arrived.
+pub fn broadcast_value(
+    st: &mut ExecState,
+    bld: &mut OpBuilder,
+    shape: BcastShape,
+    root: Rank,
+    frontier: VTime,
+    bytes: u64,
+) -> Vec<VTime> {
+    let p = st.clock.len() as u32;
+    let mut arrival: Vec<VTime> = vec![frontier; p as usize];
+    if p == 1 {
+        return arrival;
+    }
+    let rank_of = |vid: u32| Rank((root.0 + vid) % p);
+    let hop = |st: &mut ExecState, bld: &mut OpBuilder, from: Rank, to: Rank, t0: VTime, b: u64| {
+        let tag = bld.fresh_tag();
+        st.net.post_recv(t0, to, tag);
+        let ps = st.net.post_send(t0, from, to, tag, b);
+        ps.recv_done.expect("both halves posted")
+    };
+    match shape {
+        BcastShape::Tree => {
+            for round in bcast_rounds(p) {
+                for (vf, vt) in round {
+                    let t0 = arrival[vf as usize];
+                    arrival[vt as usize] = hop(st, bld, rank_of(vf), rank_of(vt), t0, bytes);
+                }
+            }
+        }
+        BcastShape::Flat => {
+            for vid in 1..p {
+                arrival[vid as usize] = hop(st, bld, root, rank_of(vid), frontier, bytes);
+            }
+        }
+        BcastShape::Ring => {
+            // Pipelined ring (the bandwidth-optimal dense shape): the
+            // payload is cut into segments that chase each other
+            // around the ring; the NIC FIFO frontiers serialize each
+            // rank's consecutive injections, so the pipeline emerges
+            // from the network model rather than being scripted here.
+            // A rank holds the full value once its *last* segment
+            // lands (FIFO ingress keeps segments ordered).
+            let segs = RING_BCAST_SEGMENTS.min(bytes).max(1);
+            let seg = bytes / segs;
+            let last_seg = bytes - seg * (segs - 1);
+            for s in 0..segs {
+                let b = if s + 1 == segs { last_seg } else { seg };
+                let mut t = frontier;
+                for vid in 0..p - 1 {
+                    t = hop(st, bld, rank_of(vid), rank_of(vid + 1), t, b);
+                    if s + 1 == segs {
+                        arrival[(vid + 1) as usize] = t;
+                    }
+                }
+            }
+        }
+    }
+    arrival
+}
+
 /// The targeted settle: join the cone's ranks at the cone's completion
-/// `frontier`, then broadcast the value from `root` to every rank
-/// through the persistent network — binomial rounds under
-/// [`Collective::Tree`] (the shape of [`crate::comm::broadcast_tree`]),
-/// a flat fan-out under [`Collective::Flat`]. Every join is accounted
-/// as `wait_at_cone`. The broadcast messages occupy real NIC frontiers
-/// (and count as wire traffic), so a congested ingress delays the
-/// value's arrival exactly as it would a data transfer. Returns the
-/// latest arrival.
+/// `frontier`, then broadcast the forced value — `bytes` of it — from
+/// `root` to every rank through the persistent network
+/// ([`broadcast_value`]). The shape is volume-aware
+/// ([`crate::comm::bcast_shape_for`]): scalar notifications keep the
+/// configured collective's shape (binomial rounds under
+/// [`Collective::Tree`], a flat fan-out under [`Collective::Flat`]),
+/// while a dense payload — a forced [`ArrayFuture`] whose flat gather
+/// delivered to the root only, yet every replicated interpreter (§5.5)
+/// consumes the array — rides the bandwidth-optimal pipelined ring.
+/// Every join is accounted as `wait_at_cone`. Returns the latest
+/// arrival.
 ///
 /// Note on the cone-rank joins: while the replicated interpreter
 /// (§5.5) broadcasts to *every* rank, each non-root rank's broadcast
 /// arrival is ≥ the frontier, so the cone joins are subsumed in the
 /// final clocks — what the cone query observably contributes today is
-/// the *frontier itself* (the heuristic's over-approximate prefix can
-/// only push it later than the exact DAG cone, never earlier). The
-/// rank set is kept because partial forces (a future consumed by a
-/// subset of ranks — see ROADMAP) settle the cone without the global
-/// broadcast, where the distinction becomes load-bearing.
+/// the *frontier itself* (an over-approximate cone can only push it
+/// later than the exact DAG cone, never earlier). The rank set is kept
+/// because partial forces (a future consumed by a subset of ranks —
+/// see ROADMAP) settle the cone without the global broadcast, where
+/// the distinction becomes load-bearing.
 pub fn settle_cone(
     st: &mut ExecState,
     bld: &mut OpBuilder,
@@ -180,6 +252,7 @@ pub fn settle_cone(
     root: Rank,
     frontier: VTime,
     cone_ranks: &[bool],
+    bytes: u64,
 ) -> VTime {
     let p = st.clock.len() as u32;
     // The cone's ranks cannot observe the value before the cone is
@@ -193,32 +266,9 @@ pub fn settle_cone(
     if p == 1 {
         return frontier;
     }
-    // Ride the value back out. Arrival times compound hop by hop; a
-    // forwarding rank's NIC can only inject once its own copy arrived.
+    let shape = crate::comm::bcast_shape_for(collective, p, bytes);
+    let arrival = broadcast_value(st, bld, shape, root, frontier, bytes);
     let rank_of = |vid: u32| Rank((root.0 + vid) % p);
-    let mut arrival: Vec<VTime> = vec![frontier; p as usize];
-    let hop = |st: &mut ExecState, bld: &mut OpBuilder, from: Rank, to: Rank, t0: VTime| {
-        let tag = bld.fresh_tag();
-        st.net.post_recv(t0, to, tag);
-        let ps = st.net.post_send(t0, from, to, tag, SCALAR_BYTES);
-        ps.recv_done.expect("both halves posted")
-    };
-    match collective {
-        Collective::Tree => {
-            for round in bcast_rounds(p) {
-                for (vf, vt) in round {
-                    let (from, to) = (rank_of(vf), rank_of(vt));
-                    let t0 = arrival[vf as usize];
-                    arrival[vt as usize] = hop(st, bld, from, to, t0);
-                }
-            }
-        }
-        Collective::Flat => {
-            for vid in 1..p {
-                arrival[vid as usize] = hop(st, bld, root, rank_of(vid), frontier);
-            }
-        }
-    }
     let mut latest = frontier;
     for vid in 1..p {
         let r = rank_of(vid);
@@ -232,6 +282,7 @@ pub fn settle_cone(
 mod tests {
     use super::*;
     use crate::cluster::MachineSpec;
+    use crate::comm::SCALAR_BYTES;
     use crate::sched::SchedCfg;
 
     fn state(p: u32) -> ExecState {
@@ -247,7 +298,15 @@ mod tests {
         // (ahead, outside the cone) is never dragged back or forward to
         // anyone else's clock.
         let cone = vec![true, true, false, false];
-        let latest = settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 4.0, &cone);
+        let latest = settle_cone(
+            &mut st,
+            &mut bld,
+            Collective::Tree,
+            Rank(0),
+            4.0,
+            &cone,
+            SCALAR_BYTES,
+        );
         assert!(st.clock[0] >= 5.0, "root already past the frontier");
         assert!(st.clock[1] >= 4.0, "cone rank joined the frontier");
         assert_eq!(st.clock[2], 9.0, "non-cone rank keeps its head start");
@@ -268,7 +327,15 @@ mod tests {
         let mut st = state(4);
         st.clock = clocks.clone();
         let mut bld = OpBuilder::new();
-        settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 1.0, &[false; 4]);
+        settle_cone(
+            &mut st,
+            &mut bld,
+            Collective::Tree,
+            Rank(0),
+            1.0,
+            &[false; 4],
+            SCALAR_BYTES,
+        );
         let cone_wait = st.wait_at_cone;
 
         let mut stb = state(4);
@@ -287,7 +354,15 @@ mod tests {
         for collective in [Collective::Flat, Collective::Tree] {
             let mut st = state(8);
             let mut bld = OpBuilder::new();
-            let latest = settle_cone(&mut st, &mut bld, collective, Rank(0), 1.0, &[false; 8]);
+            let latest = settle_cone(
+                &mut st,
+                &mut bld,
+                collective,
+                Rank(0),
+                1.0,
+                &[false; 8],
+                SCALAR_BYTES,
+            );
             assert!(latest > 1.0, "{collective:?}: arrivals take wire time");
             for r in 0..8 {
                 assert!(
@@ -303,9 +378,70 @@ mod tests {
     fn single_rank_settles_at_frontier() {
         let mut st = state(1);
         let mut bld = OpBuilder::new();
-        let t = settle_cone(&mut st, &mut bld, Collective::Tree, Rank(0), 2.5, &[true]);
+        let t = settle_cone(
+            &mut st,
+            &mut bld,
+            Collective::Tree,
+            Rank(0),
+            2.5,
+            &[true],
+            SCALAR_BYTES,
+        );
         assert_eq!(t, 2.5);
         assert_eq!(st.clock[0], 2.5);
+    }
+
+    /// The volume-aware broadcast costing: a dense payload's fan-out is
+    /// strictly cheaper on the pipelined ring than on the binomial tree
+    /// at P = 16 (bandwidth-bound regime), while a scalar notification
+    /// is cheaper on the tree (latency-bound regime).
+    #[test]
+    fn ring_beats_tree_for_dense_payloads_only() {
+        let last = |shape: BcastShape, bytes: u64| -> VTime {
+            let mut st = state(16);
+            let mut bld = OpBuilder::new();
+            let arr = broadcast_value(&mut st, &mut bld, shape, Rank(0), 0.0, bytes);
+            arr.iter().cloned().fold(0.0, f64::max)
+        };
+        let dense = 1u64 << 22; // 4 MiB: β-dominated
+        assert!(
+            last(BcastShape::Ring, dense) < last(BcastShape::Tree, dense),
+            "dense: ring {} must undercut tree {}",
+            last(BcastShape::Ring, dense),
+            last(BcastShape::Tree, dense)
+        );
+        assert!(
+            last(BcastShape::Tree, SCALAR_BYTES) < last(BcastShape::Ring, SCALAR_BYTES),
+            "scalar: tree must undercut the P-1-hop ring"
+        );
+    }
+
+    /// A forced dense gather routes through the ring automatically and
+    /// every rank still ends up holding the value.
+    #[test]
+    fn dense_settle_rides_the_ring_and_delivers_everyone() {
+        let mut st = state(8);
+        let mut bld = OpBuilder::new();
+        let dense = 1u64 << 20;
+        let latest = settle_cone(
+            &mut st,
+            &mut bld,
+            Collective::Flat,
+            Rank(0),
+            1.0,
+            &[false; 8],
+            dense,
+        );
+        assert!(latest > 1.0);
+        for r in 0..8 {
+            assert!(st.clock[r] >= 1.0, "rank {r} holds the dense value");
+        }
+        let segs = RING_BCAST_SEGMENTS;
+        assert_eq!(
+            st.net.n_transfers,
+            7 * segs,
+            "pipelined ring: (P-1)·segments messages"
+        );
     }
 
     #[test]

@@ -40,20 +40,21 @@ struct StageEntry {
     materialized: bool,
     /// Virtual time the writer retired (the stage's completion time).
     done: VTime,
-    /// Epoch the writer retired in (`ExecState::n_epochs` at the time).
-    epoch: u64,
-    /// The writer's operation id *within that epoch* — valid for cone
-    /// extraction only while `epoch` is still the live epoch.
+    /// Scheduler run the writer retired in (`ExecState::run_id` at the
+    /// time — a Batch epoch or a merged Flow wave).
+    run: u64,
+    /// The writer's operation id *within that run* — valid for cone
+    /// extraction only while `run` is still the live run.
     op: crate::types::OpId,
 }
 
 /// A materialized stage's provenance, as the cone-wait machinery needs
-/// it: when the value was done, which epoch produced it, and which
-/// operation-node wrote it.
+/// it: when the value was done, which scheduler run produced it, and
+/// which operation-node wrote it.
 #[derive(Clone, Copy, Debug)]
 pub struct StageWriter {
     pub done: VTime,
-    pub epoch: u64,
+    pub run: u64,
     pub op: crate::types::OpId,
 }
 
@@ -96,31 +97,31 @@ impl StageTable {
             readers: 0,
             materialized: false,
             done: 0.0,
-            epoch: 0,
+            run: 0,
             op: crate::types::OpId(0),
         });
         e.readers += 1;
     }
 
-    /// The writer of `(rank, tag)` retired at `done` in `epoch` as
-    /// operation `op`: the stage is now materialized. Under the lazy
-    /// context tags are run-unique, so each stage materializes once;
-    /// standalone batches built by independent `OpBuilder`s may reuse
-    /// tags across epochs, in which case the new buffer simply replaces
-    /// the old one (no double-counting).
+    /// The writer of `(rank, tag)` retired at `done` in scheduler run
+    /// `run` as operation `op`: the stage is now materialized. Under
+    /// the lazy context tags are run-unique, so each stage materializes
+    /// once; standalone batches built by independent `OpBuilder`s may
+    /// reuse tags across epochs, in which case the new buffer simply
+    /// replaces the old one (no double-counting).
     pub fn materialized(
         &mut self,
         rank: Rank,
         tag: Tag,
         done: VTime,
-        epoch: u64,
+        run: u64,
         op: crate::types::OpId,
     ) {
         let e = self.entries.entry((rank, tag)).or_insert(StageEntry {
             readers: 0,
             materialized: false,
             done: 0.0,
-            epoch: 0,
+            run: 0,
             op: crate::types::OpId(0),
         });
         if !e.materialized {
@@ -130,7 +131,7 @@ impl StageTable {
             self.peak_live = self.peak_live.max(self.live);
         }
         e.done = done;
-        e.epoch = epoch;
+        e.run = run;
         e.op = op;
     }
 
@@ -193,7 +194,7 @@ impl StageTable {
         self.entries.get(&(rank, tag)).and_then(|e| {
             e.materialized.then_some(StageWriter {
                 done: e.done,
-                epoch: e.epoch,
+                run: e.run,
                 op: e.op,
             })
         })

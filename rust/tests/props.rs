@@ -953,6 +953,175 @@ fn stage_reclamation_never_drops_a_live_futures_stage() {
 }
 
 // ---------------------------------------------------------------------
+// Incremental flush engine properties (flow/)
+// ---------------------------------------------------------------------
+
+/// Flow-mode streaming admission is pure timing: random aligned
+/// programs produce bit-identical scalars and arrays under Batch and
+/// Flow (windows 2 and 4), across all three policies and both
+/// dependency systems. Small flush thresholds force many threshold
+/// submits, so waves genuinely merge multiple epochs.
+#[test]
+fn prop_flow_and_batch_bit_identical() {
+    use distnumpy::flow::FlowCfg;
+    use distnumpy::sched::DepsKind;
+
+    let mut rng = Rng::new(0xF10);
+    for trial in 0..12 {
+        let p = 1 + (trial % 4) as u32;
+        let rows = 8 + rng.below(100);
+        let br = 1 + rng.below(10);
+        let n_arrays = 2usize;
+        #[derive(Clone, Copy)]
+        enum Step {
+            Ufunc(usize, usize, usize, u8),
+            Sum(usize),
+        }
+        let n_steps = rng.range(4, 10);
+        let steps: Vec<Step> = (0..n_steps)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    Step::Sum(rng.range(0, n_arrays))
+                } else {
+                    Step::Ufunc(
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, n_arrays),
+                        rng.range(0, 3) as u8,
+                    )
+                }
+            })
+            .collect();
+        let data: Vec<Vec<f32>> = {
+            let mut data_rng = Rng::new(0xF10D + trial as u64);
+            (0..n_arrays)
+                .map(|_| data_rng.fill_f32(rows as usize, -1.0, 1.0))
+                .collect()
+        };
+
+        let run = |policy: Policy, deps: DepsKind, flow: FlowCfg| -> (Vec<f64>, Vec<Vec<f32>>) {
+            let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+            cfg.deps = deps;
+            cfg.flow = flow;
+            cfg.flush_threshold = 6; // many threshold submits per run
+            let mut ctx = Context::new(
+                cfg,
+                policy,
+                Box::new(NativeBackend::new(ClusterStore::new(p))),
+            );
+            let views: Vec<_> = data.iter().map(|d| ctx.array(&[rows], br, d)).collect();
+            let mut pending = Vec::new();
+            let mut sums = Vec::new();
+            for s in &steps {
+                match *s {
+                    Step::Ufunc(o, a, b, k) => {
+                        let kernel = match k {
+                            0 => Kernel::Add,
+                            1 => Kernel::Mul,
+                            _ => Kernel::Axpy(0.25),
+                        };
+                        ctx.ufunc(kernel, &views[o], &[&views[a], &views[b]]);
+                    }
+                    Step::Sum(a) => pending.push(ctx.sum_deferred(&views[a])),
+                }
+            }
+            for f in pending {
+                sums.push(ctx.wait_scalar(&f).unwrap_or_else(|e| {
+                    panic!("{policy:?}/{deps:?}/{flow:?} trial {trial}: {e}")
+                }));
+            }
+            ctx.flush();
+            assert!(
+                ctx.error.is_none(),
+                "{policy:?}/{deps:?}/{flow:?} trial {trial}: aligned program must complete"
+            );
+            let gathers = views
+                .iter()
+                .map(|v| {
+                    ctx.backend
+                        .gather(ctx.reg.layout(v.base))
+                        .expect("data backend")
+                })
+                .collect();
+            (sums, gathers)
+        };
+
+        let want = run(Policy::LatencyHiding, DepsKind::Heuristic, FlowCfg::default());
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            for deps in [DepsKind::Heuristic, DepsKind::Dag] {
+                for flow in [FlowCfg::default(), FlowCfg::flow(2), FlowCfg::flow(4)] {
+                    let got = run(policy, deps, flow);
+                    assert_eq!(
+                        got.0, want.0,
+                        "trial {trial} {policy:?}/{deps:?}/{flow:?}: scalars diverge"
+                    );
+                    assert_eq!(
+                        got.1, want.1,
+                        "trial {trial} {policy:?}/{deps:?}/{flow:?}: arrays diverge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Regression: a future forced while its producing epoch is still *in
+/// flight* — submitted into the flow window, not yet executed — settles
+/// correctly: the force drains the window, reads the right value, and
+/// the record-position snapshot semantics survive later overwrites that
+/// were part of the same drained wave.
+#[test]
+fn flow_future_forced_against_in_flight_epoch_settles() {
+    use distnumpy::flow::FlowCfg;
+
+    let p = 2u32;
+    let rows = 24u64;
+    let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+    cfg.flow = FlowCfg::flow(8); // wide window: submits stay in flight
+    let mut ctx = Context::new(
+        cfg,
+        Policy::LatencyHiding,
+        Box::new(NativeBackend::new(ClusterStore::new(p))),
+    );
+    let mut rng = Rng::new(0xF1F);
+    let data = rng.fill_f32(rows as usize, -1.0, 1.0);
+    let x = ctx.array(&[rows], 3, &data);
+    let want_sum: f64 = data.iter().map(|&v| v as f64).sum();
+
+    let scalar = ctx.sum_deferred(&x);
+    let array = ctx.gather_deferred(x.base);
+    ctx.submit();
+    assert!(ctx.flow.pending() > 0, "the futures' epoch is in flight");
+
+    // A second in-flight epoch overwrites the source *after* the
+    // futures' record position — still nothing has executed.
+    ctx.ufunc(Kernel::Scale(2.0), &x, &[&x]);
+    ctx.submit();
+    assert!(ctx.flow.pending() > 0, "both epochs in flight");
+    assert_eq!(ctx.state.ops_executed, 0, "nothing executed yet");
+
+    let got_sum = ctx.wait_scalar(&scalar).expect("in-flight scalar settles");
+    assert_eq!(ctx.flow.pending(), 0, "forcing drained the window");
+    let tol = 1e-3 * want_sum.abs().max(1.0);
+    assert!(
+        (got_sum - want_sum).abs() < tol,
+        "deferred sum {got_sum} vs reference {want_sum}"
+    );
+    let got = ctx
+        .wait_array(&array)
+        .expect("in-flight gather settles")
+        .expect("data backend");
+    assert_eq!(
+        got, data,
+        "record-position snapshot despite the same-wave overwrite"
+    );
+    // And the overwrite itself executed: the base now holds 2·data.
+    let now = ctx.backend.gather(ctx.reg.layout(x.base)).expect("data");
+    let want_now: Vec<f32> = data.iter().map(|v| v * 2.0).collect();
+    assert_eq!(now, want_now, "the overwriting epoch also executed");
+}
+
+// ---------------------------------------------------------------------
 // Lazy-evaluation context properties
 // ---------------------------------------------------------------------
 
