@@ -96,7 +96,11 @@ USAGE:
                    [--placement by-node|by-core] [--scale S] [--iters N]
                    [--locality] [--collective flat|tree] [--agg N]
                    [--sync cone|barrier] [--flush-threshold N]
-                   [--flow [W|flow|batch]]  # incremental flush engine, window W (default 2)
+                   [--flow [W|flow|batch|sliding|auto|MODE:W]]
+                       # incremental flush engine: W = quantized window
+                       # (default 2), sliding = stream epochs into the
+                       # live scheduler session, auto = sliding with an
+                       # adaptively-steered window
                    [--json]
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
@@ -160,13 +164,26 @@ fn run(cli: &Cli) -> Result<String, String> {
             if let Some(w) = cli.flag("flow") {
                 // `--flow` alone parses as "true": default window.
                 // Also accepts a mode by name (`--flow batch` pins the
-                // reference path, `--flow flow` = default window).
+                // reference path, `--flow flow` = quantized waves,
+                // `--flow sliding` = splice epochs into the live
+                // session, `--flow auto` = sliding + adaptive window,
+                // `--flow sliding:W` / `--flow flow:W` pin the window).
                 cfg.flow = if w == "true" {
                     crate::flow::FlowCfg::flow(2)
+                } else if w == "auto" {
+                    crate::flow::FlowCfg::sliding_auto()
                 } else if let Some(mode) = crate::flow::FlowMode::parse(w) {
                     crate::flow::FlowCfg {
                         mode,
                         ..crate::flow::FlowCfg::flow(2)
+                    }
+                } else if let Some((mode, win)) = w.split_once(':') {
+                    let mode =
+                        crate::flow::FlowMode::parse(mode).ok_or("bad --flow mode")?;
+                    let window: usize = win.parse().map_err(|_| "bad --flow window")?;
+                    crate::flow::FlowCfg {
+                        mode,
+                        window: crate::flow::FlowWindow::Fixed(window.max(1)),
                     }
                 } else {
                     let window = w.parse().map_err(|_| "bad --flow window")?;
@@ -182,11 +199,18 @@ fn run(cli: &Cli) -> Result<String, String> {
                 o.push("speedup", (baseline / report.makespan.max(1e-12)).into());
                 // Run metadata: the knobs that shaped the flush stream.
                 o.push("flush_threshold", (flush_threshold as u64).into());
-                o.push(
-                    "flow_mode",
-                    (if flow_cfg.is_flow() { "flow" } else { "batch" }).into(),
-                );
-                o.push("flow_window", (flow_cfg.window as u64).into());
+                o.push("flow_mode", flow_cfg.mode.name().into());
+                match flow_cfg.window {
+                    crate::flow::FlowWindow::Fixed(w) => {
+                        o.push("flow_window", (w as u64).into());
+                    }
+                    crate::flow::FlowWindow::Auto { .. } => {
+                        // The adaptive window's final value and decision
+                        // count ride in the report itself
+                        // (flow_window_final / window_decisions).
+                        o.push("flow_window", "auto".into());
+                    }
+                }
                 Ok(o.render())
             } else {
                 Ok(format!(
@@ -365,6 +389,43 @@ mod tests {
         assert!(
             run(&Cli::parse(&args("run --app jacobi --flow nope")).unwrap()).is_err(),
             "a bad window errors"
+        );
+    }
+
+    #[test]
+    fn run_with_sliding_and_auto_flow() {
+        let out = run(&Cli::parse(&args(
+            "run --app jacobi --procs 4 --scale 0.05 --iters 2 \
+             --flow sliding --flush-threshold 64 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("\"flow_mode\":\"sliding\""), "{out}");
+        assert!(out.contains("\"flow_window\":2"), "{out}");
+        assert!(out.contains("recorder_clock"), "{out}");
+        assert!(out.contains("max_in_flight"), "{out}");
+        assert!(out.contains("flow_pending"), "{out}");
+        let auto = run(&Cli::parse(&args(
+            "run --app jacobi --procs 4 --scale 0.05 --iters 2 \
+             --flow auto --flush-threshold 64 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(auto.contains("\"flow_mode\":\"sliding\""), "{auto}");
+        assert!(auto.contains("\"flow_window\":\"auto\""), "{auto}");
+        assert!(auto.contains("flow_window_final"), "{auto}");
+        assert!(auto.contains("window_decisions"), "{auto}");
+        let pinned = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 \
+             --flow sliding:4 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(pinned.contains("\"flow_mode\":\"sliding\""), "{pinned}");
+        assert!(pinned.contains("\"flow_window\":4"), "{pinned}");
+        assert!(
+            run(&Cli::parse(&args("run --app jacobi --flow sliding:x")).unwrap()).is_err(),
+            "a bad pinned window errors"
         );
     }
 

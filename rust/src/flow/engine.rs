@@ -3,34 +3,67 @@
 //! [`FlowEngine`] sits between the lazy context's threshold trigger and
 //! the schedulers. `submit` is non-blocking: the batch is aggregated
 //! (per epoch — aggregation never crosses a flush boundary, §3), priced
-//! on the recorder clock ([`super::overlap`]), logged in the continuous
-//! [`super::frontier::AdmissionLog`] and queued. Once
-//! [`crate::flow::FlowCfg::window`] epochs are in flight the queue
-//! drains: the epochs merge into one [`super::frontier::Wave`] and
-//! execute under per-epoch admission gates, so cross-epoch dependency
-//! streaming happens inside the existing discrete-event schedulers with
-//! no special cases. `drain` is the synchronous half `flush` keeps.
+//! on the recorder clock ([`super::overlap`]) and logged in the
+//! continuous [`super::frontier::AdmissionLog`]. What happens next is
+//! the mode's choice:
 //!
-//! The naive evaluator is the exception ([`crate::flow`] module docs): merged
-//! waves could park it on receives the per-batch stream never exposes
-//! it to, so under [`crate::sched::Policy::Naive`] every submit drains
-//! immediately — Batch wave-granularity, streamed recording clock.
+//! * **Quantized Flow** queues the batch; once
+//!   [`crate::flow::FlowCfg::window`] epochs are in flight the queue
+//!   drains — the epochs merge into one [`super::frontier::Wave`] and
+//!   execute under per-epoch admission gates through one
+//!   [`crate::sched::SchedSession`]. Epoch *k+W* therefore waits at
+//!   the wave boundary even when epoch *k* retired mid-wave.
+//! * **Sliding** keeps one session *live* across submits: each epoch
+//!   is renumbered by the [`super::frontier::Splicer`] and spliced
+//!   into the running event loop the moment the admission log shows
+//!   epoch *k − window* retired (the engine advances the loop just far
+//!   enough to learn that retirement time), so ranks idling on a wave
+//!   tail pick up the next epoch's ready fragments instead of waiting
+//!   for a drain. `drain` becomes "run the session to quiescence".
+//!
+//! The naive evaluator is fed conservatively in both streaming modes:
+//! merged waves could park it on receives the per-batch stream never
+//! exposes it to, so the engine's **bounded-lookahead merge** dry-runs
+//! each candidate merge on a scratch timeline and admits only
+//! deadlock-free prefixes — the wave splits where the becoming-ready
+//! order would deadlock, instead of degrading to single-epoch waves
+//! (ROADMAP "naive under waves").
+//!
+//! Under [`crate::flow::FlowWindow::Auto`] the engine additionally
+//! steers the window from the admission log: admission stalls with
+//! stage memory to spare grow it (more in-flight epochs let the
+//! recorder run further ahead), live-stage pressure shrinks it.
 
 use crate::exec::Backend;
-use crate::sched::{ExecState, Policy, SchedCfg, SchedError};
+use crate::sched::{ExecState, Policy, SchedCfg, SchedError, SchedSession};
+use crate::types::VTime;
 use crate::ufunc::OpNode;
 
-use super::frontier;
+use super::frontier::{self, Splicer};
 use super::overlap::{record_cost, Recorder};
-use super::FlowCfg;
+use super::{FlowCfg, FlowMode, FlowWindow};
 
 /// The incremental flush engine owned by a lazy
 /// [`crate::lazy::Context`].
 pub struct FlowEngine {
     pub cfg: FlowCfg,
     recorder: Recorder,
-    /// Submitted, not yet executed epochs: `(ops, admission-log idx)`.
+    /// Submitted, not yet executed epochs (quantized Flow and the
+    /// naive lookahead): `(ops, admission-log idx)`.
     queue: Vec<(Vec<OpNode>, usize)>,
+    /// Sliding mode's live resumable session, if one is open.
+    session: Option<SchedSession>,
+    /// Renumbering state of the live session.
+    splicer: Splicer,
+    /// Epochs spliced into the live session whose retirement has not
+    /// yet been attributed to the admission log:
+    /// `(log idx, id lo, id hi)`.
+    live: Vec<(usize, usize, usize)>,
+    /// The effective window (fixed, or adaptively steered under
+    /// [`FlowWindow::Auto`]).
+    window: usize,
+    /// `wait_at_admission` at the last steering decision.
+    steer_mark: VTime,
 }
 
 impl FlowEngine {
@@ -39,30 +72,45 @@ impl FlowEngine {
             cfg,
             recorder: Recorder::default(),
             queue: Vec::new(),
+            session: None,
+            splicer: Splicer::new(),
+            live: Vec::new(),
+            window: cfg.window.initial(),
+            steer_mark: 0.0,
         }
     }
 
-    /// Submitted epochs not yet executed (in flight in the queue).
+    /// Submitted epochs not yet fully retired: queued (quantized) plus
+    /// spliced into the live session but still executing (sliding).
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.live.len()
+    }
+
+    /// The effective admission window right now (adaptively steered
+    /// under [`FlowWindow::Auto`]).
+    pub fn window(&self) -> usize {
+        self.window
     }
 
     /// The recorder clock — when the last submitted epoch finished
     /// recording.
-    pub fn record_clock(&self) -> crate::types::VTime {
+    pub fn record_clock(&self) -> VTime {
         self.recorder.clock
     }
 
-    /// Drop everything queued (poisoned context: later batches are
-    /// dropped unexecuted, exactly like Batch mode's dropped batches).
+    /// Drop everything queued and any live session (poisoned context:
+    /// later batches are dropped unexecuted, exactly like Batch mode's
+    /// dropped batches).
     pub fn clear(&mut self) {
         self.queue.clear();
+        self.session = None;
+        self.live.clear();
+        self.splicer = Splicer::new();
+        debug_assert_eq!(self.pending(), 0, "a cleared engine reports zero pending");
     }
 
-    /// Non-blocking submit: price the batch on the recorder clock,
-    /// queue it, and execute a merged wave once the admission window
-    /// is full. Under [`Policy::Naive`] the wave drains immediately
-    /// (see module docs).
+    /// Non-blocking submit: price the batch on the recorder clock and
+    /// hand it to the configured admission scheme.
     pub fn submit(
         &mut self,
         ops: Vec<OpNode>,
@@ -72,7 +120,7 @@ impl FlowEngine {
         state: &mut ExecState,
     ) -> Result<(), SchedError> {
         // Aggregation is a per-flush-epoch rewrite ("ready in the same
-        // flush epoch"), so it runs before the wave merge.
+        // flush epoch"), so it runs before any merge or splice.
         let ops = if cfg.aggregation >= 2 {
             let (packed, stats) = crate::comm::aggregate(&ops, cfg.aggregation);
             state.agg_msgs += stats.packed_msgs;
@@ -81,22 +129,194 @@ impl FlowEngine {
         } else {
             ops
         };
-        let gate = state.flow_log.window_gate(self.cfg.window);
-        let cost = record_cost(&ops, &cfg.spec);
-        let (start, done) = self.recorder.record(gate, cost);
-        state.overhead += cost;
-        state.overhead_streamed += cost;
-        let idx = state.flow_log.submitted(start, done, ops.len());
+        if !self.cfg.is_flow() {
+            // Defensive: the lazy context executes Batch epochs
+            // directly; keep the behaviour correct if called anyway.
+            return crate::sched::execute_epoch(policy, &ops, cfg, backend, state);
+        }
+        self.steer_window(state);
+        if policy == Policy::Naive {
+            return self.submit_naive(ops, policy, cfg, backend, state);
+        }
+        match self.cfg.mode {
+            FlowMode::Flow => self.submit_quantized(ops, policy, cfg, backend, state),
+            FlowMode::Sliding => self.submit_sliding(ops, policy, cfg, backend, state),
+            FlowMode::Batch => unreachable!("handled above"),
+        }
+    }
+
+    /// Quantized admission: queue, and drain a merged wave once the
+    /// window fills.
+    fn submit_quantized(
+        &mut self,
+        ops: Vec<OpNode>,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        let idx = self.price(&ops, cfg, state);
         self.queue.push((ops, idx));
-        if self.queue.len() >= self.cfg.window || policy == Policy::Naive {
-            self.drain(policy, cfg, backend, state)?;
+        if self.queue.len() >= self.window {
+            self.drain_queue(policy, cfg, backend, state)?;
         }
         Ok(())
     }
 
-    /// Execute everything queued as one merged wave. No-op on an empty
-    /// queue.
-    pub fn drain(
+    /// Sliding admission: splice the epoch into the live session the
+    /// moment the admission log allows.
+    fn submit_sliding(
+        &mut self,
+        mut ops: Vec<OpNode>,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        // The window gate needs epoch (next − window)'s retirement
+        // time; the live session may still be executing it — advance
+        // the event loop just far enough to learn it. Every event
+        // pumped is at or before that retirement, which is at or
+        // before the new epoch's admission, so the loop's prefix stays
+        // causally consistent.
+        self.settle_gate_epoch(backend, state);
+        let idx = self.price(&ops, cfg, state);
+        let admit_t = state.flow_log.epochs[idx].record_done;
+        state.n_epochs += 1;
+        if self.session.is_none() {
+            self.session = Some(SchedSession::new(policy, cfg, state));
+            self.splicer = Splicer::new();
+        }
+        let (lo, hi) = self.splicer.splice(&mut ops);
+        let admit = vec![admit_t; ops.len()];
+        let sess = self.session.as_mut().expect("session just ensured");
+        if let Err(e) = sess.inject(ops, Some(&admit), cfg, backend, state) {
+            self.session = None;
+            self.live.clear();
+            self.splicer = Splicer::new();
+            state.admit = Vec::new();
+            return Err(e);
+        }
+        self.live.push((idx, lo, hi));
+        self.attribute_retired(state);
+        Ok(())
+    }
+
+    /// Naive lookahead (both streaming modes): extend the pending merge
+    /// only while a dry run shows the becoming-ready order completes
+    /// it; otherwise drain the deadlock-free prefix first.
+    ///
+    /// Cost note: each submit replays the whole candidate merge (a
+    /// deadlock is a whole-wave property, so validating only the
+    /// extension would be unsound) — O(window² · ops) per filled
+    /// window. The window is small (≤ [`super::AUTO_MAX_WINDOW`]-ish)
+    /// and the naive evaluator is the deliberately-slow Fig. 6
+    /// strawman that only runs in ablations, so the bound is accepted
+    /// rather than engineered around.
+    fn submit_naive(
+        &mut self,
+        ops: Vec<OpNode>,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        let idx = self.price(&ops, cfg, state);
+        if !self.queue.is_empty() {
+            let mut cand: Vec<(Vec<OpNode>, usize, VTime)> = self
+                .queue
+                .iter()
+                .map(|(o, i)| (o.clone(), *i, 0.0))
+                .collect();
+            cand.push((ops.clone(), idx, 0.0));
+            let wave = frontier::merge(cand);
+            if !naive_wave_admissible(wave.ops, cfg) {
+                self.drain_queue(policy, cfg, backend, state)?;
+            }
+        }
+        self.queue.push((ops, idx));
+        if self.queue.len() >= self.window {
+            self.drain_queue(policy, cfg, backend, state)?;
+        }
+        Ok(())
+    }
+
+    /// Price one submitted epoch on the recorder clock (gated by the
+    /// admission window) and log it. Returns its admission-log index.
+    fn price(&mut self, ops: &[OpNode], cfg: &SchedCfg, state: &mut ExecState) -> usize {
+        let gate = state.flow_log.window_gate(self.window);
+        let cost = record_cost(ops, &cfg.spec);
+        let (start, done) = self.recorder.record(gate, cost);
+        state.overhead += cost;
+        state.overhead_streamed += cost;
+        state.flow_log.submitted(start, done, ops.len())
+    }
+
+    /// Sliding: make sure the epoch the window gate consults has its
+    /// retirement attributed, pumping the live session as needed.
+    fn settle_gate_epoch(&mut self, backend: &mut dyn Backend, state: &mut ExecState) {
+        let next = state.flow_log.epochs.len();
+        if next < self.window {
+            return;
+        }
+        let target = next - self.window;
+        if let Some(pos) = self.live.iter().position(|&(i, _, _)| i == target) {
+            let (_, lo, hi) = self.live[pos];
+            if let Some(sess) = self.session.as_mut() {
+                while range_unretired(state, lo, hi) {
+                    if sess.pump_next(backend, state).is_none() {
+                        break;
+                    }
+                }
+            }
+        }
+        self.attribute_retired(state);
+    }
+
+    /// Attribute retirement times of fully-retired live epochs back to
+    /// the continuous log — the window gate of future submits consults
+    /// them.
+    fn attribute_retired(&mut self, state: &mut ExecState) {
+        self.live.retain(|&(idx, lo, hi)| {
+            if range_unretired(state, lo, hi) {
+                true
+            } else {
+                state.flow_log.retire_from(idx, &state.retire[lo..hi]);
+                false
+            }
+        });
+    }
+
+    /// Steer the adaptive window from the admission log: fresh
+    /// admission stalls (recording not fully hidden — `overlap_pct`
+    /// below 100 for the last interval) grow the window while live
+    /// staging memory stays under the cap; stage pressure shrinks it.
+    /// Decisions land in [`super::AdmissionLog::window_trace`].
+    fn steer_window(&mut self, state: &mut ExecState) {
+        let FlowWindow::Auto { max, stage_cap } = self.cfg.window else {
+            return;
+        };
+        let stalled = state.wait_at_admission > self.steer_mark;
+        self.steer_mark = state.wait_at_admission;
+        let next = if state.stages.live >= stage_cap {
+            self.window.saturating_sub(1).max(1)
+        } else if stalled {
+            (self.window + 1).min(max.max(1))
+        } else {
+            self.window
+        };
+        if next != self.window {
+            self.window = next;
+            state
+                .flow_log
+                .window_trace
+                .push((state.flow_log.epochs.len() as u64, next as u64));
+        }
+    }
+
+    /// Execute everything queued as one merged wave (quantized Flow and
+    /// the naive lookahead). No-op on an empty queue.
+    fn drain_queue(
         &mut self,
         policy: Policy,
         cfg: &SchedCfg,
@@ -115,23 +335,81 @@ impl FlowEngine {
             .collect();
         state.n_epochs += batches.len() as u64;
         let wave = frontier::merge(batches);
-        crate::sched::execute_wave(policy, &wave.ops, &wave.admit, cfg, backend, state)?;
+        crate::sched::execute_wave(policy, wave.ops, &wave.admit, cfg, backend, state)?;
         // Attribute retirement times back to the continuous log — the
         // window gate of future submits consults them.
         for &(log_idx, lo, hi) in &wave.epochs {
             state.flow_log.retire_from(log_idx, &state.retire[lo..hi]);
         }
-        // Causality of the replicated interpreter: program time cannot
-        // run ahead of its own recording. Lift lagging rank clocks to
-        // the recorder frontier — no wait is charged (the rank's
-        // recorder was busy, not blocked; the cost is already in
-        // `overhead`).
+        self.lift_clocks(state);
+        Ok(())
+    }
+
+    /// Run everything in flight to completion: drain the queued wave
+    /// and run the live sliding session to quiescence. The synchronous
+    /// half every forced read keeps.
+    pub fn drain(
+        &mut self,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        self.drain_queue(policy, cfg, backend, state)?;
+        if let Some(mut sess) = self.session.take() {
+            self.splicer = Splicer::new();
+            let res = sess.drain(backend, state);
+            state.admit = Vec::new();
+            match res {
+                Ok(()) => {
+                    self.attribute_retired(state);
+                    debug_assert!(
+                        self.live.is_empty(),
+                        "a drained session retires every spliced epoch"
+                    );
+                    self.live.clear();
+                    self.lift_clocks(state);
+                }
+                Err(e) => {
+                    self.live.clear();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Causality of the replicated interpreter: program time cannot run
+    /// ahead of its own recording. Lift lagging rank clocks to the
+    /// recorder frontier — no wait is charged (the rank's recorder was
+    /// busy, not blocked; the cost is already in `overhead`).
+    fn lift_clocks(&self, state: &mut ExecState) {
         for c in state.clock.iter_mut() {
             if *c < self.recorder.clock {
                 *c = self.recorder.clock;
             }
         }
-        Ok(())
+    }
+}
+
+/// Is `retire[lo..hi]` fully attributed (every op of the epoch retired)?
+fn range_unretired(state: &ExecState, lo: usize, hi: usize) -> bool {
+    state.retire[lo..hi].iter().any(|&(_, t)| t.is_nan())
+}
+
+/// Dry-run a candidate merged wave through the naive evaluator on a
+/// scratch timeline: `true` if the becoming-ready order completes it.
+/// The replay is exact for the insert-then-drain epoch streams the
+/// apps record (readiness order is timing-independent there); if a
+/// pathological stream slipped past the gate anyway, the live run
+/// still fails loudly and poisons the context — never silently.
+fn naive_wave_admissible(ops: Vec<OpNode>, cfg: &SchedCfg) -> bool {
+    let mut scratch = ExecState::new(cfg);
+    let mut sim = crate::exec::SimBackend;
+    let mut session = SchedSession::new(Policy::Naive, cfg, &mut scratch);
+    match session.inject(ops, None, cfg, &mut sim, &mut scratch) {
+        Ok(()) => session.drain(&mut sim, &mut scratch).is_ok(),
+        Err(_) => false,
     }
 }
 
@@ -173,17 +451,127 @@ mod tests {
             st.flow_log.epochs.iter().all(|e| e.retired.is_finite()),
             "drain attributes retirement to every epoch"
         );
+        assert_eq!(st.flow_log.max_in_flight, 2);
     }
 
     #[test]
-    fn naive_degrades_to_per_batch_waves() {
+    fn sliding_splices_each_submit_into_the_live_session() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::sliding(4));
+        let b1 = batch(2, 32);
+        let b2 = batch(2, 32);
+        let total = (b1.len() + b2.len()) as u64;
+        eng.submit(b1, Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(st.n_epochs, 1, "sliding counts epochs at submit");
+        assert_eq!(eng.pending(), 1, "spliced epoch still executing");
+        eng.submit(b2, Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(st.run_id, 1, "both epochs entered ONE live session");
+        eng.drain(Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 0, "drain runs the session to quiescence");
+        assert_eq!(st.ops_executed, total, "both epochs executed");
+        assert!(st.admit.is_empty(), "drain clears the admission gates");
+        assert!(
+            st.flow_log.epochs.iter().all(|e| e.retired.is_finite()),
+            "every spliced epoch's retirement attributed"
+        );
+    }
+
+    #[test]
+    fn sliding_window_gate_pumps_the_session_for_retirements() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::sliding(1));
+        let b1 = batch(2, 32);
+        let b2 = batch(2, 32);
+        let total = (b1.len() + b2.len()) as u64;
+        eng.submit(b1, Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert!(
+            st.flow_log.epochs[0].retired.is_nan(),
+            "first epoch still in flight after its own submit"
+        );
+        // Window 1: the second submit's recording gates on epoch 0's
+        // retirement, which the engine must learn by pumping the loop.
+        eng.submit(b2, Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        let e0 = &st.flow_log.epochs[0];
+        let e1 = &st.flow_log.epochs[1];
+        assert!(e0.retired.is_finite(), "gate forced epoch 0 retirement");
+        assert!(
+            e1.record_start >= e0.retired,
+            "recording of epoch 1 gated on epoch 0's retirement"
+        );
+        eng.drain(Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(st.ops_executed, total);
+    }
+
+    /// The naive lookahead: admissible epochs merge into one wave
+    /// instead of draining one by one (the pre-PR-5 degradation).
+    #[test]
+    fn naive_lookahead_merges_admissible_epochs() {
         let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
         let mut st = ExecState::new(&cfg);
         let mut eng = FlowEngine::new(FlowCfg::flow(4));
         eng.submit(batch(2, 32), Policy::Naive, &cfg, &mut SimBackend, &mut st)
             .unwrap();
-        assert_eq!(eng.pending(), 0, "naive drains every submit");
-        assert_eq!(st.n_epochs, 1);
+        eng.submit(batch(2, 32), Policy::Naive, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 2, "admissible epochs keep queueing");
+        assert_eq!(st.ops_executed, 0);
+        eng.drain(Policy::Naive, &cfg, &mut SimBackend, &mut st).unwrap();
+        assert_eq!(st.n_epochs, 2);
+        assert_eq!(st.run_id, 1, "one merged wave, one scheduler run");
+        assert!(st.ops_executed > 0);
+    }
+
+    /// The naive lookahead splits at a deadlock: the Fig. 6 ping-pong
+    /// split across two submits would deadlock merged, so the engine
+    /// drains the first epoch alone and both complete.
+    #[test]
+    fn naive_lookahead_splits_inadmissible_merges() {
+        let rows = 12u64;
+        let br = 3u64;
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::flow(4));
+        let mut reg = Registry::new(2);
+        let m = reg.alloc(vec![rows], br, DType::F32);
+        let nn = reg.alloc(vec![rows], br, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(nn);
+        let mut bld = OpBuilder::new();
+        // Iteration 1: N[1:-1] = M[2:] + M[:-2]
+        bld.ufunc(
+            &reg,
+            Kernel::Add,
+            &nv.slice(&[(1, rows - 1)]),
+            &[&mv.slice(&[(2, rows)]), &mv.slice(&[(0, rows - 2)])],
+        );
+        let iter1 = bld.finish();
+        // Iteration 2: M[1:-1] = N[2:] + N[:-2] — merged with iteration
+        // 1 this is the Fig. 6 stream the naive order deadlocks on.
+        bld.ufunc(
+            &reg,
+            Kernel::Add,
+            &mv.slice(&[(1, rows - 1)]),
+            &[&nv.slice(&[(2, rows)]), &nv.slice(&[(0, rows - 2)])],
+        );
+        let iter2 = bld.finish();
+        eng.submit(iter1, Policy::Naive, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert_eq!(eng.pending(), 1);
+        eng.submit(iter2, Policy::Naive, &cfg, &mut SimBackend, &mut st)
+            .unwrap_or_else(|e| panic!("lookahead must split, not deadlock: {e}"));
+        assert_eq!(eng.pending(), 1, "iteration 1 drained alone; 2 queued");
+        assert!(st.ops_executed > 0, "the deadlock-free prefix executed");
+        eng.drain(Policy::Naive, &cfg, &mut SimBackend, &mut st)
+            .unwrap_or_else(|e| panic!("split epochs must both complete: {e}"));
+        assert_eq!(st.n_epochs, 2);
     }
 
     #[test]
@@ -206,5 +594,44 @@ mod tests {
         for &c in &st.clock {
             assert!(c >= eng.record_clock(), "clock {c} behind recorder {}", eng.record_clock());
         }
+    }
+
+    #[test]
+    fn adaptive_window_grows_on_stall_and_shrinks_on_stage_pressure() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::sliding_auto());
+        assert_eq!(eng.window(), super::super::AUTO_INITIAL_WINDOW);
+        // A fresh admission stall with stage memory to spare: grow.
+        st.wait_at_admission = 1.0;
+        eng.steer_window(&mut st);
+        assert_eq!(eng.window(), super::super::AUTO_INITIAL_WINDOW + 1);
+        assert_eq!(st.flow_log.window_trace.len(), 1);
+        // No new stall: hold.
+        eng.steer_window(&mut st);
+        assert_eq!(eng.window(), super::super::AUTO_INITIAL_WINDOW + 1);
+        // Stage pressure: shrink, even while stalled.
+        st.wait_at_admission = 2.0;
+        st.stages.live = super::super::AUTO_STAGE_CAP;
+        eng.steer_window(&mut st);
+        assert_eq!(eng.window(), super::super::AUTO_INITIAL_WINDOW);
+        assert_eq!(st.flow_log.window_trace.len(), 2);
+        // Fixed windows never steer.
+        let mut fixed = FlowEngine::new(FlowCfg::sliding(3));
+        fixed.steer_window(&mut st);
+        assert_eq!(fixed.window(), 3);
+        assert_eq!(st.flow_log.window_trace.len(), 2);
+    }
+
+    #[test]
+    fn cleared_engine_reports_zero_pending() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut eng = FlowEngine::new(FlowCfg::sliding(4));
+        eng.submit(batch(2, 32), Policy::LatencyHiding, &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        assert!(eng.pending() > 0);
+        eng.clear();
+        assert_eq!(eng.pending(), 0);
     }
 }

@@ -43,18 +43,42 @@ pub struct EpochEntry {
 
 /// The continuous admission log: one entry per flush epoch of the whole
 /// run, either mode. Lives in [`crate::sched::ExecState`] — it is
-/// execution state, shared by the engine (window gating) and the
-/// metrics.
+/// execution state, shared by the engine (window gating, adaptive
+/// window steering) and the metrics.
 #[derive(Default)]
 pub struct AdmissionLog {
     pub epochs: Vec<EpochEntry>,
     /// Operations admitted over the whole run.
     pub admitted_ops: u64,
+    /// Epochs submitted whose retirement has not yet been attributed.
+    pub in_flight: u64,
+    /// High-water mark of `in_flight` — how deep the admission pipeline
+    /// actually ran (≤ the window under quantized Flow; the sliding
+    /// mode's bound is the recording gate alone).
+    pub max_in_flight: u64,
+    /// Adaptive-window decisions (`FlowWindow::Auto`): `(epoch index at
+    /// the decision, new window)`. Empty under fixed windows.
+    pub window_trace: Vec<(u64, u64)>,
+    // -- cached aggregates, maintained by `submitted` so the per-flush
+    // -- report snapshot stays O(1) instead of rescanning the log --
+    /// `record_done` of the most recent *streamed* epoch (recording
+    /// priced on the recorder clock); 0.0 when nothing streamed.
+    last_record_done: VTime,
+    /// Running sum of streamed per-epoch admission latencies.
+    latency_total: VTime,
+    /// Streamed epochs counted into `latency_total`.
+    latency_n: u64,
 }
 
 impl AdmissionLog {
     /// Log one submitted epoch; returns its index.
     pub fn submitted(&mut self, record_start: VTime, record_done: VTime, n_ops: usize) -> usize {
+        if record_done.is_finite() {
+            // Streamed epoch: fold it into the O(1) report aggregates.
+            self.latency_total += record_done - self.last_record_done;
+            self.latency_n += 1;
+            self.last_record_done = record_done;
+        }
         self.epochs.push(EpochEntry {
             record_start,
             record_done,
@@ -62,13 +86,40 @@ impl AdmissionLog {
             n_ops,
         });
         self.admitted_ops += n_ops as u64;
+        self.in_flight += 1;
+        self.max_in_flight = self.max_in_flight.max(self.in_flight);
         self.epochs.len() - 1
     }
 
     /// The wave drained: epoch `idx`'s last operation retired at `t`.
     pub fn retire(&mut self, idx: usize, t: VTime) {
         if let Some(e) = self.epochs.get_mut(idx) {
+            if e.retired.is_nan() && t.is_finite() {
+                self.in_flight = self.in_flight.saturating_sub(1);
+            }
             e.retired = t;
+        }
+    }
+
+    /// The recorder clock as the log saw it last: when the most recent
+    /// streamed epoch finished recording (0.0 when nothing streamed —
+    /// Batch epochs record on the rank clocks and log `NaN`). O(1):
+    /// maintained by [`AdmissionLog::submitted`], so the per-flush
+    /// report snapshot never rescans the log.
+    pub fn recorder_clock(&self) -> VTime {
+        self.last_record_done
+    }
+
+    /// Mean per-epoch admission latency of the streamed epochs: from
+    /// the moment the recorder *could* have started an epoch (the
+    /// previous streamed epoch's `record_done`) to the epoch's
+    /// admission — recording cost plus any window-gate stall. 0.0 when
+    /// nothing streamed. O(1) (cached aggregates).
+    pub fn mean_admission_latency(&self) -> VTime {
+        if self.latency_n == 0 {
+            0.0
+        } else {
+            self.latency_total / self.latency_n as f64
         }
     }
 
@@ -121,6 +172,43 @@ pub struct Wave {
     /// merged-id range `[id_lo, id_hi)` each epoch contributed, used to
     /// attribute retirement times back to the log.
     pub epochs: Vec<(usize, usize, usize)>,
+}
+
+/// Incremental id/group renumbering for the *sliding* session
+/// ([`crate::flow::FlowMode::Sliding`]): where [`merge`] renumbers a
+/// whole wave at once, the splicer renumbers one submitted epoch at a
+/// time so its ids and §5.3 groups continue a live
+/// [`crate::sched::SchedSession`]'s streams — later epochs' groups stay
+/// strictly after earlier ones' (the blocking baseline's phasing
+/// depends on it) and ids stay contiguous (the retirement log and both
+/// dependency systems index by them).
+#[derive(Default)]
+pub struct Splicer {
+    next_id: u32,
+    next_group: u32,
+}
+
+impl Splicer {
+    pub fn new() -> Self {
+        Splicer::default()
+    }
+
+    /// Renumber `ops` in place to continue the session's streams;
+    /// returns the spliced id range `[lo, hi)`.
+    pub fn splice(&mut self, ops: &mut [OpNode]) -> (usize, usize) {
+        let lo = self.next_id as usize;
+        let mut max_group = 0u32;
+        for op in ops.iter_mut() {
+            op.id = crate::types::OpId(self.next_id);
+            self.next_id += 1;
+            max_group = max_group.max(op.group);
+            op.group += self.next_group;
+        }
+        if !ops.is_empty() {
+            self.next_group += max_group + 1;
+        }
+        (lo, self.next_id as usize)
+    }
 }
 
 /// Merge submitted batches into one [`Wave`]. Each element carries the
@@ -201,6 +289,36 @@ mod tests {
         assert_eq!(log.window_gate(1), 9.0);
         assert_eq!(log.window_gate(3), 0.0, "window wider than history: no gate");
         assert_eq!(log.admitted_ops, 8);
+    }
+
+    #[test]
+    fn splicer_continues_ids_and_groups() {
+        let mut s = Splicer::new();
+        let mut b0 = vec![op(0, 1), op(1, 2)];
+        let mut b1 = vec![op(0, 1), op(1, 1)];
+        assert_eq!(s.splice(&mut b0), (0, 2));
+        assert_eq!(s.splice(&mut b1), (2, 4));
+        assert_eq!(b1[0].id, OpId(2), "ids continue the stream");
+        let max_g0 = b0.iter().map(|o| o.group).max().unwrap();
+        let min_g1 = b1.iter().map(|o| o.group).min().unwrap();
+        assert!(min_g1 > max_g0, "spliced groups must not interleave");
+    }
+
+    #[test]
+    fn in_flight_and_latency_tracking() {
+        let mut log = AdmissionLog::default();
+        let e0 = log.submitted(0.0, 0.5, 1);
+        let e1 = log.submitted(0.5, 1.25, 1);
+        assert_eq!(log.in_flight, 2);
+        assert_eq!(log.max_in_flight, 2);
+        log.retire(e0, 3.0);
+        log.retire(e0, 3.0); // idempotent: no double decrement
+        assert_eq!(log.in_flight, 1);
+        log.retire(e1, 4.0);
+        assert_eq!(log.in_flight, 0);
+        assert_eq!(log.max_in_flight, 2, "peak survives retirement");
+        assert_eq!(log.recorder_clock(), 1.25);
+        assert!((log.mean_admission_latency() - 0.625).abs() < 1e-12);
     }
 
     #[test]

@@ -13,38 +13,59 @@
 //! * the threshold trigger becomes a **non-blocking submit**
 //!   ([`crate::lazy::Context::submit`]): the batch is stamped with an
 //!   *admission time* on a concurrent recorder clock and queued;
-//! * up to [`FlowCfg::window`] submitted epochs are merged into one
-//!   **wave** ([`frontier`]) and executed together — operations enter
-//!   the dependency system the moment their predecessors are known,
-//!   so a rank that would idle at an epoch tail (a draining halo
-//!   transfer) computes the next epoch's ready fragments instead;
+//! * under [`FlowMode::Flow`] up to `window` submitted epochs are
+//!   merged into one **wave** ([`frontier`]) and executed together —
+//!   operations enter the dependency system the moment their
+//!   predecessors are known, so a rank that would idle at an epoch
+//!   tail (a draining halo transfer) computes the next epoch's ready
+//!   fragments instead;
+//! * under [`FlowMode::Sliding`] the wave quantization disappears: the
+//!   engine keeps one **resumable scheduler session**
+//!   ([`crate::sched::SchedSession`]) alive and splices each epoch
+//!   into its *running* event loop the moment the admission log allows
+//!   (epoch *k+W* enters as soon as epoch *k* retired — mid-wave, not
+//!   at a wave boundary), so the wire time a quantized drain strands
+//!   at each wave tail is recovered;
 //! * recording overhead is charged **on the recorder's clock,
 //!   concurrently with execution** ([`overlap`]) rather than as a lump
 //!   on every rank at flush end; execution only stalls where an
 //!   operation's admission gate binds (`wait_at_admission`).
 //!
 //! `flush` remains the synchronous operation — it is now *submit +
-//! drain* ([`engine::FlowEngine::drain`]). [`FlowMode::Batch`] (the
+//! drain* ([`engine::FlowEngine::drain`]; under Sliding, "drain" means
+//! "run the live session to quiescence"). [`FlowMode::Batch`] (the
 //! default) keeps the stop-the-world reference path bit-identical to
 //! the pre-flow engine; `benches/ablation_flow.rs` asserts that Flow
 //! mode strictly lowers total waiting time at P ≥ 16 on
-//! threshold-triggered Jacobi with bit-identical numerics.
+//! threshold-triggered Jacobi, and `benches/ablation_stream.rs` that
+//! Sliding strictly undercuts quantized Flow at the same window — both
+//! with bit-identical numerics.
 //!
-//! Policy coverage: the latency-hiding scheduler consumes whole waves
-//! and realizes the overlap; the blocking baseline executes waves in
-//! recorded order (it gains the streamed recording clock but, by
-//! definition, never overlaps across operation boundaries); the naive
-//! evaluator **degrades to Batch wave-granularity** — its
-//! becoming-ready order parks ranks on receives, and handing it a
-//! merged wave could manufacture deadlocks the per-batch stream does
-//! not have, so each submit drains as its own single-epoch wave.
+//! Policy coverage: the latency-hiding scheduler realizes the overlap;
+//! the blocking baseline executes waves/streams in recorded order (it
+//! gains the streamed recording clock but, by definition, never
+//! overlaps across operation boundaries); the naive evaluator is fed
+//! conservatively — its becoming-ready order parks ranks on receives,
+//! so the engine's **bounded-lookahead merge** admits a merged wave
+//! only after a dry run shows the naive order completes it, splitting
+//! at the first epoch that would manufacture a deadlock (the Fig. 6
+//! strawman now participates in the flow/sliding ablations instead of
+//! degrading to single-epoch waves).
+//!
+//! The admission window itself may be **adaptive**
+//! ([`FlowWindow::Auto`]): the engine grows it while the admission log
+//! shows unhidden recording (overlap < 100%) and live staging memory
+//! stays under a configurable cap, and shrinks it under stage
+//! pressure; decisions are recorded in
+//! [`frontier::AdmissionLog::window_trace`] and surface in the run
+//! JSON metadata.
 
 pub mod engine;
 pub mod frontier;
 pub mod overlap;
 
 pub use engine::FlowEngine;
-pub use frontier::{AdmissionLog, EpochEntry, Wave};
+pub use frontier::{AdmissionLog, EpochEntry, Splicer, Wave};
 pub use overlap::Recorder;
 
 /// How the lazy context turns a threshold trigger into execution.
@@ -54,10 +75,15 @@ pub enum FlowMode {
     /// one epoch, recording overhead charged on every rank's clock up
     /// front. The bit-identical reference path.
     Batch,
-    /// Streaming admission: submits queue into a bounded window of
-    /// in-flight epochs, merged waves execute with per-epoch admission
-    /// gates, recording overhead rides the concurrent recorder clock.
+    /// Quantized streaming admission: submits queue into a bounded
+    /// window of in-flight epochs, merged waves execute with per-epoch
+    /// admission gates, recording overhead rides the concurrent
+    /// recorder clock.
     Flow,
+    /// True sliding admission: one resumable scheduler session stays
+    /// live and each submitted epoch is spliced into its running event
+    /// loop the moment the window admits it — no wave boundaries.
+    Sliding,
 }
 
 impl FlowMode {
@@ -65,8 +91,50 @@ impl FlowMode {
         match s {
             "batch" => Some(FlowMode::Batch),
             "flow" => Some(FlowMode::Flow),
+            "sliding" => Some(FlowMode::Sliding),
             _ => None,
         }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FlowMode::Batch => "batch",
+            FlowMode::Flow => "flow",
+            FlowMode::Sliding => "sliding",
+        }
+    }
+}
+
+/// Starting window of [`FlowWindow::Auto`].
+pub const AUTO_INITIAL_WINDOW: usize = 2;
+/// Default growth bound of [`FlowWindow::Auto`].
+pub const AUTO_MAX_WINDOW: usize = 8;
+/// Default live-staging-buffer cap of [`FlowWindow::Auto`]: the window
+/// stops growing (and shrinks) once this many staging buffers are live.
+pub const AUTO_STAGE_CAP: u64 = 4096;
+
+/// The admission-window policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowWindow {
+    /// A fixed window of this many in-flight epochs.
+    Fixed(usize),
+    /// Steered at runtime from the [`AdmissionLog`]: grow (up to `max`)
+    /// while recording is not fully hidden behind execution, shrink
+    /// while `stage_cap` or more staging buffers are live.
+    Auto { max: usize, stage_cap: u64 },
+}
+
+impl FlowWindow {
+    /// The window the engine starts from.
+    pub fn initial(self) -> usize {
+        match self {
+            FlowWindow::Fixed(w) => w.max(1),
+            FlowWindow::Auto { .. } => AUTO_INITIAL_WINDOW,
+        }
+    }
+
+    pub fn is_auto(self) -> bool {
+        matches!(self, FlowWindow::Auto { .. })
     }
 }
 
@@ -74,34 +142,56 @@ impl FlowMode {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FlowCfg {
     /// Maximum in-flight epochs: recording of epoch *k* may not begin
-    /// before epoch *k − window* fully retired, and at most `window`
-    /// submitted epochs merge into one executed wave. `window == 1`
-    /// reproduces Batch pacing (every submit drains) while still
-    /// paying recording on the recorder clock.
-    pub window: usize,
+    /// before epoch *k − window* fully retired; under quantized Flow at
+    /// most `window` submitted epochs additionally merge into one
+    /// executed wave. `window == 1` reproduces Batch pacing (every
+    /// submit drains) while still paying recording on the recorder
+    /// clock. May be [`FlowWindow::Auto`].
+    pub window: FlowWindow,
     pub mode: FlowMode,
 }
 
 impl Default for FlowCfg {
     fn default() -> Self {
         FlowCfg {
-            window: 2,
+            window: FlowWindow::Fixed(2),
             mode: FlowMode::Batch,
         }
     }
 }
 
 impl FlowCfg {
-    /// Streaming admission with the given window.
+    /// Quantized streaming admission with the given fixed window.
     pub fn flow(window: usize) -> Self {
         FlowCfg {
-            window: window.max(1),
+            window: FlowWindow::Fixed(window.max(1)),
             mode: FlowMode::Flow,
         }
     }
 
+    /// Sliding admission with the given fixed window.
+    pub fn sliding(window: usize) -> Self {
+        FlowCfg {
+            window: FlowWindow::Fixed(window.max(1)),
+            mode: FlowMode::Sliding,
+        }
+    }
+
+    /// Sliding admission with the adaptively-steered window.
+    pub fn sliding_auto() -> Self {
+        FlowCfg {
+            window: FlowWindow::Auto {
+                max: AUTO_MAX_WINDOW,
+                stage_cap: AUTO_STAGE_CAP,
+            },
+            mode: FlowMode::Sliding,
+        }
+    }
+
+    /// Does the threshold trigger stream through the engine (any
+    /// non-Batch mode)?
     pub fn is_flow(&self) -> bool {
-        self.mode == FlowMode::Flow
+        self.mode != FlowMode::Batch
     }
 }
 
@@ -118,15 +208,29 @@ mod tests {
 
     #[test]
     fn flow_constructor_clamps_window() {
-        assert_eq!(FlowCfg::flow(0).window, 1);
-        assert_eq!(FlowCfg::flow(4).window, 4);
+        assert_eq!(FlowCfg::flow(0).window, FlowWindow::Fixed(1));
+        assert_eq!(FlowCfg::flow(4).window, FlowWindow::Fixed(4));
         assert!(FlowCfg::flow(2).is_flow());
+        assert_eq!(FlowCfg::sliding(0).window, FlowWindow::Fixed(1));
+        assert_eq!(FlowCfg::sliding(3).mode, FlowMode::Sliding);
+        assert!(FlowCfg::sliding(3).is_flow());
+    }
+
+    #[test]
+    fn auto_window_defaults() {
+        let cfg = FlowCfg::sliding_auto();
+        assert!(cfg.window.is_auto());
+        assert_eq!(cfg.window.initial(), AUTO_INITIAL_WINDOW);
+        assert_eq!(FlowWindow::Fixed(0).initial(), 1);
+        assert_eq!(FlowWindow::Fixed(5).initial(), 5);
     }
 
     #[test]
     fn mode_parse() {
         assert_eq!(FlowMode::parse("flow"), Some(FlowMode::Flow));
         assert_eq!(FlowMode::parse("batch"), Some(FlowMode::Batch));
+        assert_eq!(FlowMode::parse("sliding"), Some(FlowMode::Sliding));
         assert_eq!(FlowMode::parse("x"), None);
+        assert_eq!(FlowMode::Sliding.name(), "sliding");
     }
 }

@@ -16,7 +16,13 @@
 //! The recorder clock is also where the engine's window gate lands:
 //! recording of epoch *k* may not begin before epoch *k − window*
 //! retired ([`crate::flow::frontier::AdmissionLog::window_gate`]), so
-//! the recorder cannot run unboundedly ahead of execution.
+//! the recorder cannot run unboundedly ahead of execution. Under
+//! sliding admission ([`crate::flow::FlowMode::Sliding`]) the gate is
+//! the *only* bound: the engine advances the live session's event loop
+//! just far enough to learn the gating epoch's retirement time, and
+//! every event pumped that way is at or before the new epoch's
+//! admission — the recorder clock and the executing timeline race, but
+//! the race is resolved causally.
 //!
 //! The overlap actually achieved is reported as
 //! [`crate::metrics::RunReport::overlap_pct`]: the share of streamed

@@ -13,8 +13,12 @@
 //!    trigger is a non-blocking [`Context::submit`]: under
 //!    [`crate::flow::FlowMode::Flow`] the batch enters the incremental
 //!    flush engine's admission window and executes while recording
-//!    continues ([`crate::flow`]); under the default Batch mode it
-//!    executes immediately, stop-the-world;
+//!    continues ([`crate::flow`]); under
+//!    [`crate::flow::FlowMode::Sliding`] it is spliced straight into
+//!    the *live* resumable scheduler session
+//!    ([`crate::sched::SchedSession`]) the moment the admission log
+//!    allows — no wave boundary at all; under the default Batch mode
+//!    it executes immediately, stop-the-world;
 //! 3. the program ends — [`Context::flush`] (= submit + drain) called
 //!    by the apps at exit.
 //!
@@ -168,13 +172,25 @@ impl Context {
         }
     }
 
+    /// Snapshot the execution state as the context's current report,
+    /// folding in what only the flow engine knows (pending-epoch count;
+    /// the recorder clock and pipeline-depth metrics come from the
+    /// admission log inside the state).
+    fn sync_report(&mut self) {
+        self.report = self.state.report();
+        self.report.flow_pending = self.flow.pending() as u64;
+    }
+
     /// Trigger 2's worker: a **non-blocking submit** of everything
     /// recorded so far. Under the default Batch mode the batch executes
     /// immediately as one epoch (the stop-the-world flush); under
     /// [`crate::flow::FlowMode::Flow`] it is priced on the recorder
     /// clock and admitted into the incremental flush engine's window —
     /// execution of the merged wave overlaps continued recording, so a
-    /// threshold trigger no longer stops the world. On a poisoned
+    /// threshold trigger no longer stops the world; under
+    /// [`crate::flow::FlowMode::Sliding`] it is spliced into the live
+    /// resumable scheduler session mid-wave, the moment the admission
+    /// log shows the window's oldest epoch retired. On a poisoned
     /// context the batch (and anything still queued) is dropped
     /// unexecuted.
     pub fn submit(&mut self) {
@@ -211,7 +227,7 @@ impl Context {
             )
         };
         match res {
-            Ok(()) => self.report = self.state.report(),
+            Ok(()) => self.sync_report(),
             Err(e) => {
                 self.flow.clear();
                 if self.error.is_none() {
@@ -238,7 +254,7 @@ impl Context {
             self.backend.as_mut(),
             &mut self.state,
         ) {
-            Ok(()) => self.report = self.state.report(),
+            Ok(()) => self.sync_report(),
             Err(e) => {
                 self.flow.clear();
                 if self.error.is_none() {
@@ -367,7 +383,7 @@ impl Context {
             return Err(e.clone());
         }
         self.settle(Rank(0), &[(Rank(0), f.tag)], SCALAR_BYTES);
-        self.report = self.state.report();
+        self.sync_report();
         let value = match self.backend.staged_scalar(Rank(0), f.tag) {
             Some(v) => Ok(v),
             None if !self.backend.materializes_data() => Ok(0.0),
@@ -503,7 +519,7 @@ impl Context {
             Collective::Tree => SCALAR_BYTES,
         };
         self.settle(Rank(0), &f.tags, bytes);
-        self.report = self.state.report();
+        self.sync_report();
         let out = if self.backend.materializes_data() {
             let layout = self.reg.layout(f.base).clone();
             let re = layout.row_elems();
@@ -552,7 +568,10 @@ impl Context {
         self.flush();
         match self.error {
             Some(e) => Err(e),
-            None => Ok(self.state.report()),
+            None => {
+                self.sync_report();
+                Ok(self.report)
+            }
         }
     }
 }
@@ -871,6 +890,58 @@ mod tests {
         let v = f.wait(&mut c).unwrap();
         assert_eq!(v, 0.0, "simulation backends read 0.0");
         assert_eq!(c.flow.pending(), 0, "forcing drained the window");
+        assert!(
+            c.state.wait_at_cone > 0.0,
+            "a fresh value still pays the targeted settle"
+        );
+        assert!(
+            c.state.stages.writer(Rank(0), f.tag).is_none(),
+            "forcing reclaims the result stage"
+        );
+    }
+
+    fn ctx_sliding(p: u32, window: usize) -> Context {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.flow = crate::flow::FlowCfg::sliding(window);
+        Context::sim(cfg, Policy::LatencyHiding)
+    }
+
+    /// The PR-5 tentpole behaviour: under sliding admission a threshold
+    /// trigger splices the epoch into ONE live scheduler session — no
+    /// wave boundary — and `flush` runs the session to quiescence.
+    #[test]
+    fn sliding_submit_splices_into_live_session() {
+        let mut c = ctx_sliding(2, 4);
+        let x = c.zeros(&[16], 4);
+        c.add(&x.clone(), &x, &x);
+        c.submit();
+        assert_eq!(c.flushes, 1);
+        assert_eq!(c.state.n_epochs, 1, "sliding admits the epoch immediately");
+        c.add(&x.clone(), &x, &x);
+        c.submit();
+        assert_eq!(c.state.n_epochs, 2);
+        assert_eq!(c.state.run_id, 1, "both epochs share one live session");
+        c.flush();
+        assert!(c.state.ops_executed > 0, "drain ran the session");
+        assert_eq!(c.report.flow_pending, 0, "drained: no pending epochs");
+        assert!(c.report.recorder_clock > 0.0, "recorder clock surfaced");
+        assert!(c.report.max_in_flight >= 1, "pipeline depth surfaced");
+        assert!(c.state.overhead_streamed > 0.0, "recording rode the recorder clock");
+    }
+
+    /// A future forced against a live sliding session settles: the wait
+    /// drains the session to quiescence, then settles the value's cone
+    /// against the session-run's stage provenance.
+    #[test]
+    fn sliding_future_forced_against_live_session_settles() {
+        let mut c = ctx_sliding(4, 8);
+        let x = c.zeros(&[64], 4);
+        let f = c.sum_deferred(&x);
+        c.submit();
+        assert!(c.flow.pending() > 0, "the reduction's epoch is live");
+        let v = f.wait(&mut c).unwrap();
+        assert_eq!(v, 0.0, "simulation backends read 0.0");
+        assert_eq!(c.flow.pending(), 0, "forcing drained the session");
         assert!(
             c.state.wait_at_cone > 0.0,
             "a fresh value still pays the targeted settle"

@@ -21,10 +21,12 @@
 //!   stage reclamation, layered between [`lazy`] and [`sched`]), plus
 //!   the incremental flush engine [`flow`] (streaming admission:
 //!   threshold flushes become non-blocking submits whose execution
-//!   overlaps continued recording, layered between [`lazy`]'s triggers
-//!   and [`sched`]'s epoch drivers) — executing over a discrete-event
-//!   simulated cluster ([`cluster`], [`net`]) or with real numerics
-//!   ([`exec`]).
+//!   overlaps continued recording — and, under sliding admission,
+//!   splice straight into the *live* resumable scheduler sessions of
+//!   [`sched`] with no wave boundary at all; layered between
+//!   [`lazy`]'s triggers and [`sched`]'s session engines) — executing
+//!   over a discrete-event simulated cluster ([`cluster`], [`net`]) or
+//!   with real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call

@@ -61,6 +61,32 @@ pub struct RunReport {
     /// reference-counted reclamation ([`crate::sync::StageTable`])
     /// where it previously grew with run length.
     pub peak_live_stages: u64,
+    /// High-water mark of epochs simultaneously in flight in the
+    /// admission pipeline (submitted, not yet retired) — how deep the
+    /// flow engine actually streamed ([`crate::flow::AdmissionLog`]).
+    pub max_in_flight: u64,
+    /// Epochs still pending in the flow engine when the report was
+    /// taken (queued for a wave, or spliced into the live sliding
+    /// session and not yet retired). 0 after every drain. A non-zero
+    /// value flags an *in-flight snapshot*: the operation counters
+    /// (`ops_executed`, `n_compute`, `n_comm`) fold in at drain, so
+    /// under sliding admission they lag the clocks/busy/wait of work
+    /// the live session has already executed until the next drain.
+    pub flow_pending: u64,
+    /// The concurrent recorder clock when the report was taken: when
+    /// the last streamed epoch finished recording (0.0 under Batch,
+    /// whose recording rides the rank clocks).
+    pub recorder_clock: VTime,
+    /// Mean per-epoch admission latency of the streamed epochs: from
+    /// "the recorder could have started the epoch" to its admission —
+    /// recording cost plus any window-gate stall.
+    pub admission_latency: VTime,
+    /// The admission window in effect at the end of the run under
+    /// [`crate::flow::FlowWindow::Auto`] steering; 0 when no adaptive
+    /// decision was ever taken (fixed windows, Batch).
+    pub flow_window_final: u64,
+    /// Adaptive-window decisions taken over the run.
+    pub window_decisions: u64,
 }
 
 impl RunReport {
@@ -119,6 +145,14 @@ impl RunReport {
         // the combined peak is whichever run's was higher.
         self.live_stages += other.live_stages;
         self.peak_live_stages = self.peak_live_stages.max(other.peak_live_stages);
+        // Pipeline-depth metrics combine as worst-case across the runs;
+        // pending epochs and steering decisions accumulate.
+        self.max_in_flight = self.max_in_flight.max(other.max_in_flight);
+        self.flow_pending += other.flow_pending;
+        self.recorder_clock = self.recorder_clock.max(other.recorder_clock);
+        self.admission_latency = self.admission_latency.max(other.admission_latency);
+        self.flow_window_final = self.flow_window_final.max(other.flow_window_final);
+        self.window_decisions += other.window_decisions;
     }
 
     /// Wait time of the collective root (rank 0) — the hot spot flat
@@ -185,6 +219,12 @@ impl RunReport {
         o.push("overlap_pct", self.overlap_pct().into());
         o.push("live_stages", self.live_stages.into());
         o.push("peak_live_stages", self.peak_live_stages.into());
+        o.push("max_in_flight", self.max_in_flight.into());
+        o.push("flow_pending", self.flow_pending.into());
+        o.push("recorder_clock", self.recorder_clock.into());
+        o.push("admission_latency", self.admission_latency.into());
+        o.push("flow_window_final", self.flow_window_final.into());
+        o.push("window_decisions", self.window_decisions.into());
         o
     }
 }
@@ -238,6 +278,11 @@ mod tests {
         assert!(s.contains("wait_at_admission"));
         assert!(s.contains("overlap_pct"));
         assert!(s.contains("peak_live_stages"));
+        assert!(s.contains("max_in_flight"));
+        assert!(s.contains("flow_pending"));
+        assert!(s.contains("recorder_clock"));
+        assert!(s.contains("admission_latency"));
+        assert!(s.contains("flow_window_final"));
     }
 
     #[test]

@@ -20,10 +20,15 @@
 //! unexecuted operation can always proceed; the smallest-clock-first
 //! loop below therefore never deadlocks.
 //!
-//! Like the other policies this runs as one epoch of a persistent
-//! [`ExecState`] — even the blocking baseline resumes per-rank clocks
-//! and NIC frontiers across flushes; what it *never* does is overlap
-//! across operation (or epoch) boundaries on the same rank.
+//! Since PR 5 the baseline is a **resumable engine** ([`BlockingSession`],
+//! driven through [`crate::sched::SchedSession`]): per-rank programs,
+//! program counters, parked receives and the runnable-rank heap persist
+//! between injects, so later epochs append to the per-rank programs (the
+//! splicer keeps their §5.3 groups strictly after earlier epochs') and a
+//! rank that finished its program is re-queued when new work arrives.
+//! What the baseline still *never* does is overlap across operation (or
+//! epoch) boundaries on the same rank — streaming admission buys it the
+//! concurrent recording clock, nothing more.
 
 use std::collections::BinaryHeap;
 
@@ -34,93 +39,135 @@ use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
 
-/// One-shot convenience: run `ops` as the single epoch of a fresh
-/// [`ExecState`] and report it.
-pub fn run_blocking(
-    ops: &[OpNode],
-    cfg: &SchedCfg,
-    backend: &mut dyn Backend,
-) -> Result<RunReport, SchedError> {
-    let mut state = ExecState::new(cfg);
-    state.n_epochs = 1;
-    state.run_id = 1;
-    run_blocking_epoch(ops, cfg, backend, &mut state)?;
-    Ok(state.report())
-}
-
-pub(crate) fn run_blocking_epoch(
-    ops: &[OpNode],
-    cfg: &SchedCfg,
-    backend: &mut dyn Backend,
-    st: &mut ExecState,
-) -> Result<(), SchedError> {
-    let n = cfg.nprocs as usize;
-    let xfers = TransferTable::build(ops)?;
-    let costs = compute_costs(ops, cfg);
-    st.begin_epoch(ops);
-
-    // Per-rank program: indices into `ops`, phased per §5.3 — groups in
-    // recording order; within a group sends, then recvs, then computes
-    // (each sub-phase in recording order).
-    let phase = |op: &OpNode| match op.payload {
+/// §5.3 phase of an operation within its group: sends, then receives,
+/// then computes (each sub-phase in recording order).
+fn phase(op: &OpNode) -> u8 {
+    match op.payload {
         OpPayload::Send { .. } => 0u8,
         OpPayload::Recv { .. } => 1,
         OpPayload::Compute(_) => 2,
-    };
-    let mut program: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (i, op) in ops.iter().enumerate() {
-        program[op.rank.idx()].push(i);
     }
-    for prog in program.iter_mut() {
-        prog.sort_by_key(|&i| (ops[i].group, phase(&ops[i]), i));
-    }
-    let mut ptr = vec![0usize; n];
-    // No dependency system: only the (cheaper) recording overhead.
-    // Flow waves pay it on the concurrent recorder clock instead; the
-    // per-op admission gates below are what execution observes. The
-    // blocking baseline still never overlaps across operation
-    // boundaries on a rank — a wave buys it the streamed recording
-    // clock, nothing more.
-    if st.admit.is_empty() {
-        st.charge_overhead(super::batch_overhead(
-            ops,
-            cfg.spec.blocking_op_overhead,
-            &cfg.spec,
-        ));
-    }
+}
 
-    // Runnable ranks by clock; receivers parked on an unposted send.
-    let mut heap: BinaryHeap<TEvent<Rank>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let mut parked: FxHashMap<Tag, (Rank, VTime)> = FxHashMap::default();
-    for r in 0..n {
-        if !program[r].is_empty() {
-            heap.push(TEvent {
-                t: st.clock[r],
-                seq,
-                ev: Rank(r as u32),
-            });
-            seq += 1;
+/// The blocking baseline's persistent session state.
+pub(crate) struct BlockingSession {
+    xfers: TransferTable,
+    costs: Vec<VTime>,
+    /// Per-rank program: indices into the session's op stream, phased
+    /// per §5.3 — groups in recording order; within a group sends, then
+    /// recvs, then computes.
+    program: Vec<Vec<usize>>,
+    ptr: Vec<usize>,
+    /// Receivers parked on an unposted send.
+    parked: FxHashMap<Tag, (Rank, VTime)>,
+    /// Runnable ranks by clock.
+    heap: BinaryHeap<TEvent<Rank>>,
+    queued: Vec<bool>,
+    seq: u64,
+    pub(crate) executed: u64,
+}
+
+impl BlockingSession {
+    pub(crate) fn new(cfg: &SchedCfg) -> Self {
+        let n = cfg.nprocs as usize;
+        BlockingSession {
+            xfers: TransferTable::empty(),
+            costs: Vec::new(),
+            program: vec![Vec::new(); n],
+            ptr: vec![0; n],
+            parked: FxHashMap::default(),
+            heap: BinaryHeap::new(),
+            queued: vec![false; n],
+            seq: 0,
+            executed: 0,
         }
     }
 
-    let mut executed = 0u64;
-    while let Some(TEvent { ev: rank, .. }) = heap.pop() {
+    fn is_parked(&self, rank: Rank) -> bool {
+        self.parked.values().any(|&(pr, _)| pr == rank)
+    }
+
+    /// Splice the tail `ops[lo..]` into the per-rank programs. The
+    /// tail's groups are strictly after every earlier group (flush
+    /// epochs never interleave — the wave merge and the sliding splicer
+    /// both offset them), so per-rank sorting of the tail alone keeps
+    /// each whole program in (group, phase, index) order.
+    pub(crate) fn extend(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+    ) -> Result<(), SchedError> {
+        let new = &ops[lo..];
+        self.xfers.extend(new)?;
+        self.costs.extend(compute_costs(new, cfg));
+        let n = self.program.len();
+        let mut chunk: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (k, op) in new.iter().enumerate() {
+            chunk[op.rank.idx()].push(lo + k);
+        }
+        for (r, mut c) in chunk.into_iter().enumerate() {
+            c.sort_by_key(|&i| (ops[i].group, phase(&ops[i]), i));
+            self.program[r].extend(c);
+        }
+        Ok(())
+    }
+
+    /// Activate the tail: charge recording (Batch epochs only) and
+    /// queue every rank that has work but no pending turn — including
+    /// ranks that had finished their program before this inject (the
+    /// quiescent-session wake-up). Parked ranks are left alone: their
+    /// sender wakes them.
+    pub(crate) fn activate(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+        _backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) {
+        let new = &ops[lo..];
+        // No dependency system: only the (cheaper) recording overhead.
+        // Gated injects pay it on the concurrent recorder clock instead;
+        // the per-op admission gates below are what execution observes.
+        if st.admit.is_empty() {
+            st.charge_overhead(super::batch_overhead(
+                new,
+                cfg.spec.blocking_op_overhead,
+                &cfg.spec,
+            ));
+        }
+        for r in 0..self.program.len() {
+            let rank = Rank(r as u32);
+            if self.ptr[r] < self.program[r].len() && !self.queued[r] && !self.is_parked(rank) {
+                self.heap.push(TEvent {
+                    t: st.clock[r],
+                    seq: self.seq,
+                    ev: rank,
+                });
+                self.seq += 1;
+                self.queued[r] = true;
+            }
+        }
+    }
+
+    /// One rank's turn: execute its next program entry.
+    fn turn(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend, rank: Rank) {
         let r = rank.idx();
-        if ptr[r] >= program[r].len() {
-            continue;
+        if self.ptr[r] >= self.program[r].len() {
+            return;
         }
-        let i = program[r][ptr[r]];
+        let i = self.program[r][self.ptr[r]];
         let op = &ops[i];
         match &op.payload {
             OpPayload::Compute(task) => {
                 st.gate_admission(rank, op.id);
                 backend.exec_compute(rank, task);
-                st.busy[r] += costs[i];
-                st.clock[r] += costs[i];
+                st.busy[r] += self.costs[i];
+                st.clock[r] += self.costs[i];
                 st.note_retire(op, st.clock[r], backend);
-                ptr[r] += 1;
-                executed += 1;
+                self.ptr[r] += 1;
+                self.executed += 1;
             }
             OpPayload::Send {
                 peer, tag, bytes, ..
@@ -132,30 +179,34 @@ pub(crate) fn run_blocking_epoch(
                 // operations can overwrite the source region. The
                 // receiver only reads its stage after recv completion
                 // in virtual time, so early delivery is unobservable.
-                let info = &xfers.info[tag];
-                backend.exec_transfer(info.from, info.to, *tag, &info.src);
+                let recv_op = {
+                    let info = &self.xfers.info[tag];
+                    backend.exec_transfer(info.from, info.to, *tag, &info.src);
+                    info.recv_op
+                };
                 let done = res.send_done.unwrap();
                 st.wait[r] += done - t0;
                 st.clock[r] = done;
                 st.note_retire(op, done, backend);
-                ptr[r] += 1;
-                executed += 1;
+                self.ptr[r] += 1;
+                self.executed += 1;
                 if let Some(rd) = res.recv_done {
                     // The matching recv was already blocked: wake it.
-                    if let Some((peer_rank, parked_at)) = parked.remove(tag) {
+                    if let Some((peer_rank, parked_at)) = self.parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
                         st.wait[pr] += resume - parked_at;
                         st.clock[pr] = resume;
-                        st.note_retire(&ops[xfers.info[tag].recv_op.idx()], resume, backend);
-                        ptr[pr] += 1;
-                        executed += 1;
-                        heap.push(TEvent {
+                        st.note_retire(&ops[recv_op.idx()], resume, backend);
+                        self.ptr[pr] += 1;
+                        self.executed += 1;
+                        self.heap.push(TEvent {
                             t: st.clock[pr],
-                            seq,
+                            seq: self.seq,
                             ev: peer_rank,
                         });
-                        seq += 1;
+                        self.seq += 1;
+                        self.queued[pr] = true;
                     }
                 }
             }
@@ -167,36 +218,87 @@ pub(crate) fn run_blocking_epoch(
                     st.wait[r] += rd - t0;
                     st.clock[r] = rd;
                     st.note_retire(op, rd, backend);
-                    ptr[r] += 1;
-                    executed += 1;
+                    self.ptr[r] += 1;
+                    self.executed += 1;
                 } else {
                     // Block until the send appears.
                     st.net.post_recv(t0, rank, *tag);
-                    parked.insert(*tag, (rank, t0));
-                    continue; // don't requeue; the sender wakes us.
+                    self.parked.insert(*tag, (rank, t0));
+                    return; // don't requeue; the sender wakes us.
                 }
             }
         }
-        if ptr[r] < program[r].len() {
-            heap.push(TEvent {
+        if self.ptr[r] < self.program[r].len() {
+            self.heap.push(TEvent {
                 t: st.clock[r],
-                seq,
+                seq: self.seq,
                 ev: rank,
             });
-            seq += 1;
+            self.seq += 1;
+            self.queued[r] = true;
         }
     }
 
-    if executed as usize != ops.len() {
-        return Err(SchedError::Deadlock {
-            executed,
-            total: ops.len() as u64,
-            blocked_recvs: parked.len() as u64,
-        });
+    /// Advance through every turn at or before `until`.
+    pub(crate) fn pump_until(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        until: VTime,
+    ) {
+        while self.heap.peek().is_some_and(|e| e.t <= until) {
+            let TEvent { ev: rank, .. } = self.heap.pop().unwrap();
+            self.queued[rank.idx()] = false;
+            self.turn(ops, st, backend, rank);
+        }
     }
 
-    super::count_epoch_ops(st, ops);
-    Ok(())
+    /// Process the earliest pending turn; `None` on a quiescent loop.
+    pub(crate) fn pump_next(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) -> Option<VTime> {
+        let TEvent { t, ev: rank, .. } = self.heap.pop()?;
+        self.queued[rank.idx()] = false;
+        self.turn(ops, st, backend, rank);
+        Some(t)
+    }
+
+    /// Run the loop to quiescence.
+    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
+        while let Some(TEvent { ev: rank, .. }) = self.heap.pop() {
+            self.queued[rank.idx()] = false;
+            self.turn(ops, st, backend, rank);
+        }
+    }
+
+    /// Verify every injected operation executed.
+    pub(crate) fn finish_check(&self, ops: &[OpNode]) -> Result<(), SchedError> {
+        if self.executed as usize != ops.len() {
+            return Err(SchedError::Deadlock {
+                executed: self.executed,
+                total: ops.len() as u64,
+                blocked_recvs: self.parked.len() as u64,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience: run `ops` as the single epoch of a fresh
+/// [`ExecState`] and report it.
+pub fn run_blocking(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+) -> Result<RunReport, SchedError> {
+    let mut state = ExecState::new(cfg);
+    state.n_epochs = 1;
+    super::session::one_shot(super::Policy::Blocking, ops, cfg, backend, &mut state)?;
+    Ok(state.report())
 }
 
 #[cfg(test)]

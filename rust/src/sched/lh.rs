@@ -15,11 +15,19 @@
 //! Waiting time — the paper's headline metric — accrues exactly while a
 //! rank is idle with operations still pending.
 //!
-//! The scheduler runs as one *epoch* of a persistent [`ExecState`]: rank
-//! clocks, NIC frontiers, cache keys and the dependency system resume
-//! from wherever the previous flush left them, so a flush is no longer a
-//! global barrier and communication posted near an epoch's end keeps
-//! occupying the wire into the next one.
+//! Since PR 5 the scheduler is a **resumable engine** ([`LhSession`],
+//! driven through [`crate::sched::SchedSession`]): the epoch-local
+//! state that used to live on the stack of a run-to-completion function
+//! — per-rank `State`/`idle_since`, ready queues, the event heap, the
+//! transfer table, per-op costs — is a struct that survives between
+//! calls, so newly admitted epochs can be spliced into a *running*
+//! event loop (`extend`/`activate`) and the loop can be advanced
+//! incrementally (`pump_until`) or to quiescence (`pump_all`). A Batch
+//! epoch is simply one inject followed by one drain, which reproduces
+//! the old run-to-completion behaviour exactly; the sliding-admission
+//! mode of [`crate::flow`] keeps one session alive across many
+//! injects, so a rank idling on an epoch tail picks up the next
+//! epoch's ready fragments the moment the recorder admits them.
 
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -43,17 +51,16 @@ enum State {
     Done,
 }
 
-struct Lh<'a> {
-    ops: &'a [OpNode],
-    backend: &'a mut dyn Backend,
-    /// Persistent state: clocks, wait/busy, network, deps, cache keys.
-    st: &'a mut ExecState,
+/// The latency-hiding scheduler's persistent session state. Owns no
+/// operations — the shared op stream lives in
+/// [`crate::sched::SchedSession`] and is passed into every method — but
+/// everything else the event loop needs survives here across injects.
+pub(crate) struct LhSession {
     xfers: TransferTable,
     costs: Vec<VTime>,
     costs_hot: Vec<VTime>,
     locality: bool,
 
-    // -- epoch-local scheduling state --
     state: Vec<State>,
     idle_since: Vec<Option<VTime>>,
     ready_comm: Vec<VecDeque<OpId>>,
@@ -62,10 +69,90 @@ struct Lh<'a> {
 
     heap: BinaryHeap<TEvent<Ev>>,
     seq: u64,
-    completed: u64,
+    pub(crate) completed: u64,
 }
 
-impl<'a> Lh<'a> {
+impl LhSession {
+    pub(crate) fn new(cfg: &SchedCfg) -> Self {
+        let n = cfg.nprocs as usize;
+        LhSession {
+            xfers: TransferTable::empty(),
+            costs: Vec::new(),
+            costs_hot: Vec::new(),
+            locality: cfg.locality,
+            state: vec![State::Idle; n],
+            idle_since: vec![None; n],
+            ready_comm: vec![VecDeque::new(); n],
+            ready_comp: vec![VecDeque::new(); n],
+            remaining: vec![0; n],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            completed: 0,
+        }
+    }
+
+    /// Splice the tail `ops[lo..]` into the session's tables (transfer
+    /// pairs, per-op costs). A malformed tail errors before any
+    /// execution state is touched.
+    pub(crate) fn extend(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+    ) -> Result<(), SchedError> {
+        let new = &ops[lo..];
+        self.xfers.extend(new)?;
+        self.costs.extend(compute_costs(new, cfg));
+        self.costs_hot.extend(super::compute_costs_hot(new, cfg));
+        Ok(())
+    }
+
+    /// Activate the tail: insert it into the dependency system, charge
+    /// recording (Batch epochs only — gated injects pay on the recorder
+    /// clock), revive finished ranks and wake the event loop. Ranks are
+    /// woken at their *own* clocks; any admission gap is charged by
+    /// [`ExecState::gate_admission`] exactly as in a merged wave.
+    pub(crate) fn activate(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) {
+        let new = &ops[lo..];
+        st.deps.insert_all(new);
+        let initial = st.deps.take_ready();
+        // Every process records + inserts every operation (global
+        // knowledge, Section 5.5): the dependency-system overhead is
+        // charged to all ranks up front, on top of wherever their
+        // clocks already are. Gated injects (`st.admit` non-empty) pay
+        // recording on the concurrent recorder clock instead —
+        // execution observes it only through the per-op admission
+        // gates (see `crate::flow::overlap`).
+        if st.admit.is_empty() {
+            st.charge_overhead(super::batch_overhead(new, cfg.spec.lh_op_overhead, &cfg.spec));
+        }
+        for op in new {
+            self.remaining[op.rank.idx()] += 1;
+        }
+        for r in 0..self.state.len() {
+            // A rank that ran out of work between injects parked as
+            // Done; new operations revive it (the sliding regression:
+            // injecting into a quiescent session must wake the loop).
+            if self.state[r] == State::Done && self.remaining[r] > 0 {
+                self.state[r] = State::Idle;
+            }
+        }
+        self.distribute(ops, st, backend, initial, 0.0);
+        for r in 0..self.state.len() {
+            // Ranks with nothing to do yet park as Idle (or Done).
+            if self.state[r] == State::Idle && self.idle_since[r].is_none() {
+                self.step(ops, st, backend, Rank(r as u32), 0.0);
+            }
+        }
+    }
+
     fn push_ev(&mut self, t: VTime, ev: Ev) {
         self.heap.push(TEvent {
             t,
@@ -76,49 +163,70 @@ impl<'a> Lh<'a> {
     }
 
     /// Distribute newly-ready ops into per-rank queues; step idle ranks.
-    fn distribute(&mut self, ready: Vec<OpId>, t: VTime) {
+    fn distribute(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        ready: Vec<OpId>,
+        t: VTime,
+    ) {
         let mut affected = Vec::new();
         for id in ready {
-            let op = &self.ops[id.idx()];
-            let r = op.rank.idx();
-            if op.is_comm() {
+            let rank = ops[id.idx()].rank;
+            let r = rank.idx();
+            if ops[id.idx()].is_comm() {
                 self.ready_comm[r].push_back(id);
             } else {
                 self.ready_comp[r].push_back(id);
             }
-            if !affected.contains(&op.rank) {
-                affected.push(op.rank);
+            if !affected.contains(&rank) {
+                affected.push(rank);
             }
         }
         for r in affected {
             if self.state[r.idx()] == State::Idle {
-                self.step(r, t);
+                self.step(ops, st, backend, r, t);
             }
         }
     }
 
     /// Mark `op` complete in the dependency system and release dependents.
-    fn complete_op(&mut self, op: OpId, t: VTime) {
-        self.st.note_retire(&self.ops[op.idx()], t, &mut *self.backend);
-        self.st.deps.complete(op);
-        self.remaining[self.ops[op.idx()].rank.idx()] -= 1;
+    fn complete_op(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        op: OpId,
+        t: VTime,
+    ) {
+        st.note_retire(&ops[op.idx()], t, backend);
+        st.deps.complete(op);
+        let r = ops[op.idx()].rank.idx();
+        self.remaining[r] -= 1;
         self.completed += 1;
-        let ready = self.st.deps.take_ready();
-        self.distribute(ready, t);
+        let ready = st.deps.take_ready();
+        self.distribute(ops, st, backend, ready, t);
     }
 
     /// Post one communication op at the rank's current time — no
-    /// earlier than its admission (a Flow wave's later epochs post
-    /// their comm the moment the recorder admits them; the post itself
-    /// costs the rank nothing, so the clock is not advanced).
-    fn post_comm(&mut self, op_id: OpId) {
-        let op = &self.ops[op_id.idx()];
-        let now = self.st.clock[op.rank.idx()].max(self.st.admit_time(op_id));
+    /// earlier than its admission (a gated inject's epochs post their
+    /// comm the moment the recorder admits them; the post itself costs
+    /// the rank nothing, so the clock is not advanced).
+    fn post_comm(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        op_id: OpId,
+    ) {
+        let op = &ops[op_id.idx()];
+        let now = st.clock[op.rank.idx()].max(st.admit_time(op_id));
         match &op.payload {
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
-                let res = self.st.net.post_send(now, op.rank, *peer, *tag, *bytes);
+                let res = st.net.post_send(now, op.rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time: once the send
                 // completes, the dependency system allows the sender's
                 // later ops to overwrite the source region — the data
@@ -126,8 +234,7 @@ impl<'a> Lh<'a> {
                 // after RecvDone in virtual time, so early delivery is
                 // unobservable.
                 let info = self.xfers.info[tag].clone();
-                self.backend
-                    .exec_transfer(info.from, info.to, *tag, &info.src);
+                backend.exec_transfer(info.from, info.to, *tag, &info.src);
                 self.push_ev(
                     res.send_done.unwrap(),
                     Ev::SendDone {
@@ -146,7 +253,7 @@ impl<'a> Lh<'a> {
                 }
             }
             OpPayload::Recv { tag, .. } => {
-                let res = self.st.net.post_recv(now, op.rank, *tag);
+                let res = st.net.post_recv(now, op.rank, *tag);
                 if let Some(rd) = res.recv_done {
                     self.push_ev(
                         rd,
@@ -166,16 +273,16 @@ impl<'a> Lh<'a> {
     /// an op whose primary block the rank touched last — "sort the
     /// operations in the ready queue after the last time the associated
     /// data block has been accessed".
-    fn pick_compute(&mut self, r: usize) -> Option<OpId> {
-        if !self.locality || self.st.last_block[r].is_none() {
+    fn pick_compute(&mut self, ops: &[OpNode], st: &ExecState, r: usize) -> Option<OpId> {
+        if !self.locality || st.last_block[r].is_none() {
             return self.ready_comp[r].pop_front();
         }
         const WINDOW: usize = 16;
-        let want = self.st.last_block[r];
+        let want = st.last_block[r];
         let hit = self.ready_comp[r]
             .iter()
             .take(WINDOW)
-            .position(|id| super::primary_block(&self.ops[id.idx()]) == want);
+            .position(|id| super::primary_block(&ops[id.idx()]) == want);
         match hit {
             Some(i) => self.ready_comp[r].remove(i),
             None => self.ready_comp[r].pop_front(),
@@ -183,33 +290,40 @@ impl<'a> Lh<'a> {
     }
 
     /// Advance a rank: flush its comm queue, start compute or idle.
-    fn step(&mut self, rank: Rank, t: VTime) {
+    fn step(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        rank: Rank,
+        t: VTime,
+    ) {
         let r = rank.idx();
         if self.state[r] == State::Done {
             return;
         }
-        let now = self.st.clock[r].max(t);
+        let now = st.clock[r].max(t);
         if let Some(t0) = self.idle_since[r].take() {
-            self.st.wait[r] += now - t0;
+            st.wait[r] += now - t0;
         }
-        self.st.clock[r] = now;
+        st.clock[r] = now;
 
         // Invariant 2: all ready communication is initiated before any
-        // compute starts (under a Flow wave, no earlier than each op's
-        // admission — handled inside `post_comm`).
+        // compute starts (under an admission-gated inject, no earlier
+        // than each op's admission — handled inside `post_comm`).
         while let Some(c) = self.ready_comm[r].pop_front() {
-            self.post_comm(c);
+            self.post_comm(ops, st, backend, c);
         }
 
         if self.state[r] == State::Busy {
             return;
         }
-        if let Some(op) = self.pick_compute(r) {
+        if let Some(op) = self.pick_compute(ops, st, r) {
             self.state[r] = State::Busy;
-            let now = self.st.gate_admission(rank, op);
-            let blk = super::primary_block(&self.ops[op.idx()]);
-            let hot = blk.is_some() && blk == self.st.last_block[r];
-            self.st.last_block[r] = blk.or(self.st.last_block[r]);
+            let now = st.gate_admission(rank, op);
+            let blk = super::primary_block(&ops[op.idx()]);
+            let hot = blk.is_some() && blk == st.last_block[r];
+            st.last_block[r] = blk.or(st.last_block[r]);
             let cost = if hot {
                 self.costs_hot[op.idx()]
             } else {
@@ -224,6 +338,87 @@ impl<'a> Lh<'a> {
             self.state[r] = State::Done;
         }
     }
+
+    /// Process one popped event — the body of the event loop.
+    fn handle(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        t: VTime,
+        ev: Ev,
+    ) {
+        match ev {
+            Ev::ComputeDone { rank, op } => {
+                let r = rank.idx();
+                // Busy time = the cost actually charged when the op was
+                // started (clock advanced to the start time back then).
+                let started = st.clock[r];
+                st.busy[r] += t - started;
+                st.clock[r] = t;
+                self.state[r] = State::Idle;
+                if let OpPayload::Compute(task) = &ops[op.idx()].payload {
+                    backend.exec_compute(rank, task);
+                }
+                self.complete_op(ops, st, backend, op, t);
+                self.step(ops, st, backend, rank, t);
+            }
+            Ev::SendDone { rank, op } | Ev::RecvDone { rank, op } => {
+                self.complete_op(ops, st, backend, op, t);
+                if self.state[rank.idx()] == State::Idle {
+                    self.step(ops, st, backend, rank, t);
+                }
+            }
+        }
+    }
+
+    /// Advance the event loop through every event at or before `until`
+    /// — the prefix of the timeline that a later inject (whose ops
+    /// cannot start before `until`) can no longer affect.
+    pub(crate) fn pump_until(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        until: VTime,
+    ) {
+        while self.heap.peek().is_some_and(|e| e.t <= until) {
+            let TEvent { t, ev, .. } = self.heap.pop().unwrap();
+            self.handle(ops, st, backend, t, ev);
+        }
+    }
+
+    /// Process the earliest pending event; returns its time, or `None`
+    /// on a quiescent loop.
+    pub(crate) fn pump_next(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) -> Option<VTime> {
+        let TEvent { t, ev, .. } = self.heap.pop()?;
+        self.handle(ops, st, backend, t, ev);
+        Some(t)
+    }
+
+    /// Run the loop to quiescence.
+    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
+        while let Some(TEvent { t, ev, .. }) = self.heap.pop() {
+            self.handle(ops, st, backend, t, ev);
+        }
+    }
+
+    /// Verify every injected operation retired (quiescence ≠ success).
+    pub(crate) fn finish_check(&self, ops: &[OpNode], st: &ExecState) -> Result<(), SchedError> {
+        if self.completed as usize != ops.len() {
+            return Err(SchedError::Deadlock {
+                executed: self.completed,
+                total: ops.len() as u64,
+                blocked_recvs: st.net.unmatched_recvs() as u64,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// One-shot convenience: run `ops` as the single epoch of a fresh
@@ -236,106 +431,8 @@ pub fn run_latency_hiding(
 ) -> Result<RunReport, SchedError> {
     let mut state = ExecState::new(cfg);
     state.n_epochs = 1;
-    state.run_id = 1;
-    run_latency_hiding_epoch(ops, cfg, backend, &mut state)?;
+    super::session::one_shot(super::Policy::LatencyHiding, ops, cfg, backend, &mut state)?;
     Ok(state.report())
-}
-
-/// Resume the persistent simulation with one more flushed batch.
-pub(crate) fn run_latency_hiding_epoch(
-    ops: &[OpNode],
-    cfg: &SchedCfg,
-    backend: &mut dyn Backend,
-    st: &mut ExecState,
-) -> Result<(), SchedError> {
-    let n = cfg.nprocs as usize;
-    let xfers = TransferTable::build(ops)?;
-    st.begin_epoch(ops);
-    st.deps.insert_all(ops);
-    let initial = st.deps.take_ready();
-
-    // Every process records + inserts every operation (global knowledge,
-    // Section 5.5): the dependency-system overhead is charged to all
-    // ranks up front, on top of wherever their clocks already are.
-    // Flow waves (`st.admit` non-empty) pay recording on the concurrent
-    // recorder clock instead — execution observes it only through the
-    // per-op admission gates (see `crate::flow::overlap`).
-    if st.admit.is_empty() {
-        st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
-    }
-
-    let mut remaining = vec![0u64; n];
-    for op in ops {
-        remaining[op.rank.idx()] += 1;
-    }
-
-    let mut lh = Lh {
-        ops,
-        backend,
-        st,
-        xfers,
-        costs: compute_costs(ops, cfg),
-        costs_hot: super::compute_costs_hot(ops, cfg),
-        locality: cfg.locality,
-        state: vec![State::Idle; n],
-        idle_since: vec![None; n],
-        ready_comm: vec![VecDeque::new(); n],
-        ready_comp: vec![VecDeque::new(); n],
-        remaining,
-        heap: BinaryHeap::new(),
-        seq: 0,
-        completed: 0,
-    };
-
-    lh.distribute(initial, 0.0);
-    for r in 0..n {
-        // Ranks with nothing to do yet park as Idle (or Done).
-        if lh.state[r] == State::Idle && lh.idle_since[r].is_none() {
-            lh.step(Rank(r as u32), 0.0);
-        }
-    }
-
-    while let Some(TEvent { t, ev, .. }) = lh.heap.pop() {
-        match ev {
-            Ev::ComputeDone { rank, op } => {
-                let r = rank.idx();
-                // Busy time = the cost actually charged when the op was
-                // started (clock advanced to the start time back then).
-                let started = lh.st.clock[r];
-                lh.st.busy[r] += t - started;
-                lh.st.clock[r] = t;
-                lh.state[r] = State::Idle;
-                if let OpPayload::Compute(task) = &lh.ops[op.idx()].payload {
-                    lh.backend.exec_compute(rank, task);
-                }
-                lh.complete_op(op, t);
-                lh.step(rank, t);
-            }
-            Ev::SendDone { rank, op } => {
-                lh.complete_op(op, t);
-                if lh.state[rank.idx()] == State::Idle {
-                    lh.step(rank, t);
-                }
-            }
-            Ev::RecvDone { rank, op } => {
-                lh.complete_op(op, t);
-                if lh.state[rank.idx()] == State::Idle {
-                    lh.step(rank, t);
-                }
-            }
-        }
-    }
-
-    if lh.completed as usize != ops.len() {
-        return Err(SchedError::Deadlock {
-            executed: lh.completed,
-            total: ops.len() as u64,
-            blocked_recvs: lh.st.net.unmatched_recvs() as u64,
-        });
-    }
-
-    super::count_epoch_ops(lh.st, ops);
-    Ok(())
 }
 
 #[cfg(test)]
@@ -344,6 +441,7 @@ mod tests {
     use crate::array::Registry;
     use crate::cluster::MachineSpec;
     use crate::exec::SimBackend;
+    use crate::sched::{execute_epoch, Policy};
     use crate::types::DType;
     use crate::ufunc::{Kernel, OpBuilder};
 
@@ -445,7 +543,14 @@ mod tests {
             let mut st = ExecState::new(&cfg);
             for _ in 0..4 {
                 let ops = stencil3_batch(4, 4096, 64);
-                run_latency_hiding_epoch(&ops, &cfg, &mut SimBackend, &mut st).unwrap();
+                execute_epoch(
+                    Policy::LatencyHiding,
+                    &ops,
+                    &cfg,
+                    &mut SimBackend,
+                    &mut st,
+                )
+                .unwrap();
                 if barrier_every_epoch {
                     st.barrier();
                 }

@@ -22,11 +22,13 @@
 mod blocking;
 mod lh;
 mod naive;
+mod session;
 mod state;
 
 pub use blocking::run_blocking;
 pub use lh::run_latency_hiding;
 pub use naive::run_naive;
+pub use session::SchedSession;
 pub use state::ExecState;
 pub use crate::sync::SyncMode;
 
@@ -191,7 +193,7 @@ pub fn execute_epoch(
     backend: &mut dyn Backend,
     state: &mut ExecState,
 ) -> Result<(), SchedError> {
-    let run = |ops: &[OpNode],
+    let run = |ops: Vec<OpNode>,
                backend: &mut dyn Backend,
                state: &mut ExecState|
      -> Result<(), SchedError> {
@@ -199,24 +201,24 @@ pub fn execute_epoch(
         // recording times are NaN (the overhead lands on the rank
         // clocks instead), retirement is attributed after the drain.
         let log_idx = state.flow_log.submitted(f64::NAN, f64::NAN, ops.len());
-        match policy {
-            Policy::LatencyHiding => lh::run_latency_hiding_epoch(ops, cfg, backend, state),
-            Policy::Blocking => blocking::run_blocking_epoch(ops, cfg, backend, state),
-            Policy::Naive => naive::run_naive_epoch(ops, cfg, backend, state),
-        }?;
+        // One epoch = one session run: inject everything, drain. The
+        // same [`SchedSession`] API the flow engine streams through —
+        // there is no separate batch code path.
+        let mut session = SchedSession::new(policy, cfg, state);
+        session.inject(ops, None, cfg, backend, state)?;
+        session.drain(backend, state)?;
         state.flow_log.retire_from(log_idx, &state.retire);
         Ok(())
     };
     state.n_epochs += 1;
-    state.run_id += 1;
     if cfg.aggregation >= 2 {
         let (packed, stats) = crate::comm::aggregate(ops, cfg.aggregation);
-        run(&packed, backend, state)?;
+        run(packed, backend, state)?;
         state.agg_msgs += stats.packed_msgs;
         state.agg_parts += stats.packed_parts;
         Ok(())
     } else {
-        run(ops, backend, state)
+        run(ops.to_vec(), backend, state)
     }
 }
 
@@ -226,23 +228,21 @@ pub fn execute_epoch(
 /// flush engine, [`crate::flow::FlowEngine`]) has already counted the
 /// epochs, priced the recording on the recorder clock and filled the
 /// admission log; recording overhead is therefore *not* charged on the
-/// rank clocks here (the runners skip `charge_overhead` whenever
-/// `state.admit` is non-empty).
+/// rank clocks here (the session's engines skip `charge_overhead`
+/// whenever `state.admit` is non-empty).
 pub(crate) fn execute_wave(
     policy: Policy,
-    ops: &[OpNode],
+    ops: Vec<OpNode>,
     admit: &[VTime],
     cfg: &SchedCfg,
     backend: &mut dyn Backend,
     state: &mut ExecState,
 ) -> Result<(), SchedError> {
     debug_assert_eq!(ops.len(), admit.len(), "one admission time per op");
-    state.run_id += 1;
-    state.admit = admit.to_vec();
-    let res = match policy {
-        Policy::LatencyHiding => lh::run_latency_hiding_epoch(ops, cfg, backend, state),
-        Policy::Blocking => blocking::run_blocking_epoch(ops, cfg, backend, state),
-        Policy::Naive => naive::run_naive_epoch(ops, cfg, backend, state),
+    let mut session = SchedSession::new(policy, cfg, state);
+    let res = match session.inject(ops, Some(admit), cfg, backend, state) {
+        Ok(()) => session.drain(backend, state),
+        Err(e) => Err(e),
     };
     state.admit = Vec::new();
     res
@@ -300,6 +300,24 @@ pub(crate) struct TransferInfo {
 }
 
 impl TransferTable {
+    /// An empty table — resumable sessions start with no transfers and
+    /// splice pairs in per inject ([`TransferTable::extend`]).
+    pub(crate) fn empty() -> Self {
+        TransferTable {
+            info: FxHashMap::default(),
+        }
+    }
+
+    /// Splice one injected batch's transfer pairs into the table. The
+    /// batch must pair internally (send/recv pairs never span flush
+    /// epochs — each array operation records both halves); tags are
+    /// run-unique, so entries never collide with earlier injects.
+    pub(crate) fn extend(&mut self, ops: &[OpNode]) -> Result<(), SchedError> {
+        let add = TransferTable::build(ops)?;
+        self.info.extend(add.info);
+        Ok(())
+    }
+
     /// Pair every send with its receive by tag. A half-paired tag means
     /// the recorded (or aggregation-rewritten) stream is malformed —
     /// reported as [`SchedError::Stall`] so a bad batch fails the flush

@@ -10,8 +10,15 @@
 //! `examples/quickstart.rs` demonstrate against the latency-hiding
 //! scheduler that completes the same batch.
 //!
-//! Runs as one epoch of a persistent [`ExecState`] like the other
-//! policies. A deadlocked epoch leaves the state with pending work; the
+//! Since PR 5 the evaluator is a **resumable engine** ([`NaiveSession`],
+//! driven through [`crate::sched::SchedSession`]) like the other
+//! policies: ready FIFOs, parked receives and the runnable-rank heap
+//! persist between injects. The incremental flush engine still feeds it
+//! conservatively — merged waves are admitted only after a dry-run shows
+//! the becoming-ready order completes them ([`crate::flow::engine`]'s
+//! bounded-lookahead merge) — because splicing epochs into its blocking
+//! ready-order can manufacture deadlocks the per-batch stream never
+//! exposes. A deadlocked session leaves the state with pending work; the
 //! lazy context poisons itself on the error, so the torn state is never
 //! resumed.
 
@@ -24,78 +31,93 @@ use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
 
-/// One-shot convenience: run `ops` as the single epoch of a fresh
-/// [`ExecState`] and report it.
-pub fn run_naive(
-    ops: &[OpNode],
-    cfg: &SchedCfg,
-    backend: &mut dyn Backend,
-) -> Result<RunReport, SchedError> {
-    let mut state = ExecState::new(cfg);
-    state.n_epochs = 1;
-    state.run_id = 1;
-    run_naive_epoch(ops, cfg, backend, &mut state)?;
-    Ok(state.report())
+/// The naive evaluator's persistent session state.
+pub(crate) struct NaiveSession {
+    xfers: TransferTable,
+    costs: Vec<VTime>,
+    /// FIFO of ready ops per rank, in becoming-ready order — the naive
+    /// evaluator draws no distinction between communication and compute.
+    fifo: Vec<VecDeque<usize>>,
+    parked: FxHashMap<Tag, (Rank, VTime)>,
+    heap: BinaryHeap<TEvent<Rank>>,
+    queued: Vec<bool>,
+    seq: u64,
+    pub(crate) executed: u64,
 }
 
-pub(crate) fn run_naive_epoch(
-    ops: &[OpNode],
-    cfg: &SchedCfg,
-    backend: &mut dyn Backend,
-    st: &mut ExecState,
-) -> Result<(), SchedError> {
-    let n = cfg.nprocs as usize;
-    let xfers = TransferTable::build(ops)?;
-    let costs = compute_costs(ops, cfg);
-    st.begin_epoch(ops);
-    st.deps.insert_all(ops);
-
-    // Flow degrades the naive evaluator to single-epoch waves (see
-    // `crate::flow::engine`): recording still rides the recorder clock
-    // (`st.admit` set), so skip the serial charge exactly like the
-    // other policies.
-    if st.admit.is_empty() {
-        st.charge_overhead(super::batch_overhead(ops, cfg.spec.lh_op_overhead, &cfg.spec));
-    }
-    // FIFO of ready ops per rank, in becoming-ready order — the naive
-    // evaluator draws no distinction between communication and compute.
-    let mut fifo: Vec<VecDeque<usize>> = vec![VecDeque::new(); n];
-    let mut parked: FxHashMap<Tag, (Rank, VTime)> = FxHashMap::default();
-    let mut heap: BinaryHeap<TEvent<Rank>> = BinaryHeap::new();
-    let mut queued = vec![false; n];
-    let mut seq = 0u64;
-
-    let mut executed = 0u64;
-
-    macro_rules! enqueue {
-        ($rank:expr, $t:expr) => {{
-            let r: Rank = $rank;
-            if !queued[r.idx()] && !fifo[r.idx()].is_empty() {
-                st.clock[r.idx()] = st.clock[r.idx()].max($t);
-                heap.push(TEvent {
-                    t: st.clock[r.idx()],
-                    seq,
-                    ev: r,
-                });
-                seq += 1;
-                queued[r.idx()] = true;
-            }
-        }};
+impl NaiveSession {
+    pub(crate) fn new(cfg: &SchedCfg) -> Self {
+        let n = cfg.nprocs as usize;
+        NaiveSession {
+            xfers: TransferTable::empty(),
+            costs: Vec::new(),
+            fifo: vec![VecDeque::new(); n],
+            parked: FxHashMap::default(),
+            heap: BinaryHeap::new(),
+            queued: vec![false; n],
+            seq: 0,
+            executed: 0,
+        }
     }
 
-    let initial = st.deps.take_ready();
-    for id in initial {
-        fifo[ops[id.idx()].rank.idx()].push_back(id.idx());
-    }
-    for r in 0..n {
-        enqueue!(Rank(r as u32), st.clock[r]);
+    /// Splice the tail `ops[lo..]` into the session's tables.
+    pub(crate) fn extend(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+    ) -> Result<(), SchedError> {
+        let new = &ops[lo..];
+        self.xfers.extend(new)?;
+        self.costs.extend(compute_costs(new, cfg));
+        Ok(())
     }
 
-    while let Some(TEvent { ev: rank, .. }) = heap.pop() {
+    fn enqueue(&mut self, st: &mut ExecState, rank: Rank, t: VTime) {
         let r = rank.idx();
-        queued[r] = false;
-        let Some(&i) = fifo[r].front() else {
-            continue;
+        if !self.queued[r] && !self.fifo[r].is_empty() {
+            st.clock[r] = st.clock[r].max(t);
+            self.heap.push(TEvent {
+                t: st.clock[r],
+                seq: self.seq,
+                ev: rank,
+            });
+            self.seq += 1;
+            self.queued[r] = true;
+        }
+    }
+
+    /// Activate the tail: dependencies, recording charge (Batch epochs
+    /// only — gated injects ride the recorder clock), ready
+    /// distribution, and wake every rank that has runnable work.
+    pub(crate) fn activate(
+        &mut self,
+        ops: &[OpNode],
+        lo: usize,
+        cfg: &SchedCfg,
+        _backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) {
+        let new = &ops[lo..];
+        st.deps.insert_all(new);
+        if st.admit.is_empty() {
+            st.charge_overhead(super::batch_overhead(new, cfg.spec.lh_op_overhead, &cfg.spec));
+        }
+        let initial = st.deps.take_ready();
+        for id in initial {
+            self.fifo[ops[id.idx()].rank.idx()].push_back(id.idx());
+        }
+        for r in 0..self.fifo.len() {
+            let t = st.clock[r];
+            self.enqueue(st, Rank(r as u32), t);
+        }
+    }
+
+    /// One rank's turn: execute its FIFO head (or park on it).
+    fn turn(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend, rank: Rank) {
+        let r = rank.idx();
+        let Some(&i) = self.fifo[r].front() else {
+            return;
         };
         let op = &ops[i];
         let mut done_ids = Vec::new();
@@ -103,11 +125,11 @@ pub(crate) fn run_naive_epoch(
             OpPayload::Compute(task) => {
                 st.gate_admission(rank, op.id);
                 backend.exec_compute(rank, task);
-                st.busy[r] += costs[i];
-                st.clock[r] += costs[i];
+                st.busy[r] += self.costs[i];
+                st.clock[r] += self.costs[i];
                 st.note_retire(op, st.clock[r], backend);
-                fifo[r].pop_front();
-                executed += 1;
+                self.fifo[r].pop_front();
+                self.executed += 1;
                 done_ids.push(op.id);
             }
             OpPayload::Send {
@@ -116,26 +138,30 @@ pub(crate) fn run_naive_epoch(
                 let t0 = st.gate_admission(rank, op.id);
                 let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time (see lh.rs).
-                let info = &xfers.info[tag];
-                backend.exec_transfer(info.from, info.to, *tag, &info.src);
+                let recv_op = {
+                    let info = &self.xfers.info[tag];
+                    backend.exec_transfer(info.from, info.to, *tag, &info.src);
+                    info.recv_op
+                };
                 let done = res.send_done.unwrap();
                 st.wait[r] += done - t0;
                 st.clock[r] = done;
                 st.note_retire(op, done, backend);
-                fifo[r].pop_front();
-                executed += 1;
+                self.fifo[r].pop_front();
+                self.executed += 1;
                 done_ids.push(op.id);
                 if let Some(rd) = res.recv_done {
-                    if let Some((peer_rank, parked_at)) = parked.remove(tag) {
+                    if let Some((peer_rank, parked_at)) = self.parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
                         st.wait[pr] += resume - parked_at;
                         st.clock[pr] = resume;
-                        st.note_retire(&ops[xfers.info[tag].recv_op.idx()], resume, backend);
-                        fifo[pr].pop_front(); // the blocked recv
-                        executed += 1;
-                        done_ids.push(ops[xfers.info[tag].recv_op.idx()].id);
-                        enqueue!(peer_rank, st.clock[pr]);
+                        st.note_retire(&ops[recv_op.idx()], resume, backend);
+                        self.fifo[pr].pop_front(); // the blocked recv
+                        self.executed += 1;
+                        done_ids.push(ops[recv_op.idx()].id);
+                        let t = st.clock[pr];
+                        self.enqueue(st, peer_rank, t);
                     }
                 }
             }
@@ -147,16 +173,16 @@ pub(crate) fn run_naive_epoch(
                     st.wait[r] += rd - t0;
                     st.clock[r] = rd;
                     st.note_retire(op, rd, backend);
-                    fifo[r].pop_front();
-                    executed += 1;
+                    self.fifo[r].pop_front();
+                    self.executed += 1;
                     done_ids.push(op.id);
-                } else if !parked.contains_key(tag) {
+                } else if !self.parked.contains_key(tag) {
                     // Blocking recv with no matching send posted: park.
                     st.net.post_recv(t0, rank, *tag);
-                    parked.insert(*tag, (rank, t0));
-                    continue;
+                    self.parked.insert(*tag, (rank, t0));
+                    return;
                 } else {
-                    continue;
+                    return;
                 }
             }
         }
@@ -164,36 +190,88 @@ pub(crate) fn run_naive_epoch(
             st.deps.complete(id);
             for nr in st.deps.take_ready() {
                 let owner = ops[nr.idx()].rank;
-                fifo[owner.idx()].push_back(nr.idx());
-                enqueue!(owner, st.clock[r]);
+                self.fifo[owner.idx()].push_back(nr.idx());
+                let t = st.clock[r];
+                self.enqueue(st, owner, t);
             }
         }
-        enqueue!(rank, st.clock[r]);
+        let t = st.clock[r];
+        self.enqueue(st, rank, t);
     }
 
-    if executed as usize != ops.len() {
-        // Progress stopped. A genuine deadlock leaves at least one rank
-        // parked on a receive whose matching send was never initiated —
-        // including sends the aggregation pass coalesced, whose
-        // constituents can span a blocked receive on another rank (the
-        // packed send only becomes ready once *all* constituents are).
-        // Anything else is an internal scheduling bug: report it as a
-        // stall instead of mislabelling it.
-        if parked.is_empty() {
-            return Err(SchedError::Stall(format!(
-                "naive evaluator stopped at {executed}/{} with no blocked receive",
-                ops.len()
-            )));
+    /// Advance through every turn at or before `until`.
+    pub(crate) fn pump_until(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+        until: VTime,
+    ) {
+        while self.heap.peek().is_some_and(|e| e.t <= until) {
+            let TEvent { ev: rank, .. } = self.heap.pop().unwrap();
+            self.queued[rank.idx()] = false;
+            self.turn(ops, st, backend, rank);
         }
-        return Err(SchedError::Deadlock {
-            executed,
-            total: ops.len() as u64,
-            blocked_recvs: parked.len() as u64,
-        });
     }
 
-    super::count_epoch_ops(st, ops);
-    Ok(())
+    /// Process the earliest pending turn; `None` on a quiescent loop.
+    pub(crate) fn pump_next(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) -> Option<VTime> {
+        let TEvent { t, ev: rank, .. } = self.heap.pop()?;
+        self.queued[rank.idx()] = false;
+        self.turn(ops, st, backend, rank);
+        Some(t)
+    }
+
+    /// Run the loop to quiescence.
+    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
+        while let Some(TEvent { ev: rank, .. }) = self.heap.pop() {
+            self.queued[rank.idx()] = false;
+            self.turn(ops, st, backend, rank);
+        }
+    }
+
+    /// Progress stopped: a genuine deadlock leaves at least one rank
+    /// parked on a receive whose matching send was never initiated —
+    /// including sends the aggregation pass coalesced, whose
+    /// constituents can span a blocked receive on another rank (the
+    /// packed send only becomes ready once *all* constituents are).
+    /// Anything else is an internal scheduling bug: report it as a
+    /// stall instead of mislabelling it.
+    pub(crate) fn finish_check(&self, ops: &[OpNode]) -> Result<(), SchedError> {
+        if self.executed as usize != ops.len() {
+            if self.parked.is_empty() {
+                return Err(SchedError::Stall(format!(
+                    "naive evaluator stopped at {}/{} with no blocked receive",
+                    self.executed,
+                    ops.len()
+                )));
+            }
+            return Err(SchedError::Deadlock {
+                executed: self.executed,
+                total: ops.len() as u64,
+                blocked_recvs: self.parked.len() as u64,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience: run `ops` as the single epoch of a fresh
+/// [`ExecState`] and report it.
+pub fn run_naive(
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+) -> Result<RunReport, SchedError> {
+    let mut state = ExecState::new(cfg);
+    state.n_epochs = 1;
+    super::session::one_shot(super::Policy::Naive, ops, cfg, backend, &mut state)?;
+    Ok(state.report())
 }
 
 #[cfg(test)]

@@ -1,0 +1,300 @@
+//! The resumable scheduler session — one dispatch *run* of the
+//! discrete-event engines, open for op injection while its event loop
+//! is live.
+//!
+//! Before PR 5 the three policies were run-to-completion functions: the
+//! epoch-local scheduling state (ready queues, event heap, per-rank
+//! rank-states, transfer table, costs) lived on the stack of one call
+//! and died with it, so a merged Flow wave was the largest schedulable
+//! unit — epoch *k+W* could not enter the schedulers until the whole
+//! wave containing epoch *k* had drained. [`SchedSession`] hoists that
+//! state into a struct that lives alongside [`ExecState`]:
+//!
+//! * [`SchedSession::inject`] splices newly-admitted operations into
+//!   the *running* event loop. The already-scheduled timeline is first
+//!   advanced through every event at or before the new ops' admission
+//!   horizon (they cannot start earlier, so that prefix is final);
+//!   the tail is then registered (transfer pairs, costs, dependency
+//!   system, retirement log) and parked ranks — including ranks that
+//!   ran out of work entirely — are woken at their own clocks, with
+//!   any admission gap charged through [`ExecState::gate_admission`]
+//!   exactly as in a merged wave.
+//! * [`SchedSession::pump_next`] advances the loop one event at a time
+//!   (the flow engine uses it to learn retirement times the sliding
+//!   window gate needs), [`SchedSession::drain`] runs to quiescence
+//!   and verifies every injected operation retired.
+//!
+//! A Batch epoch — and a quantized Flow wave — is simply one inject
+//! followed by one drain, which reproduces the pre-session scheduler
+//! behaviour operation for operation: there is no separate legacy code
+//! path. Injected ops must arrive renumbered so their ids continue the
+//! session's contiguous stream ([`crate::flow::frontier::Splicer`] for
+//! sliding admission; [`crate::flow::frontier::merge`] for waves).
+
+use super::blocking::BlockingSession;
+use super::lh::LhSession;
+use super::naive::NaiveSession;
+use super::{ExecState, Policy, SchedCfg, SchedError};
+use crate::exec::Backend;
+use crate::types::VTime;
+use crate::ufunc::OpNode;
+
+enum Engine {
+    Lh(LhSession),
+    Blocking(BlockingSession),
+    Naive(NaiveSession),
+}
+
+/// A live scheduler run: the op stream injected so far plus the
+/// policy's resumable engine state.
+pub struct SchedSession {
+    pub policy: Policy,
+    ops: Vec<OpNode>,
+    injected: bool,
+    counted: usize,
+    eng: Engine,
+}
+
+impl SchedSession {
+    /// Open a session. One session is one scheduler *run*: stage
+    /// provenance and the retirement log are keyed on it, so opening
+    /// bumps [`ExecState::run_id`].
+    pub fn new(policy: Policy, cfg: &SchedCfg, st: &mut ExecState) -> Self {
+        st.run_id += 1;
+        let eng = match policy {
+            Policy::LatencyHiding => Engine::Lh(LhSession::new(cfg)),
+            Policy::Blocking => Engine::Blocking(BlockingSession::new(cfg)),
+            Policy::Naive => Engine::Naive(NaiveSession::new(cfg)),
+        };
+        SchedSession {
+            policy,
+            ops: Vec::new(),
+            injected: false,
+            counted: 0,
+            eng,
+        }
+    }
+
+    /// Operations injected so far.
+    pub fn total(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Splice `ops` into the (possibly running) event loop.
+    ///
+    /// `admit` carries one admission time per op (streamed recording —
+    /// the ops may not execute earlier; appended to [`ExecState::admit`]
+    /// so the per-op gates apply), or `None` for a Batch epoch whose
+    /// recording is charged on the rank clocks instead. Ids must
+    /// continue the session's contiguous stream.
+    pub fn inject(
+        &mut self,
+        ops: Vec<OpNode>,
+        admit: Option<&[VTime]>,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) -> Result<(), SchedError> {
+        let lo = self.ops.len();
+        debug_assert!(
+            ops.iter()
+                .enumerate()
+                .all(|(k, o)| o.id.idx() == lo + k),
+            "session ops must be renumbered contiguously"
+        );
+        if let Some(ts) = admit {
+            debug_assert_eq!(ts.len(), ops.len(), "one admission time per op");
+            // Advance the live loop through the timeline prefix the new
+            // ops can no longer affect: everything at or before their
+            // admission horizon. (Events beyond it stay pending and
+            // interleave with the new ops through the shared heap.)
+            let horizon = ts.iter().cloned().fold(f64::INFINITY, f64::min);
+            if horizon.is_finite() {
+                self.pump_until(horizon, backend, st);
+            }
+        }
+        self.ops.extend(ops);
+        match &mut self.eng {
+            Engine::Lh(e) => e.extend(&self.ops, lo, cfg)?,
+            Engine::Blocking(e) => e.extend(&self.ops, lo, cfg)?,
+            Engine::Naive(e) => e.extend(&self.ops, lo, cfg)?,
+        }
+        if self.injected {
+            st.extend_epoch(&self.ops[lo..]);
+        } else {
+            st.begin_epoch(&self.ops);
+            self.injected = true;
+        }
+        if let Some(ts) = admit {
+            debug_assert_eq!(st.admit.len(), lo, "admission log out of step");
+            st.admit.extend_from_slice(ts);
+        }
+        match &mut self.eng {
+            Engine::Lh(e) => e.activate(&self.ops, lo, cfg, backend, st),
+            Engine::Blocking(e) => e.activate(&self.ops, lo, cfg, backend, st),
+            Engine::Naive(e) => e.activate(&self.ops, lo, cfg, backend, st),
+        }
+        Ok(())
+    }
+
+    /// Advance the event loop through every event at or before `until`.
+    pub fn pump_until(&mut self, until: VTime, backend: &mut dyn Backend, st: &mut ExecState) {
+        match &mut self.eng {
+            Engine::Lh(e) => e.pump_until(&self.ops, st, backend, until),
+            Engine::Blocking(e) => e.pump_until(&self.ops, st, backend, until),
+            Engine::Naive(e) => e.pump_until(&self.ops, st, backend, until),
+        }
+    }
+
+    /// Process the earliest pending event; returns its virtual time, or
+    /// `None` when the loop is quiescent (which, mid-session, just
+    /// means "waiting for the next inject", not "finished").
+    pub fn pump_next(&mut self, backend: &mut dyn Backend, st: &mut ExecState) -> Option<VTime> {
+        match &mut self.eng {
+            Engine::Lh(e) => e.pump_next(&self.ops, st, backend),
+            Engine::Blocking(e) => e.pump_next(&self.ops, st, backend),
+            Engine::Naive(e) => e.pump_next(&self.ops, st, backend),
+        }
+    }
+
+    /// Run the session to quiescence and verify every injected
+    /// operation retired; fold the run's operation counters into the
+    /// state. The session stays usable: further injects revive the
+    /// loop (the callers that keep one alive drop it themselves when
+    /// the run ends).
+    pub fn drain(&mut self, backend: &mut dyn Backend, st: &mut ExecState) -> Result<(), SchedError> {
+        match &mut self.eng {
+            Engine::Lh(e) => {
+                e.pump_all(&self.ops, st, backend);
+                e.finish_check(&self.ops, st)?;
+            }
+            Engine::Blocking(e) => {
+                e.pump_all(&self.ops, st, backend);
+                e.finish_check(&self.ops)?;
+            }
+            Engine::Naive(e) => {
+                e.pump_all(&self.ops, st, backend);
+                e.finish_check(&self.ops)?;
+            }
+        }
+        super::count_epoch_ops(st, &self.ops[self.counted..]);
+        self.counted = self.ops.len();
+        Ok(())
+    }
+}
+
+/// Run one batch as the single epoch of an already-prepared state: the
+/// shared body of the `run_*` one-shot entry points.
+pub(crate) fn one_shot(
+    policy: Policy,
+    ops: &[OpNode],
+    cfg: &SchedCfg,
+    backend: &mut dyn Backend,
+    st: &mut ExecState,
+) -> Result<(), SchedError> {
+    let mut session = SchedSession::new(policy, cfg, st);
+    session.inject(ops.to_vec(), None, cfg, backend, st)?;
+    session.drain(backend, st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Registry;
+    use crate::cluster::MachineSpec;
+    use crate::exec::SimBackend;
+    use crate::flow::frontier::Splicer;
+    use crate::types::DType;
+    use crate::ufunc::{Kernel, OpBuilder};
+
+    /// A batch with real transfers (3-point stencil on 2 ranks).
+    fn stencil_batch(bld: &mut OpBuilder, nprocs: u32) -> Vec<OpNode> {
+        let rows = 12u64;
+        let mut reg = Registry::new(nprocs);
+        let m = reg.alloc(vec![rows], 3, DType::F32);
+        let nn = reg.alloc(vec![rows], 3, DType::F32);
+        let mv = reg.full_view(m);
+        let nv = reg.full_view(nn);
+        bld.ufunc(
+            &reg,
+            Kernel::Add,
+            &nv.slice(&[(1, rows - 1)]),
+            &[&mv.slice(&[(2, rows)]), &mv.slice(&[(0, rows - 2)])],
+        );
+        bld.finish()
+    }
+
+    /// The PR-5 regression: injecting into a *quiescent-but-unfinished*
+    /// session — the first epoch's events all pending or drained, every
+    /// rank idle or done — must wake the event loop instead of leaving
+    /// the new ops stranded (a deadlock report at drain).
+    #[test]
+    fn inject_into_quiescent_session_wakes_the_loop() {
+        for policy in [Policy::LatencyHiding, Policy::Blocking] {
+            let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+            let mut st = ExecState::new(&cfg);
+            let mut bld = OpBuilder::new();
+            let mut splicer = Splicer::new();
+
+            let mut b1 = stencil_batch(&mut bld, 2);
+            let (lo1, hi1) = splicer.splice(&mut b1);
+            let n1 = b1.len();
+            let admit1 = vec![0.0; n1];
+
+            let mut s = SchedSession::new(policy, &cfg, &mut st);
+            s.inject(b1, Some(&admit1), &cfg, &mut SimBackend, &mut st)
+                .unwrap();
+            assert_eq!((lo1, hi1), (0, n1));
+            // Admission horizon 0.0: transfers are posted but their
+            // completion events are still outstanding in the heap.
+            let mid = st.max_clock();
+
+            let mut b2 = stencil_batch(&mut bld, 2);
+            let n2 = b2.len();
+            splicer.splice(&mut b2);
+            let admit2 = vec![mid * 0.5; n2];
+            s.inject(b2, Some(&admit2), &cfg, &mut SimBackend, &mut st)
+                .unwrap();
+            s.drain(&mut SimBackend, &mut st)
+                .unwrap_or_else(|e| panic!("{policy:?}: injected epoch stranded: {e}"));
+            assert_eq!(st.ops_executed, (n1 + n2) as u64, "{policy:?}");
+
+            // And a *fully* quiescent session (drained, all ranks out of
+            // work) revives on a later inject instead of deadlocking.
+            let mut b3 = stencil_batch(&mut bld, 2);
+            let n3 = b3.len();
+            splicer.splice(&mut b3);
+            let admit3 = vec![st.max_clock(); n3];
+            s.inject(b3, Some(&admit3), &cfg, &mut SimBackend, &mut st)
+                .unwrap();
+            s.drain(&mut SimBackend, &mut st)
+                .unwrap_or_else(|e| panic!("{policy:?}: revived session stranded: {e}"));
+            assert_eq!(st.ops_executed, (n1 + n2 + n3) as u64, "{policy:?}");
+            assert_eq!(st.run_id, 1, "one session = one scheduler run");
+        }
+    }
+
+    /// A session-injected stream produces the same per-op admission
+    /// gating as the pre-session wave path: ops never execute before
+    /// their admission time.
+    #[test]
+    fn injected_ops_respect_admission_gates() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 2);
+        let mut st = ExecState::new(&cfg);
+        let mut bld = OpBuilder::new();
+        let mut splicer = Splicer::new();
+        let mut b1 = stencil_batch(&mut bld, 2);
+        splicer.splice(&mut b1);
+        let gate = 1.5;
+        let admit = vec![gate; b1.len()];
+        let mut s = SchedSession::new(Policy::LatencyHiding, &cfg, &mut st);
+        s.inject(b1, Some(&admit), &cfg, &mut SimBackend, &mut st)
+            .unwrap();
+        s.drain(&mut SimBackend, &mut st).unwrap();
+        for (r, t) in &st.retire {
+            let _ = r;
+            assert!(*t >= gate, "op retired at {t} before its admission {gate}");
+        }
+        assert!(st.wait_at_admission > 0.0, "gating from t=0 stalls ranks");
+    }
+}

@@ -209,15 +209,27 @@ impl ExecState {
         self.clock[r.idx()]
     }
 
-    /// Start one epoch's retirement bookkeeping: reset the per-op
-    /// retirement log and register every stage *reader* of the batch in
-    /// the stage table (so reclamation can never drop a stage a later
-    /// operation of the same epoch still reads). Called by every policy
-    /// at the top of its epoch run, on the batch it will execute (i.e.
-    /// post-aggregation).
+    /// Start one scheduler run's retirement bookkeeping: reset the
+    /// per-op retirement log and register every stage *reader* of the
+    /// batch in the stage table (so reclamation can never drop a stage
+    /// a later operation of the same run still reads). Called through
+    /// [`crate::sched::SchedSession`] on the first inject of a run, on
+    /// the batch it will execute (i.e. post-aggregation).
     pub fn begin_epoch(&mut self, ops: &[OpNode]) {
         self.retire.clear();
-        self.retire.resize(ops.len(), (Rank(0), f64::NAN));
+        self.extend_epoch(ops);
+    }
+
+    /// Extend the *current* run's retirement log with newly injected
+    /// operations (resumable sessions: a sliding-admission epoch splices
+    /// into a live event loop): grow the log to cover the new ids and
+    /// register their stage readers, leaving already-injected entries
+    /// untouched. Ids must continue the run's contiguous stream.
+    pub fn extend_epoch(&mut self, ops: &[OpNode]) {
+        let need = ops.iter().map(|o| o.id.idx() + 1).max().unwrap_or(0);
+        if self.retire.len() < need {
+            self.retire.resize(need, (Rank(0), f64::NAN));
+        }
         for op in ops {
             self.retire[op.id.idx()].0 = op.rank;
             for a in &op.accesses {
@@ -283,6 +295,15 @@ impl ExecState {
         rep.overhead_streamed = self.overhead_streamed;
         rep.live_stages = self.stages.live;
         rep.peak_live_stages = self.stages.peak_live;
+        rep.max_in_flight = self.flow_log.max_in_flight;
+        rep.recorder_clock = self.flow_log.recorder_clock();
+        rep.admission_latency = self.flow_log.mean_admission_latency();
+        rep.flow_window_final = self
+            .flow_log
+            .window_trace
+            .last()
+            .map_or(0, |&(_, w)| w);
+        rep.window_decisions = self.flow_log.window_trace.len() as u64;
         rep
     }
 

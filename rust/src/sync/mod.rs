@@ -39,6 +39,15 @@
 //! staging buffers in the [`stages::StageTable`] until forced, which is
 //! what lets reclamation drop every *other* stage the moment its last
 //! reader retires (DESIGN.md §4's unbounded-accretion fix).
+//!
+//! Under sliding admission ([`crate::flow::FlowMode::Sliding`]) a
+//! future's producing epoch may live inside a scheduler session that
+//! is *still accepting injections* when the wait arrives. Forcing
+//! drains that session to quiescence first (`flush` = submit + drain),
+//! so by settle time the session's whole retirement log is final and
+//! the provenance check (`StageWriter::run == ExecState::run_id`, the
+//! session's run) works unchanged — one session spans many epochs, but
+//! it is still exactly one run.
 
 pub mod cone;
 pub mod stages;

@@ -956,11 +956,12 @@ fn stage_reclamation_never_drops_a_live_futures_stage() {
 // Incremental flush engine properties (flow/)
 // ---------------------------------------------------------------------
 
-/// Flow-mode streaming admission is pure timing: random aligned
-/// programs produce bit-identical scalars and arrays under Batch and
-/// Flow (windows 2 and 4), across all three policies and both
-/// dependency systems. Small flush thresholds force many threshold
-/// submits, so waves genuinely merge multiple epochs.
+/// Streaming admission is pure timing: random aligned programs produce
+/// bit-identical scalars and arrays under Batch, quantized Flow
+/// (windows 2 and 4) and Sliding (windows 2 and 4), across all three
+/// policies and both dependency systems. Small flush thresholds force
+/// many threshold submits, so waves genuinely merge multiple epochs
+/// and the sliding session genuinely splices mid-run.
 #[test]
 fn prop_flow_and_batch_bit_identical() {
     use distnumpy::flow::FlowCfg;
@@ -1049,7 +1050,13 @@ fn prop_flow_and_batch_bit_identical() {
         let want = run(Policy::LatencyHiding, DepsKind::Heuristic, FlowCfg::default());
         for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
             for deps in [DepsKind::Heuristic, DepsKind::Dag] {
-                for flow in [FlowCfg::default(), FlowCfg::flow(2), FlowCfg::flow(4)] {
+                for flow in [
+                    FlowCfg::default(),
+                    FlowCfg::flow(2),
+                    FlowCfg::flow(4),
+                    FlowCfg::sliding(2),
+                    FlowCfg::sliding(4),
+                ] {
                     let got = run(policy, deps, flow);
                     assert_eq!(
                         got.0, want.0,
@@ -1119,6 +1126,59 @@ fn flow_future_forced_against_in_flight_epoch_settles() {
     let now = ctx.backend.gather(ctx.reg.layout(x.base)).expect("data");
     let want_now: Vec<f32> = data.iter().map(|v| v * 2.0).collect();
     assert_eq!(now, want_now, "the overwriting epoch also executed");
+}
+
+/// Regression (PR 5): submitting into a *quiescent-but-unfinished*
+/// sliding session — the previous epoch's events drained or still
+/// outstanding, every rank idle — must wake the live event loop rather
+/// than stranding the new epoch (which would surface as a deadlock at
+/// the forced read). The numerics must match the Batch reference bit
+/// for bit.
+#[test]
+fn sliding_inject_wakes_quiescent_session() {
+    use distnumpy::flow::FlowCfg;
+
+    let p = 2u32;
+    let rows = 24u64;
+    let run = |flow: FlowCfg| -> (f64, Vec<f32>) {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.flow = flow;
+        let mut ctx = Context::new(
+            cfg,
+            Policy::LatencyHiding,
+            Box::new(NativeBackend::new(ClusterStore::new(p))),
+        );
+        let mut rng = Rng::new(0x51D);
+        let data = rng.fill_f32(rows as usize, -1.0, 1.0);
+        let x = ctx.array(&[rows], 3, &data);
+        // Epoch 1: a stencil with real transfers; submitted alone, the
+        // sliding session quiesces with the epoch's transfer tail the
+        // only thing in flight.
+        ctx.ufunc(
+            Kernel::Add,
+            &x.slice(&[(1, rows - 1)]),
+            &[&x.slice(&[(2, rows)]), &x.slice(&[(0, rows - 2)])],
+        );
+        ctx.submit();
+        // Epoch 2 splices into that quiescent session...
+        ctx.ufunc(Kernel::Scale(2.0), &x, &[&x]);
+        ctx.submit();
+        // ...and epoch 3 (the reduce) rides the forced read.
+        let s = ctx
+            .sum(&x)
+            .expect("a quiescent sliding session must wake, not strand epochs");
+        let grid = ctx
+            .backend
+            .gather(ctx.reg.layout(x.base))
+            .expect("data backend");
+        (s, grid)
+    };
+    let (batch_sum, batch_grid) = run(FlowCfg::default());
+    for window in [1usize, 2, 8] {
+        let (s, grid) = run(FlowCfg::sliding(window));
+        assert_eq!(s, batch_sum, "w={window}: scalars diverge");
+        assert_eq!(grid, batch_grid, "w={window}: grids diverge");
+    }
 }
 
 // ---------------------------------------------------------------------
