@@ -121,6 +121,51 @@ fn main() {
         );
     }
 
+    // -- tracing: the disabled sink must be free --------------------------
+    {
+        let ops = stencil_batch(16, 4096);
+        let off_cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        let mut on_cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        on_cfg.trace.enabled = true;
+        let off = bench.run(
+            &format!("trace off: latency-hiding DES ({} ops, P=16)", ops.len()),
+            || {
+                run_latency_hiding(&ops, &off_cfg, &mut SimBackend)
+                    .unwrap()
+                    .makespan
+            },
+        );
+        let on = bench.run(
+            &format!("trace on:  latency-hiding DES ({} ops, P=16)", ops.len()),
+            || {
+                run_latency_hiding(&ops, &on_cfg, &mut SimBackend)
+                    .unwrap()
+                    .makespan
+            },
+        );
+        let off_mk = run_latency_hiding(&ops, &off_cfg, &mut SimBackend)
+            .unwrap()
+            .makespan;
+        let on_mk = run_latency_hiding(&ops, &on_cfg, &mut SimBackend)
+            .unwrap()
+            .makespan;
+        assert_eq!(
+            off_mk.to_bits(),
+            on_mk.to_bits(),
+            "tracing must not perturb the simulated timeline"
+        );
+        println!(
+            "         -> enabled/disabled median ratio {:.3}x\n",
+            on.median / off.median.max(1e-12)
+        );
+        assert!(
+            off.median <= on.median * 1.10,
+            "disabled sink must add no measurable overhead: off {:.3e}s vs on {:.3e}s",
+            off.median,
+            on.median
+        );
+    }
+
     // -- network post throughput -----------------------------------------
     {
         let spec = MachineSpec::paper();

@@ -101,6 +101,11 @@ USAGE:
                        # (default 2), sliding = stream epochs into the
                        # live scheduler session, auto = sliding with an
                        # adaptively-steered window
+                   [--trace FILE]
+                       # write a Chrome-trace-event / Perfetto timeline
+                       # (open at https://ui.perfetto.dev); also folds a
+                       # critical-path report + per-epoch series into
+                       # --json output (bare --trace writes trace.json)
                    [--json]
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
@@ -190,9 +195,30 @@ fn run(cli: &Cli) -> Result<String, String> {
                     crate::flow::FlowCfg::flow(window)
                 };
             }
+            // `--trace FILE` enables the event sink; bare `--trace`
+            // (parsed as "true") defaults to trace.json.
+            let trace_path = cli.flag("trace").map(|v| {
+                if v == "true" {
+                    "trace.json".to_string()
+                } else {
+                    v.to_string()
+                }
+            });
+            cfg.trace.enabled = trace_path.is_some();
             let flow_cfg = cfg.flow;
             let flush_threshold = cfg.flush_threshold;
-            let (report, baseline) = harness::run_once_full(app, policy, &params, cfg);
+            let (report, baseline, sink) =
+                harness::run_once_traced(app, policy, &params, cfg);
+            let mut trace_extras: Option<(crate::trace::critical::CriticalPath, Json)> = None;
+            if let Some(path) = &trace_path {
+                let timeline = crate::trace::export::perfetto(&sink, p as usize);
+                std::fs::write(path, timeline.render())
+                    .map_err(|e| format!("cannot write trace '{path}': {e}"))?;
+                trace_extras = Some((
+                    crate::trace::critical::critical_path(&sink, p as usize, report.makespan),
+                    crate::trace::critical::epoch_series(&sink, p as usize),
+                ));
+            }
             if cli.flag("json").is_some() {
                 let mut o = report.to_json();
                 o.push("baseline", baseline.into());
@@ -211,16 +237,36 @@ fn run(cli: &Cli) -> Result<String, String> {
                         o.push("flow_window", "auto".into());
                     }
                 }
+                if let Some((cp, series)) = trace_extras {
+                    o.push("critical_path", cp.to_json());
+                    o.push("epoch_series", series);
+                    o.push("trace_events", sink.len().into());
+                    o.push("trace_dropped", sink.dropped().into());
+                }
                 Ok(o.render())
             } else {
-                Ok(format!(
+                let mut out = format!(
                     "{} on {p} ranks ({policy:?}): makespan {:.4}s  speedup {:.2}  wait {:.1}%  util {:.2}",
                     app.name(),
                     report.makespan,
                     baseline / report.makespan.max(1e-12),
                     report.wait_pct(),
                     report.utilization()
-                ))
+                );
+                if let (Some((cp, _)), Some(path)) = (trace_extras, &trace_path) {
+                    let pct = |x: f64| 100.0 * x / cp.makespan.max(1e-12);
+                    out.push_str(&format!(
+                        "\ntrace: {path} ({} events, {} dropped) — open at https://ui.perfetto.dev\
+                         \ncritical path: compute {:.1}%  comm {:.1}%  wait {:.1}%  overhead {:.1}%",
+                        sink.len(),
+                        sink.dropped(),
+                        pct(cp.compute),
+                        pct(cp.comm),
+                        pct(cp.wait),
+                        pct(cp.overhead),
+                    ));
+                }
+                Ok(out)
             }
         }
         "sweep" => {

@@ -249,7 +249,9 @@ impl FlowEngine {
         let (start, done) = self.recorder.record(gate, cost);
         state.overhead += cost;
         state.overhead_streamed += cost;
-        state.flow_log.submitted(start, done, ops.len())
+        let idx = state.flow_log.submitted(start, done, ops.len());
+        state.trace.admit(idx as u64, start, done, ops.len() as u64);
+        idx
     }
 
     /// Sliding: make sure the epoch the window gate consults has its
@@ -282,6 +284,9 @@ impl FlowEngine {
                 true
             } else {
                 state.flow_log.retire_from(idx, &state.retire[lo..hi]);
+                state
+                    .trace
+                    .epoch_retired(idx as u64, state.flow_log.epochs[idx].retired);
                 false
             }
         });
@@ -311,6 +316,11 @@ impl FlowEngine {
                 .flow_log
                 .window_trace
                 .push((state.flow_log.epochs.len() as u64, next as u64));
+            state.trace.window(
+                state.flow_log.epochs.len() as u64,
+                next as u64,
+                state.flow_log.recorder_clock(),
+            );
         }
     }
 
@@ -340,6 +350,9 @@ impl FlowEngine {
         // window gate of future submits consults them.
         for &(log_idx, lo, hi) in &wave.epochs {
             state.flow_log.retire_from(log_idx, &state.retire[lo..hi]);
+            state
+                .trace
+                .epoch_retired(log_idx as u64, state.flow_log.epochs[log_idx].retired);
         }
         self.lift_clocks(state);
         Ok(())
@@ -404,10 +417,13 @@ fn range_unretired(state: &ExecState, lo: usize, hi: usize) -> bool {
 /// pathological stream slipped past the gate anyway, the live run
 /// still fails loudly and poisons the context — never silently.
 fn naive_wave_admissible(ops: Vec<OpNode>, cfg: &SchedCfg) -> bool {
-    let mut scratch = ExecState::new(cfg);
+    // Dry runs never trace: the scratch sink would only burn memory.
+    let mut cfg = cfg.clone();
+    cfg.trace.enabled = false;
+    let mut scratch = ExecState::new(&cfg);
     let mut sim = crate::exec::SimBackend;
-    let mut session = SchedSession::new(Policy::Naive, cfg, &mut scratch);
-    match session.inject(ops, None, cfg, &mut sim, &mut scratch) {
+    let mut session = SchedSession::new(Policy::Naive, &cfg, &mut scratch);
+    match session.inject(ops, None, &cfg, &mut sim, &mut scratch) {
         Ok(()) => session.drain(&mut sim, &mut scratch).is_ok(),
         Err(_) => false,
     }

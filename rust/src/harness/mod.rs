@@ -143,11 +143,25 @@ pub fn run_once_full(
     params: &AppParams,
     cfg: SchedCfg,
 ) -> (RunReport, VTime) {
+    let (report, baseline, _) = run_once_traced(app, policy, params, cfg);
+    (report, baseline)
+}
+
+/// [`run_once_full`] that also harvests the event-sourced trace
+/// ([`crate::trace`]) — an empty sink unless `cfg.trace` enabled it.
+/// The `--trace` CLI path uses this to feed the Perfetto exporter and
+/// the critical-path analyzer.
+pub fn run_once_traced(
+    app: AppId,
+    policy: Policy,
+    params: &AppParams,
+    cfg: SchedCfg,
+) -> (RunReport, VTime, crate::trace::TraceSink) {
     let mut ctx = Context::sim(cfg, policy);
     record(app, &mut ctx, params);
     let baseline = ctx.baseline;
-    let report = ctx.finish().expect("benchmark must complete");
-    (report, baseline)
+    let (report, sink) = ctx.finish_traced().expect("benchmark must complete");
+    (report, baseline, sink)
 }
 
 /// Produce one speedup figure (Figs. 11–18).

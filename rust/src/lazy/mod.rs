@@ -564,13 +564,21 @@ impl Context {
 
     /// Finish the program: final flush, return the accumulated report of
     /// the whole continuous timeline (makespan = latest rank clock).
-    pub fn finish(mut self) -> Result<RunReport, SchedError> {
+    pub fn finish(self) -> Result<RunReport, SchedError> {
+        self.finish_traced().map(|(rep, _)| rep)
+    }
+
+    /// [`Context::finish`] that additionally harvests the event-sourced
+    /// trace recorded on the execution state (an empty no-op sink unless
+    /// `SchedCfg::trace` enabled it — see [`crate::trace`]).
+    pub fn finish_traced(mut self) -> Result<(RunReport, crate::trace::TraceSink), SchedError> {
         self.flush();
         match self.error {
             Some(e) => Err(e),
             None => {
                 self.sync_report();
-                Ok(self.report)
+                let sink = std::mem::take(&mut self.state.trace);
+                Ok((self.report, sink))
             }
         }
     }

@@ -24,9 +24,12 @@
 //!   overlaps continued recording — and, under sliding admission,
 //!   splice straight into the *live* resumable scheduler sessions of
 //!   [`sched`] with no wave boundary at all; layered between
-//!   [`lazy`]'s triggers and [`sched`]'s session engines) — executing
-//!   over a discrete-event simulated cluster ([`cluster`], [`net`]) or
-//!   with real numerics ([`exec`]).
+//!   [`lazy`]'s triggers and [`sched`]'s session engines), and the
+//!   event-sourced tracing layer [`trace`] (per-op timelines, wait
+//!   attribution, Perfetto export, critical-path analysis; threaded
+//!   through every session engine via the sink on
+//!   [`sched::ExecState`]) — executing over a discrete-event simulated
+//!   cluster ([`cluster`], [`net`]) or with real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call
@@ -56,6 +59,7 @@ pub mod runtime;
 pub mod sched;
 pub mod summa;
 pub mod sync;
+pub mod trace;
 pub mod types;
 pub mod ufunc;
 pub mod util;

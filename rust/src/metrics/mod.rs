@@ -121,6 +121,19 @@ impl RunReport {
             "absorb: rank-count mismatch"
         );
         self.makespan += other.makespan;
+        // `admission_latency` is a *mean* (per streamed epoch); combine
+        // as an op-weighted mean of the two runs (per-mode epoch counts
+        // are not carried here, and op counts track how much work each
+        // run's admission latency governed). Two zero-op reports keep
+        // the larger value rather than dividing by zero.
+        let self_ops = self.ops_executed as f64;
+        let other_ops = other.ops_executed as f64;
+        self.admission_latency = if self_ops + other_ops > 0.0 {
+            (self.admission_latency * self_ops + other.admission_latency * other_ops)
+                / (self_ops + other_ops)
+        } else {
+            self.admission_latency.max(other.admission_latency)
+        };
         for (a, b) in self.wait.iter_mut().zip(&other.wait) {
             *a += b;
         }
@@ -150,7 +163,6 @@ impl RunReport {
         self.max_in_flight = self.max_in_flight.max(other.max_in_flight);
         self.flow_pending += other.flow_pending;
         self.recorder_clock = self.recorder_clock.max(other.recorder_clock);
-        self.admission_latency = self.admission_latency.max(other.admission_latency);
         self.flow_window_final = self.flow_window_final.max(other.flow_window_final);
         self.window_decisions += other.window_decisions;
     }
@@ -283,6 +295,29 @@ mod tests {
         assert!(s.contains("recorder_clock"));
         assert!(s.contains("admission_latency"));
         assert!(s.contains("flow_window_final"));
+        assert!(s.contains("window_decisions"));
+    }
+
+    #[test]
+    fn absorb_admission_latency_op_weighted_mean() {
+        let mut a = RunReport::new(1);
+        a.ops_executed = 3;
+        a.admission_latency = 2.0;
+        let mut b = RunReport::new(1);
+        b.ops_executed = 1;
+        b.admission_latency = 6.0;
+        a.absorb(&b);
+        // (2.0·3 + 6.0·1) / 4 — a mean, not a max.
+        assert!((a.admission_latency - 3.0).abs() < 1e-12);
+
+        // Two zero-op reports: keep the larger value, never divide by 0.
+        let mut c = RunReport::new(1);
+        c.admission_latency = 1.5;
+        let mut d = RunReport::new(1);
+        d.admission_latency = 0.5;
+        c.absorb(&d);
+        assert!((c.admission_latency - 1.5).abs() < 1e-12);
+        assert!(c.admission_latency.is_finite());
     }
 
     #[test]

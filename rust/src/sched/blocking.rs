@@ -35,6 +35,7 @@ use std::collections::BinaryHeap;
 use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
+use crate::trace::{OpKind, WaitCause};
 use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
@@ -161,7 +162,11 @@ impl BlockingSession {
         let op = &ops[i];
         match &op.payload {
             OpPayload::Compute(task) => {
-                st.gate_admission(rank, op.id);
+                let t0 = st.gate_admission(rank, op.id);
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op.id, rank, OpKind::Compute, ep, t0);
+                }
                 backend.exec_compute(rank, task);
                 st.busy[r] += self.costs[i];
                 st.clock[r] += self.costs[i];
@@ -173,6 +178,11 @@ impl BlockingSession {
                 peer, tag, bytes, ..
             } => {
                 let t0 = st.gate_admission(rank, op.id);
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op.id, rank, OpKind::Send, ep, t0);
+                    st.trace.msg_post(*tag, rank, *peer, *bytes, t0);
+                }
                 let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Data leaves the sender *now* (eager injection): the
                 // payload must be captured before the sender's later
@@ -185,17 +195,18 @@ impl BlockingSession {
                     info.recv_op
                 };
                 let done = res.send_done.unwrap();
-                st.wait[r] += done - t0;
+                st.charge_wait(r, t0, done, WaitCause::Transfer { peer: *peer });
                 st.clock[r] = done;
                 st.note_retire(op, done, backend);
                 self.ptr[r] += 1;
                 self.executed += 1;
                 if let Some(rd) = res.recv_done {
+                    st.trace.msg_deliver(*tag, rank, *peer, *bytes, rd);
                     // The matching recv was already blocked: wake it.
                     if let Some((peer_rank, parked_at)) = self.parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
-                        st.wait[pr] += resume - parked_at;
+                        st.charge_wait(pr, parked_at, resume, WaitCause::Transfer { peer: rank });
                         st.clock[pr] = resume;
                         st.note_retire(&ops[recv_op.idx()], resume, backend);
                         self.ptr[pr] += 1;
@@ -210,12 +221,17 @@ impl BlockingSession {
                     }
                 }
             }
-            OpPayload::Recv { tag, .. } => {
+            OpPayload::Recv { peer, tag, bytes } => {
                 let t0 = st.gate_admission(rank, op.id);
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op.id, rank, OpKind::Recv, ep, t0);
+                }
                 if st.net.send_posted(*tag) {
                     let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();
-                    st.wait[r] += rd - t0;
+                    st.trace.msg_deliver(*tag, *peer, rank, *bytes, rd);
+                    st.charge_wait(r, t0, rd, WaitCause::Transfer { peer: *peer });
                     st.clock[r] = rd;
                     st.note_retire(op, rd, backend);
                     self.ptr[r] += 1;

@@ -34,6 +34,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
+use crate::trace::{OpKind, WaitCause};
 use crate::types::{OpId, Rank, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 
@@ -70,6 +71,11 @@ pub(crate) struct LhSession {
     heap: BinaryHeap<TEvent<Ev>>,
     seq: u64,
     pub(crate) completed: u64,
+    /// Trace attribution for the *next* idle-wait charge: what the event
+    /// loop is currently delivering when it wakes an idle rank — a local
+    /// dependency (compute completion / fresh inject) or a transfer
+    /// completion from a peer. Only read when the sink is enabled.
+    wake: WaitCause,
 }
 
 impl LhSession {
@@ -88,6 +94,7 @@ impl LhSession {
             heap: BinaryHeap::new(),
             seq: 0,
             completed: 0,
+            wake: WaitCause::Dependency,
         }
     }
 
@@ -121,6 +128,7 @@ impl LhSession {
         st: &mut ExecState,
     ) {
         let new = &ops[lo..];
+        self.wake = WaitCause::Dependency; // idle ranks wake on the inject
         st.deps.insert_all(new);
         let initial = st.deps.take_ready();
         // Every process records + inserts every operation (global
@@ -226,6 +234,11 @@ impl LhSession {
             OpPayload::Send {
                 peer, tag, bytes, ..
             } => {
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op_id, op.rank, OpKind::Send, ep, now);
+                    st.trace.msg_post(*tag, op.rank, *peer, *bytes, now);
+                }
                 let res = st.net.post_send(now, op.rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time: once the send
                 // completes, the dependency system allows the sender's
@@ -243,6 +256,7 @@ impl LhSession {
                     },
                 );
                 if let Some(rd) = res.recv_done {
+                    st.trace.msg_deliver(*tag, info.from, info.to, *bytes, rd);
                     self.push_ev(
                         rd,
                         Ev::RecvDone {
@@ -252,9 +266,14 @@ impl LhSession {
                     );
                 }
             }
-            OpPayload::Recv { tag, .. } => {
+            OpPayload::Recv { peer, tag, bytes } => {
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op_id, op.rank, OpKind::Recv, ep, now);
+                }
                 let res = st.net.post_recv(now, op.rank, *tag);
                 if let Some(rd) = res.recv_done {
+                    st.trace.msg_deliver(*tag, *peer, op.rank, *bytes, rd);
                     self.push_ev(
                         rd,
                         Ev::RecvDone {
@@ -304,7 +323,7 @@ impl LhSession {
         }
         let now = st.clock[r].max(t);
         if let Some(t0) = self.idle_since[r].take() {
-            st.wait[r] += now - t0;
+            st.charge_wait(r, t0, now, self.wake);
         }
         st.clock[r] = now;
 
@@ -321,6 +340,10 @@ impl LhSession {
         if let Some(op) = self.pick_compute(ops, st, r) {
             self.state[r] = State::Busy;
             let now = st.gate_admission(rank, op);
+            if st.trace.on() {
+                let ep = st.cur_epoch();
+                st.trace.op_start(op, rank, OpKind::Compute, ep, now);
+            }
             let blk = super::primary_block(&ops[op.idx()]);
             let hot = blk.is_some() && blk == st.last_block[r];
             st.last_block[r] = blk.or(st.last_block[r]);
@@ -348,6 +371,22 @@ impl LhSession {
         t: VTime,
         ev: Ev,
     ) {
+        if st.trace.on() {
+            // Attribute any idle wait the delivery ends: a transfer
+            // completion unblocks on the wire, a compute completion
+            // unblocks a local dependency.
+            self.wake = match ev {
+                Ev::ComputeDone { .. } => WaitCause::Dependency,
+                Ev::SendDone { op, .. } | Ev::RecvDone { op, .. } => {
+                    match ops[op.idx()].payload {
+                        OpPayload::Send { peer, .. } | OpPayload::Recv { peer, .. } => {
+                            WaitCause::Transfer { peer }
+                        }
+                        OpPayload::Compute(_) => WaitCause::Dependency,
+                    }
+                }
+            };
+        }
         match ev {
             Ev::ComputeDone { rank, op } => {
                 let r = rank.idx();

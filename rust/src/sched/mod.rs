@@ -110,6 +110,9 @@ pub struct SchedCfg {
     /// Recorded-operation count that fires flush trigger 2
     /// ([`crate::lazy::Context`]; CLI `--flush-threshold`).
     pub flush_threshold: usize,
+    /// Event-sourced tracing ([`crate::trace`]; CLI `--trace`): disabled
+    /// by default — the sink on [`ExecState`] is then a no-op.
+    pub trace: crate::trace::TraceCfg,
 }
 
 impl SchedCfg {
@@ -125,6 +128,7 @@ impl SchedCfg {
             sync: SyncMode::Cone,
             flow: FlowCfg::default(),
             flush_threshold: DEFAULT_FLUSH_THRESHOLD,
+            trace: crate::trace::TraceCfg::default(),
         }
     }
 }
@@ -201,6 +205,9 @@ pub fn execute_epoch(
         // recording times are NaN (the overhead lands on the rank
         // clocks instead), retirement is attributed after the drain.
         let log_idx = state.flow_log.submitted(f64::NAN, f64::NAN, ops.len());
+        state
+            .trace
+            .admit(log_idx as u64, f64::NAN, f64::NAN, ops.len() as u64);
         // One epoch = one session run: inject everything, drain. The
         // same [`SchedSession`] API the flow engine streams through —
         // there is no separate batch code path.
@@ -208,6 +215,9 @@ pub fn execute_epoch(
         session.inject(ops, None, cfg, backend, state)?;
         session.drain(backend, state)?;
         state.flow_log.retire_from(log_idx, &state.retire);
+        state
+            .trace
+            .epoch_retired(log_idx as u64, state.flow_log.epochs[log_idx].retired);
         Ok(())
     };
     state.n_epochs += 1;

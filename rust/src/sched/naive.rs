@@ -27,6 +27,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
+use crate::trace::{OpKind, WaitCause};
 use crate::types::{Rank, Tag, VTime};
 use crate::ufunc::{OpNode, OpPayload};
 use crate::util::fxhash::FxHashMap;
@@ -123,7 +124,11 @@ impl NaiveSession {
         let mut done_ids = Vec::new();
         match &op.payload {
             OpPayload::Compute(task) => {
-                st.gate_admission(rank, op.id);
+                let t0 = st.gate_admission(rank, op.id);
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op.id, rank, OpKind::Compute, ep, t0);
+                }
                 backend.exec_compute(rank, task);
                 st.busy[r] += self.costs[i];
                 st.clock[r] += self.costs[i];
@@ -136,6 +141,11 @@ impl NaiveSession {
                 peer, tag, bytes, ..
             } => {
                 let t0 = st.gate_admission(rank, op.id);
+                if st.trace.on() {
+                    let ep = st.cur_epoch();
+                    st.trace.op_start(op.id, rank, OpKind::Send, ep, t0);
+                    st.trace.msg_post(*tag, rank, *peer, *bytes, t0);
+                }
                 let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
                 // Capture the payload at injection time (see lh.rs).
                 let recv_op = {
@@ -144,17 +154,18 @@ impl NaiveSession {
                     info.recv_op
                 };
                 let done = res.send_done.unwrap();
-                st.wait[r] += done - t0;
+                st.charge_wait(r, t0, done, WaitCause::Transfer { peer: *peer });
                 st.clock[r] = done;
                 st.note_retire(op, done, backend);
                 self.fifo[r].pop_front();
                 self.executed += 1;
                 done_ids.push(op.id);
                 if let Some(rd) = res.recv_done {
+                    st.trace.msg_deliver(*tag, rank, *peer, *bytes, rd);
                     if let Some((peer_rank, parked_at)) = self.parked.remove(tag) {
                         let pr = peer_rank.idx();
                         let resume = rd.max(parked_at);
-                        st.wait[pr] += resume - parked_at;
+                        st.charge_wait(pr, parked_at, resume, WaitCause::Transfer { peer: rank });
                         st.clock[pr] = resume;
                         st.note_retire(&ops[recv_op.idx()], resume, backend);
                         self.fifo[pr].pop_front(); // the blocked recv
@@ -165,12 +176,17 @@ impl NaiveSession {
                     }
                 }
             }
-            OpPayload::Recv { tag, .. } => {
+            OpPayload::Recv { peer, tag, bytes } => {
                 let t0 = st.gate_admission(rank, op.id);
                 if st.net.send_posted(*tag) {
                     let res = st.net.post_recv(t0, rank, *tag);
                     let rd = res.recv_done.unwrap();
-                    st.wait[r] += rd - t0;
+                    if st.trace.on() {
+                        let ep = st.cur_epoch();
+                        st.trace.op_start(op.id, rank, OpKind::Recv, ep, t0);
+                        st.trace.msg_deliver(*tag, *peer, rank, *bytes, rd);
+                    }
+                    st.charge_wait(r, t0, rd, WaitCause::Transfer { peer: *peer });
                     st.clock[r] = rd;
                     st.note_retire(op, rd, backend);
                     self.fifo[r].pop_front();
@@ -178,6 +194,10 @@ impl NaiveSession {
                     done_ids.push(op.id);
                 } else if !self.parked.contains_key(tag) {
                     // Blocking recv with no matching send posted: park.
+                    if st.trace.on() {
+                        let ep = st.cur_epoch();
+                        st.trace.op_start(op.id, rank, OpKind::Recv, ep, t0);
+                    }
                     st.net.post_recv(t0, rank, *tag);
                     self.parked.insert(*tag, (rank, t0));
                     return;

@@ -43,6 +43,7 @@ use crate::flow::AdmissionLog;
 use crate::metrics::RunReport;
 use crate::net::Network;
 use crate::sync::StageTable;
+use crate::trace::{self, TraceSink, WaitCause};
 use crate::types::{BaseId, OpId, Rank, VTime};
 use crate::ufunc::{Loc, OpNode};
 
@@ -105,6 +106,11 @@ pub struct ExecState {
     /// Reference-counted staging-buffer accounting (liveness, completion
     /// times, pins) — see [`crate::sync::stages`].
     pub stages: StageTable,
+    /// Event-sourced trace of the run (no-op sink unless
+    /// `SchedCfg::trace` enables it) — see [`crate::trace`]. Every wait
+    /// charge routes through [`ExecState::charge_wait`] so per-cause
+    /// event sums reconcile with the `wait` vector exactly.
+    pub trace: TraceSink,
     // -- accumulated counters (per-epoch deltas folded in by the
     // -- schedulers; byte/message totals live in `net`) --
     pub ops_executed: u64,
@@ -136,6 +142,7 @@ impl ExecState {
             overhead_streamed: 0.0,
             flow_log: AdmissionLog::default(),
             stages: StageTable::new(),
+            trace: TraceSink::new(cfg.trace),
             ops_executed: 0,
             n_compute: 0,
             n_comm: 0,
@@ -149,6 +156,31 @@ impl ExecState {
         self.clock.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Epoch tag stamped on trace events: the admission-log index of the
+    /// most recently admitted epoch (exact in batch mode; "latest
+    /// submitted" under pipelined admission, where execution of earlier
+    /// epochs deliberately overlaps later recording).
+    #[inline]
+    pub fn cur_epoch(&self) -> u64 {
+        (self.flow_log.epochs.len().max(1) - 1) as u64
+    }
+
+    /// Charge rank `r` as waiting over `[t0, t1)` for `cause`. The
+    /// arithmetic is exactly the historical `wait[r] += t1 - t0`, so
+    /// results are bit-identical with tracing on or off; when the sink
+    /// is enabled a [`crate::trace::TraceEvent::Wait`] records the
+    /// interval, which makes per-cause attribution sum to the per-rank
+    /// `wait` totals by construction. Does **not** move the clock — the
+    /// call sites own that.
+    #[inline]
+    pub fn charge_wait(&mut self, r: usize, t0: VTime, t1: VTime, cause: WaitCause) {
+        self.wait[r] += t1 - t0;
+        if self.trace.on() {
+            let ep = self.cur_epoch();
+            self.trace.wait(Rank(r as u32), cause, ep, t0, t1);
+        }
+    }
+
     /// Global barrier: every rank joins the maximum clock. The joined
     /// idle time is charged to per-rank wait *and* to `wait_at_barrier`
     /// so the cost of forcing a scalar is visible in the metrics.
@@ -156,9 +188,10 @@ impl ExecState {
     pub fn barrier(&mut self) -> VTime {
         let tmax = self.max_clock();
         for r in 0..self.clock.len() {
-            let d = tmax - self.clock[r];
+            let t0 = self.clock[r];
+            let d = tmax - t0;
             if d > 0.0 {
-                self.wait[r] += d;
+                self.charge_wait(r, t0, tmax, WaitCause::Barrier);
                 self.wait_at_barrier += d;
                 self.clock[r] = tmax;
             }
@@ -171,9 +204,18 @@ impl ExecState {
     /// `wait_at_cone`. A rank already past `t` is untouched (the value
     /// was waiting in its buffers). Returns the rank's clock after.
     pub fn join_at(&mut self, r: Rank, t: VTime) -> VTime {
-        let d = t - self.clock[r.idx()];
+        self.join_as(r, t, WaitCause::Cone)
+    }
+
+    /// [`ExecState::join_at`] with an explicit trace cause — the sync
+    /// engine distinguishes frontier joins ([`WaitCause::Cone`]) from
+    /// broadcast-arrival joins ([`WaitCause::Collective`]); both accrue
+    /// into `wait_at_cone` (one targeted-settle bucket in the report).
+    pub fn join_as(&mut self, r: Rank, t: VTime, cause: WaitCause) -> VTime {
+        let t0 = self.clock[r.idx()];
+        let d = t - t0;
         if d > 0.0 {
-            self.wait[r.idx()] += d;
+            self.charge_wait(r.idx(), t0, t, cause);
             self.wait_at_cone += d;
             self.clock[r.idx()] = t;
         }
@@ -201,9 +243,14 @@ impl ExecState {
     #[inline]
     pub fn gate_admission(&mut self, r: Rank, id: OpId) -> VTime {
         let gate = self.admit_time(id);
-        let d = gate - self.clock[r.idx()];
+        let t0 = self.clock[r.idx()];
+        let d = gate - t0;
         if d > 0.0 {
             self.wait_at_admission += d;
+            if self.trace.on() {
+                let ep = self.cur_epoch();
+                self.trace.wait(r, WaitCause::Admission, ep, t0, gate);
+            }
             self.clock[r.idx()] = gate;
         }
         self.clock[r.idx()]
@@ -252,12 +299,19 @@ impl ExecState {
         if let Some(slot) = self.retire.get_mut(op.id.idx()) {
             *slot = (op.rank, t);
         }
+        if self.trace.on() {
+            let (kind, bytes) = trace::op_kind_bytes(op);
+            let ep = self.cur_epoch();
+            self.trace.op_retire(op.id, op.rank, kind, bytes, ep, t);
+        }
         for a in &op.accesses {
             let Loc::Stage(tag) = a.loc else { continue };
             if a.write {
                 self.stages.materialized(op.rank, tag, t, self.run_id, op.id);
+                self.trace.stage_alloc(op.rank, tag, t);
             } else if self.stages.reader_retired(op.rank, tag) {
                 backend.drop_stage(op.rank, tag);
+                self.trace.stage_free(op.rank, tag, t);
             }
         }
     }

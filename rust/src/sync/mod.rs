@@ -190,7 +190,12 @@ pub fn broadcast_value(
         let tag = bld.fresh_tag();
         st.net.post_recv(t0, to, tag);
         let ps = st.net.post_send(t0, from, to, tag, b);
-        ps.recv_done.expect("both halves posted")
+        let rd = ps.recv_done.expect("both halves posted");
+        if st.trace.on() {
+            st.trace.msg_post(tag, from, to, b, t0);
+            st.trace.msg_deliver(tag, from, to, b, rd);
+        }
+        rd
     };
     match shape {
         BcastShape::Tree => {
@@ -268,10 +273,10 @@ pub fn settle_cone(
     // complete; the root holds the value at the frontier.
     for r in 0..p {
         if cone_ranks[r as usize] {
-            st.join_at(Rank(r), frontier);
+            st.join_as(Rank(r), frontier, crate::trace::WaitCause::Cone);
         }
     }
-    st.join_at(root, frontier);
+    st.join_as(root, frontier, crate::trace::WaitCause::Cone);
     if p == 1 {
         return frontier;
     }
@@ -281,7 +286,9 @@ pub fn settle_cone(
     let mut latest = frontier;
     for vid in 1..p {
         let r = rank_of(vid);
-        st.join_at(r, arrival[vid as usize]);
+        // Riding the value broadcast back out is a collective round,
+        // not a cone-frontier join — the trace distinguishes them.
+        st.join_as(r, arrival[vid as usize], crate::trace::WaitCause::Collective);
         latest = latest.max(arrival[vid as usize]);
     }
     latest

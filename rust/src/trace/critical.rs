@@ -1,0 +1,368 @@
+//! Critical-path analysis and per-epoch time-series over the event log.
+//!
+//! The critical path is recovered by walking *backwards* from the
+//! makespan through each rank's occupancy timeline (compute-op spans
+//! plus wait intervals — comm-op spans are excluded because under
+//! latency hiding they overlap compute on the same rank). At every step
+//! the walk clips the segment covering the current time, classifies the
+//! clipped span, and jumps to the stalling peer when the segment is a
+//! transfer wait; uncovered gaps are charged to runtime overhead. The
+//! clipped spans telescope, so compute + comm + wait + overhead covers
+//! the makespan exactly (to fp rounding) — the acceptance invariant.
+
+use super::{OpKind, TraceEvent, TraceSink, WaitCause};
+use crate::types::{Rank, VTime};
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Class {
+    Compute,
+    Comm,
+    Wait,
+    Overhead,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Seg {
+    t0: VTime,
+    t1: VTime,
+    class: Class,
+    /// Op id + kind when the segment is a compute-op span.
+    op: Option<(u32, OpKind)>,
+    /// Rank to jump to when the segment is a transfer wait.
+    jump: Option<Rank>,
+}
+
+/// One op's contribution to the critical path.
+#[derive(Clone, Debug)]
+pub struct TopOp {
+    pub op: u32,
+    pub kind: OpKind,
+    pub rank: Rank,
+    pub span: VTime,
+}
+
+/// Classified decomposition of the longest dependency chain.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalPath {
+    pub makespan: VTime,
+    pub compute: VTime,
+    pub comm: VTime,
+    pub wait: VTime,
+    pub overhead: VTime,
+    /// Segments visited by the backward walk.
+    pub steps: usize,
+    /// Top ops by critical-path contribution, largest first.
+    pub top_ops: Vec<TopOp>,
+}
+
+impl CriticalPath {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("makespan", Json::Num(self.makespan));
+        o.push("compute", Json::Num(self.compute));
+        o.push("comm", Json::Num(self.comm));
+        o.push("wait", Json::Num(self.wait));
+        o.push("overhead", Json::Num(self.overhead));
+        let pct = |x: VTime| {
+            if self.makespan > 0.0 {
+                Json::Num(100.0 * x / self.makespan)
+            } else {
+                Json::Num(0.0)
+            }
+        };
+        o.push("compute_pct", pct(self.compute));
+        o.push("comm_pct", pct(self.comm));
+        o.push("wait_pct", pct(self.wait));
+        o.push("overhead_pct", pct(self.overhead));
+        o.push("steps", Json::from(self.steps));
+        let tops = self
+            .top_ops
+            .iter()
+            .map(|t| {
+                let mut e = Json::obj();
+                e.push("op", Json::from(t.op as u64));
+                e.push("kind", t.kind.label().into());
+                e.push("rank", Json::from(t.rank.0 as u64));
+                e.push("span", Json::Num(t.span));
+                e
+            })
+            .collect();
+        o.push("top_ops", Json::Arr(tops));
+        o
+    }
+}
+
+fn classify_wait(cause: WaitCause) -> (Class, Option<Rank>) {
+    match cause {
+        // Unhidden communication latency — the paper's target quantity.
+        WaitCause::Transfer { peer } => (Class::Comm, Some(peer)),
+        WaitCause::Collective => (Class::Comm, None),
+        // Synchronization structure.
+        WaitCause::Barrier | WaitCause::Cone | WaitCause::Dependency => (Class::Wait, None),
+        // Frontend/runtime cost, not simulated-rank work.
+        WaitCause::Admission => (Class::Overhead, None),
+    }
+}
+
+/// Walk the retire log's longest dependency chain backwards from
+/// `makespan`, classifying its span. `nprocs` bounds the rank index
+/// space; events for ranks beyond it are ignored.
+pub fn critical_path(sink: &TraceSink, nprocs: usize, makespan: VTime) -> CriticalPath {
+    let mut segs: Vec<Vec<Seg>> = vec![Vec::new(); nprocs.max(1)];
+    let mut open: std::collections::HashMap<u32, VTime> = std::collections::HashMap::new();
+    let mut last_end: Vec<VTime> = vec![0.0; nprocs.max(1)];
+
+    for ev in sink.events() {
+        match *ev {
+            TraceEvent::OpStart { op, t, .. } => {
+                open.insert(op.0, t);
+            }
+            TraceEvent::OpRetire {
+                op, rank, kind, t, ..
+            } => {
+                let r = rank.0 as usize;
+                if r >= segs.len() || !t.is_finite() {
+                    continue;
+                }
+                last_end[r] = last_end[r].max(t);
+                if kind != OpKind::Compute {
+                    // Comm spans overlap compute under LH; transfer
+                    // stalls already appear as Transfer waits.
+                    open.remove(&op.0);
+                    continue;
+                }
+                let t0 = open.remove(&op.0).unwrap_or(t);
+                if t0.is_finite() {
+                    segs[r].push(Seg {
+                        t0,
+                        t1: t,
+                        class: Class::Compute,
+                        op: Some((op.0, kind)),
+                        jump: None,
+                    });
+                }
+            }
+            TraceEvent::Wait {
+                rank, cause, t0, t1, ..
+            } => {
+                let r = rank.0 as usize;
+                if r >= segs.len() || !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+                    continue;
+                }
+                last_end[r] = last_end[r].max(t1);
+                let (class, jump) = classify_wait(cause);
+                segs[r].push(Seg {
+                    t0,
+                    t1,
+                    class,
+                    op: None,
+                    jump,
+                });
+            }
+            _ => {}
+        }
+    }
+
+    let mut cp = CriticalPath {
+        makespan,
+        ..CriticalPath::default()
+    };
+    if !makespan.is_finite() || makespan <= 0.0 || segs.iter().all(|s| s.is_empty()) {
+        cp.overhead = makespan.max(0.0);
+        return cp;
+    }
+
+    // Start on the rank whose timeline ends last (it determines the
+    // makespan under a continuous per-rank clock).
+    let mut cur = last_end
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(r, _)| r)
+        .unwrap_or(0);
+
+    let eps = 1e-9 * makespan.max(1e-9);
+    let mut tc = makespan;
+    let mut ops: std::collections::HashMap<u32, TopOp> = std::collections::HashMap::new();
+    let total_segs: usize = segs.iter().map(Vec::len).sum();
+    let max_steps = 4 * total_segs + 1024;
+
+    while tc > eps && cp.steps < max_steps {
+        cp.steps += 1;
+        // Innermost segment on `cur` covering (or touching) tc.
+        let covering = segs[cur]
+            .iter()
+            .filter(|s| s.t0 < tc - eps && s.t1 >= tc - eps)
+            .max_by(|a, b| a.t0.total_cmp(&b.t0))
+            .copied();
+        match covering {
+            Some(seg) => {
+                let lo = seg.t0.max(0.0);
+                let span = tc - lo;
+                match seg.class {
+                    Class::Compute => cp.compute += span,
+                    Class::Comm => cp.comm += span,
+                    Class::Wait => cp.wait += span,
+                    Class::Overhead => cp.overhead += span,
+                }
+                if let Some((op, kind)) = seg.op {
+                    let e = ops.entry(op).or_insert(TopOp {
+                        op,
+                        kind,
+                        rank: Rank(cur as u32),
+                        span: 0.0,
+                    });
+                    e.span += span;
+                }
+                if let Some(peer) = seg.jump {
+                    if (peer.0 as usize) < segs.len() {
+                        cur = peer.0 as usize;
+                    }
+                }
+                tc = lo;
+            }
+            None => {
+                // Gap on this rank's timeline: runtime/scheduler
+                // overhead back to the latest earlier segment end.
+                let te = segs[cur]
+                    .iter()
+                    .map(|s| s.t1)
+                    .filter(|&t1| t1 <= tc - eps)
+                    .fold(0.0_f64, f64::max);
+                cp.overhead += tc - te;
+                tc = te;
+            }
+        }
+    }
+    if tc > 0.0 {
+        // Step cap hit (degenerate fp ordering): charge the remainder.
+        cp.overhead += tc;
+    }
+
+    let mut tops: Vec<TopOp> = ops.into_values().collect();
+    tops.sort_by(|a, b| b.span.total_cmp(&a.span));
+    tops.truncate(10);
+    cp.top_ops = tops;
+    cp
+}
+
+/// Per-epoch time-series: one entry per admitted epoch, keyed by
+/// admission-log index. `wait_pct` is the share of the epoch's execution
+/// span its ranks spent stalled; `overlap_pct` is how much of the
+/// epoch's recording cost was hidden behind execution (100 = fully
+/// overlapped, only meaningful under streaming admission); `in_flight`
+/// is the admission pipeline depth when the epoch entered.
+pub fn epoch_series(sink: &TraceSink, nprocs: usize) -> Json {
+    #[derive(Clone, Default)]
+    struct Acc {
+        n_ops: u64,
+        record_start: VTime,
+        record_done: VTime,
+        retired: VTime,
+        in_flight: i64,
+        wait: VTime,
+        admission_wait: VTime,
+        first_start: VTime,
+        last_retire: VTime,
+        seen: bool,
+    }
+    fn at(accs: &mut Vec<Acc>, e: u64) -> &mut Acc {
+        let i = e as usize;
+        if i >= accs.len() {
+            accs.resize(i + 1, Acc::default());
+        }
+        &mut accs[i]
+    }
+    let mut accs: Vec<Acc> = Vec::new();
+    let mut depth: i64 = 0;
+
+    for ev in sink.events() {
+        match *ev {
+            TraceEvent::Admit {
+                epoch,
+                start,
+                done,
+                n_ops,
+            } => {
+                depth += 1;
+                let a = at(&mut accs, epoch);
+                a.seen = true;
+                a.n_ops = n_ops;
+                a.record_start = start;
+                a.record_done = done;
+                a.in_flight = depth;
+            }
+            TraceEvent::EpochRetired { epoch, t } => {
+                depth -= 1;
+                let a = at(&mut accs, epoch);
+                a.retired = t;
+            }
+            TraceEvent::Wait {
+                epoch,
+                cause,
+                t0,
+                t1,
+                ..
+            } => {
+                if t0.is_finite() && t1 > t0 {
+                    let a = at(&mut accs, epoch);
+                    if cause == WaitCause::Admission {
+                        a.admission_wait += t1 - t0;
+                    } else {
+                        a.wait += t1 - t0;
+                    }
+                }
+            }
+            TraceEvent::OpStart { epoch, t, .. } => {
+                if t.is_finite() {
+                    let a = at(&mut accs, epoch);
+                    a.first_start = if a.first_start == 0.0 && a.last_retire == 0.0 {
+                        t
+                    } else {
+                        a.first_start.min(t)
+                    };
+                }
+            }
+            TraceEvent::OpRetire { epoch, t, .. } => {
+                if t.is_finite() {
+                    let a = at(&mut accs, epoch);
+                    a.last_retire = a.last_retire.max(t);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let p = nprocs.max(1) as f64;
+    let series = accs
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.seen || a.last_retire > 0.0)
+        .map(|(e, a)| {
+            let span = (a.last_retire - a.first_start).max(0.0);
+            let wait_pct = if span > 0.0 {
+                100.0 * a.wait / (p * span)
+            } else {
+                0.0
+            };
+            let record_cost = a.record_done - a.record_start;
+            let overlap_pct = if record_cost.is_finite() && record_cost > 0.0 {
+                (100.0 * (1.0 - a.admission_wait / (p * record_cost))).clamp(0.0, 100.0)
+            } else {
+                f64::NAN // renders as null: no recorder clock (batch mode)
+            };
+            let mut o = Json::obj();
+            o.push("epoch", Json::from(e));
+            o.push("n_ops", Json::from(a.n_ops));
+            o.push("in_flight", Json::Int(a.in_flight));
+            o.push("wait", Json::Num(a.wait));
+            o.push("wait_pct", Json::Num(wait_pct));
+            o.push("overlap_pct", Json::Num(overlap_pct));
+            o.push("span", Json::Num(span));
+            o.push("retired", Json::Num(a.retired));
+            o
+        })
+        .collect();
+    Json::Arr(series)
+}

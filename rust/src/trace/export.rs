@@ -1,0 +1,233 @@
+//! Chrome-trace-event / Perfetto JSON exporter.
+//!
+//! Layout: one process group per rank (`pid = rank`), with a `cpu`
+//! thread (`tid 0`: compute slices and wait slices) and a `comm` thread
+//! (`tid 1`: send/recv op spans, which overlap compute under latency
+//! hiding and would render as nested slices on one track). Messages
+//! become flow arrows (`ph:"s"` → `ph:"f"`) keyed by envelope tag, from
+//! the sender's comm track to the receiver's. Runtime-global counters
+//! (`pid = nprocs`) track admission in-flight depth, the adaptive
+//! window, and live staging buffers.
+//!
+//! Timestamps are virtual seconds scaled to microseconds (the unit the
+//! trace-event format expects); non-finite times (batch-mode admission
+//! has no recorder clock) are skipped.
+
+use super::{OpKind, TraceEvent, TraceSink, WaitCause};
+use crate::types::VTime;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+const US: f64 = 1e6;
+
+fn slice(name: String, cat: &str, pid: i64, tid: i64, t0: VTime, t1: VTime) -> Json {
+    let mut o = Json::obj();
+    o.push("name", Json::Str(name));
+    o.push("cat", cat.into());
+    o.push("ph", "X".into());
+    o.push("pid", Json::Int(pid));
+    o.push("tid", Json::Int(tid));
+    o.push("ts", Json::Num(t0 * US));
+    o.push("dur", Json::Num((t1 - t0).max(0.0) * US));
+    o
+}
+
+fn meta(name: &str, value: &str, pid: i64, tid: Option<i64>) -> Json {
+    let mut o = Json::obj();
+    o.push("name", name.into());
+    o.push("ph", "M".into());
+    o.push("pid", Json::Int(pid));
+    if let Some(tid) = tid {
+        o.push("tid", Json::Int(tid));
+    }
+    let mut args = Json::obj();
+    args.push("name", value.into());
+    o.push("args", args);
+    o
+}
+
+fn counter(name: &str, key: &str, pid: i64, t: VTime, v: f64) -> Json {
+    let mut o = Json::obj();
+    o.push("name", name.into());
+    o.push("ph", "C".into());
+    o.push("pid", Json::Int(pid));
+    o.push("ts", Json::Num(t * US));
+    let mut args = Json::obj();
+    args.push(key, Json::Num(v));
+    o.push("args", args);
+    o
+}
+
+fn instant(name: String, cat: &str, pid: i64, tid: i64, t: VTime) -> Json {
+    let mut o = Json::obj();
+    o.push("name", Json::Str(name));
+    o.push("cat", cat.into());
+    o.push("ph", "i".into());
+    o.push("s", "t".into());
+    o.push("pid", Json::Int(pid));
+    o.push("tid", Json::Int(tid));
+    o.push("ts", Json::Num(t * US));
+    o
+}
+
+fn flow(ph: &str, id: u64, pid: i64, t: VTime) -> Json {
+    let mut o = Json::obj();
+    o.push("name", "msg".into());
+    o.push("cat", "msg".into());
+    o.push("ph", ph.into());
+    if ph == "f" {
+        // Bind the finish to the enclosing slice's end, so arrows land
+        // on the recv span even when delivery coincides with its edge.
+        o.push("bp", "e".into());
+    }
+    o.push("id", Json::Int(id as i64));
+    o.push("pid", Json::Int(pid));
+    o.push("tid", Json::Int(1));
+    o.push("ts", Json::Num(t * US));
+    o
+}
+
+/// Render the sink as a Chrome-trace-event JSON object
+/// (`{"traceEvents": [...]}`), loadable in Perfetto / `chrome://tracing`.
+pub fn perfetto(sink: &TraceSink, nprocs: usize) -> Json {
+    let mut evs: Vec<Json> = Vec::with_capacity(sink.len() + 3 * nprocs + 4);
+    let runtime_pid = nprocs as i64;
+
+    for r in 0..nprocs {
+        evs.push(meta("process_name", &format!("rank p{r}"), r as i64, None));
+        evs.push(meta("thread_name", "cpu", r as i64, Some(0)));
+        evs.push(meta("thread_name", "comm", r as i64, Some(1)));
+    }
+    evs.push(meta("process_name", "runtime", runtime_pid, None));
+
+    // Pair OpStart with the following OpRetire for the same op id (ids
+    // are unique within a session run; across runs the entry is consumed
+    // before the id recycles).
+    let mut open: HashMap<u32, VTime> = HashMap::new();
+    let mut in_flight: i64 = 0;
+    let mut live_stages: i64 = 0;
+
+    for ev in sink.events() {
+        match *ev {
+            TraceEvent::OpStart { op, t, .. } => {
+                open.insert(op.0, t);
+            }
+            TraceEvent::OpRetire {
+                op,
+                rank,
+                kind,
+                bytes,
+                epoch,
+                t,
+            } => {
+                let t0 = open.remove(&op.0).unwrap_or(t);
+                if !t0.is_finite() || !t.is_finite() {
+                    continue;
+                }
+                let tid = match kind {
+                    OpKind::Compute => 0,
+                    OpKind::Send | OpKind::Recv => 1,
+                };
+                let mut s = slice(
+                    format!("{} #{}", kind.label(), op.0),
+                    kind.label(),
+                    rank.0 as i64,
+                    tid,
+                    t0,
+                    t,
+                );
+                let mut args = Json::obj();
+                args.push("op", Json::from(op.0 as u64));
+                args.push("bytes", Json::from(bytes));
+                args.push("epoch", Json::from(epoch));
+                s.push("args", args);
+                evs.push(s);
+            }
+            TraceEvent::Wait {
+                rank,
+                cause,
+                epoch,
+                t0,
+                t1,
+            } => {
+                if !t0.is_finite() || !t1.is_finite() {
+                    continue;
+                }
+                let name = match cause {
+                    WaitCause::Transfer { peer } => format!("wait:transfer({peer})"),
+                    c => format!("wait:{}", c.label()),
+                };
+                let mut s = slice(name, "wait", rank.0 as i64, 0, t0, t1);
+                let mut args = Json::obj();
+                args.push("epoch", Json::from(epoch));
+                s.push("args", args);
+                evs.push(s);
+            }
+            TraceEvent::MsgPost { tag, from, t, .. } => {
+                if t.is_finite() {
+                    evs.push(flow("s", tag.0, from.0 as i64, t));
+                }
+            }
+            TraceEvent::MsgDeliver { tag, to, t, .. } => {
+                if t.is_finite() {
+                    evs.push(flow("f", tag.0, to.0 as i64, t));
+                }
+            }
+            TraceEvent::StageAlloc { rank, tag, t } => {
+                if t.is_finite() {
+                    evs.push(instant(format!("stage+ {}", tag.0), "stage", rank.0 as i64, 0, t));
+                    live_stages += 1;
+                    evs.push(counter("live_stages", "stages", runtime_pid, t, live_stages as f64));
+                }
+            }
+            TraceEvent::StageFree { rank, tag, t } => {
+                if t.is_finite() {
+                    evs.push(instant(format!("stage- {}", tag.0), "stage", rank.0 as i64, 0, t));
+                    live_stages -= 1;
+                    evs.push(counter("live_stages", "stages", runtime_pid, t, live_stages as f64));
+                }
+            }
+            TraceEvent::Window { window, t, .. } => {
+                if t.is_finite() {
+                    evs.push(counter("window", "ops", runtime_pid, t, window as f64));
+                }
+            }
+            TraceEvent::Admit { done, .. } => {
+                in_flight += 1;
+                if done.is_finite() {
+                    evs.push(counter("in_flight", "epochs", runtime_pid, done, in_flight as f64));
+                }
+            }
+            TraceEvent::EpochRetired { t, .. } => {
+                in_flight -= 1;
+                if t.is_finite() {
+                    evs.push(counter("in_flight", "epochs", runtime_pid, t, in_flight as f64));
+                }
+            }
+        }
+    }
+
+    // Ring-dropped starts leave dangling opens; surface them as
+    // zero-length markers rather than losing them silently.
+    let mut dangling: Vec<(u32, VTime)> = open.into_iter().collect();
+    dangling.sort_unstable();
+    for (op, t0) in dangling {
+        if t0.is_finite() {
+            evs.push(instant(
+                format!("unretired #{op}"),
+                "op",
+                runtime_pid,
+                0,
+                t0,
+            ));
+        }
+    }
+    let mut root = Json::obj();
+    root.push("traceEvents", Json::Arr(evs));
+    root.push("displayTimeUnit", "ms".into());
+    let mut about = Json::obj();
+    about.push("tool", "distnumpy --trace".into());
+    about.push("dropped_events", Json::from(sink.dropped()));
+    root.push("otherData", about);
+    root
+}

@@ -1,0 +1,454 @@
+//! Event-sourced tracing: per-op timelines, wait attribution, and
+//! critical-path analysis (DESIGN.md §9).
+//!
+//! The runtime's headline claim is an *attribution* claim — the share of
+//! execution time ranks spend waiting — but `metrics::RunReport` only
+//! carries aggregate scalars. This module records the underlying events:
+//! every op start/retire, message post/deliver, wait interval (tagged
+//! with its [`WaitCause`]), stage alloc/free, and adaptive-window
+//! decision, as they happen inside the session engines.
+//!
+//! Design constraints (ISSUE 6):
+//! * **zero-cost when disabled** — the sink defaults to disabled and
+//!   every `push` is an `#[inline]` early-return on a bool; engines guard
+//!   any non-trivial argument computation behind [`TraceSink::on`]. All
+//!   wait accounting goes through [`crate::sched::ExecState::charge_wait`]
+//!   so the arithmetic is bit-identical with tracing on or off.
+//! * **bounded when enabled** — a fixed-capacity ring that overwrites the
+//!   oldest events and counts what it dropped, so a long run can never
+//!   exhaust memory.
+//!
+//! Consumers: [`export::perfetto`] renders a Chrome-trace-event /
+//! Perfetto JSON timeline; [`critical::critical_path`] walks the longest
+//! dependency chain backwards from the makespan and classifies it into
+//! compute / comm / wait / overhead; [`critical::epoch_series`] folds a
+//! per-epoch time-series (wait %, overlap %, in-flight depth) for the
+//! run JSON.
+
+use crate::types::{OpId, Rank, Tag, VTime};
+use crate::ufunc::{OpNode, OpPayload};
+
+pub mod critical;
+pub mod export;
+
+/// Why a rank's virtual clock was advanced without doing useful work.
+///
+/// The taxonomy mirrors the accounting buckets on `RunReport`: every
+/// cause except [`WaitCause::Admission`] accrues into the per-rank
+/// `wait` vector (admission stalls are charged to the *frontend*
+/// recorder, not the simulated ranks — see DESIGN.md §7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WaitCause {
+    /// Blocked on a point-to-point transfer to/from `peer` (send
+    /// completion or receive arrival).
+    Transfer { peer: Rank },
+    /// Blocked on a collective round: joining the arrival frontier of a
+    /// value broadcast.
+    Collective,
+    /// Global barrier (`SyncMode::Barrier` or an explicit fence).
+    Barrier,
+    /// Dependency-cone settle: joining the completion frontier of the
+    /// producing cone on a targeted sync.
+    Cone,
+    /// Admission gate: an op stalled until its epoch finished recording.
+    /// Charged to `wait_at_admission`, **not** to per-rank `wait`.
+    Admission,
+    /// Idle in the event loop until a local compute completion (or a
+    /// fresh injection) made a successor runnable.
+    Dependency,
+}
+
+impl WaitCause {
+    /// Short stable label, used by the exporter and JSON reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            WaitCause::Transfer { .. } => "transfer",
+            WaitCause::Collective => "collective",
+            WaitCause::Barrier => "barrier",
+            WaitCause::Cone => "cone",
+            WaitCause::Admission => "admission",
+            WaitCause::Dependency => "dependency",
+        }
+    }
+}
+
+/// What kind of op a timeline slice represents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Compute,
+    Send,
+    Recv,
+}
+
+impl OpKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Compute => "compute",
+            OpKind::Send => "send",
+            OpKind::Recv => "recv",
+        }
+    }
+}
+
+/// Classify an op node and estimate the bytes it moves (transfer size
+/// for comm ops, output footprint for compute ops).
+pub fn op_kind_bytes(op: &OpNode) -> (OpKind, u64) {
+    match &op.payload {
+        OpPayload::Compute(t) => (OpKind::Compute, t.elems * 4),
+        OpPayload::Send { bytes, .. } => (OpKind::Send, *bytes),
+        OpPayload::Recv { bytes, .. } => (OpKind::Recv, *bytes),
+    }
+}
+
+/// One timestamped event. Times are virtual seconds ([`VTime`]); epochs
+/// are admission-log indices captured at emission time (exact in batch
+/// mode, "latest submitted" under pipelined admission).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// An op became runnable and started executing on `rank`.
+    OpStart {
+        op: OpId,
+        rank: Rank,
+        kind: OpKind,
+        epoch: u64,
+        t: VTime,
+    },
+    /// An op retired (central emission point: `ExecState::note_retire`).
+    OpRetire {
+        op: OpId,
+        rank: Rank,
+        kind: OpKind,
+        bytes: u64,
+        epoch: u64,
+        t: VTime,
+    },
+    /// A message envelope was posted to the network (`post_send`); one
+    /// event per `Network::post_send`, so counts reconcile with
+    /// `RunReport::n_messages` exactly.
+    MsgPost {
+        tag: Tag,
+        from: Rank,
+        to: Rank,
+        bytes: u64,
+        t: VTime,
+    },
+    /// The matching receive completed on the destination rank.
+    MsgDeliver {
+        tag: Tag,
+        from: Rank,
+        to: Rank,
+        bytes: u64,
+        t: VTime,
+    },
+    /// `rank` stalled over `[t0, t1)` for the given cause.
+    Wait {
+        rank: Rank,
+        cause: WaitCause,
+        epoch: u64,
+        t0: VTime,
+        t1: VTime,
+    },
+    /// A staging buffer was materialized on `rank`.
+    StageAlloc { rank: Rank, tag: Tag, t: VTime },
+    /// The last reader retired and the stage was reclaimed.
+    StageFree { rank: Rank, tag: Tag, t: VTime },
+    /// The adaptive controller steered the admission window.
+    Window { epoch: u64, window: u64, t: VTime },
+    /// An epoch finished recording and entered the admission log
+    /// (`start`/`done` are NaN in stop-the-world batch mode, which has
+    /// no recorder clock).
+    Admit {
+        epoch: u64,
+        start: VTime,
+        done: VTime,
+        n_ops: u64,
+    },
+    /// All ops of an epoch retired.
+    EpochRetired { epoch: u64, t: VTime },
+}
+
+impl TraceEvent {
+    /// Event timestamp (interval events report their start).
+    pub fn t(&self) -> VTime {
+        match *self {
+            TraceEvent::OpStart { t, .. }
+            | TraceEvent::OpRetire { t, .. }
+            | TraceEvent::MsgPost { t, .. }
+            | TraceEvent::MsgDeliver { t, .. }
+            | TraceEvent::StageAlloc { t, .. }
+            | TraceEvent::StageFree { t, .. }
+            | TraceEvent::Window { t, .. }
+            | TraceEvent::EpochRetired { t, .. } => t,
+            TraceEvent::Wait { t0, .. } => t0,
+            TraceEvent::Admit { done, .. } => done,
+        }
+    }
+}
+
+/// Tracing configuration, carried on `SchedCfg`. Defaults to disabled.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCfg {
+    pub enabled: bool,
+    /// Ring capacity in events; the sink overwrites the oldest events
+    /// beyond this and counts them in [`TraceSink::dropped`].
+    pub capacity: usize,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        TraceCfg {
+            enabled: false,
+            capacity: 1 << 20,
+        }
+    }
+}
+
+/// Bounded event log: a no-op when disabled, an overwrite-oldest ring
+/// when enabled. Recorded on `ExecState`, harvested by
+/// `Context::finish_traced`.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    enabled: bool,
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl TraceSink {
+    pub fn new(cfg: TraceCfg) -> TraceSink {
+        TraceSink {
+            enabled: cfg.enabled,
+            cap: cfg.capacity.max(1),
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Whether events are being recorded. Engines use this to guard any
+    /// argument computation that isn't free.
+    #[inline(always)]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of retained events.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            // Overwrite the oldest slot; `head` is the ring's oldest.
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    #[inline]
+    pub fn op_start(&mut self, op: OpId, rank: Rank, kind: OpKind, epoch: u64, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::OpStart {
+            op,
+            rank,
+            kind,
+            epoch,
+            t,
+        });
+    }
+
+    #[inline]
+    pub fn op_retire(
+        &mut self,
+        op: OpId,
+        rank: Rank,
+        kind: OpKind,
+        bytes: u64,
+        epoch: u64,
+        t: VTime,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::OpRetire {
+            op,
+            rank,
+            kind,
+            bytes,
+            epoch,
+            t,
+        });
+    }
+
+    #[inline]
+    pub fn msg_post(&mut self, tag: Tag, from: Rank, to: Rank, bytes: u64, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::MsgPost {
+            tag,
+            from,
+            to,
+            bytes,
+            t,
+        });
+    }
+
+    #[inline]
+    pub fn msg_deliver(&mut self, tag: Tag, from: Rank, to: Rank, bytes: u64, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::MsgDeliver {
+            tag,
+            from,
+            to,
+            bytes,
+            t,
+        });
+    }
+
+    #[inline]
+    pub fn wait(&mut self, rank: Rank, cause: WaitCause, epoch: u64, t0: VTime, t1: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Wait {
+            rank,
+            cause,
+            epoch,
+            t0,
+            t1,
+        });
+    }
+
+    #[inline]
+    pub fn stage_alloc(&mut self, rank: Rank, tag: Tag, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::StageAlloc { rank, tag, t });
+    }
+
+    #[inline]
+    pub fn stage_free(&mut self, rank: Rank, tag: Tag, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::StageFree { rank, tag, t });
+    }
+
+    #[inline]
+    pub fn window(&mut self, epoch: u64, window: u64, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Window { epoch, window, t });
+    }
+
+    #[inline]
+    pub fn admit(&mut self, epoch: u64, start: VTime, done: VTime, n_ops: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Admit {
+            epoch,
+            start,
+            done,
+            n_ops,
+        });
+    }
+
+    #[inline]
+    pub fn epoch_retired(&mut self, epoch: u64, t: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::EpochRetired { epoch, t });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent::EpochRetired {
+            epoch: i,
+            t: i as f64,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut s = TraceSink::default();
+        assert!(!s.on());
+        for i in 0..100 {
+            s.push(ev(i));
+        }
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut s = TraceSink::new(TraceCfg {
+            enabled: true,
+            capacity: 8,
+        });
+        for i in 0..20 {
+            s.push(ev(i));
+        }
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.dropped(), 12);
+        // Oldest-first iteration yields the 8 most recent events in order.
+        let epochs: Vec<u64> = s
+            .events()
+            .map(|e| match e {
+                TraceEvent::EpochRetired { epoch, .. } => *epoch,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(epochs, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn insertion_order_before_wrap() {
+        let mut s = TraceSink::new(TraceCfg {
+            enabled: true,
+            capacity: 64,
+        });
+        for i in 0..5 {
+            s.push(ev(i));
+        }
+        assert_eq!(s.dropped(), 0);
+        let ts: Vec<f64> = s.events().map(|e| e.t()).collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+}

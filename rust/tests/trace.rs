@@ -1,0 +1,293 @@
+//! Integration tests for the event-sourced tracing layer (ISSUE 6).
+//!
+//! The load-bearing claims, checked end-to-end through real app runs:
+//!
+//! * **Reconciliation** — the event log is not a parallel estimate but
+//!   the *same* accounting the aggregate [`RunReport`] scalars come
+//!   from: per-cause wait durations sum to the per-rank `wait` vector,
+//!   `OpRetire` counts match `ops_executed`, `MsgPost` counts match
+//!   `n_messages`, and the sync/admission cause buckets match their
+//!   dedicated report counters — across all three scheduling policies.
+//! * **Exporter validity** — the Perfetto timeline renders to JSON that
+//!   parses back (with the crate's own parser) into a non-empty
+//!   `traceEvents` array.
+//! * **Critical path** — the four classes cover the makespan exactly.
+//! * **Zero-cost disabled** — tracing off is bit-identical to tracing
+//!   on, and records nothing.
+
+use distnumpy::apps::{AppId, AppParams};
+use distnumpy::cluster::MachineSpec;
+use distnumpy::flow::FlowCfg;
+use distnumpy::harness::run_once_traced;
+use distnumpy::lazy::Context;
+use distnumpy::metrics::RunReport;
+use distnumpy::sched::{Policy, SchedCfg, SyncMode};
+use distnumpy::trace::{critical, export, TraceEvent, TraceSink, WaitCause};
+use distnumpy::util::json::Json;
+
+fn traced_cfg(p: u32) -> SchedCfg {
+    let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+    cfg.trace.enabled = true;
+    cfg
+}
+
+fn close(a: f64, b: f64, label: &str) {
+    let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+    assert!((a - b).abs() <= tol, "{label}: {a} vs {b}");
+}
+
+/// Fold the event log and check every count/duration invariant against
+/// the aggregate report.
+fn reconcile(rep: &RunReport, sink: &TraceSink, p: u32, label: &str) {
+    assert_eq!(sink.dropped(), 0, "{label}: tiny runs must not wrap the ring");
+    assert!(!sink.is_empty(), "{label}: a traced run must record events");
+
+    let mut wait = vec![0.0f64; p as usize];
+    let mut barrier = 0.0f64;
+    let mut cone_like = 0.0f64;
+    let mut admission = 0.0f64;
+    let mut retires = 0u64;
+    let mut posts = 0u64;
+    let mut delivers = 0u64;
+    let mut windows = 0u64;
+    for ev in sink.events() {
+        match *ev {
+            TraceEvent::Wait {
+                rank,
+                cause,
+                t0,
+                t1,
+                ..
+            } => {
+                let d = t1 - t0;
+                match cause {
+                    WaitCause::Admission => admission += d,
+                    WaitCause::Barrier => {
+                        barrier += d;
+                        wait[rank.idx()] += d;
+                    }
+                    WaitCause::Cone | WaitCause::Collective => {
+                        cone_like += d;
+                        wait[rank.idx()] += d;
+                    }
+                    _ => wait[rank.idx()] += d,
+                }
+            }
+            TraceEvent::OpRetire { .. } => retires += 1,
+            TraceEvent::MsgPost { .. } => posts += 1,
+            TraceEvent::MsgDeliver { .. } => delivers += 1,
+            TraceEvent::Window { .. } => windows += 1,
+            _ => {}
+        }
+    }
+
+    assert_eq!(retires, rep.ops_executed, "{label}: OpRetire vs ops_executed");
+    assert_eq!(posts, rep.n_messages, "{label}: MsgPost vs n_messages");
+    assert_eq!(delivers, posts, "{label}: every posted message delivers once");
+    assert_eq!(windows, rep.window_decisions, "{label}: Window vs window_decisions");
+    for (r, &w) in wait.iter().enumerate() {
+        close(w, rep.wait[r], &format!("{label}: wait attribution for rank {r}"));
+    }
+    close(barrier, rep.wait_at_barrier, &format!("{label}: barrier bucket"));
+    close(cone_like, rep.wait_at_cone, &format!("{label}: cone+collective bucket"));
+    close(admission, rep.wait_at_admission, &format!("{label}: admission bucket"));
+}
+
+/// The acceptance run: pipelined Jacobi stencil at P = 16 under
+/// latency hiding, plus the blocking scheduler on a smaller grid. Both
+/// event logs must reconcile exactly with their reports.
+#[test]
+fn wait_attribution_reconciles_for_lh_and_blocking() {
+    let params = AppParams {
+        scale: 0.25,
+        iters: 2,
+    };
+    let (rep, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, traced_cfg(16));
+    assert!(rep.n_messages > 0, "stencil at P=16 must communicate");
+    reconcile(&rep, &sink, 16, "lh/jacobi_stencil/p16");
+
+    let params = AppParams {
+        scale: 0.1,
+        iters: 2,
+    };
+    let (rep, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::Blocking, &params, traced_cfg(8));
+    assert!(rep.n_messages > 0, "stencil at P=8 must communicate");
+    reconcile(&rep, &sink, 8, "blocking/jacobi_stencil/p8");
+}
+
+/// The naive strawman deadlocks on multi-iteration stencils (Fig. 6),
+/// so it gets a program it completes: a comm-free elementwise add plus
+/// a forced reduction read (flat fan-in to the root, then a settle).
+#[test]
+fn wait_attribution_reconciles_for_naive() {
+    let mut ctx = Context::sim(traced_cfg(4), Policy::Naive);
+    let x = ctx.zeros(&[64], 4);
+    let y = ctx.zeros(&[64], 4);
+    ctx.add(&y, &x, &x);
+    ctx.sum(&x).expect("flat reduce completes under naive");
+    let (rep, sink) = ctx.finish_traced().expect("naive run completes");
+    assert!(rep.ops_executed > 0, "the program must execute");
+    reconcile(&rep, &sink, 4, "naive/add+sum/p4");
+}
+
+/// The sync-engine causes land in the right report buckets: under the
+/// global join, forced convergence reads charge [`WaitCause::Barrier`];
+/// under targeted settles they charge [`WaitCause::Cone`] /
+/// [`WaitCause::Collective`].
+#[test]
+fn sync_causes_fill_the_matching_buckets() {
+    let params = AppParams {
+        scale: 0.1,
+        iters: 3,
+    };
+    let mut cfg = traced_cfg(4);
+    cfg.sync = SyncMode::Barrier;
+    let (rep, _, sink) = run_once_traced(AppId::Jacobi, Policy::LatencyHiding, &params, cfg);
+    assert!(rep.wait_at_barrier > 0.0, "forced reads must hit the barrier");
+    reconcile(&rep, &sink, 4, "barrier/jacobi/p4");
+
+    let mut cfg = traced_cfg(4);
+    cfg.sync = SyncMode::Cone;
+    let (rep, _, sink) = run_once_traced(AppId::Jacobi, Policy::LatencyHiding, &params, cfg);
+    assert!(rep.wait_at_cone > 0.0, "forced reads must settle the cone");
+    reconcile(&rep, &sink, 4, "cone/jacobi/p4");
+}
+
+/// Streaming admission: `Admit` events appear, the admission-gate cause
+/// reconciles with `wait_at_admission`, adaptive-window decisions
+/// reconcile with `window_decisions`, and the per-epoch time-series has
+/// one well-formed entry per admitted epoch.
+#[test]
+fn sliding_admission_traces_and_epoch_series() {
+    let params = AppParams {
+        scale: 0.25,
+        iters: 3,
+    };
+    let mut cfg = traced_cfg(8);
+    cfg.flow = FlowCfg::sliding_auto();
+    cfg.flush_threshold = 32;
+    let (rep, _, sink) = run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, cfg);
+    reconcile(&rep, &sink, 8, "sliding/jacobi_stencil/p8");
+
+    let admits = sink
+        .events()
+        .filter(|e| matches!(e, TraceEvent::Admit { .. }))
+        .count();
+    assert!(admits >= 2, "threshold flushes must admit multiple epochs, got {admits}");
+
+    let series = critical::epoch_series(&sink, 8);
+    let rows = series.as_arr().expect("epoch series is an array");
+    assert!(!rows.is_empty(), "one row per admitted epoch");
+    for row in rows {
+        for key in ["epoch", "n_ops", "in_flight", "wait", "wait_pct", "span"] {
+            assert!(row.get(key).is_some(), "epoch-series row missing {key}");
+        }
+    }
+}
+
+/// The Perfetto exporter emits JSON that parses back (with the crate's
+/// own parser) into the Chrome-trace shape: a non-empty `traceEvents`
+/// array of objects with phase tags, including slices, metadata, and
+/// the flow arrows that tie sends to receives.
+#[test]
+fn perfetto_export_round_trips_as_json() {
+    let params = AppParams {
+        scale: 0.1,
+        iters: 2,
+    };
+    let (rep, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, traced_cfg(8));
+    assert!(rep.n_messages > 0);
+
+    let text = export::perfetto(&sink, 8).render();
+    let back = Json::parse(&text).expect("exporter must emit valid JSON");
+    let events = back
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let mut phases: Vec<&str> = Vec::new();
+    for e in events {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .expect("every trace event carries a phase");
+        if !phases.contains(&ph) {
+            phases.push(ph);
+        }
+    }
+    for need in ["X", "M", "s", "f"] {
+        assert!(phases.contains(&need), "missing phase {need} in {phases:?}");
+    }
+    assert!(
+        back.get("otherData").and_then(|o| o.get("dropped_events")).is_some(),
+        "drop counter must surface in the export"
+    );
+}
+
+/// Critical-path acceptance: the four classes cover 100% of the
+/// makespan (to fp rounding) and the top-op list is populated.
+#[test]
+fn critical_path_classes_cover_makespan() {
+    let params = AppParams {
+        scale: 0.25,
+        iters: 2,
+    };
+    let (rep, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, traced_cfg(16));
+    let cp = critical::critical_path(&sink, 16, rep.makespan);
+    assert!(cp.makespan > 0.0);
+    let covered = cp.compute + cp.comm + cp.wait + cp.overhead;
+    let tol = 1e-6 * cp.makespan;
+    assert!(
+        (covered - cp.makespan).abs() <= tol,
+        "classes must cover the makespan: {} + {} + {} + {} = {covered} vs {}",
+        cp.compute,
+        cp.comm,
+        cp.wait,
+        cp.overhead,
+        cp.makespan
+    );
+    assert!(cp.compute > 0.0, "a stencil's critical path crosses compute");
+    assert!(!cp.top_ops.is_empty(), "top ops must be attributed");
+    let json = cp.to_json().render();
+    assert!(json.contains("compute_pct") && json.contains("top_ops"));
+}
+
+/// Zero-cost disabled: the same run with tracing off is bit-identical
+/// (same makespan bits, same wait vector bits, same counters) and its
+/// sink holds nothing.
+#[test]
+fn disabled_tracing_is_bit_identical_and_records_nothing() {
+    let params = AppParams {
+        scale: 0.1,
+        iters: 2,
+    };
+    let run = |enabled: bool| {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), 8);
+        cfg.trace.enabled = enabled;
+        let (rep, _, sink) =
+            run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, cfg);
+        (rep, sink)
+    };
+    let (on_rep, on_sink) = run(true);
+    let (off_rep, off_sink) = run(false);
+
+    assert!(off_sink.is_empty() && off_sink.dropped() == 0, "disabled sink records nothing");
+    assert!(!on_sink.is_empty());
+    assert_eq!(off_rep.makespan.to_bits(), on_rep.makespan.to_bits(), "makespan");
+    assert_eq!(off_rep.ops_executed, on_rep.ops_executed);
+    assert_eq!(off_rep.n_messages, on_rep.n_messages);
+    assert_eq!(off_rep.wait.len(), on_rep.wait.len());
+    for (r, (a, b)) in off_rep.wait.iter().zip(&on_rep.wait).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "wait[{r}]");
+    }
+    assert_eq!(
+        off_rep.wait_at_cone.to_bits(),
+        on_rep.wait_at_cone.to_bits(),
+        "wait_at_cone"
+    );
+}
