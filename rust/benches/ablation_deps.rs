@@ -8,13 +8,16 @@
 //! cost for each system, and the DAG/heuristic ratio (grows with n —
 //! O(n) vs O(1) amortized insertion).
 
+use distnumpy::analyze::hazards;
 use distnumpy::array::Registry;
 use distnumpy::deps::{DagDeps, DepSystem, HeuristicDeps};
+use distnumpy::sched::DepsKind;
 use distnumpy::summa::record_matmul;
 use distnumpy::sync::{Cone, ConeSource};
 use distnumpy::types::{DType, OpId};
 use distnumpy::ufunc::{Kernel, OpBuilder, OpNode};
 use distnumpy::util::bench::Bench;
+use distnumpy::util::json::Json;
 
 /// The recorded streams the benchmarks generate, rebuilt raw (the apps
 /// flush internally; here we need the un-drained batch).
@@ -135,6 +138,7 @@ fn main() {
         Workload::Summa { n: 1024, br: 16 },
     ];
 
+    let mut json_rows = Vec::new();
     for wl in cases {
         let ops = wl.stream(16);
         let n = ops.len();
@@ -152,7 +156,76 @@ fn main() {
             dag.median / heu.median,
             wl.name(),
         );
+        let mut o = Json::obj();
+        o.push("section", "timing".into());
+        o.push("workload", wl.name().as_str().into());
+        o.push("ops", n.into());
+        o.push("dag_ns_per_op", (dag.median / n as f64 * 1e9).into());
+        o.push("heuristic_ns_per_op", (heu.median / n as f64 * 1e9).into());
+        o.push("ratio", (dag.median / heu.median).into());
+        json_rows.push(o);
     }
+
+    // -- precision: recorded edges vs the exact conflict closure ------
+    //
+    // The ISSUE 7 hazard oracle, run on the same streams the timing
+    // rows insert: soundness (no missed conflict edge) is a hard
+    // assert, and `excess_edge_pct` — recorded direct edges no conflict
+    // justifies — is the precision the heuristic pays (or, measured
+    // here: does not pay) for its O(1) insertion.
+    println!("\n=== Dependency precision: recorded edges vs exact conflicts ===\n");
+    println!(
+        "{:>8} {:>10} {:>11} {:>11} {:>7} {:>10}   workload",
+        "ops", "system", "dep edges", "exact", "excess", "excess%"
+    );
+    let precision_cases = [
+        Workload::Stencil { n: 2048, sweeps: 2 },
+        Workload::Lbm { n: 1024, steps: 2 },
+        Workload::Summa { n: 1024, br: 16 },
+    ];
+    for wl in precision_cases {
+        let ops = wl.stream(16);
+        for kind in [DepsKind::Dag, DepsKind::Heuristic] {
+            let stats = hazards::check(&ops, kind)
+                .unwrap_or_else(|r| panic!("{} {kind:?}: {r}", wl.name()));
+            println!(
+                "{:>8} {:>10} {:>11} {:>11} {:>7} {:>9.2}%   {}",
+                stats.ops,
+                format!("{kind:?}").to_lowercase(),
+                stats.dep_edges,
+                stats.exact_edges,
+                stats.excess_edges,
+                stats.excess_edge_pct(),
+                wl.name(),
+            );
+            assert_eq!(
+                stats.excess_edges, 0,
+                "{} {kind:?}: insert-only replays record only conflict edges",
+                wl.name()
+            );
+            if kind == DepsKind::Dag {
+                assert_eq!(
+                    stats.dep_edges, stats.exact_edges,
+                    "{}: the DAG records exactly the conflict edges",
+                    wl.name()
+                );
+            }
+            let mut o = Json::obj();
+            o.push("section", "precision".into());
+            o.push("workload", wl.name().as_str().into());
+            o.push("deps", format!("{kind:?}").to_lowercase().as_str().into());
+            o.push("ops", stats.ops.into());
+            o.push("dep_edges", stats.dep_edges.into());
+            o.push("exact_edges", stats.exact_edges.into());
+            o.push("excess_edges", stats.excess_edges.into());
+            o.push("excess_edge_pct", stats.excess_edge_pct().into());
+            o.push("serialized_pairs", stats.serialized_pairs.into());
+            json_rows.push(o);
+        }
+    }
+    std::fs::write("BENCH_deps.json", Json::Arr(json_rows).render())
+        .expect("write BENCH_deps.json");
+    println!("\nwrote BENCH_deps.json");
 
     // -- cone queries: predecessor hints vs the full DAG --------------
     //

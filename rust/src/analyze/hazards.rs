@@ -1,0 +1,371 @@
+//! The hazard oracle: recompute the *exact* conflict-edge set of a
+//! recorded op stream from first principles ([`Access::conflicts`]) and
+//! verify that a dependency system's recorded edges imply every one of
+//! them — the soundness property the paper's §5.7.2 heuristic claims
+//! ("an optimization, not a relaxation") but the runtime never checked.
+//!
+//! Soundness here is a *closure* property, not an edge-set property:
+//! the heuristic deliberately records fewer direct edges than the full
+//! DAG (a superseding writer stands in for the accessors before it),
+//! relying on transitivity through the superseding op. The oracle
+//! therefore compares happens-before closures: every exact conflict
+//! edge (i, j) must have i inside the dep system's closure of j. A
+//! missed edge is a **data race** — the scheduler is free to reorder a
+//! write past a conflicting access — and is a hard error carrying full
+//! op provenance. The opposite direction is *precision*: dependency
+//! order not implied by any conflict path serializes ops that could
+//! have overlapped, counted as [`HazardStats::excess_edges`] (direct)
+//! and [`HazardStats::serialized_pairs`] (transitive).
+
+use std::fmt;
+
+use crate::sched::DepsKind;
+use crate::types::OpId;
+use crate::ufunc::OpNode;
+
+/// Soundness/precision summary of one stream × one dependency system.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HazardStats {
+    /// Operations in the analyzed stream.
+    pub ops: usize,
+    /// Direct conflict edges the access lists imply (the ground truth).
+    pub exact_edges: u64,
+    /// Direct edges the dependency system recorded.
+    pub dep_edges: u64,
+    /// Recorded direct edges not implied by any conflict path —
+    /// pure lost overlap.
+    pub excess_edges: u64,
+    /// Ordered-but-conflict-free op pairs in the dep closure: the
+    /// transitive measure of serialization the system added.
+    pub serialized_pairs: u64,
+}
+
+impl HazardStats {
+    /// Share of recorded direct edges that no conflict justifies (%).
+    pub fn excess_edge_pct(&self) -> f64 {
+        if self.dep_edges == 0 {
+            0.0
+        } else {
+            self.excess_edges as f64 / self.dep_edges as f64 * 100.0
+        }
+    }
+
+    /// Fold another stream's stats into this one (CLI per-app totals).
+    pub fn absorb(&mut self, o: &HazardStats) {
+        self.ops += o.ops;
+        self.exact_edges += o.exact_edges;
+        self.dep_edges += o.dep_edges;
+        self.excess_edges += o.excess_edges;
+        self.serialized_pairs += o.serialized_pairs;
+    }
+}
+
+/// A missed conflict edge: the dependency system admits a schedule that
+/// reorders two conflicting accesses. Carries the provenance of both
+/// ops (id, rank, epoch group, kernel or transfer tag) and the
+/// conflicting access pair.
+#[derive(Clone, Debug)]
+pub struct Race {
+    /// The earlier op of the unordered conflicting pair.
+    pub pred: OpId,
+    /// The later op, whose closure is missing `pred`.
+    pub succ: OpId,
+    /// Human-readable provenance of both ends and the access conflict.
+    pub what: String,
+}
+
+impl fmt::Display for Race {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "data race (missed dependency edge): {}", self.what)
+    }
+}
+
+/// The exact direct conflict predecessors of every op, recomputed from
+/// the access lists alone: `preds[j]` holds every earlier position `i`
+/// with a conflicting access pair (per-location scan lists, so the
+/// cost is proportional to actual conflicts, not `n²`). Positions and
+/// op ids coincide — see [`check_preds`].
+pub fn exact_direct_preds(ops: &[OpNode]) -> Vec<Vec<u32>> {
+    use crate::ufunc::{Access, Loc};
+    use crate::util::fxhash::FxHashMap;
+    let mut by_loc: FxHashMap<Loc, Vec<(u32, Access)>> = FxHashMap::default();
+    let mut preds: Vec<Vec<u32>> = Vec::with_capacity(ops.len());
+    for (j, op) in ops.iter().enumerate() {
+        let mut pj: Vec<u32> = Vec::new();
+        for a in &op.accesses {
+            if let Some(list) = by_loc.get(&a.loc) {
+                for &(i, b) in list {
+                    if a.conflicts(&b) {
+                        pj.push(i);
+                    }
+                }
+            }
+        }
+        pj.sort_unstable();
+        pj.dedup();
+        preds.push(pj);
+        for a in &op.accesses {
+            by_loc.entry(a.loc).or_default().push((j as u32, *a));
+        }
+    }
+    preds
+}
+
+/// The direct predecessors a dependency system records for the stream,
+/// replayed on a fresh instance (insert-only, no completions: exactly
+/// the state the scheduler consults when it first admits the ops, and
+/// no id recycling can fire).
+pub fn dep_direct_preds(ops: &[OpNode], kind: DepsKind) -> Vec<Vec<u32>> {
+    let mut sys = kind.build();
+    sys.insert_all(ops);
+    ops.iter()
+        .enumerate()
+        .map(|(j, op)| {
+            let mut v: Vec<u32> = sys
+                .direct_preds(op.id)
+                .into_iter()
+                .map(|p| p.0)
+                .filter(|&i| (i as usize) < j)
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect()
+}
+
+/// Run the oracle against the dependency system `kind` on a fresh
+/// replay of `ops`. `Err` is a data race; `Ok` carries the precision
+/// stats.
+pub fn check(ops: &[OpNode], kind: DepsKind) -> Result<HazardStats, Race> {
+    check_preds(ops, &dep_direct_preds(ops, kind))
+}
+
+/// The core oracle, parameterized on the dep system's direct-pred
+/// lists so tests can mutate them (drop an edge) and prove the race
+/// detector actually fires. Requires position-contiguous op ids
+/// (`ops[j].id.idx() == j`), which every recorded or session-spliced
+/// stream satisfies.
+pub fn check_preds(ops: &[OpNode], dep_preds: &[Vec<u32>]) -> Result<HazardStats, Race> {
+    let n = ops.len();
+    assert_eq!(dep_preds.len(), n, "one pred list per op");
+    for (j, op) in ops.iter().enumerate() {
+        assert_eq!(
+            op.id.idx(),
+            j,
+            "hazard oracle requires position-contiguous op ids"
+        );
+    }
+    let exact = exact_direct_preds(ops);
+    let exact_cl = closure(n, &exact);
+    let dep_cl = closure(n, dep_preds);
+    let mut stats = HazardStats {
+        ops: n,
+        ..HazardStats::default()
+    };
+    for (j, (ej, dj)) in exact.iter().zip(dep_preds).enumerate() {
+        stats.exact_edges += ej.len() as u64;
+        stats.dep_edges += dj.len() as u64;
+        for &i in ej {
+            if !dep_cl.get(j, i as usize) {
+                return Err(race(ops, i as usize, j));
+            }
+        }
+        for &i in dj {
+            if !exact_cl.get(j, i as usize) {
+                stats.excess_edges += 1;
+            }
+        }
+        stats.serialized_pairs += dep_cl.excess_over(&exact_cl, j);
+    }
+    Ok(stats)
+}
+
+fn race(ops: &[OpNode], i: usize, j: usize) -> Race {
+    let conflict = ops[j]
+        .accesses
+        .iter()
+        .find_map(|a| {
+            ops[i]
+                .accesses
+                .iter()
+                .copied()
+                .find(|b| a.conflicts(b))
+                .map(|b| format!("{a:?} vs {b:?}"))
+        })
+        .unwrap_or_else(|| "conflicting accesses".into());
+    Race {
+        pred: ops[i].id,
+        succ: ops[j].id,
+        what: format!(
+            "{} may reorder against {}; conflict [{conflict}] has no dependency path",
+            ops[j].describe(),
+            ops[i].describe(),
+        ),
+    }
+}
+
+/// Dense happens-before closure as an n×n bit matrix. Edges always
+/// point from lower to higher positions, so one pass in position order
+/// suffices: row(j) = ∪ row(i) ∪ {i} over direct preds i.
+struct BitMat {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl BitMat {
+    fn get(&self, j: usize, i: usize) -> bool {
+        self.bits[j * self.words + i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Bits set in row `j` here but not in `other`'s row `j`.
+    fn excess_over(&self, other: &BitMat, j: usize) -> u64 {
+        let off = j * self.words;
+        self.bits[off..off + self.words]
+            .iter()
+            .zip(&other.bits[off..off + self.words])
+            .map(|(&d, &e)| u64::from((d & !e).count_ones()))
+            .sum()
+    }
+}
+
+fn closure(n: usize, preds: &[Vec<u32>]) -> BitMat {
+    let words = n.div_ceil(64).max(1);
+    let mut m = BitMat {
+        words,
+        bits: vec![0u64; words * n],
+    };
+    for (j, pj) in preds.iter().enumerate() {
+        for &i in pj {
+            let i = i as usize;
+            debug_assert!(i < j, "dependency edges must point backwards");
+            let (lo, hi) = m.bits.split_at_mut(j * words);
+            let src = &lo[i * words..i * words + words];
+            for (d, s) in hi[..words].iter_mut().zip(src) {
+                *d |= *s;
+            }
+            hi[i / 64] |= 1 << (i % 64);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BaseId, Rank, Tag};
+    use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpNode, OpPayload};
+
+    fn op(id: u32, rank: u32, accesses: Vec<Access>) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(rank),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::Copy,
+                inputs: vec![],
+                dst: Dst::Stage(Tag(90_000 + id as u64)),
+                elems: 1,
+            }),
+            accesses,
+        }
+    }
+
+    fn b() -> BaseId {
+        BaseId(0)
+    }
+
+    #[test]
+    fn raw_war_waw_edges_all_detected() {
+        let ops = vec![
+            op(0, 0, vec![Access::write_block(b(), 0, (0, 8))]),
+            op(1, 0, vec![Access::read_block(b(), 0, (0, 8))]),
+            op(2, 0, vec![Access::write_block(b(), 0, (4, 12))]),
+        ];
+        let exact = exact_direct_preds(&ops);
+        assert_eq!(exact, vec![vec![], vec![0], vec![0, 1]]);
+        for kind in [DepsKind::Heuristic, DepsKind::Dag] {
+            let stats = check(&ops, kind).expect("both systems are sound");
+            assert_eq!(stats.exact_edges, 3);
+            assert_eq!(stats.excess_edges, 0, "{kind:?}");
+            assert_eq!(stats.serialized_pairs, 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn read_read_pairs_carry_no_edge() {
+        let ops = vec![
+            op(0, 0, vec![Access::read_block(b(), 0, (0, 8))]),
+            op(1, 1, vec![Access::read_block(b(), 0, (0, 8))]),
+        ];
+        assert_eq!(exact_direct_preds(&ops), vec![vec![], vec![]]);
+        let stats = check(&ops, DepsKind::Dag).unwrap();
+        assert_eq!(stats.exact_edges, 0);
+    }
+
+    #[test]
+    fn disjoint_intervals_carry_no_edge() {
+        let ops = vec![
+            op(0, 0, vec![Access::write_block(b(), 0, (0, 4))]),
+            op(1, 0, vec![Access::write_block(b(), 0, (4, 8))]),
+        ];
+        assert_eq!(exact_direct_preds(&ops), vec![vec![], vec![]]);
+    }
+
+    #[test]
+    fn stage_conflicts_are_tracked_like_blocks() {
+        let t = Tag(7);
+        let ops = vec![
+            op(0, 0, vec![Access::write_stage(t)]),
+            op(1, 0, vec![Access::read_stage(t), Access::write_block(b(), 0, (0, 4))]),
+            op(2, 0, vec![Access::read_block(b(), 0, (0, 4))]),
+        ];
+        assert_eq!(exact_direct_preds(&ops), vec![vec![], vec![0], vec![1]]);
+        for kind in [DepsKind::Heuristic, DepsKind::Dag] {
+            check(&ops, kind).expect("sound on staged streams");
+        }
+    }
+
+    #[test]
+    fn dropping_a_dep_edge_is_caught_as_a_race() {
+        let ops = vec![
+            op(0, 0, vec![Access::write_block(b(), 0, (0, 8))]),
+            op(1, 1, vec![Access::read_block(b(), 0, (0, 8))]),
+        ];
+        // The mutated dep graph "forgets" the RAW edge 0 -> 1.
+        let err = check_preds(&ops, &[vec![], vec![]]).unwrap_err();
+        assert_eq!(err.pred, OpId(0));
+        assert_eq!(err.succ, OpId(1));
+        let msg = err.to_string();
+        assert!(msg.contains("data race"), "{msg}");
+        assert!(msg.contains("op 1"), "provenance names the ops: {msg}");
+    }
+
+    #[test]
+    fn transitively_covered_edges_are_not_races() {
+        // 0 -w-> 1 -w-> 2: the exact edge 0 -> 2 is implied by the dep
+        // chain even when the system never records it directly.
+        let ops = vec![
+            op(0, 0, vec![Access::write_block(b(), 0, (0, 8))]),
+            op(1, 0, vec![Access::write_block(b(), 0, (0, 8))]),
+            op(2, 0, vec![Access::write_block(b(), 0, (0, 8))]),
+        ];
+        let stats = check_preds(&ops, &[vec![], vec![0], vec![1]]).expect("chain covers 0->2");
+        assert_eq!(stats.exact_edges, 3);
+        assert_eq!(stats.dep_edges, 2);
+        assert_eq!(stats.excess_edges, 0);
+    }
+
+    #[test]
+    fn spurious_edges_are_counted_not_raced() {
+        let ops = vec![
+            op(0, 0, vec![Access::write_block(b(), 0, (0, 4))]),
+            op(1, 0, vec![Access::write_block(b(), 0, (8, 12))]),
+        ];
+        // No conflict, yet the dep system serialized them.
+        let stats = check_preds(&ops, &[vec![], vec![0]]).expect("extra order is not a race");
+        assert_eq!(stats.excess_edges, 1);
+        assert_eq!(stats.serialized_pairs, 1);
+        assert!(stats.excess_edge_pct() > 99.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! The schedule linter: advisory diagnostics over recorded streams and
+//! the admission log. Nothing here is an error — the rules flag
+//! schedules that are *legal but leave overlap on the table*, the
+//! paper's actual currency: forced reductions that a deferred future
+//! would pipeline, sends recorded far below their last data
+//! dependency, staged writes nothing reads, and epochs the admission
+//! window gated the recorder on.
+
+use crate::flow::EpochEntry;
+use crate::types::{OpId, Tag};
+use crate::ufunc::{Loc, OpNode, OpPayload};
+use crate::util::fxhash::FxHashMap;
+use crate::util::json::Json;
+
+/// Diagnostic severity. `Warn` marks likely lost overlap; `Info` marks
+/// patterns that are often intentional (pinned futures, small runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Worth knowing; frequently benign.
+    Info,
+    /// Likely costs overlap.
+    Warn,
+}
+
+impl Severity {
+    /// Lower-case renderer shared by the JSON and pretty outputs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// One linter diagnostic.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    /// Stable rule name (kebab-case).
+    pub rule: &'static str,
+    /// How seriously to take it.
+    pub severity: Severity,
+    /// Example op the rule anchors on, when one exists.
+    pub op: Option<OpId>,
+    /// Epoch / recorded-run the rule anchors on, when one exists.
+    pub epoch: Option<u64>,
+    /// Human-readable explanation with counts.
+    pub note: String,
+}
+
+impl Diag {
+    /// JSON object for `distnumpy analyze --json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("rule", self.rule.into());
+        o.push("severity", self.severity.name().into());
+        o.push("op", self.op.map_or(Json::Null, |id| (id.0 as u64).into()));
+        o.push("epoch", self.epoch.map_or(Json::Null, Json::from));
+        o.push("note", self.note.as_str().into());
+        o
+    }
+
+    /// One-line human renderer.
+    pub fn pretty(&self) -> String {
+        let mut s = format!("[{}] {}: {}", self.severity.name(), self.rule, self.note);
+        if let Some(id) = self.op {
+            s.push_str(&format!(" (op {})", id.0));
+        }
+        if let Some(e) = self.epoch {
+            s.push_str(&format!(" (epoch {e})"));
+        }
+        s
+    }
+}
+
+/// Sends may post the moment their last predecessor retires; one
+/// recorded further than this below that predecessor is "hoistable".
+const HOIST_GAP: u32 = 64;
+
+/// Per-stream rules: hoistable sends and stage leaks.
+pub fn lint_stream(ops: &[OpNode]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    hoistable_sends(ops, &mut diags);
+    stage_leaks(ops, &mut diags);
+    diags
+}
+
+fn hoistable_sends(ops: &[OpNode], diags: &mut Vec<Diag>) {
+    let preds = super::hazards::exact_direct_preds(ops);
+    let mut count = 0u64;
+    let mut worst = 0u32;
+    let mut example = None;
+    for (j, op) in ops.iter().enumerate() {
+        if !matches!(op.payload, OpPayload::Send { .. }) {
+            continue;
+        }
+        let gap = j as u32 - preds[j].last().copied().unwrap_or(0);
+        if gap > HOIST_GAP {
+            count += 1;
+            if gap >= worst {
+                worst = gap;
+                example = Some(op.id);
+            }
+        }
+    }
+    if count > 0 {
+        diags.push(Diag {
+            rule: "hoistable-send",
+            severity: Severity::Warn,
+            op: example,
+            epoch: None,
+            note: format!(
+                "{count} sends recorded more than {HOIST_GAP} ops below their \
+                 last data dependency (worst gap {worst}); posting them at \
+                 readiness would widen overlap"
+            ),
+        });
+    }
+}
+
+fn stage_leaks(ops: &[OpNode], diags: &mut Vec<Diag>) {
+    let mut writers: Vec<(Tag, OpId)> = Vec::new();
+    let mut read: FxHashMap<Tag, ()> = FxHashMap::default();
+    for op in ops {
+        for a in &op.accesses {
+            if let Loc::Stage(t) = a.loc {
+                if a.write {
+                    writers.push((t, op.id));
+                } else {
+                    read.insert(t, ());
+                }
+            }
+        }
+    }
+    writers.retain(|(t, _)| !read.contains_key(t));
+    writers.sort_unstable();
+    writers.dedup();
+    if let Some(&(t, id)) = writers.first() {
+        diags.push(Diag {
+            rule: "stage-leak",
+            severity: Severity::Info,
+            op: Some(id),
+            epoch: None,
+            note: format!(
+                "{} staged writes never read within the stream (first: {t:?}); \
+                 expected only for stages pinned by deferred futures",
+                writers.len()
+            ),
+        });
+    }
+}
+
+/// Cross-stream rule: reductions forced epoch after epoch. Three or
+/// more distinct (run, group) spots containing a reduction kernel mean
+/// the program forces a read every loop iteration — the barrier the
+/// deferred-future API (`sum_deferred`) exists to remove.
+pub fn lint_reductions(streams: &[(u64, Vec<OpNode>)]) -> Vec<Diag> {
+    let mut spots = 0u64;
+    let mut example = None;
+    for (run, ops) in streams {
+        let mut groups: Vec<u32> = ops
+            .iter()
+            .filter(|o| {
+                matches!(&o.payload, OpPayload::Compute(t) if t.kernel.is_reduction())
+            })
+            .map(|o| o.group)
+            .collect();
+        groups.sort_unstable();
+        groups.dedup();
+        spots += groups.len() as u64;
+        if example.is_none() && !groups.is_empty() {
+            example = Some(*run);
+        }
+    }
+    if spots >= 3 {
+        vec![Diag {
+            rule: "barrier-in-loop",
+            severity: Severity::Info,
+            op: None,
+            epoch: example,
+            note: format!(
+                "reductions forced in {spots} recorded epochs; deferred \
+                 futures (sum_deferred) would pipeline the convergence checks"
+            ),
+        }]
+    } else {
+        Vec::new()
+    }
+}
+
+/// Admission-log rule: epochs whose recording start was gated on the
+/// admission window (`record_start[k] > record_done[k-1]`). Batch-mode
+/// entries carry NaN record times and are skipped.
+pub fn lint_epochs(entries: &[EpochEntry]) -> Vec<Diag> {
+    let mut count = 0u64;
+    let mut total = 0.0f64;
+    for w in entries.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if a.record_done.is_nan() || b.record_start.is_nan() {
+            continue;
+        }
+        let gap = b.record_start - a.record_done;
+        if gap > 0.0 {
+            count += 1;
+            total += gap;
+        }
+    }
+    if count > 0 {
+        vec![Diag {
+            rule: "window-starved",
+            severity: Severity::Info,
+            op: None,
+            epoch: None,
+            note: format!(
+                "{count} epochs gated the recorder on the admission window \
+                 for {total:.3e}s total; a larger --flow window records ahead"
+            ),
+        }]
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BaseId, OpId, Rank};
+    use crate::ufunc::{Access, ComputeTask, Dst, Kernel, SendSrc};
+
+    fn compute(id: u32, kernel: Kernel, group: u32, accesses: Vec<Access>) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(0),
+            group,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel,
+                inputs: vec![],
+                dst: Dst::Stage(Tag(90_000 + id as u64)),
+                elems: 1,
+            }),
+            accesses,
+        }
+    }
+
+    #[test]
+    fn stage_leak_detected_and_rendered() {
+        let t = Tag(3);
+        let ops = vec![compute(0, Kernel::Copy, 0, vec![Access::write_stage(t)])];
+        let diags = lint_stream(&ops);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "stage-leak");
+        assert_eq!(diags[0].op, Some(OpId(0)));
+        let json = diags[0].to_json().render();
+        assert!(json.contains("\"rule\""), "{json}");
+        assert!(json.contains("stage-leak"), "{json}");
+        assert!(diags[0].pretty().contains("[info] stage-leak"));
+    }
+
+    #[test]
+    fn read_stage_is_not_a_leak() {
+        let t = Tag(3);
+        let ops = vec![
+            compute(0, Kernel::Copy, 0, vec![Access::write_stage(t)]),
+            compute(1, Kernel::Copy, 0, vec![Access::read_stage(t)]),
+        ];
+        assert!(lint_stream(&ops).is_empty());
+    }
+
+    #[test]
+    fn distant_send_is_hoistable() {
+        let b = BaseId(0);
+        let mut ops = vec![compute(0, Kernel::Copy, 0, vec![Access::write_block(b, 0, (0, 4))])];
+        // 70 unrelated ops of padding between the producer and its send.
+        for i in 1..=70u32 {
+            ops.push(compute(i, Kernel::Add, 0, vec![Access::write_block(b, i as u64 + 1, (0, 4))]));
+        }
+        ops.push(OpNode {
+            id: OpId(71),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Send {
+                peer: Rank(1),
+                tag: Tag(0),
+                bytes: 16,
+                src: SendSrc::Region(crate::ufunc::Region {
+                    base: b,
+                    block: 0,
+                    row0: 0,
+                    nrows: 1,
+                    col0: 0,
+                    ncols: 4,
+                    row_stride: 4,
+                }),
+            },
+            accesses: vec![Access::read_block(b, 0, (0, 4))],
+        });
+        let diags = lint_stream(&ops);
+        let hoist: Vec<_> = diags.iter().filter(|d| d.rule == "hoistable-send").collect();
+        assert_eq!(hoist.len(), 1);
+        assert_eq!(hoist[0].op, Some(OpId(71)));
+        assert_eq!(hoist[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn repeated_forced_reductions_flagged() {
+        let streams: Vec<(u64, Vec<OpNode>)> = (0..3)
+            .map(|run| {
+                (
+                    run,
+                    vec![compute(0, Kernel::PartialSum, 0, vec![])],
+                )
+            })
+            .collect();
+        let diags = lint_reductions(&streams);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "barrier-in-loop");
+        assert!(lint_reductions(&streams[..2]).is_empty(), "2 spots stay quiet");
+    }
+
+    #[test]
+    fn window_starved_epochs_read_from_the_log() {
+        let e = |start: f64, done: f64| EpochEntry {
+            record_start: start,
+            record_done: done,
+            retired: f64::NAN,
+            n_ops: 4,
+        };
+        // Epoch 1 starts 0.5s after epoch 0 finished recording.
+        let entries = [e(0.0, 1.0), e(1.5, 2.0)];
+        let diags = lint_epochs(&entries);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "window-starved");
+        // Batch entries (NaN record times) never fire.
+        let batch = [e(f64::NAN, f64::NAN), e(f64::NAN, f64::NAN)];
+        assert!(lint_epochs(&batch).is_empty());
+        // Back-to-back recording does not fire.
+        let tight = [e(0.0, 1.0), e(1.0, 2.0)];
+        assert!(lint_epochs(&tight).is_empty());
+    }
+}

@@ -1,0 +1,321 @@
+//! Static stall prediction: decide at schedule time whether a recorded
+//! stream can deadlock a policy, instead of discovering it mid-run.
+//!
+//! The naive evaluator (the paper's Fig. 6 strawman) executes each
+//! rank's ops in becoming-ready order and *blocks* on every receive;
+//! a receive whose matching send sits behind another blocked receive
+//! forms a wait cycle. That order is fully determined by the recorded
+//! graph, so an abstract, timing-free replay over the exact conflict
+//! preds ([`super::hazards::exact_direct_preds`]) predicts the
+//! runtime's `Deadlock { blocked_recvs }` outcome exactly — including
+//! cycles threaded *through aggregated messages*, because prediction
+//! runs on the post-aggregation stream the scheduler actually sees.
+//! The latency-hiding and blocking policies initiate every ready
+//! communication before blocking, so for them only unpaired transfers
+//! (a `TransferTable::build` stall) are statically predictable.
+//!
+//! [`witness_cycle`] renders the actual rank/tag wait chain; the naive
+//! session reuses it at runtime so `SchedError::Deadlock` names the
+//! cycle instead of only counting its blocked receives.
+
+use std::collections::VecDeque;
+
+use crate::sched::Policy;
+use crate::types::{Rank, Tag};
+use crate::ufunc::{OpNode, OpPayload};
+use crate::util::fxhash::FxHashMap;
+
+/// A predicted stall: how far the policy would get, which receives
+/// park, and the wait cycle (or unpaired tag) that explains it.
+#[derive(Clone, Debug)]
+pub struct StallPrediction {
+    /// Ops the abstract replay managed to execute.
+    pub executed: u64,
+    /// Ops in the stream.
+    pub total: u64,
+    /// Parked receives at the fixpoint: (rank, awaited tag).
+    pub blocked: Vec<(Rank, Tag)>,
+    /// The rendered wait chain ([`witness_cycle`]), or the unpaired
+    /// transfer note.
+    pub cycle: String,
+}
+
+/// Predict whether `policy` stalls on `ops`. `None` means the stream
+/// is statically clean for that policy.
+pub fn predict(policy: Policy, ops: &[OpNode]) -> Option<StallPrediction> {
+    match policy {
+        Policy::Naive => predict_naive(ops),
+        Policy::LatencyHiding | Policy::Blocking => unpaired_prediction(ops),
+    }
+}
+
+/// Every policy stalls loudly on a half-recorded transfer; report the
+/// first unpaired tag without running anything.
+fn unpaired_prediction(ops: &[OpNode]) -> Option<StallPrediction> {
+    let mut sends: FxHashMap<Tag, u32> = FxHashMap::default();
+    let mut recvs: FxHashMap<Tag, u32> = FxHashMap::default();
+    for op in ops {
+        match &op.payload {
+            OpPayload::Send { tag, .. } => *sends.entry(*tag).or_insert(0) += 1,
+            OpPayload::Recv { tag, .. } => *recvs.entry(*tag).or_insert(0) += 1,
+            OpPayload::Compute(_) => {}
+        }
+    }
+    let mut odd: Vec<Tag> = sends
+        .iter()
+        .filter(|&(t, &c)| recvs.get(t).copied().unwrap_or(0) != c)
+        .map(|(&t, _)| t)
+        .collect();
+    odd.extend(
+        recvs
+            .keys()
+            .filter(|t| !sends.contains_key(t))
+            .copied(),
+    );
+    odd.sort_unstable();
+    odd.dedup();
+    let first = *odd.first()?;
+    Some(StallPrediction {
+        executed: 0,
+        total: ops.len() as u64,
+        blocked: Vec::new(),
+        cycle: format!("unpaired transfer {first:?}: send/recv halves do not match"),
+    })
+}
+
+/// Abstract replay of the naive evaluator: per-rank FIFOs fed in
+/// becoming-ready (dependency) order, heads executing unless they are
+/// receives whose matching send has not run. The fixpoint either
+/// drains the stream (no stall) or leaves parked receives — the
+/// predicted deadlock.
+pub fn predict_naive(ops: &[OpNode]) -> Option<StallPrediction> {
+    if ops.is_empty() {
+        return None;
+    }
+    let preds = super::hazards::exact_direct_preds(ops);
+    let n = ops.len();
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut indeg: Vec<u32> = vec![0; n];
+    for (j, pj) in preds.iter().enumerate() {
+        indeg[j] = pj.len() as u32;
+        for &i in pj {
+            succs[i as usize].push(j as u32);
+        }
+    }
+    let mut send_of: FxHashMap<Tag, usize> = FxHashMap::default();
+    for (j, op) in ops.iter().enumerate() {
+        if let OpPayload::Send { tag, .. } = &op.payload {
+            send_of.insert(*tag, j);
+        }
+    }
+    let nranks = ops.iter().map(|o| o.rank.0 as usize + 1).max().unwrap_or(1);
+    let mut fifo: Vec<VecDeque<usize>> = vec![VecDeque::new(); nranks];
+    let mut queued = vec![false; n];
+    let mut done = vec![false; n];
+    let mut executed = 0u64;
+    loop {
+        let mut progressed = false;
+        for j in 0..n {
+            if !queued[j] && indeg[j] == 0 {
+                queued[j] = true;
+                fifo[ops[j].rank.0 as usize].push_back(j);
+                progressed = true;
+            }
+        }
+        for q in fifo.iter_mut() {
+            while let Some(&j) = q.front() {
+                let runnable = match &ops[j].payload {
+                    OpPayload::Recv { tag, .. } => {
+                        send_of.get(tag).is_some_and(|&s| done[s])
+                    }
+                    _ => true,
+                };
+                if !runnable {
+                    break;
+                }
+                q.pop_front();
+                done[j] = true;
+                executed += 1;
+                progressed = true;
+                for &s in &succs[j] {
+                    indeg[s as usize] -= 1;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    if executed == n as u64 {
+        return None;
+    }
+    let mut blocked: Vec<(Rank, Tag)> = Vec::new();
+    for q in &fifo {
+        if let Some(&j) = q.front() {
+            if let OpPayload::Recv { tag, .. } = &ops[j].payload {
+                blocked.push((ops[j].rank, *tag));
+            }
+        }
+    }
+    blocked.sort_unstable();
+    let cycle = witness_cycle(ops, &blocked);
+    Some(StallPrediction {
+        executed,
+        total: n as u64,
+        blocked,
+        cycle,
+    })
+}
+
+/// Render the wait chain behind a set of parked receives: starting
+/// from the lowest parked rank, chase each awaited tag to its sender's
+/// rank and that rank's own parked receive, until the chain revisits a
+/// rank (a cycle) or leaves the parked set. Pure over the recorded
+/// stream, so the naive session calls it at deadlock time with its
+/// live parked map and the static predictor with its fixpoint residue.
+pub fn witness_cycle(ops: &[OpNode], parked: &[(Rank, Tag)]) -> String {
+    if parked.is_empty() {
+        return String::new();
+    }
+    let mut sender: FxHashMap<Tag, Rank> = FxHashMap::default();
+    for op in ops {
+        if let OpPayload::Send { tag, .. } = &op.payload {
+            sender.insert(*tag, op.rank);
+        }
+    }
+    let mut entries = parked.to_vec();
+    entries.sort_unstable();
+    let mut parked_on: FxHashMap<Rank, Tag> = FxHashMap::default();
+    for &(r, t) in &entries {
+        parked_on.entry(r).or_insert(t);
+    }
+    let (mut r, mut t) = entries[0];
+    let mut seen: Vec<Rank> = Vec::new();
+    let mut parts: Vec<String> = Vec::new();
+    loop {
+        if seen.contains(&r) {
+            parts.push(format!("back to rank {} — cycle", r.0));
+            break;
+        }
+        seen.push(r);
+        match sender.get(&t) {
+            None => {
+                parts.push(format!(
+                    "rank {} blocked on recv {t:?} with no matching send",
+                    r.0
+                ));
+                break;
+            }
+            Some(&s) => {
+                parts.push(format!("rank {} waits on recv {t:?} from rank {}", r.0, s.0));
+                match parked_on.get(&s) {
+                    Some(&nt) => {
+                        r = s;
+                        t = nt;
+                    }
+                    None => {
+                        parts.push(format!("rank {} never reaches the matching send", s.0));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    parts.join("; ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::OpId;
+    use crate::ufunc::{Access, SendSrc};
+
+    fn send(id: u32, rank: u32, peer: u32, tag: Tag) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(rank),
+            group: 0,
+            payload: OpPayload::Send {
+                peer: Rank(peer),
+                tag,
+                bytes: 8,
+                src: SendSrc::Stage(Tag(1_000 + id as u64)),
+            },
+            accesses: vec![Access::read_stage(Tag(1_000 + id as u64))],
+        }
+    }
+
+    fn recv(id: u32, rank: u32, peer: u32, tag: Tag) -> OpNode {
+        OpNode {
+            id: OpId(id),
+            rank: Rank(rank),
+            group: 0,
+            payload: OpPayload::Recv {
+                peer: Rank(peer),
+                tag,
+                bytes: 8,
+            },
+            accesses: vec![Access::write_stage(tag)],
+        }
+    }
+
+    #[test]
+    fn ordered_pair_completes() {
+        let ops = vec![send(0, 0, 1, Tag(0)), recv(1, 1, 0, Tag(0))];
+        assert!(predict_naive(&ops).is_none());
+        assert!(predict(Policy::LatencyHiding, &ops).is_none());
+    }
+
+    #[test]
+    fn ping_pong_head_recvs_deadlock_naive_only() {
+        // Each rank's receive is recorded before its send: the naive
+        // FIFO heads park on each other. lh/blocking post the sends
+        // first and complete.
+        let ops = vec![
+            recv(0, 0, 1, Tag(1)),
+            send(1, 0, 1, Tag(0)),
+            recv(2, 1, 0, Tag(0)),
+            send(3, 1, 0, Tag(1)),
+        ];
+        let p = predict_naive(&ops).expect("naive must be predicted to park");
+        assert_eq!(p.executed, 0);
+        assert_eq!(p.total, 4);
+        assert_eq!(p.blocked, vec![(Rank(0), Tag(1)), (Rank(1), Tag(0))]);
+        assert!(p.cycle.contains("cycle"), "{}", p.cycle);
+        assert!(p.cycle.contains("rank 0"), "{}", p.cycle);
+        assert!(p.cycle.contains("rank 1"), "{}", p.cycle);
+        assert!(
+            predict(Policy::LatencyHiding, &ops).is_none(),
+            "paired stream is clean for latency-hiding"
+        );
+        assert!(predict(Policy::Blocking, &ops).is_none());
+    }
+
+    #[test]
+    fn self_wait_cycle_is_named() {
+        let ops = vec![recv(0, 0, 0, Tag(0)), send(1, 0, 0, Tag(0))];
+        let p = predict_naive(&ops).expect("recv ahead of its own send parks");
+        assert_eq!(p.blocked, vec![(Rank(0), Tag(0))]);
+        assert!(p.cycle.contains("back to rank 0"), "{}", p.cycle);
+    }
+
+    #[test]
+    fn unpaired_recv_is_predicted_for_every_policy() {
+        let ops = vec![recv(0, 0, 1, Tag(5))];
+        for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+            let p = predict(policy, &ops).expect("half a transfer must be flagged");
+            assert!(
+                p.cycle.contains("no matching send") || p.cycle.contains("unpaired"),
+                "{policy:?}: {}",
+                p.cycle
+            );
+        }
+    }
+
+    #[test]
+    fn witness_names_the_missing_send() {
+        let ops = vec![recv(0, 0, 1, Tag(9))];
+        let w = witness_cycle(&ops, &[(Rank(0), Tag(9))]);
+        assert!(w.contains("no matching send"), "{w}");
+    }
+}

@@ -4,6 +4,7 @@
 //! distnumpy run    --app jacobi_stencil --procs 16 [--policy lh|blocking|naive]
 //!                  [--placement by-node|by-core] [--scale 1.0] [--iters 10]
 //!                  [--deps heuristic|dag] [--json]
+//! distnumpy analyze [--app jacobi] [--deps heuristic|dag|both] [--procs 16] [--json]
 //! distnumpy sweep  --app jacobi_stencil [--procs 1,2,4,8,16,32,64,128] [--json]
 //! distnumpy report wait [--procs 16]
 //! distnumpy fig19  [--procs 8,16,32,64,128]
@@ -16,7 +17,7 @@ use crate::apps::{AppId, AppParams};
 use crate::cluster::{MachineSpec, Placement};
 use crate::comm::Collective;
 use crate::harness;
-use crate::sched::{Policy, SchedCfg, SyncMode};
+use crate::sched::{DepsKind, Policy, SchedCfg, SyncMode};
 use crate::util::json::Json;
 
 /// Parsed command line.
@@ -106,7 +107,18 @@ USAGE:
                        # (open at https://ui.perfetto.dev); also folds a
                        # critical-path report + per-epoch series into
                        # --json output (bare --trace writes trace.json)
+                   [--deps heuristic|dag] [--verify]
+                       # --verify re-checks every drained wave against
+                       # the exact-conflict hazard oracle (hard error
+                       # on a missed dependency edge)
                    [--json]
+  distnumpy analyze [--app <name>] [--deps heuristic|dag|both] [--procs P]
+                    [--scale S] [--iters N] [--json]
+                       # static analysis over the recorded op streams:
+                       # race check vs the exact conflict closure,
+                       # naive-deadlock prediction, overlap lints.
+                       # Default: all apps, both dep systems. Exits
+                       # non-zero on any race or predicted lh stall.
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
                                              # Jacobi staleness/wait trade-off (JSON)
@@ -163,6 +175,11 @@ fn run(cli: &Cli) -> Result<String, String> {
                 cfg.aggregation = a.parse().map_err(|_| "bad --agg")?;
             }
             cfg.sync = SyncMode::parse(cli.flag("sync").unwrap_or("cone")).ok_or("bad --sync")?;
+            cfg.deps =
+                DepsKind::parse(cli.flag("deps").unwrap_or("heuristic")).ok_or("bad --deps")?;
+            // `--verify` re-runs the hazard oracle on every drained
+            // wave; a missed dependency edge aborts the run.
+            cfg.verify_deps = cli.flag("verify").is_some();
             if let Some(t) = cli.flag("flush-threshold") {
                 cfg.flush_threshold = t.parse().map_err(|_| "bad --flush-threshold")?;
             }
@@ -267,6 +284,71 @@ fn run(cli: &Cli) -> Result<String, String> {
                     ));
                 }
                 Ok(out)
+            }
+        }
+        "analyze" => {
+            let apps: Vec<AppId> = match cli.flag("app") {
+                Some(name) => {
+                    vec![AppId::parse(name).ok_or_else(|| format!("unknown app '{name}'"))?]
+                }
+                None => AppId::all().to_vec(),
+            };
+            let kinds: Vec<DepsKind> = match cli.flag("deps") {
+                None | Some("both") => vec![DepsKind::Heuristic, DepsKind::Dag],
+                Some(s) => vec![DepsKind::parse(s).ok_or("bad --deps (heuristic|dag|both)")?],
+            };
+            let p: u32 = cli
+                .flag("procs")
+                .unwrap_or("16")
+                .parse()
+                .map_err(|_| "bad --procs")?;
+            // Analyzer defaults are smaller than `run`'s: the oracle's
+            // closure is quadratic in ops per stream, and precision is
+            // scale-independent.
+            let params = AppParams {
+                scale: match cli.flag("scale") {
+                    Some(s) => s.parse().map_err(|_| "bad --scale")?,
+                    None => 0.25,
+                },
+                iters: match cli.flag("iters") {
+                    Some(s) => s.parse().map_err(|_| "bad --iters")?,
+                    None => 2,
+                },
+            };
+            let analyses: Vec<crate::analyze::AppAnalysis> = apps
+                .iter()
+                .map(|&app| crate::analyze::analyze_app(app, p, &params, &kinds))
+                .collect();
+            let dirty: Vec<&str> = analyses
+                .iter()
+                .filter(|a| !a.clean())
+                .map(|a| a.app.name())
+                .collect();
+            let out = if cli.flag("json").is_some() {
+                Json::Arr(analyses.iter().map(|a| a.to_json()).collect()).render()
+            } else {
+                let mut s = String::new();
+                for a in &analyses {
+                    s.push_str(&a.render());
+                }
+                s.push_str(&format!(
+                    "{} app(s) analyzed: {}\n",
+                    analyses.len(),
+                    if dirty.is_empty() {
+                        "all schedules sound, no latency-hiding stalls predicted".to_string()
+                    } else {
+                        format!("UNSOUND or stalling: {}", dirty.join(", "))
+                    }
+                ));
+                s
+            };
+            if dirty.is_empty() {
+                Ok(out)
+            } else {
+                // Surface the full report, then fail the process so CI
+                // smoke jobs catch regressions.
+                println!("{out}");
+                Err(format!("analysis failed for: {}", dirty.join(", ")))
             }
         }
         "sweep" => {
@@ -484,6 +566,46 @@ mod tests {
             assert!(out.contains("wait_at_cone"), "{sync}: {out}");
         }
         assert!(run(&Cli::parse(&args("run --app jacobi --sync maybe")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_with_verify_and_deps() {
+        for deps in ["heuristic", "dag"] {
+            let cmd = format!(
+                "run --app jacobi --procs 4 --scale 0.05 --iters 1 \
+                 --deps {deps} --verify --json"
+            );
+            let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+            assert!(out.contains("\"races\":0"), "{deps}: {out}");
+            assert!(out.contains("excess_edge_pct"), "{deps}: {out}");
+        }
+        assert!(run(&Cli::parse(&args("run --app jacobi --deps nope")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn analyze_single_app_is_clean() {
+        let out = run(&Cli::parse(&args(
+            "analyze --app jacobi_stencil --procs 4 --scale 0.1 --iters 2",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("sound"), "{out}");
+        assert!(out.contains("predicted stalls"), "{out}");
+        assert!(out.contains("all schedules sound"), "{out}");
+        let json = run(&Cli::parse(&args(
+            "analyze --app jacobi_stencil --procs 4 --scale 0.1 --iters 2 --deps dag --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(json.contains("\"races\": 0") || json.contains("\"races\":0"), "{json}");
+        assert!(json.contains("excess_edge_pct"), "{json}");
+        assert!(!json.contains("heuristic"), "--deps dag restricts the sweep: {json}");
+    }
+
+    #[test]
+    fn analyze_rejects_bad_flags() {
+        assert!(run(&Cli::parse(&args("analyze --deps nope")).unwrap()).is_err());
+        assert!(run(&Cli::parse(&args("analyze --app nope")).unwrap()).is_err());
     }
 
     #[test]

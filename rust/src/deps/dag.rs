@@ -147,6 +147,14 @@ impl DepSystem for DagDeps {
     fn pending(&self) -> usize {
         self.pending
     }
+
+    fn direct_preds(&self, op: OpId) -> Vec<OpId> {
+        if op.idx() < self.preds.len() && self.inserted[op.idx()] {
+            self.preds[op.idx()].clone()
+        } else {
+            Vec::new()
+        }
+    }
 }
 
 #[cfg(test)]

@@ -287,6 +287,19 @@ impl DepSystem for HeuristicDeps {
     fn pending(&self) -> usize {
         self.pending
     }
+
+    fn direct_preds(&self, op: OpId) -> Vec<OpId> {
+        if op.idx() >= self.pred_spans.len() {
+            return Vec::new();
+        }
+        let (s, e) = self.pred_spans[op.idx()];
+        let mut preds = self.pred_data[s as usize..e as usize].to_vec();
+        // The hint arena holds one entry per conflicting *access-node*
+        // pair; dedup to op-level edges for the oracle.
+        preds.sort_unstable();
+        preds.dedup();
+        preds
+    }
 }
 
 #[cfg(test)]

@@ -46,6 +46,16 @@ pub trait DepSystem: ConeSource {
     /// Operations inserted but not yet completed.
     fn pending(&self) -> usize;
 
+    /// The direct predecessors recorded for `op` at insert time — the
+    /// edges the system will actually enforce. Consumed by the
+    /// [`crate::analyze`] hazard oracle, which verifies their
+    /// transitive closure covers every exact conflict edge. Exact for
+    /// [`DagDeps`] (retained `preds`); for [`HeuristicDeps`] it is the
+    /// predecessor-hint list its insert scan records (complete on
+    /// insert-only replays, which is how the oracle calls it). Unknown
+    /// or recycled ids return an empty list.
+    fn direct_preds(&self, op: OpId) -> Vec<OpId>;
+
     /// Bulk-insert a whole batch.
     fn insert_all(&mut self, ops: &[OpNode]) {
         for op in ops {

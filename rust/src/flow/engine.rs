@@ -125,7 +125,7 @@ impl FlowEngine {
             let (packed, stats) = crate::comm::aggregate(&ops, cfg.aggregation);
             state.agg_msgs += stats.packed_msgs;
             state.agg_parts += stats.packed_parts;
-            packed
+            packed.into_owned()
         } else {
             ops
         };

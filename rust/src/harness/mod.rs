@@ -164,6 +164,30 @@ pub fn run_once_traced(
     (report, baseline, sink)
 }
 
+/// Record `app` under latency-hiding and capture, per scheduler run,
+/// the exact post-aggregation op streams the sessions admitted —
+/// the input feed of the [`crate::analyze`] pass (`distnumpy analyze`)
+/// — together with the admission log's epoch entries for the linter's
+/// window rules.
+pub fn captured_streams(
+    app: AppId,
+    params: &AppParams,
+    cfg: SchedCfg,
+) -> (crate::sched::CapturedStreams, Vec<crate::flow::EpochEntry>) {
+    let mut ctx = Context::sim(cfg, Policy::LatencyHiding);
+    ctx.state.capture = Some(Vec::new());
+    record(app, &mut ctx, params);
+    ctx.flush();
+    assert!(
+        ctx.error.is_none(),
+        "capture run must complete: {:?}",
+        ctx.error
+    );
+    let epochs = ctx.state.flow_log.epochs.clone();
+    let streams = ctx.state.capture.take().unwrap_or_default();
+    (streams, epochs)
+}
+
 /// Produce one speedup figure (Figs. 11–18).
 pub fn figure(
     app: AppId,

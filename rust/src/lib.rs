@@ -28,8 +28,13 @@
 //!   event-sourced tracing layer [`trace`] (per-op timelines, wait
 //!   attribution, Perfetto export, critical-path analysis; threaded
 //!   through every session engine via the sink on
-//!   [`sched::ExecState`]) — executing over a discrete-event simulated
-//!   cluster ([`cluster`], [`net`]) or with real numerics ([`exec`]).
+//!   [`sched::ExecState`]), and the schedule analyzer [`analyze`]
+//!   (hazard oracle proving the dependency systems sound against the
+//!   exact conflict closure, static naive-stall prediction, overlap
+//!   linter; runs standalone via `distnumpy analyze` or on every
+//!   drained wave under `SchedCfg::verify_deps`) — executing over a
+//!   discrete-event simulated cluster ([`cluster`], [`net`]) or with
+//!   real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
 //!   under `artifacts/` (see `python/compile/model.py`).
 //! * **L1 (Pallas)**: the per-block kernels those graphs call
@@ -42,6 +47,7 @@
 //! [`apps`] regenerate every figure of the paper's evaluation through
 //! [`harness`].
 
+pub mod analyze;
 pub mod apps;
 pub mod array;
 pub mod cluster;

@@ -87,6 +87,20 @@ pub struct RunReport {
     pub flow_window_final: u64,
     /// Adaptive-window decisions taken over the run.
     pub window_decisions: u64,
+    /// Data races found by the [`crate::analyze`] hazard oracle under
+    /// `SchedCfg::verify_deps` (always 0 on a completed run — a race
+    /// aborts it). 0 when verification was off.
+    pub races: u64,
+    /// Direct dependency edges the oracle checked.
+    pub dep_edges: u64,
+    /// Checked direct edges no conflict path justifies (lost overlap).
+    pub excess_edges: u64,
+    /// Conflict-free op pairs the dependency closure serialized.
+    pub serialized_pairs: u64,
+    /// Scheduler runs the static stall predictor flagged.
+    pub predicted_stalls: u64,
+    /// Linter diagnostics across the verified runs.
+    pub lints: u64,
 }
 
 impl RunReport {
@@ -165,6 +179,12 @@ impl RunReport {
         self.recorder_clock = self.recorder_clock.max(other.recorder_clock);
         self.flow_window_final = self.flow_window_final.max(other.flow_window_final);
         self.window_decisions += other.window_decisions;
+        self.races += other.races;
+        self.dep_edges += other.dep_edges;
+        self.excess_edges += other.excess_edges;
+        self.serialized_pairs += other.serialized_pairs;
+        self.predicted_stalls += other.predicted_stalls;
+        self.lints += other.lints;
     }
 
     /// Wait time of the collective root (rank 0) — the hot spot flat
@@ -237,7 +257,21 @@ impl RunReport {
         o.push("admission_latency", self.admission_latency.into());
         o.push("flow_window_final", self.flow_window_final.into());
         o.push("window_decisions", self.window_decisions.into());
+        o.push("races", self.races.into());
+        o.push("excess_edge_pct", self.excess_edge_pct().into());
+        o.push("predicted_stalls", self.predicted_stalls.into());
+        o.push("lints", self.lints.into());
         o
+    }
+
+    /// Share of oracle-checked direct edges no conflict justifies (%);
+    /// 0 when verification never ran.
+    pub fn excess_edge_pct(&self) -> f64 {
+        if self.dep_edges == 0 {
+            0.0
+        } else {
+            self.excess_edges as f64 / self.dep_edges as f64 * 100.0
+        }
     }
 }
 
@@ -296,6 +330,10 @@ mod tests {
         assert!(s.contains("admission_latency"));
         assert!(s.contains("flow_window_final"));
         assert!(s.contains("window_decisions"));
+        assert!(s.contains("races"));
+        assert!(s.contains("excess_edge_pct"));
+        assert!(s.contains("predicted_stalls"));
+        assert!(s.contains("lints"));
     }
 
     #[test]

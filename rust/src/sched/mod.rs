@@ -29,7 +29,7 @@ pub use blocking::run_blocking;
 pub use lh::run_latency_hiding;
 pub use naive::run_naive;
 pub use session::SchedSession;
-pub use state::ExecState;
+pub use state::{CapturedStreams, ExecState};
 pub use crate::sync::SyncMode;
 
 use crate::cluster::{MachineSpec, Placement};
@@ -55,6 +55,15 @@ pub enum DepsKind {
 }
 
 impl DepsKind {
+    /// Parse a CLI name (`heuristic` / `dag`).
+    pub fn parse(s: &str) -> Option<DepsKind> {
+        match s {
+            "heuristic" => Some(DepsKind::Heuristic),
+            "dag" => Some(DepsKind::Dag),
+            _ => None,
+        }
+    }
+
     pub fn build(self) -> Box<dyn DepSystem> {
         match self {
             DepsKind::Heuristic => Box::new(HeuristicDeps::new()),
@@ -113,6 +122,12 @@ pub struct SchedCfg {
     /// Event-sourced tracing ([`crate::trace`]; CLI `--trace`): disabled
     /// by default — the sink on [`ExecState`] is then a no-op.
     pub trace: crate::trace::TraceCfg,
+    /// Run the [`crate::analyze`] hazard oracle on every drained wave
+    /// (CLI `--verify`): recompute the exact conflict edges of the ops
+    /// the session executed and hard-error if the active dependency
+    /// system missed one. Off by default — the verification replay is
+    /// O(ops²/64) per wave.
+    pub verify_deps: bool,
 }
 
 impl SchedCfg {
@@ -129,6 +144,7 @@ impl SchedCfg {
             flow: FlowCfg::default(),
             flush_threshold: DEFAULT_FLUSH_THRESHOLD,
             trace: crate::trace::TraceCfg::default(),
+            verify_deps: false,
         }
     }
 }
@@ -144,6 +160,10 @@ pub enum SchedError {
         executed: u64,
         total: u64,
         blocked_recvs: u64,
+        /// The rendered rank/tag wait chain behind the parked receives
+        /// ([`crate::analyze::stalls::witness_cycle`]); empty when no
+        /// receive was parked (pure dependency wedge).
+        cycle: String,
     },
     /// Internal scheduler invariant violation (a bug, not a program
     /// property): progress stopped with no blocked receive to blame.
@@ -157,11 +177,18 @@ impl std::fmt::Display for SchedError {
                 executed,
                 total,
                 blocked_recvs,
-            } => write!(
-                f,
-                "deadlock detected: {executed} of {total} operations executed \
-                 ({blocked_recvs} receives blocked on unposted sends)"
-            ),
+                cycle,
+            } => {
+                write!(
+                    f,
+                    "deadlock detected: {executed} of {total} operations executed \
+                     ({blocked_recvs} receives blocked on unposted sends)"
+                )?;
+                if !cycle.is_empty() {
+                    write!(f, "; cycle: {cycle}")?;
+                }
+                Ok(())
+            }
             SchedError::Stall(s) => write!(f, "internal scheduler stall: {s}"),
         }
     }
@@ -223,7 +250,7 @@ pub fn execute_epoch(
     state.n_epochs += 1;
     if cfg.aggregation >= 2 {
         let (packed, stats) = crate::comm::aggregate(ops, cfg.aggregation);
-        run(packed, backend, state)?;
+        run(packed.into_owned(), backend, state)?;
         state.agg_msgs += stats.packed_msgs;
         state.agg_parts += stats.packed_parts;
         Ok(())

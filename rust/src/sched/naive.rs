@@ -271,10 +271,18 @@ impl NaiveSession {
                     ops.len()
                 )));
             }
+            // Name the wait chain: which rank is parked on which tag,
+            // and where the chain bites its own tail. Shares the
+            // renderer with the static predictor, so the runtime error
+            // and `distnumpy analyze` describe the same cycle.
+            let mut parked: Vec<(Rank, Tag)> =
+                self.parked.iter().map(|(&t, &(r, _))| (r, t)).collect();
+            parked.sort_unstable();
             return Err(SchedError::Deadlock {
                 executed: self.executed,
                 total: ops.len() as u64,
                 blocked_recvs: self.parked.len() as u64,
+                cycle: crate::analyze::stalls::witness_cycle(ops, &parked),
             });
         }
         Ok(())
@@ -347,9 +355,11 @@ mod tests {
                 executed,
                 total,
                 blocked_recvs,
+                cycle,
             }) => {
                 assert!(executed < total);
                 assert!(blocked_recvs > 0, "a deadlock names its blocked receives");
+                assert!(cycle.contains("rank"), "the error names the wait chain: {cycle}");
             }
             Ok(_) => {
                 // Depending on interleaving the naive order *may* squeak

@@ -53,6 +53,14 @@ pub struct SchedSession {
     injected: bool,
     counted: usize,
     eng: Engine,
+    /// `SchedCfg::verify_deps`: run the hazard oracle over the injected
+    /// stream on every drain, with this dependency system.
+    verify: Option<super::DepsKind>,
+    /// Stream prefix already verified/linted (the oracle re-runs on the
+    /// full stream and deltas its counters against these).
+    verified: crate::analyze::HazardStats,
+    verified_lints: u64,
+    predicted: bool,
 }
 
 impl SchedSession {
@@ -72,6 +80,10 @@ impl SchedSession {
             injected: false,
             counted: 0,
             eng,
+            verify: cfg.verify_deps.then_some(cfg.deps),
+            verified: crate::analyze::HazardStats::default(),
+            verified_lints: 0,
+            predicted: false,
         }
     }
 
@@ -111,6 +123,12 @@ impl SchedSession {
             let horizon = ts.iter().cloned().fold(f64::INFINITY, f64::min);
             if horizon.is_finite() {
                 self.pump_until(horizon, backend, st);
+            }
+        }
+        if let Some(cap) = st.capture.as_mut() {
+            match cap.last_mut() {
+                Some((run, stream)) if *run == st.run_id => stream.extend(ops.iter().cloned()),
+                _ => cap.push((st.run_id, ops.clone())),
             }
         }
         self.ops.extend(ops);
@@ -179,6 +197,40 @@ impl SchedSession {
         }
         super::count_epoch_ops(st, &self.ops[self.counted..]);
         self.counted = self.ops.len();
+        self.verify_drained(st)?;
+        Ok(())
+    }
+
+    /// `SchedCfg::verify_deps`: after a drain, prove the dependency
+    /// system ordered every exact conflict edge of the stream executed
+    /// so far. The oracle re-checks the full stream (its closure is
+    /// prefix-stable, so counters are deltaed against the last check)
+    /// and a missed edge — a data race the scheduler could have
+    /// exploited — is a hard [`SchedError::Stall`]. Pure bookkeeping:
+    /// no clock, wait or retirement state is touched, so verified runs
+    /// are bit-identical to unverified ones.
+    fn verify_drained(&mut self, st: &mut ExecState) -> Result<(), SchedError> {
+        let Some(kind) = self.verify else {
+            return Ok(());
+        };
+        if self.ops.len() == self.verified.ops {
+            return Ok(());
+        }
+        let stats = crate::analyze::hazards::check(&self.ops, kind).map_err(|race| {
+            st.verify_races += 1;
+            SchedError::Stall(format!("verify_deps: {race}"))
+        })?;
+        st.verify_dep_edges += stats.dep_edges - self.verified.dep_edges;
+        st.verify_excess_edges += stats.excess_edges - self.verified.excess_edges;
+        st.verify_serialized_pairs += stats.serialized_pairs - self.verified.serialized_pairs;
+        self.verified = stats;
+        let lints = crate::analyze::lint::lint_stream(&self.ops).len() as u64;
+        st.verify_lints += lints.saturating_sub(self.verified_lints);
+        self.verified_lints = lints;
+        if !self.predicted && crate::analyze::stalls::predict(self.policy, &self.ops).is_some() {
+            self.predicted = true;
+            st.verify_predicted += 1;
+        }
         Ok(())
     }
 }

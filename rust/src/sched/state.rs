@@ -118,7 +118,31 @@ pub struct ExecState {
     pub n_comm: u64,
     pub agg_msgs: u64,
     pub agg_parts: u64,
+    // -- analyzer hooks ([`crate::analyze`]) --
+    /// When set, every [`crate::sched::SchedSession::inject`] appends
+    /// the post-aggregation, renumbered ops it admitted, keyed by the
+    /// session's run id — the capture feed of `distnumpy analyze`
+    /// ([`crate::harness::captured_streams`]). `None` (the default)
+    /// costs nothing.
+    pub capture: Option<CapturedStreams>,
+    /// Data races found by [`SchedCfg::verify_deps`] (always 0 on a
+    /// completed run — a race is a hard error).
+    pub verify_races: u64,
+    /// Direct dependency edges the verifier checked.
+    pub verify_dep_edges: u64,
+    /// Spurious direct edges (no conflict path justifies them).
+    pub verify_excess_edges: u64,
+    /// Conflict-free op pairs the dependency closure serialized.
+    pub verify_serialized_pairs: u64,
+    /// Scheduler runs the static stall predictor flagged.
+    pub verify_predicted: u64,
+    /// Linter diagnostics emitted across verified runs.
+    pub verify_lints: u64,
 }
+
+/// Captured op streams: one `(run_id, ops)` entry per scheduler run
+/// ([`ExecState::capture`]).
+pub type CapturedStreams = Vec<(u64, Vec<OpNode>)>;
 
 impl ExecState {
     pub fn new(cfg: &SchedCfg) -> Self {
@@ -148,6 +172,13 @@ impl ExecState {
             n_comm: 0,
             agg_msgs: 0,
             agg_parts: 0,
+            capture: None,
+            verify_races: 0,
+            verify_dep_edges: 0,
+            verify_excess_edges: 0,
+            verify_serialized_pairs: 0,
+            verify_predicted: 0,
+            verify_lints: 0,
         }
     }
 
@@ -358,6 +389,12 @@ impl ExecState {
             .last()
             .map_or(0, |&(_, w)| w);
         rep.window_decisions = self.flow_log.window_trace.len() as u64;
+        rep.races = self.verify_races;
+        rep.dep_edges = self.verify_dep_edges;
+        rep.excess_edges = self.verify_excess_edges;
+        rep.serialized_pairs = self.verify_serialized_pairs;
+        rep.predicted_stalls = self.verify_predicted;
+        rep.lints = self.verify_lints;
         rep
     }
 

@@ -293,6 +293,25 @@ impl OpNode {
         !matches!(self.payload, OpPayload::Compute(_))
     }
 
+    /// One-line provenance for diagnostics (the hazard oracle's race
+    /// reports, deadlock messages): id, rank, epoch group and the
+    /// kernel or transfer identity.
+    pub fn describe(&self) -> String {
+        let what = match &self.payload {
+            OpPayload::Compute(t) => format!("compute {:?} ({} elems)", t.kernel, t.elems),
+            OpPayload::Send { peer, tag, bytes, .. } => {
+                format!("send {tag:?} -> rank {} ({bytes} B)", peer.0)
+            }
+            OpPayload::Recv { peer, tag, bytes } => {
+                format!("recv {tag:?} <- rank {} ({bytes} B)", peer.0)
+            }
+        };
+        format!(
+            "op {} [rank {}, group {}: {what}]",
+            self.id.0, self.rank.0, self.group
+        )
+    }
+
     /// (flops, memory bytes) of a compute op for the cost model.
     pub fn compute_cost(&self) -> Option<(f64, f64)> {
         match &self.payload {
@@ -370,6 +389,26 @@ mod tests {
             (Tag(2), SendSrc::Region(Region::scalar())),
         ]);
         assert_eq!(packed.parts(), 2);
+    }
+
+    #[test]
+    fn describe_names_id_rank_and_payload() {
+        let op = OpNode {
+            id: OpId(3),
+            rank: Rank(1),
+            group: 2,
+            payload: OpPayload::Recv {
+                peer: Rank(0),
+                tag: Tag(9),
+                bytes: 64,
+            },
+            accesses: vec![],
+        };
+        let d = op.describe();
+        assert!(d.contains("op 3"), "{d}");
+        assert!(d.contains("rank 1"), "{d}");
+        assert!(d.contains("recv"), "{d}");
+        assert!(d.contains("Tag(9)"), "{d}");
     }
 
     #[test]

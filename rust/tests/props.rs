@@ -445,9 +445,14 @@ fn ring_allgather_deadlocks_naive_with_report() {
             executed,
             total,
             blocked_recvs,
+            cycle,
         }) => {
             assert!(executed < total);
             assert!(blocked_recvs > 0);
+            assert!(
+                cycle.contains("waits on recv") && cycle.contains("rank"),
+                "the deadlock names its wait chain: {cycle}"
+            );
         }
         other => panic!("naive must deadlock on the multi-round ring, got {other:?}"),
     }
@@ -643,12 +648,194 @@ fn naive_reports_cycle_through_aggregated_message() {
             executed,
             total,
             blocked_recvs,
+            cycle,
         }) => {
             assert_eq!(executed, 0);
             assert_eq!(total, packed.len() as u64);
             assert_eq!(blocked_recvs, 2, "both parked receives reported");
+            // Satellite (ISSUE 7): the runtime error now carries the
+            // predictor's wait-chain witness, threaded through the
+            // coalesced envelope.
+            assert!(
+                cycle.contains("Tag(100)"),
+                "the witness names the staged-recv tag: {cycle}"
+            );
+            assert!(
+                cycle.contains("cycle"),
+                "the chain closes back on itself: {cycle}"
+            );
         }
         other => panic!("naive must report the aggregated cycle, got {other:?}"),
+    }
+
+    // The static predictor reaches the same verdict from the recorded
+    // stream alone — no event loop, no clocks.
+    let pred = distnumpy::analyze::stalls::predict_naive(&packed)
+        .expect("the aggregation cycle must be predicted statically");
+    assert_eq!(pred.executed, 0);
+    assert_eq!(pred.total, packed.len() as u64);
+    assert_eq!(pred.blocked.len(), 2, "same parked receives as the runtime");
+    assert!(
+        pred.blocked.contains(&(Rank(0), Tag(100))),
+        "rank 0 parks on the staged recv: {:?}",
+        pred.blocked
+    );
+    assert!(
+        pred.cycle.contains("Tag(100)") && pred.cycle.contains("cycle"),
+        "predictor and runtime agree on the witness: {}",
+        pred.cycle
+    );
+    // Latency-hiding is statically clean on the same stream.
+    assert!(distnumpy::analyze::stalls::predict(Policy::LatencyHiding, &packed).is_none());
+}
+
+// ---------------------------------------------------------------------
+// Schedule-analyzer properties (analyze/)
+// ---------------------------------------------------------------------
+
+/// The soundness claim of §5.7.2, fuzzed: on randomized op streams the
+/// heuristic's happens-before closure covers the exact conflict
+/// closure (anything less is a data race the oracle must refuse), and
+/// the full DAG records *exactly* the direct conflict edges. On fresh
+/// insert-only replays neither system adds spurious order.
+#[test]
+fn prop_dep_systems_cover_the_exact_conflict_closure() {
+    use distnumpy::analyze::hazards::{check, dep_direct_preds, exact_direct_preds};
+    use distnumpy::sched::DepsKind;
+
+    let mut rng = Rng::new(0x0AC1E);
+    let mut with_edges = 0;
+    for trial in 0..120 {
+        let p = 1 + (trial % 4) as u32;
+        let (_, ops, _) = random_program(&mut rng, p);
+        for kind in [DepsKind::Heuristic, DepsKind::Dag] {
+            let stats = check(&ops, kind)
+                .unwrap_or_else(|r| panic!("trial {trial} {kind:?}: {r}"));
+            assert_eq!(stats.ops, ops.len());
+            assert_eq!(
+                stats.excess_edges, 0,
+                "trial {trial} {kind:?}: insert-only replays record only conflict edges"
+            );
+            assert_eq!(
+                stats.serialized_pairs, 0,
+                "trial {trial} {kind:?}: no op pair is serialized without a conflict path"
+            );
+            if stats.exact_edges > 0 {
+                with_edges += 1;
+            }
+        }
+        assert_eq!(
+            dep_direct_preds(&ops, DepsKind::Dag),
+            exact_direct_preds(&ops),
+            "trial {trial}: the DAG's direct preds are the exact conflict preds"
+        );
+    }
+    assert!(
+        with_edges > 60,
+        "the generator must produce real conflicts ({with_edges} edge-carrying checks)"
+    );
+}
+
+/// Seeded mutation: delete one recorded dependency edge and the oracle
+/// must report it as a data race naming exactly the unordered pair.
+/// Dropping op j's *maximum* direct pred i is never covered
+/// transitively (any other path i -> k -> j needs k > i in j's list).
+#[test]
+fn prop_dropping_one_dep_edge_is_detected_as_a_race() {
+    use distnumpy::analyze::hazards::{check_preds, exact_direct_preds};
+
+    let mut rng = Rng::new(0xFA57);
+    let mut mutated = 0;
+    for trial in 0..60 {
+        let p = 1 + (trial % 4) as u32;
+        let (_, ops, _) = random_program(&mut rng, p);
+        let exact = exact_direct_preds(&ops);
+        let Some(j) = (0..ops.len()).rev().find(|&j| !exact[j].is_empty()) else {
+            continue;
+        };
+        let i = *exact[j].last().expect("non-empty by construction");
+        let mut dep = exact.clone();
+        dep[j].pop();
+        let err = check_preds(&ops, &dep)
+            .expect_err("a dropped max-pred edge cannot be covered transitively");
+        assert_eq!(err.pred, OpId(i), "trial {trial}: race names the missed pred");
+        assert_eq!(err.succ, OpId(j as u32), "trial {trial}: race names the successor");
+        let msg = err.to_string();
+        assert!(msg.contains("data race"), "trial {trial}: {msg}");
+        assert!(
+            msg.contains(&format!("op {j}")),
+            "trial {trial}: provenance names the op: {msg}"
+        );
+        mutated += 1;
+    }
+    assert!(
+        mutated >= 30,
+        "most random programs must carry a droppable edge ({mutated})"
+    );
+}
+
+/// Regression (id recycling): once the heuristic's tables reset for a
+/// new epoch, cone queries for ids beyond the recycled table must fall
+/// back to the conservative whole-epoch [`Cone::Prefix`] — never panic,
+/// never answer an exact cone from stale spans — while live recycled
+/// ids keep answering exactly.
+#[test]
+fn heuristic_cone_prefix_fallback_on_recycled_ids() {
+    use distnumpy::sync::{Cone, ConeSource};
+
+    let rows = 16u64;
+    let mut reg = Registry::new(2);
+    let m = reg.alloc(vec![rows], 4, DType::F32);
+    let mv = reg.full_view(m);
+    let mut bld = OpBuilder::new();
+    bld.ufunc(
+        &reg,
+        Kernel::Add,
+        &mv.slice(&[(1, rows - 1)]),
+        &[&mv.slice(&[(2, rows)]), &mv.slice(&[(0, rows - 2)])],
+    );
+    let epoch1 = bld.finish();
+    let mut heu = HeuristicDeps::new();
+    heu.insert_all(&epoch1);
+    let mut done = 0;
+    loop {
+        let ready = heu.take_ready();
+        if ready.is_empty() {
+            break;
+        }
+        for id in ready {
+            heu.complete(id);
+            done += 1;
+        }
+    }
+    assert_eq!(done, epoch1.len(), "epoch 1 drains");
+    assert_eq!(heu.pending(), 0);
+
+    // Epoch 2 recycles ids from 0; its first insert resets the tables.
+    let mut bld2 = OpBuilder::new();
+    bld2.ufunc(&reg, Kernel::Copy, &mv.slice(&[(0, 4)]), &[&mv.slice(&[(4, 8)])]);
+    let epoch2 = bld2.finish();
+    assert!(
+        epoch2.len() < epoch1.len(),
+        "epoch 2 must be shorter so an epoch-1 id lands out of range \
+         ({} vs {})",
+        epoch2.len(),
+        epoch1.len()
+    );
+    heu.insert_all(&epoch2);
+
+    let stale = OpId(epoch1.len() as u32 - 1);
+    assert!(
+        matches!(heu.cone_of(stale), Cone::Prefix),
+        "an already-recycled id answers with the conservative prefix"
+    );
+    assert!(
+        heu.direct_preds(stale).is_empty(),
+        "stale ids report no preds instead of reading another op's spans"
+    );
+    match heu.cone_of(epoch2[0].id) {
+        Cone::Exact(c) => assert!(c.contains(&epoch2[0].id), "the target is in its own cone"),
+        other => panic!("live recycled ids answer exactly, got {other:?}"),
     }
 }
 
@@ -1005,6 +1192,11 @@ fn prop_flow_and_batch_bit_identical() {
             cfg.deps = deps;
             cfg.flow = flow;
             cfg.flush_threshold = 6; // many threshold submits per run
+            // ISSUE 7: run the hazard oracle on every drained wave of
+            // every config — soundness holds at each flush boundary,
+            // and the bit-identity assertions below double as proof
+            // that verification is timing-invisible.
+            cfg.verify_deps = true;
             let mut ctx = Context::new(
                 cfg,
                 policy,
