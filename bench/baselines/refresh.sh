@@ -1,0 +1,17 @@
+#!/usr/bin/env sh
+# Regenerate the committed perf baselines from the ablation benches.
+# Run from the repository root; commit the resulting JSON diffs after
+# reviewing them (see README.md in this directory).
+set -eu
+
+cd "$(dirname "$0")/../.."
+
+cargo bench --bench ablation_collectives
+cargo bench --bench ablation_sync
+cargo bench --bench ablation_flow
+cargo bench --bench ablation_stream
+cargo bench --bench ablation_deps
+
+for f in BENCH_*.json; do
+    cp -v "$f" bench/baselines/"$f"
+done

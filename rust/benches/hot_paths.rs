@@ -214,6 +214,69 @@ fn main() {
         );
     }
 
+    // -- profiler: the disabled host profiler must be free ----------------
+    {
+        let ops = stencil_batch(16, 4096);
+        let off_cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        let mut on_cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        on_cfg.profile.enabled = true;
+        let off = bench.run(
+            &format!("profile off: latency-hiding DES ({} ops, P=16)", ops.len()),
+            || {
+                run_latency_hiding(&ops, &off_cfg, &mut SimBackend)
+                    .unwrap()
+                    .makespan
+            },
+        );
+        let on = bench.run(
+            &format!("profile on:  latency-hiding DES ({} ops, P=16)", ops.len()),
+            || {
+                run_latency_hiding(&ops, &on_cfg, &mut SimBackend)
+                    .unwrap()
+                    .makespan
+            },
+        );
+        // The profiler reads the host clock, never the virtual one:
+        // the simulated timeline is bit-identical either way.
+        let off_rep = run_latency_hiding(&ops, &off_cfg, &mut SimBackend).unwrap();
+        let on_rep = run_latency_hiding(&ops, &on_cfg, &mut SimBackend).unwrap();
+        assert_eq!(
+            off_rep.makespan.to_bits(),
+            on_rep.makespan.to_bits(),
+            "profiling must not perturb the simulated timeline"
+        );
+        assert!(off_rep.host.is_none(), "the off path records nothing");
+        assert!(
+            on_rep.host.is_some(),
+            "the on path reports host-side phase timings"
+        );
+        println!(
+            "         -> enabled/disabled median ratio {:.3}x\n",
+            on.median / off.median.max(1e-12)
+        );
+        assert!(
+            off.median <= on.median * 1.10,
+            "disabled profiling must add no measurable overhead: \
+             off {:.3e}s vs on {:.3e}s",
+            off.median,
+            on.median
+        );
+    }
+
+    // -- distribution metrics: histogram record throughput ----------------
+    {
+        use distnumpy::metrics::hist::Hist;
+        const N: u64 = 100_000;
+        let s = bench.run("hist: 100k log2-bucket records", || {
+            let mut h = Hist::default();
+            for i in 0..N {
+                h.record((i as f64 + 1.0) * 1.3e-6);
+            }
+            h.n()
+        });
+        println!("         -> {:.1} ns/record\n", s.median / N as f64 * 1e9);
+    }
+
     // -- network post throughput -----------------------------------------
     {
         let spec = MachineSpec::paper();

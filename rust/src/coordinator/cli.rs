@@ -5,6 +5,7 @@
 //!                  [--placement by-node|by-core] [--scale 1.0] [--iters 10]
 //!                  [--deps heuristic|dag] [--json]
 //! distnumpy analyze [--app jacobi] [--deps heuristic|dag|both] [--procs 16] [--json]
+//! distnumpy compare baseline.json new.json [--threshold 0.1] [--json]
 //! distnumpy sweep  --app jacobi_stencil [--procs 1,2,4,8,16,32,64,128] [--json]
 //! distnumpy report wait [--procs 16]
 //! distnumpy fig19  [--procs 8,16,32,64,128]
@@ -111,6 +112,12 @@ USAGE:
                        # --verify re-checks every drained wave against
                        # the exact-conflict hazard oracle (hard error
                        # on a missed dependency edge)
+                   [--profile]
+                       # host-side self-profiler: wall time per
+                       # scheduler phase (record/admit/inject/pump/
+                       # drain/verify) + events/sec, in a \"host\"
+                       # section of the JSON report; simulated clocks
+                       # are untouched
                    [--json]
   distnumpy analyze [--app <name>] [--deps heuristic|dag|both] [--procs P]
                     [--scale S] [--iters N] [--json]
@@ -119,6 +126,11 @@ USAGE:
                        # naive-deadlock prediction, overlap lints.
                        # Default: all apps, both dep systems. Exits
                        # non-zero on any race or predicted lh stall.
+  distnumpy compare <baseline.json> <new.json> [--threshold 0.1] [--json]
+                       # perf-regression gate: compares two run/bench
+                       # JSON reports metric-by-metric (whitelisted,
+                       # direction-aware) and exits non-zero when any
+                       # metric regresses beyond the relative threshold
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
                                              # Jacobi staleness/wait trade-off (JSON)
@@ -180,6 +192,10 @@ fn run(cli: &Cli) -> Result<String, String> {
             // `--verify` re-runs the hazard oracle on every drained
             // wave; a missed dependency edge aborts the run.
             cfg.verify_deps = cli.flag("verify").is_some();
+            // `--profile` turns on the host-side self-profiler: wall
+            // time per scheduler phase + events/sec, in a "host"
+            // section of the JSON report. Virtual time is untouched.
+            cfg.profile.enabled = cli.flag("profile").is_some();
             if let Some(t) = cli.flag("flush-threshold") {
                 cfg.flush_threshold = t.parse().map_err(|_| "bad --flush-threshold")?;
             }
@@ -224,10 +240,11 @@ fn run(cli: &Cli) -> Result<String, String> {
             cfg.trace.enabled = trace_path.is_some();
             let flow_cfg = cfg.flow;
             let flush_threshold = cfg.flush_threshold;
-            let (report, baseline, sink) =
+            let (mut report, baseline, sink) =
                 harness::run_once_traced(app, policy, &params, cfg);
             let mut trace_extras: Option<(crate::trace::critical::CriticalPath, Json)> = None;
             if let Some(path) = &trace_path {
+                let t0 = std::time::Instant::now();
                 let timeline = crate::trace::export::perfetto(&sink, p as usize);
                 std::fs::write(path, timeline.render())
                     .map_err(|e| format!("cannot write trace '{path}': {e}"))?;
@@ -235,6 +252,19 @@ fn run(cli: &Cli) -> Result<String, String> {
                     crate::trace::critical::critical_path(&sink, p as usize, report.makespan),
                     crate::trace::critical::epoch_series(&sink, p as usize),
                 ));
+                if let Some(h) = report.host.as_mut() {
+                    h.add_nanos(
+                        crate::profile::Phase::TraceExport,
+                        t0.elapsed().as_nanos() as u64,
+                    );
+                }
+            }
+            if report.trace_dropped > 0 {
+                eprintln!(
+                    "warning: trace ring full — {} event(s) dropped; \
+                     timeline and critical path are partial",
+                    report.trace_dropped
+                );
             }
             if cli.flag("json").is_some() {
                 let mut o = report.to_json();
@@ -257,8 +287,8 @@ fn run(cli: &Cli) -> Result<String, String> {
                 if let Some((cp, series)) = trace_extras {
                     o.push("critical_path", cp.to_json());
                     o.push("epoch_series", series);
+                    // `trace_dropped` already rides in the base report.
                     o.push("trace_events", sink.len().into());
-                    o.push("trace_dropped", sink.dropped().into());
                 }
                 Ok(o.render())
             } else {
@@ -349,6 +379,43 @@ fn run(cli: &Cli) -> Result<String, String> {
                 // smoke jobs catch regressions.
                 println!("{out}");
                 Err(format!("analysis failed for: {}", dirty.join(", ")))
+            }
+        }
+        "compare" => {
+            const USAGE: &str =
+                "usage: distnumpy compare <baseline.json> <new.json> [--threshold X] [--json]";
+            let base_path = cli.positional.first().ok_or(USAGE)?;
+            let new_path = cli.positional.get(1).ok_or(USAGE)?;
+            let threshold: f64 = match cli.flag("threshold") {
+                Some(s) => s.parse().map_err(|_| "bad --threshold")?,
+                None => crate::metrics::compare::DEFAULT_THRESHOLD,
+            };
+            let read = |path: &str| {
+                std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read '{path}': {e}"))
+                    .and_then(|s| {
+                        Json::parse(&s).map_err(|e| format!("cannot parse '{path}': {e}"))
+                    })
+            };
+            let base = read(base_path)?;
+            let new = read(new_path)?;
+            let outcome = crate::metrics::compare::compare(&base, &new, threshold);
+            let n_bad = outcome.n_regressed();
+            let out = if cli.flag("json").is_some() {
+                outcome.to_json().render()
+            } else {
+                outcome.render_text()
+            };
+            if n_bad == 0 {
+                Ok(out)
+            } else {
+                // Print the full report, then fail the process so the
+                // CI perf gate trips on any regressed metric.
+                println!("{out}");
+                Err(format!(
+                    "{n_bad} metric(s) regressed beyond {:.0}% vs {base_path}",
+                    threshold * 100.0
+                ))
             }
         }
         "sweep" => {
@@ -580,6 +647,55 @@ mod tests {
             assert!(out.contains("excess_edge_pct"), "{deps}: {out}");
         }
         assert!(run(&Cli::parse(&args("run --app jacobi --deps nope")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_with_profile_emits_host_section() {
+        let on = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --profile --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(on.contains("\"host\""), "{on}");
+        assert!(on.contains("events_per_sec"), "{on}");
+        assert!(on.contains("\"dist\""), "{on}");
+        let off = run(&Cli::parse(&args(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(!off.contains("\"host\""), "{off}");
+    }
+
+    #[test]
+    fn compare_gates_regressions() {
+        let dir = std::env::temp_dir();
+        let base_p = dir.join("distnumpy_cmp_base.json");
+        let good_p = dir.join("distnumpy_cmp_good.json");
+        let bad_p = dir.join("distnumpy_cmp_bad.json");
+        std::fs::write(&base_p, r#"{"makespan":10.0,"wait_pct":20.0}"#).unwrap();
+        std::fs::write(&good_p, r#"{"makespan":9.5,"wait_pct":20.5}"#).unwrap();
+        std::fs::write(&bad_p, r#"{"makespan":10.0,"wait_pct":30.0}"#).unwrap();
+        let base = base_p.to_str().unwrap();
+        // Self-compare is always clean.
+        let cmd = format!("compare {base} {base}");
+        let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+        assert!(out.contains("0 regressed"), "{out}");
+        // Small drift within the threshold passes.
+        let cmd = format!("compare {base} {}", good_p.to_str().unwrap());
+        assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
+        // A >10% wait_pct regression fails the process.
+        let cmd = format!("compare {base} {}", bad_p.to_str().unwrap());
+        let err = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
+        // ...unless the threshold is loosened past it.
+        let cmd = format!("compare {base} {} --threshold 0.6", bad_p.to_str().unwrap());
+        assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
+        // Bad inputs are reported, not panicked on.
+        assert!(run(&Cli::parse(&args("compare /no/such.json /no/such.json"))
+            .unwrap())
+        .is_err());
+        assert!(run(&Cli::parse(&args("compare")).unwrap()).is_err());
     }
 
     #[test]

@@ -119,6 +119,24 @@ impl FlowEngine {
         backend: &mut dyn Backend,
         state: &mut ExecState,
     ) -> Result<(), SchedError> {
+        // Profiler phase `Admit` spans the whole admission path —
+        // pricing, window gating, splicing — including any nested
+        // `Inject`/`Pump` work (those phases alone feed the events/sec
+        // denominator, so the overlap never double-bills).
+        let t0 = state.prof.start();
+        let res = self.submit_inner(ops, policy, cfg, backend, state);
+        state.prof.stop(crate::profile::Phase::Admit, t0);
+        res
+    }
+
+    fn submit_inner(
+        &mut self,
+        ops: Vec<OpNode>,
+        policy: Policy,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        state: &mut ExecState,
+    ) -> Result<(), SchedError> {
         // Aggregation is a per-flush-epoch rewrite ("ready in the same
         // flush epoch"), so it runs before any merge or splice.
         let ops = if cfg.aggregation >= 2 {
@@ -417,9 +435,11 @@ fn range_unretired(state: &ExecState, lo: usize, hi: usize) -> bool {
 /// pathological stream slipped past the gate anyway, the live run
 /// still fails loudly and poisons the context — never silently.
 fn naive_wave_admissible(ops: Vec<OpNode>, cfg: &SchedCfg) -> bool {
-    // Dry runs never trace: the scratch sink would only burn memory.
+    // Dry runs never trace or profile: the scratch sink would only
+    // burn memory, and scratch wall time is not the real run's.
     let mut cfg = cfg.clone();
     cfg.trace.enabled = false;
+    cfg.profile.enabled = false;
     let mut scratch = ExecState::new(&cfg);
     let mut sim = crate::exec::SimBackend;
     let mut session = SchedSession::new(Policy::Naive, &cfg, &mut scratch);

@@ -21,6 +21,7 @@
 //! operation carries the admission time of its epoch; the schedulers
 //! gate execution on it ([`crate::sched::ExecState::gate_admission`]).
 
+use crate::metrics::hist::Hist;
 use crate::types::{Rank, VTime};
 use crate::ufunc::OpNode;
 
@@ -59,6 +60,10 @@ pub struct AdmissionLog {
     /// Adaptive-window decisions (`FlowWindow::Auto`): `(epoch index at
     /// the decision, new window)`. Empty under fixed windows.
     pub window_trace: Vec<(u64, u64)>,
+    /// Distribution of the streamed per-epoch admission latencies —
+    /// the same values `mean_admission_latency` averages, so a stalled
+    /// epoch shows up in the tail instead of vanishing into the mean.
+    pub latency_hist: Hist,
     // -- cached aggregates, maintained by `submitted` so the per-flush
     // -- report snapshot stays O(1) instead of rescanning the log --
     /// `record_done` of the most recent *streamed* epoch (recording
@@ -75,8 +80,10 @@ impl AdmissionLog {
     pub fn submitted(&mut self, record_start: VTime, record_done: VTime, n_ops: usize) -> usize {
         if record_done.is_finite() {
             // Streamed epoch: fold it into the O(1) report aggregates.
-            self.latency_total += record_done - self.last_record_done;
+            let latency = record_done - self.last_record_done;
+            self.latency_total += latency;
             self.latency_n += 1;
+            self.latency_hist.record(latency);
             self.last_record_done = record_done;
         }
         self.epochs.push(EpochEntry {
@@ -319,6 +326,13 @@ mod tests {
         assert_eq!(log.max_in_flight, 2, "peak survives retirement");
         assert_eq!(log.recorder_clock(), 1.25);
         assert!((log.mean_admission_latency() - 0.625).abs() < 1e-12);
+        // The histogram sees the same per-epoch latencies the mean
+        // averages: its exact sum reconciles with the O(1) aggregate.
+        assert_eq!(log.latency_hist.n(), 2);
+        assert!((log.latency_hist.sum() - 1.25).abs() < 1e-12);
+        assert!(
+            (log.latency_hist.mean() - log.mean_admission_latency()).abs() < 1e-12
+        );
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct RunMetrics {
     pub overlap_pct: f64,
     /// High-water mark of live staging buffers.
     pub peak_live_stages: u64,
+    /// p99 of the per-rank wait intervals (all causes except Admission)
+    /// from the always-on distribution metrics — the tail the mean
+    /// `wait_pct` hides (s).
+    pub wait_p99: VTime,
 }
 
 impl RunMetrics {
@@ -67,6 +71,7 @@ impl RunMetrics {
             wait_at_admission: report.wait_at_admission,
             overlap_pct: report.overlap_pct(),
             peak_live_stages: report.peak_live_stages,
+            wait_p99: report.dist.wait_all().p99(),
         }
     }
 
@@ -86,6 +91,7 @@ impl RunMetrics {
         o.push("wait_at_admission", self.wait_at_admission.into());
         o.push("overlap_pct", self.overlap_pct.into());
         o.push("peak_live_stages", self.peak_live_stages.into());
+        o.push("wait_p99", self.wait_p99.into());
         o
     }
 }

@@ -53,6 +53,7 @@ use crate::exec::Backend;
 use crate::flow::FlowEngine;
 use crate::layout::ViewSpec;
 use crate::metrics::RunReport;
+use crate::profile::Phase;
 use crate::sched::{execute_epoch, ExecState, Policy, SchedCfg, SchedError, SyncMode};
 use crate::types::{BaseId, DType, OpId, Rank, Tag, VTime};
 use crate::ufunc::{Access, ComputeTask, Dst, Kernel, OpBuilder, Operand};
@@ -149,7 +150,11 @@ impl Context {
 
     /// Record an elementwise ufunc `out = kernel(ins…)`.
     pub fn ufunc(&mut self, kernel: Kernel, out: &ViewSpec, ins: &[&ViewSpec]) {
+        // Profiler phase `Record`: fragment split + op-node build (the
+        // flush it may trigger bills to the admit/drain phases).
+        let t0 = self.state.prof.start();
         self.builder.ufunc(&self.reg, kernel, out, ins);
+        self.state.prof.stop(Phase::Record, t0);
         self.array_ops_since_flush += 1;
         self.maybe_flush();
     }
@@ -271,9 +276,11 @@ impl Context {
     /// [`crate::comm`]).
     pub fn sum_deferred(&mut self, v: &ViewSpec) -> ScalarFuture {
         let collective = self.cfg.collective;
+        let t0 = self.state.prof.start();
         let tag = self
             .builder
             .reduce(&self.reg, Kernel::PartialSum, &[v], collective);
+        self.state.prof.stop(Phase::Record, t0);
         self.state.stages.pin(Rank(0), tag);
         self.array_ops_since_flush += 1;
         self.maybe_flush();
@@ -284,9 +291,11 @@ impl Context {
     /// every *k* iterations without erecting a barrier per iteration.
     pub fn sum_absdiff_deferred(&mut self, a: &ViewSpec, b: &ViewSpec) -> ScalarFuture {
         let collective = self.cfg.collective;
+        let t0 = self.state.prof.start();
         let tag =
             self.builder
                 .reduce(&self.reg, Kernel::PartialAbsDiffSum, &[a, b], collective);
+        self.state.prof.stop(Phase::Record, t0);
         self.state.stages.pin(Rank(0), tag);
         self.array_ops_since_flush += 1;
         self.maybe_flush();

@@ -32,7 +32,12 @@
 //!   (hazard oracle proving the dependency systems sound against the
 //!   exact conflict closure, static naive-stall prediction, overlap
 //!   linter; runs standalone via `distnumpy analyze` or on every
-//!   drained wave under `SchedCfg::verify_deps`) — executing over a
+//!   drained wave under `SchedCfg::verify_deps`), the always-on
+//!   distribution metrics [`metrics::hist`] (log2 wait/message/latency
+//!   histograms reconciled against the scalar accounting) with the
+//!   perf-regression comparator [`metrics::compare`], and the
+//!   host-side self-profiler [`profile`] (phase wall timers and DES
+//!   events/sec under `--profile`) — executing over a
 //!   discrete-event simulated cluster ([`cluster`], [`net`]) or with
 //!   real numerics ([`exec`]).
 //! * **L2 (JAX)**: block-level compute graphs, AOT-lowered to HLO text
@@ -61,6 +66,7 @@ pub mod layout;
 pub mod lazy;
 pub mod metrics;
 pub mod net;
+pub mod profile;
 pub mod runtime;
 pub mod sched;
 pub mod summa;

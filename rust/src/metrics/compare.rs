@@ -1,0 +1,316 @@
+//! Perf-regression comparator: `distnumpy compare <baseline> <new>`.
+//!
+//! Walks two JSON reports (run JSON or the ablation `BENCH_*.json`
+//! artifacts) in lockstep and gates a whitelist of *virtual-time*
+//! metrics with direction-aware relative thresholds. Only metrics the
+//! simulator computes deterministically are gated — the committed
+//! baselines under `bench/baselines/` reproduce exactly on any machine.
+//! Host wall-clock sections (`host`, bench `secs`/`median`/`stddev`)
+//! are machine-dependent and never gated; unknown keys are counted as
+//! ignored rather than failed, so adding a report field cannot break
+//! the gate retroactively.
+//!
+//! A metric regresses when it moves in its bad direction by more than
+//! `threshold` (relative to the baseline magnitude, default 10%).
+//! Near-zero pairs (both sides under an absolute floor) always pass:
+//! a 0 → 1e-15 wobble is noise, while 0 → anything material is an
+//! infinite relative regression and fails, which is exactly right for
+//! a deterministic simulator.
+
+use crate::util::json::Json;
+
+/// Default relative threshold (10%).
+pub const DEFAULT_THRESHOLD: f64 = 0.10;
+
+/// Both sides below this magnitude compare equal.
+const ABS_FLOOR: f64 = 1e-9;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    LowerBetter,
+    HigherBetter,
+}
+
+/// The gated-metric whitelist, keyed on the JSON leaf name.
+fn direction(key: &str) -> Option<Direction> {
+    use Direction::*;
+    match key {
+        "makespan" | "total_wait" | "wait_pct" | "wait_root" | "wait_at_barrier"
+        | "wait_at_cone" | "wait_at_admission" | "admission_latency" | "overhead"
+        | "n_messages" | "bytes_inter" | "bytes_intra" | "excess_edge_pct"
+        | "predicted_stalls" | "lints" | "races" | "trace_dropped" | "wait_p99" => {
+            Some(LowerBetter)
+        }
+        "speedup" | "overlap_pct" | "utilization" | "events_per_sec" => Some(HigherBetter),
+        _ => None,
+    }
+}
+
+/// One gated metric's comparison.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Dotted path into the report, e.g. `ablation.3.wait_pct`.
+    pub path: String,
+    pub base: f64,
+    pub new: f64,
+    /// Signed relative change in the *bad* direction: positive means
+    /// worse, and `rel > threshold` is a regression.
+    pub rel: f64,
+    pub regressed: bool,
+}
+
+/// The full comparison outcome.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    pub rows: Vec<Row>,
+    /// Numeric leaves present in both reports but not on the gated
+    /// whitelist (host wall clock, config identity, unknown fields).
+    pub ignored: usize,
+    pub threshold: f64,
+}
+
+impl CompareOutcome {
+    pub fn regressions(&self) -> impl Iterator<Item = &Row> {
+        self.rows.iter().filter(|r| r.regressed)
+    }
+
+    pub fn n_regressed(&self) -> usize {
+        self.regressions().count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for r in &self.rows {
+            let mut o = Json::obj();
+            o.push("metric", r.path.as_str().into());
+            o.push("base", r.base.into());
+            o.push("new", r.new.into());
+            o.push("rel", r.rel.into());
+            o.push("regressed", r.regressed.into());
+            rows.push(o);
+        }
+        let mut o = Json::obj();
+        o.push("threshold", self.threshold.into());
+        o.push("checked", self.rows.len().into());
+        o.push("ignored", self.ignored.into());
+        o.push("regressions", self.n_regressed().into());
+        o.push("rows", Json::Arr(rows));
+        o
+    }
+
+    /// Human-readable report: regressions first, then the verdict line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for r in self.regressions() {
+            out.push_str(&format!(
+                "REGRESSION {:<40} {:>14.6e} -> {:>14.6e}  ({:+.1}%)\n",
+                r.path,
+                r.base,
+                r.new,
+                r.rel * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "{} metrics gated, {} ignored, {} regressed (threshold {:.0}%)\n",
+            self.rows.len(),
+            self.ignored,
+            self.n_regressed(),
+            self.threshold * 100.0
+        ));
+        out
+    }
+}
+
+/// Compare two parsed reports. Walks objects by shared key and arrays
+/// by index; leaves present on only one side are skipped (a renamed or
+/// added metric is not a regression).
+pub fn compare(base: &Json, new: &Json, threshold: f64) -> CompareOutcome {
+    let mut out = CompareOutcome {
+        threshold,
+        ..Default::default()
+    };
+    walk(base, new, "", &mut out);
+    out
+}
+
+fn numeric(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(v) => Some(*v),
+        Json::Int(v) => Some(*v as f64),
+        _ => None,
+    }
+}
+
+fn walk(base: &Json, new: &Json, path: &str, out: &mut CompareOutcome) {
+    match (base, new) {
+        (Json::Obj(bs), Json::Obj(_)) => {
+            for (k, bv) in bs {
+                // Host wall clock is machine-dependent: skip the whole
+                // subtree without even counting its leaves as ignored.
+                if k == "host" {
+                    continue;
+                }
+                if let Some(nv) = new.get(k) {
+                    let sub = join(path, k);
+                    walk(bv, nv, &sub, out);
+                }
+            }
+        }
+        (Json::Arr(bs), Json::Arr(ns)) => {
+            for (i, (bv, nv)) in bs.iter().zip(ns).enumerate() {
+                let sub = join(path, &i.to_string());
+                walk(bv, nv, &sub, out);
+            }
+        }
+        _ => {
+            let (Some(b), Some(n)) = (numeric(base), numeric(new)) else {
+                return;
+            };
+            let key = path.rsplit('.').next().unwrap_or(path);
+            let Some(dir) = direction(key) else {
+                out.ignored += 1;
+                return;
+            };
+            if b.abs() < ABS_FLOOR && n.abs() < ABS_FLOOR {
+                out.rows.push(Row {
+                    path: path.to_string(),
+                    base: b,
+                    new: n,
+                    rel: 0.0,
+                    regressed: false,
+                });
+                return;
+            }
+            // Positive delta = moved in the bad direction.
+            let delta = match dir {
+                Direction::LowerBetter => n - b,
+                Direction::HigherBetter => b - n,
+            };
+            let rel = delta / b.abs().max(ABS_FLOOR);
+            out.rows.push(Row {
+                path: path.to_string(),
+                base: b,
+                new: n,
+                rel,
+                regressed: rel > out.threshold,
+            });
+        }
+    }
+}
+
+fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_host(wait_pct: f64, speedup: f64, host_eps: f64) -> Json {
+        let mut row = Json::obj();
+        row.push("p", 16u64.into());
+        row.push("wait_pct", wait_pct.into());
+        row.push("speedup", speedup.into());
+        let mut host = Json::obj();
+        host.push("events_per_sec", host_eps.into());
+        let mut o = Json::obj();
+        o.push("ablation", Json::Arr(vec![row]));
+        o.push("host", host);
+        o
+    }
+
+    fn report(wait_pct: f64, speedup: f64) -> Json {
+        report_host(wait_pct, speedup, 1e6)
+    }
+
+    #[test]
+    fn self_compare_is_clean() {
+        let a = report(12.0, 3.0);
+        let out = compare(&a, &a, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+        assert!(out.rows.len() >= 2, "wait_pct and speedup gated");
+    }
+
+    #[test]
+    fn wait_pct_regression_flags() {
+        let base = report(10.0, 3.0);
+        let new = report(11.5, 3.0); // +15% > 10% threshold
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 1);
+        let r = out.regressions().next().unwrap();
+        assert_eq!(r.path, "ablation.0.wait_pct");
+        assert!((r.rel - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_pct_improvement_passes() {
+        let base = report(10.0, 3.0);
+        let new = report(2.0, 3.0);
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+    }
+
+    #[test]
+    fn speedup_drop_flags_higher_better() {
+        let base = report(10.0, 4.0);
+        let new = report(10.0, 3.0); // -25%
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 1);
+        assert!(out.regressions().next().unwrap().path.ends_with("speedup"));
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let base = report(10.0, 3.0);
+        let new = report(10.5, 3.0); // +5% < 10%
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+    }
+
+    #[test]
+    fn host_section_never_gated() {
+        let base = report_host(10.0, 3.0, 1e6);
+        // Tanked host throughput: must not gate (machine-dependent).
+        let new = report_host(10.0, 3.0, 1.0);
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+        assert!(out.rows.iter().all(|r| !r.path.starts_with("host")));
+    }
+
+    #[test]
+    fn near_zero_pairs_pass_but_material_growth_fails() {
+        let mut base = Json::obj();
+        base.push("wait_at_admission", 0.0.into());
+        let mut ok = Json::obj();
+        ok.push("wait_at_admission", 1e-15.into());
+        assert_eq!(compare(&base, &ok, DEFAULT_THRESHOLD).n_regressed(), 0);
+        let mut bad = Json::obj();
+        bad.push("wait_at_admission", 0.5.into());
+        assert_eq!(compare(&base, &bad, DEFAULT_THRESHOLD).n_regressed(), 1);
+    }
+
+    #[test]
+    fn unknown_keys_ignored_not_failed() {
+        let mut base = Json::obj();
+        base.push("n_epochs", 4u64.into());
+        let mut new = Json::obj();
+        new.push("n_epochs", 400u64.into());
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+        assert_eq!(out.ignored, 1);
+    }
+
+    #[test]
+    fn missing_keys_skipped() {
+        let base = report(10.0, 3.0);
+        let mut new = Json::obj();
+        new.push("something_else", 1.0.into());
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+        assert!(out.rows.is_empty());
+    }
+}

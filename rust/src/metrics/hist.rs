@@ -1,0 +1,412 @@
+//! Log2-bucketed distribution metrics.
+//!
+//! Scalar totals hide tail behavior: a mean admission latency looks
+//! healthy while one stalled epoch eats the pipeline. These histograms
+//! capture the *distribution* of the quantities the paper's headline
+//! measurement is made of — wait intervals (keyed by the
+//! [`crate::trace::WaitCause`] taxonomy), per-epoch admission latency,
+//! wire-message sizes, and the per-epoch wait series — at the same
+//! choke points the trace sink already instruments. They are always on:
+//! recording is pure bookkeeping (no `VTime` arithmetic is touched), so
+//! the simulated timeline stays bit-identical with or without them.
+//!
+//! Buckets are powers of two: bucket `i` covers `[2^(i+LO_EXP),
+//! 2^(i+1+LO_EXP))`, with everything `<= 2^LO_EXP` folded into bucket 0
+//! and everything above the top folded into the last bucket. With
+//! `LO_EXP = -30` (≈ 1 ns) and 64 buckets the range spans to `2^34`
+//! (≈ 1.7e10) — wide enough for both second-scale waits and byte-scale
+//! message sizes. Alongside the buckets each histogram keeps *exact*
+//! `n`/`sum`/`min`/`max`, so reconciliation against the scalar
+//! accounting (`wait`, `wait_at_*`, `n_messages`) compares exact sums
+//! to floating-point tolerance; only the quantiles are bucket-resolved
+//! (interpolated within a bucket, clamped to `[min, max]`).
+
+use crate::trace::WaitCause;
+use crate::types::VTime;
+use crate::util::json::Json;
+
+/// Number of log2 buckets.
+pub const HIST_BUCKETS: usize = 64;
+/// Exponent of the lower edge of bucket 1 (bucket 0 absorbs everything
+/// at or below `2^LO_EXP`).
+pub const LO_EXP: i32 = -30;
+
+/// A log2-bucketed histogram with exact n/sum/min/max side counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl Hist {
+    /// Record one sample. Non-finite samples are ignored (they cannot
+    /// be bucketed and would poison the exact sum).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.n += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.buckets[Self::bucket(v)] += 1;
+    }
+
+    /// Bucket index for a sample value.
+    #[inline]
+    fn bucket(v: f64) -> usize {
+        if v <= 0.0 {
+            return 0;
+        }
+        let e = v.log2().floor() as i32 - LO_EXP;
+        e.clamp(0, HIST_BUCKETS as i32 - 1) as usize
+    }
+
+    /// Lower edge of bucket `i` (0 for bucket 0, which absorbs the
+    /// sub-`2^LO_EXP` tail).
+    fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            (2.0f64).powi(i as i32 + LO_EXP)
+        }
+    }
+
+    /// Upper edge of bucket `i`.
+    fn bucket_hi(i: usize) -> f64 {
+        (2.0f64).powi(i as i32 + 1 + LO_EXP)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact sum of all recorded samples — the reconciliation anchor
+    /// against the scalar wait accounting.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Exact minimum (0.0 when empty, for clean JSON).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Bucket-resolved quantile: walk the cumulative counts to the
+    /// bucket containing the q-th sample, interpolate linearly within
+    /// its edges, clamp to the exact `[min, max]` envelope. `q` in
+    /// `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.n as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= target {
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_hi(i);
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Bucket-wise merge (for [`crate::metrics::RunReport::absorb`]).
+    pub fn merge(&mut self, other: &Hist) {
+        self.n += other.n;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Compact JSON: exact side counters, bucket-resolved quantiles,
+    /// and only the non-empty buckets as `[lo_exp, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("n", self.n.into());
+        o.push("sum", self.sum.into());
+        o.push("mean", self.mean().into());
+        o.push("min", self.min().into());
+        o.push("max", self.max().into());
+        o.push("p50", self.p50().into());
+        o.push("p90", self.p90().into());
+        o.push("p99", self.p99().into());
+        let mut buckets = Vec::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                buckets.push(Json::Arr(vec![
+                    (i as i64 + LO_EXP as i64).into(),
+                    c.into(),
+                ]));
+            }
+        }
+        o.push("buckets", Json::Arr(buckets));
+        o
+    }
+}
+
+/// The distribution metrics carried on [`crate::sched::ExecState`] and
+/// snapshotted into [`crate::metrics::RunReport`]: wait-interval
+/// histograms per [`WaitCause`], the wire-message size histogram, and
+/// the per-epoch wait series.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DistMetrics {
+    /// One wait-interval histogram per cause, indexed by
+    /// [`WaitCause::index`]. The Admission histogram mirrors
+    /// `wait_at_admission` (reported separately from the per-rank
+    /// `wait` vectors); all other causes together reconcile against the
+    /// per-rank `wait` sum.
+    pub wait_by_cause: [Hist; WaitCause::N],
+    /// Wire-message sizes (bytes) at every `Network::post_send`; its
+    /// count reconciles against `n_messages`.
+    pub msg_bytes: Hist,
+    /// Wait charged per flush epoch (all causes except Admission,
+    /// mirroring the per-rank `wait` semantics), indexed by the epoch
+    /// current at charge time.
+    pub epoch_wait: Vec<VTime>,
+}
+
+impl DistMetrics {
+    /// Record one wait interval: into the cause histogram always, and
+    /// into the per-epoch series for every cause that also lands in the
+    /// per-rank `wait` vectors (i.e. everything but Admission).
+    #[inline]
+    pub fn record_wait(&mut self, cause: WaitCause, epoch: u64, d: VTime) {
+        self.wait_by_cause[cause.index()].record(d);
+        if !matches!(cause, WaitCause::Admission) {
+            let i = epoch as usize;
+            if self.epoch_wait.len() <= i {
+                self.epoch_wait.resize(i + 1, 0.0);
+            }
+            self.epoch_wait[i] += d;
+        }
+    }
+
+    /// All-cause wait histogram *excluding* Admission — the distribution
+    /// of the intervals that make up the per-rank `wait` vectors.
+    pub fn wait_all(&self) -> Hist {
+        let mut all = Hist::default();
+        for (i, h) in self.wait_by_cause.iter().enumerate() {
+            if i != WaitCause::Admission.index() {
+                all.merge(h);
+            }
+        }
+        all
+    }
+
+    /// Merge another run's distributions (bucket-wise hists; the other
+    /// run's epoch series appends, matching how `n_epochs` adds).
+    pub fn merge(&mut self, other: &DistMetrics) {
+        for (a, b) in self.wait_by_cause.iter_mut().zip(&other.wait_by_cause) {
+            a.merge(b);
+        }
+        self.msg_bytes.merge(&other.msg_bytes);
+        self.epoch_wait.extend_from_slice(&other.epoch_wait);
+    }
+
+    /// The `dist.wait` JSON object: one histogram per cause label,
+    /// empty causes skipped.
+    pub fn wait_to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (i, h) in self.wait_by_cause.iter().enumerate() {
+            if h.n() > 0 {
+                o.push(WaitCause::LABELS[i], h.to_json());
+            }
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_clean() {
+        let h = Hist::default();
+        assert_eq!(h.n(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        let s = h.to_json().render();
+        assert!(!s.contains("inf"), "no infinities leak into JSON: {s}");
+    }
+
+    #[test]
+    fn exact_side_counters() {
+        let mut h = Hist::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.n(), 4);
+        assert!((h.sum() - 10.0).abs() < 1e-12);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse() {
+        let mut h = Hist::default();
+        h.record(3.5);
+        // Clamped to the exact [min, max] envelope: every quantile of a
+        // single sample is that sample.
+        assert_eq!(h.p50(), 3.5);
+        assert_eq!(h.p90(), 3.5);
+        assert_eq!(h.p99(), 3.5);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_distribution() {
+        let mut h = Hist::default();
+        // 99 small samples in one bucket, one huge outlier.
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(1024.0);
+        let p50 = h.p50();
+        let p99 = h.p99();
+        assert!(p50 >= 1.0 && p50 < 2.0, "median in the small bucket: {p50}");
+        assert!(p99 <= 1024.0 && p99 >= 1.0);
+        assert!(h.quantile(1.0) == 1024.0, "q=1 is the max");
+        assert!(p50 <= h.p90() && h.p90() <= p99, "quantiles are monotone");
+    }
+
+    #[test]
+    fn zero_and_subnormal_fold_into_bucket_zero() {
+        let mut h = Hist::default();
+        h.record(0.0);
+        h.record(1e-12); // below 2^LO_EXP ≈ 9.3e-10
+        assert_eq!(h.n(), 2);
+        assert_eq!(h.min(), 0.0);
+        // Both land in bucket 0; quantiles stay within [min, max].
+        assert!(h.p99() <= h.max());
+    }
+
+    #[test]
+    fn non_finite_ignored() {
+        let mut h = Hist::default();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.n(), 0);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        let mut both = Hist::default();
+        for v in [0.5, 2.0, 8.0] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [1.0, 64.0] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_top_bucket() {
+        let mut h = Hist::default();
+        h.record(1e300);
+        assert_eq!(h.n(), 1);
+        assert_eq!(h.max(), 1e300);
+        // Quantile clamps to the exact max even though the bucket edge
+        // is far below it.
+        assert_eq!(h.quantile(1.0), 1e300);
+    }
+
+    #[test]
+    fn dist_metrics_epoch_series_excludes_admission() {
+        let mut d = DistMetrics::default();
+        d.record_wait(WaitCause::Barrier, 0, 1.0);
+        d.record_wait(WaitCause::Admission, 0, 5.0);
+        d.record_wait(WaitCause::Cone, 2, 0.5);
+        assert_eq!(d.epoch_wait, vec![1.0, 0.0, 0.5]);
+        assert_eq!(d.wait_by_cause[WaitCause::Admission.index()].n(), 1);
+        let all = d.wait_all();
+        assert_eq!(all.n(), 2, "wait_all excludes the admission cause");
+        assert!((all.sum() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_json_skips_empty_causes() {
+        let mut d = DistMetrics::default();
+        d.record_wait(WaitCause::Barrier, 0, 1.0);
+        let s = d.wait_to_json().render();
+        assert!(s.contains("barrier"));
+        assert!(!s.contains("transfer"));
+    }
+}

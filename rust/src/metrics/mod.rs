@@ -4,8 +4,13 @@
 //! not hidden behind computation" (Section 6) — as a percentage of total
 //! execution time, plus speedup against the sequential NumPy baseline.
 
+pub mod compare;
+pub mod hist;
+
+use crate::profile::Profiler;
 use crate::types::VTime;
 use crate::util::json::Json;
+use hist::{DistMetrics, Hist};
 
 /// Outcome of executing one flushed batch (or a whole run) on the
 /// simulated cluster.
@@ -101,6 +106,21 @@ pub struct RunReport {
     pub predicted_stalls: u64,
     /// Linter diagnostics across the verified runs.
     pub lints: u64,
+    /// Trace-ring events dropped because the bounded sink wrapped —
+    /// previously only visible in the Perfetto export's `otherData`,
+    /// now surfaced here so a truncated trace is caught from the run
+    /// JSON alone. Always 0 when tracing is off.
+    pub trace_dropped: u64,
+    /// Distribution metrics: per-cause wait histograms, the
+    /// wire-message size histogram, and the per-epoch wait series
+    /// ([`hist::DistMetrics`]). Always populated.
+    pub dist: DistMetrics,
+    /// Distribution of the streamed per-epoch admission latencies whose
+    /// mean is `admission_latency` ([`crate::flow::AdmissionLog`]).
+    pub admission_hist: Hist,
+    /// Host-side self-profile (`--profile`): phase wall timers and DES
+    /// events/sec. `None` unless profiling was enabled.
+    pub host: Option<Profiler>,
 }
 
 impl RunReport {
@@ -185,6 +205,16 @@ impl RunReport {
         self.serialized_pairs += other.serialized_pairs;
         self.predicted_stalls += other.predicted_stalls;
         self.lints += other.lints;
+        self.trace_dropped += other.trace_dropped;
+        self.dist.merge(&other.dist);
+        self.admission_hist.merge(&other.admission_hist);
+        // Host profiles merge only when both runs carried one; a report
+        // without a profile contributes nothing to phase timings.
+        match (&mut self.host, &other.host) {
+            (Some(a), Some(b)) => a.merge(b),
+            (None, Some(b)) => self.host = Some(b.clone()),
+            _ => {}
+        }
     }
 
     /// Wait time of the collective root (rank 0) — the hot spot flat
@@ -258,9 +288,30 @@ impl RunReport {
         o.push("flow_window_final", self.flow_window_final.into());
         o.push("window_decisions", self.window_decisions.into());
         o.push("races", self.races.into());
+        // The raw oracle counters alongside the derived percentage, so
+        // a consumer can recompute or re-weight it.
+        o.push("dep_edges", self.dep_edges.into());
+        o.push("excess_edges", self.excess_edges.into());
+        o.push("serialized_pairs", self.serialized_pairs.into());
         o.push("excess_edge_pct", self.excess_edge_pct().into());
         o.push("predicted_stalls", self.predicted_stalls.into());
         o.push("lints", self.lints.into());
+        o.push("trace_dropped", self.trace_dropped.into());
+        // p99 of the per-rank wait intervals (all causes except
+        // Admission) — the tail the scalar wait_pct hides.
+        o.push("wait_p99", self.dist.wait_all().p99().into());
+        let mut dist = Json::obj();
+        dist.push("wait", self.dist.wait_to_json());
+        dist.push("msg_bytes", self.dist.msg_bytes.to_json());
+        dist.push("admission_latency", self.admission_hist.to_json());
+        dist.push(
+            "epoch_wait",
+            Json::Arr(self.dist.epoch_wait.iter().map(|&w| w.into()).collect()),
+        );
+        o.push("dist", dist);
+        if let Some(host) = &self.host {
+            o.push("host", host.to_json());
+        }
         o
     }
 
@@ -331,9 +382,53 @@ mod tests {
         assert!(s.contains("flow_window_final"));
         assert!(s.contains("window_decisions"));
         assert!(s.contains("races"));
+        assert!(s.contains("dep_edges"));
+        assert!(s.contains("excess_edges"));
+        assert!(s.contains("serialized_pairs"));
         assert!(s.contains("excess_edge_pct"));
         assert!(s.contains("predicted_stalls"));
         assert!(s.contains("lints"));
+        assert!(s.contains("trace_dropped"));
+        assert!(s.contains("wait_p99"));
+        assert!(s.contains("\"dist\""));
+        assert!(s.contains("msg_bytes"));
+        assert!(s.contains("epoch_wait"));
+        assert!(
+            !s.contains("\"host\""),
+            "no host section unless profiling ran"
+        );
+    }
+
+    #[test]
+    fn json_host_section_when_profiled() {
+        use crate::profile::{Phase, ProfCfg, Profiler};
+        let mut r = RunReport::new(1);
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        p.add_nanos(Phase::Drain, 1000);
+        r.host = Some(p);
+        let s = r.to_json().render();
+        assert!(s.contains("\"host\""));
+        assert!(s.contains("events_per_sec"));
+    }
+
+    #[test]
+    fn absorb_merges_distributions() {
+        use crate::trace::WaitCause;
+        let mut a = RunReport::new(1);
+        a.dist.record_wait(WaitCause::Barrier, 0, 1.0);
+        a.trace_dropped = 2;
+        let mut b = RunReport::new(1);
+        b.dist.record_wait(WaitCause::Barrier, 0, 3.0);
+        b.dist.msg_bytes.record(4096.0);
+        b.trace_dropped = 1;
+        a.absorb(&b);
+        assert_eq!(a.trace_dropped, 3);
+        assert_eq!(a.dist.msg_bytes.n(), 1);
+        let h = &a.dist.wait_by_cause[WaitCause::Barrier.index()];
+        assert_eq!(h.n(), 2);
+        assert!((h.sum() - 4.0).abs() < 1e-12);
+        // Epoch series append (independent back-to-back runs).
+        assert_eq!(a.dist.epoch_wait, vec![1.0, 3.0]);
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Host-side self-profiler: where does the *simulator's own* wall
+//! clock go?
+//!
+//! The distribution metrics ([`crate::metrics::hist`]) describe the
+//! simulated timeline; this module describes the machine running it —
+//! the baseline a future parallel discrete-event engine (ROADMAP item
+//! 1) must beat, following rustasim's practice of treating host
+//! events/sec as the first-class engine metric.
+//!
+//! The profiler is phase-scoped: each [`Phase`] accumulates wall time
+//! from explicit `start()`/`stop()` pairs placed at the session choke
+//! points (record, admit, inject, pump, drain, verify, trace-export).
+//! Phases may *nest* — `Admit` (the flow engine's whole submit path)
+//! contains `Inject`, and `Drain` contains `Verify` — so phase times
+//! are not disjoint and do not sum to the run's wall time; the
+//! throughput denominator below uses only the non-overlapping DES
+//! phases (`Inject + Pump + Drain`).
+//!
+//! Disabled (the default), `start()` returns `None` and `stop()`
+//! returns immediately — no `Instant::now()` is ever taken — and the
+//! simulated timeline is bit-identical either way, since the profiler
+//! never touches `VTime` arithmetic. Enabled via `--profile` on the CLI
+//! or [`ProfCfg`] on `SchedCfg`.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Profiler configuration, carried on [`crate::sched::SchedCfg`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProfCfg {
+    /// Take wall timers at the phase choke points. Off by default.
+    pub enabled: bool,
+}
+
+/// The instrumented phases of a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Lazy-interface op recording (`Context::ufunc` / reductions).
+    Record,
+    /// Flow-engine admission: pricing, window gating, splicing.
+    /// Contains `Inject` (nested).
+    Admit,
+    /// Feeding admitted ops into the live scheduler session.
+    Inject,
+    /// Engine-driven event pumping outside inject/drain
+    /// (`pump_next` / `pump_until` from the flow engine).
+    Pump,
+    /// Session drain: pump-to-completion, finish checks, op counting.
+    /// Contains `Verify` (nested).
+    Drain,
+    /// Hazard-oracle verification of drained waves.
+    Verify,
+    /// Serializing and writing the Perfetto trace (CLI only).
+    TraceExport,
+}
+
+impl Phase {
+    pub const N: usize = 7;
+
+    pub const ALL: [Phase; Phase::N] = [
+        Phase::Record,
+        Phase::Admit,
+        Phase::Inject,
+        Phase::Pump,
+        Phase::Drain,
+        Phase::Verify,
+        Phase::TraceExport,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Record => "record",
+            Phase::Admit => "admit",
+            Phase::Inject => "inject",
+            Phase::Pump => "pump",
+            Phase::Drain => "drain",
+            Phase::Verify => "verify",
+            Phase::TraceExport => "trace_export",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Record => 0,
+            Phase::Admit => 1,
+            Phase::Inject => 2,
+            Phase::Pump => 3,
+            Phase::Drain => 4,
+            Phase::Verify => 5,
+            Phase::TraceExport => 6,
+        }
+    }
+}
+
+/// Phase-scoped wall-time accumulator plus the events-processed
+/// counter. Lives on [`crate::sched::ExecState`]; snapshotted into the
+/// run report's `host` section when enabled.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Profiler {
+    enabled: bool,
+    nanos: [u64; Phase::N],
+    calls: [u64; Phase::N],
+    /// DES events processed — one per op retirement (`note_retire`),
+    /// the single choke point every policy's event loop passes through.
+    events: u64,
+}
+
+impl Profiler {
+    pub fn new(cfg: ProfCfg) -> Self {
+        Profiler {
+            enabled: cfg.enabled,
+            ..Default::default()
+        }
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Begin a phase interval: `None` (free) when disabled.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// End a phase interval begun by [`Profiler::start`].
+    #[inline]
+    pub fn stop(&mut self, phase: Phase, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.add_nanos(phase, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Credit a phase directly (used by the CLI for trace export, which
+    /// happens after the state has been torn down into the report).
+    pub fn add_nanos(&mut self, phase: Phase, nanos: u64) {
+        self.nanos[phase.index()] += nanos;
+        self.calls[phase.index()] += 1;
+    }
+
+    /// Count one processed DES event.
+    #[inline]
+    pub fn count_event(&mut self) {
+        if self.enabled {
+            self.events += 1;
+        }
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn secs(&self, phase: Phase) -> f64 {
+        self.nanos[phase.index()] as f64 * 1e-9
+    }
+
+    pub fn calls(&self, phase: Phase) -> u64 {
+        self.calls[phase.index()]
+    }
+
+    /// Wall time in the non-overlapping DES phases — the events/sec
+    /// denominator. `Admit` is excluded (it contains `Inject`) and
+    /// `Verify` is excluded (it is contained in `Drain`).
+    pub fn sim_secs(&self) -> f64 {
+        self.secs(Phase::Inject) + self.secs(Phase::Pump) + self.secs(Phase::Drain)
+    }
+
+    /// Host throughput: DES events processed per wall second.
+    pub fn events_per_sec(&self) -> f64 {
+        let s = self.sim_secs();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / s
+        }
+    }
+
+    /// Merge another profiler's accumulators (independent runs).
+    pub fn merge(&mut self, other: &Profiler) {
+        self.enabled |= other.enabled;
+        for (a, b) in self.nanos.iter_mut().zip(&other.nanos) {
+            *a += b;
+        }
+        for (a, b) in self.calls.iter_mut().zip(&other.calls) {
+            *a += b;
+        }
+        self.events += other.events;
+    }
+
+    /// The `host` section of the run JSON. Wall-clock numbers are
+    /// machine-dependent; the regression comparator never gates on
+    /// them.
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        for ph in Phase::ALL {
+            if self.calls(ph) == 0 {
+                continue;
+            }
+            let mut p = Json::obj();
+            p.push("secs", self.secs(ph).into());
+            p.push("calls", self.calls(ph).into());
+            phases.push(ph.label(), p);
+        }
+        let mut o = Json::obj();
+        o.push("phases", phases);
+        o.push("events", self.events.into());
+        o.push("sim_secs", self.sim_secs().into());
+        o.push("events_per_sec", self.events_per_sec().into());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_takes_no_timers() {
+        let p = Profiler::new(ProfCfg::default());
+        assert!(!p.on());
+        assert!(p.start().is_none());
+    }
+
+    #[test]
+    fn start_stop_accumulates() {
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        let t0 = p.start();
+        assert!(t0.is_some());
+        p.stop(Phase::Pump, t0);
+        assert_eq!(p.calls(Phase::Pump), 1);
+        assert_eq!(p.calls(Phase::Drain), 0);
+    }
+
+    #[test]
+    fn events_counted_only_when_enabled() {
+        let mut off = Profiler::new(ProfCfg::default());
+        off.count_event();
+        assert_eq!(off.events(), 0);
+        let mut on = Profiler::new(ProfCfg { enabled: true });
+        on.count_event();
+        on.count_event();
+        assert_eq!(on.events(), 2);
+    }
+
+    #[test]
+    fn events_per_sec_guards_zero_denominator() {
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        p.count_event();
+        assert_eq!(p.events_per_sec(), 0.0);
+        p.add_nanos(Phase::Drain, 2_000_000_000);
+        assert!((p.events_per_sec() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_secs_excludes_nested_phases() {
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        p.add_nanos(Phase::Admit, 5_000_000_000);
+        p.add_nanos(Phase::Verify, 3_000_000_000);
+        p.add_nanos(Phase::Inject, 1_000_000_000);
+        assert!((p.sim_secs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = Profiler::new(ProfCfg { enabled: true });
+        a.add_nanos(Phase::Pump, 100);
+        a.count_event();
+        let mut b = Profiler::new(ProfCfg { enabled: true });
+        b.add_nanos(Phase::Pump, 50);
+        b.count_event();
+        a.merge(&b);
+        assert_eq!(a.calls(Phase::Pump), 2);
+        assert_eq!(a.events(), 2);
+    }
+
+    #[test]
+    fn json_has_host_fields() {
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        p.add_nanos(Phase::Record, 1000);
+        let s = p.to_json().render();
+        assert!(s.contains("events_per_sec"));
+        assert!(s.contains("record"));
+        assert!(!s.contains("trace_export"), "zero-call phases skipped");
+    }
+}

@@ -181,9 +181,8 @@ impl BlockingSession {
                 if st.trace.on() {
                     let ep = st.cur_epoch();
                     st.trace.op_start(op.id, rank, OpKind::Send, ep, t0);
-                    st.trace.msg_post(*tag, rank, *peer, *bytes, t0);
                 }
-                let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
+                let res = st.note_msg_post(*tag, rank, *peer, *bytes, t0);
                 // Data leaves the sender *now* (eager injection): the
                 // payload must be captured before the sender's later
                 // operations can overwrite the source region. The

@@ -237,9 +237,8 @@ impl LhSession {
                 if st.trace.on() {
                     let ep = st.cur_epoch();
                     st.trace.op_start(op_id, op.rank, OpKind::Send, ep, now);
-                    st.trace.msg_post(*tag, op.rank, *peer, *bytes, now);
                 }
-                let res = st.net.post_send(now, op.rank, *peer, *tag, *bytes);
+                let res = st.note_msg_post(*tag, op.rank, *peer, *bytes, now);
                 // Capture the payload at injection time: once the send
                 // completes, the dependency system allows the sender's
                 // later ops to overwrite the source region — the data

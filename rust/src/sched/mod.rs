@@ -122,6 +122,11 @@ pub struct SchedCfg {
     /// Event-sourced tracing ([`crate::trace`]; CLI `--trace`): disabled
     /// by default — the sink on [`ExecState`] is then a no-op.
     pub trace: crate::trace::TraceCfg,
+    /// Host-side self-profiling ([`crate::profile`]; CLI `--profile`):
+    /// phase-scoped wall timers and DES events/sec. Disabled by default
+    /// — no `Instant` is ever taken, and the simulated timeline is
+    /// bit-identical either way.
+    pub profile: crate::profile::ProfCfg,
     /// Run the [`crate::analyze`] hazard oracle on every drained wave
     /// (CLI `--verify`): recompute the exact conflict edges of the ops
     /// the session executed and hard-error if the active dependency
@@ -144,6 +149,7 @@ impl SchedCfg {
             flow: FlowCfg::default(),
             flush_threshold: DEFAULT_FLUSH_THRESHOLD,
             trace: crate::trace::TraceCfg::default(),
+            profile: crate::profile::ProfCfg::default(),
             verify_deps: false,
         }
     }

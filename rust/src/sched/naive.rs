@@ -144,9 +144,8 @@ impl NaiveSession {
                 if st.trace.on() {
                     let ep = st.cur_epoch();
                     st.trace.op_start(op.id, rank, OpKind::Send, ep, t0);
-                    st.trace.msg_post(*tag, rank, *peer, *bytes, t0);
                 }
-                let res = st.net.post_send(t0, rank, *peer, *tag, *bytes);
+                let res = st.note_msg_post(*tag, rank, *peer, *bytes, t0);
                 // Capture the payload at injection time (see lh.rs).
                 let recv_op = {
                     let info = &self.xfers.info[tag];

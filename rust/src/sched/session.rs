@@ -36,6 +36,7 @@ use super::lh::LhSession;
 use super::naive::NaiveSession;
 use super::{ExecState, Policy, SchedCfg, SchedError};
 use crate::exec::Backend;
+use crate::profile::Phase;
 use crate::types::VTime;
 use crate::ufunc::OpNode;
 
@@ -107,6 +108,22 @@ impl SchedSession {
         backend: &mut dyn Backend,
         st: &mut ExecState,
     ) -> Result<(), SchedError> {
+        // Profiler phase `Inject` spans the whole splice, including the
+        // internal prefix pump (charged here, not to `Pump`).
+        let t0 = st.prof.start();
+        let res = self.inject_inner(ops, admit, cfg, backend, st);
+        st.prof.stop(Phase::Inject, t0);
+        res
+    }
+
+    fn inject_inner(
+        &mut self,
+        ops: Vec<OpNode>,
+        admit: Option<&[VTime]>,
+        cfg: &SchedCfg,
+        backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) -> Result<(), SchedError> {
         let lo = self.ops.len();
         debug_assert!(
             ops.iter()
@@ -122,7 +139,7 @@ impl SchedSession {
             // interleave with the new ops through the shared heap.)
             let horizon = ts.iter().cloned().fold(f64::INFINITY, f64::min);
             if horizon.is_finite() {
-                self.pump_until(horizon, backend, st);
+                self.pump_raw(horizon, backend, st);
             }
         }
         if let Some(cap) = st.capture.as_mut() {
@@ -157,6 +174,14 @@ impl SchedSession {
 
     /// Advance the event loop through every event at or before `until`.
     pub fn pump_until(&mut self, until: VTime, backend: &mut dyn Backend, st: &mut ExecState) {
+        let t0 = st.prof.start();
+        self.pump_raw(until, backend, st);
+        st.prof.stop(Phase::Pump, t0);
+    }
+
+    /// [`SchedSession::pump_until`] without the profiler phase — the
+    /// body, shared with `inject` (whose prefix pump bills to `Inject`).
+    fn pump_raw(&mut self, until: VTime, backend: &mut dyn Backend, st: &mut ExecState) {
         match &mut self.eng {
             Engine::Lh(e) => e.pump_until(&self.ops, st, backend, until),
             Engine::Blocking(e) => e.pump_until(&self.ops, st, backend, until),
@@ -168,11 +193,14 @@ impl SchedSession {
     /// `None` when the loop is quiescent (which, mid-session, just
     /// means "waiting for the next inject", not "finished").
     pub fn pump_next(&mut self, backend: &mut dyn Backend, st: &mut ExecState) -> Option<VTime> {
-        match &mut self.eng {
+        let t0 = st.prof.start();
+        let res = match &mut self.eng {
             Engine::Lh(e) => e.pump_next(&self.ops, st, backend),
             Engine::Blocking(e) => e.pump_next(&self.ops, st, backend),
             Engine::Naive(e) => e.pump_next(&self.ops, st, backend),
-        }
+        };
+        st.prof.stop(Phase::Pump, t0);
+        res
     }
 
     /// Run the session to quiescence and verify every injected
@@ -181,6 +209,20 @@ impl SchedSession {
     /// loop (the callers that keep one alive drop it themselves when
     /// the run ends).
     pub fn drain(&mut self, backend: &mut dyn Backend, st: &mut ExecState) -> Result<(), SchedError> {
+        // Profiler phase `Drain` spans the run-to-quiescence plus the
+        // nested `Verify` phase (the events/sec denominator counts
+        // `Drain` alone, so nesting never double-bills).
+        let t0 = st.prof.start();
+        let res = self.drain_inner(backend, st);
+        st.prof.stop(Phase::Drain, t0);
+        res
+    }
+
+    fn drain_inner(
+        &mut self,
+        backend: &mut dyn Backend,
+        st: &mut ExecState,
+    ) -> Result<(), SchedError> {
         match &mut self.eng {
             Engine::Lh(e) => {
                 e.pump_all(&self.ops, st, backend);
@@ -197,8 +239,10 @@ impl SchedSession {
         }
         super::count_epoch_ops(st, &self.ops[self.counted..]);
         self.counted = self.ops.len();
-        self.verify_drained(st)?;
-        Ok(())
+        let tv = st.prof.start();
+        let res = self.verify_drained(st);
+        st.prof.stop(Phase::Verify, tv);
+        res
     }
 
     /// `SchedCfg::verify_deps`: after a drain, prove the dependency

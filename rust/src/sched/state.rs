@@ -40,11 +40,13 @@
 use crate::deps::DepSystem;
 use crate::exec::Backend;
 use crate::flow::AdmissionLog;
+use crate::metrics::hist::DistMetrics;
 use crate::metrics::RunReport;
-use crate::net::Network;
+use crate::net::{Network, PostResult};
+use crate::profile::Profiler;
 use crate::sync::StageTable;
 use crate::trace::{self, TraceSink, WaitCause};
-use crate::types::{BaseId, OpId, Rank, VTime};
+use crate::types::{BaseId, OpId, Rank, Tag, VTime};
 use crate::ufunc::{Loc, OpNode};
 
 use super::SchedCfg;
@@ -111,6 +113,15 @@ pub struct ExecState {
     /// charge routes through [`ExecState::charge_wait`] so per-cause
     /// event sums reconcile with the `wait` vector exactly.
     pub trace: TraceSink,
+    /// Always-on distribution metrics: per-cause wait histograms, the
+    /// wire-message size histogram and the per-epoch wait series
+    /// ([`crate::metrics::hist`]). Populated at the same choke points
+    /// the trace sink uses, but unconditionally — recording is pure
+    /// bookkeeping and never touches the `VTime` arithmetic.
+    pub dist: DistMetrics,
+    /// Host-side self-profiler (`SchedCfg::profile`): phase-scoped wall
+    /// timers and the DES events-processed counter. Free when disabled.
+    pub prof: Profiler,
     // -- accumulated counters (per-epoch deltas folded in by the
     // -- schedulers; byte/message totals live in `net`) --
     pub ops_executed: u64,
@@ -167,6 +178,8 @@ impl ExecState {
             flow_log: AdmissionLog::default(),
             stages: StageTable::new(),
             trace: TraceSink::new(cfg.trace),
+            dist: DistMetrics::default(),
+            prof: Profiler::new(cfg.profile),
             ops_executed: 0,
             n_compute: 0,
             n_comm: 0,
@@ -206,8 +219,9 @@ impl ExecState {
     #[inline]
     pub fn charge_wait(&mut self, r: usize, t0: VTime, t1: VTime, cause: WaitCause) {
         self.wait[r] += t1 - t0;
+        let ep = self.cur_epoch();
+        self.dist.record_wait(cause, ep, t1 - t0);
         if self.trace.on() {
-            let ep = self.cur_epoch();
             self.trace.wait(Rank(r as u32), cause, ep, t0, t1);
         }
     }
@@ -278,13 +292,36 @@ impl ExecState {
         let d = gate - t0;
         if d > 0.0 {
             self.wait_at_admission += d;
+            let ep = self.cur_epoch();
+            self.dist.record_wait(WaitCause::Admission, ep, d);
             if self.trace.on() {
-                let ep = self.cur_epoch();
                 self.trace.wait(r, WaitCause::Admission, ep, t0, gate);
             }
             self.clock[r.idx()] = gate;
         }
         self.clock[r.idx()]
+    }
+
+    /// Post a wire message: the single choke point in front of
+    /// [`Network::post_send`] for every policy and the sync engine.
+    /// Records the message size into the distribution metrics
+    /// (unconditionally — so the histogram count reconciles with
+    /// `n_messages`) and emits the trace event when the sink is on,
+    /// then posts the send half.
+    #[inline]
+    pub fn note_msg_post(
+        &mut self,
+        tag: Tag,
+        from: Rank,
+        to: Rank,
+        bytes: u64,
+        t: VTime,
+    ) -> PostResult {
+        self.dist.msg_bytes.record(bytes as f64);
+        if self.trace.on() {
+            self.trace.msg_post(tag, from, to, bytes, t);
+        }
+        self.net.post_send(t, from, to, tag, bytes)
     }
 
     /// Start one scheduler run's retirement bookkeeping: reset the
@@ -327,6 +364,7 @@ impl ExecState {
     /// the reference counts, dropping buffers whose last reader this
     /// was.
     pub fn note_retire(&mut self, op: &OpNode, t: VTime, backend: &mut dyn Backend) {
+        self.prof.count_event();
         if let Some(slot) = self.retire.get_mut(op.id.idx()) {
             *slot = (op.rank, t);
         }
@@ -395,6 +433,12 @@ impl ExecState {
         rep.serialized_pairs = self.verify_serialized_pairs;
         rep.predicted_stalls = self.verify_predicted;
         rep.lints = self.verify_lints;
+        rep.trace_dropped = self.trace.dropped();
+        rep.dist = self.dist.clone();
+        rep.admission_hist = self.flow_log.latency_hist.clone();
+        if self.prof.on() {
+            rep.host = Some(self.prof.clone());
+        }
         rep
     }
 
@@ -526,6 +570,70 @@ mod tests {
             "the unread result persists"
         );
         assert_eq!(st.stages.dropped, 1);
+    }
+
+    #[test]
+    fn dist_metrics_track_the_choke_points() {
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 3);
+        let mut st = ExecState::new(&cfg);
+        st.clock = vec![1.0, 3.0, 2.0];
+        st.barrier();
+        let barrier_hist = &st.dist.wait_by_cause[WaitCause::Barrier.index()];
+        assert_eq!(barrier_hist.n(), 2, "two ranks stalled");
+        assert!((barrier_hist.sum() - st.wait_at_barrier).abs() < 1e-12);
+        assert!(
+            (st.dist.epoch_wait.iter().sum::<f64>() - st.wait.iter().sum::<f64>()).abs() < 1e-12,
+            "the epoch series mirrors the per-rank wait totals"
+        );
+
+        st.admit = vec![10.0];
+        st.gate_admission(Rank(0), OpId(0));
+        let adm = &st.dist.wait_by_cause[WaitCause::Admission.index()];
+        assert_eq!(adm.n(), 1);
+        assert!((adm.sum() - st.wait_at_admission).abs() < 1e-12);
+        assert!(
+            (st.dist.epoch_wait.iter().sum::<f64>() - st.wait.iter().sum::<f64>()).abs() < 1e-12,
+            "admission stalls stay out of the epoch wait series"
+        );
+
+        st.net.post_recv(0.0, Rank(1), Tag(5));
+        st.note_msg_post(Tag(5), Rank(0), Rank(1), 4096, 0.0);
+        assert_eq!(st.dist.msg_bytes.n(), st.net.n_transfers);
+        assert_eq!(st.dist.msg_bytes.max(), 4096.0);
+
+        let rep = st.report();
+        assert_eq!(rep.dist, st.dist, "report snapshots the distributions");
+    }
+
+    #[test]
+    fn profiler_counts_events_only_when_enabled() {
+        use crate::exec::SimBackend;
+        use crate::ufunc::{ComputeTask, Dst, Kernel, OpPayload};
+        let op = OpNode {
+            id: OpId(0),
+            rank: Rank(0),
+            group: 0,
+            payload: OpPayload::Compute(ComputeTask {
+                kernel: Kernel::PartialSum,
+                inputs: vec![],
+                dst: Dst::Stage(Tag(1)),
+                elems: 1,
+            }),
+            accesses: vec![],
+        };
+        let mut be = SimBackend;
+        let cfg = SchedCfg::new(MachineSpec::tiny(), 1);
+        let mut off = ExecState::new(&cfg);
+        off.note_retire(&op, 1.0, &mut be);
+        assert_eq!(off.prof.events(), 0);
+
+        let mut pcfg = SchedCfg::new(MachineSpec::tiny(), 1);
+        pcfg.profile.enabled = true;
+        let mut on = ExecState::new(&pcfg);
+        on.note_retire(&op, 1.0, &mut be);
+        assert_eq!(on.prof.events(), 1);
+        assert!(on.report().host.is_some());
+        assert!(off.report().host.is_none());
     }
 
     #[test]

@@ -189,10 +189,9 @@ pub fn broadcast_value(
     let hop = |st: &mut ExecState, bld: &mut OpBuilder, from: Rank, to: Rank, t0: VTime, b: u64| {
         let tag = bld.fresh_tag();
         st.net.post_recv(t0, to, tag);
-        let ps = st.net.post_send(t0, from, to, tag, b);
+        let ps = st.note_msg_post(tag, from, to, b, t0);
         let rd = ps.recv_done.expect("both halves posted");
         if st.trace.on() {
-            st.trace.msg_post(tag, from, to, b, t0);
             st.trace.msg_deliver(tag, from, to, b, rd);
         }
         rd

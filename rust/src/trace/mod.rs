@@ -59,15 +59,34 @@ pub enum WaitCause {
 }
 
 impl WaitCause {
+    /// Number of cause variants — the width of per-cause tables such as
+    /// [`crate::metrics::hist::DistMetrics::wait_by_cause`].
+    pub const N: usize = 6;
+
+    /// Labels indexed by [`WaitCause::index`].
+    pub const LABELS: [&'static str; WaitCause::N] = [
+        "transfer",
+        "collective",
+        "barrier",
+        "cone",
+        "admission",
+        "dependency",
+    ];
+
     /// Short stable label, used by the exporter and JSON reports.
     pub fn label(self) -> &'static str {
+        WaitCause::LABELS[self.index()]
+    }
+
+    /// Dense table index (Transfer collapses all peers into one slot).
+    pub fn index(self) -> usize {
         match self {
-            WaitCause::Transfer { .. } => "transfer",
-            WaitCause::Collective => "collective",
-            WaitCause::Barrier => "barrier",
-            WaitCause::Cone => "cone",
-            WaitCause::Admission => "admission",
-            WaitCause::Dependency => "dependency",
+            WaitCause::Transfer { .. } => 0,
+            WaitCause::Collective => 1,
+            WaitCause::Barrier => 2,
+            WaitCause::Cone => 3,
+            WaitCause::Admission => 4,
+            WaitCause::Dependency => 5,
         }
     }
 }

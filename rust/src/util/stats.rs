@@ -8,6 +8,27 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub stddev: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Linearly interpolated quantile of an already-sorted sample set
+/// (`q` in `[0, 1]`; index `q·(n−1)` between neighbours). Shared by
+/// the bench summaries and exact-sample consumers of the distribution
+/// metrics; the log2 histograms approximate the same definition at
+/// bucket resolution.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < sorted.len() {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    } else {
+        sorted[i]
+    }
 }
 
 pub fn summarize(samples: &[f64]) -> Summary {
@@ -35,6 +56,8 @@ pub fn summarize(samples: &[f64]) -> Summary {
         min: sorted[0],
         max: sorted[n - 1],
         stddev: var.sqrt(),
+        p90: quantile_sorted(&sorted, 0.90),
+        p99: quantile_sorted(&sorted, 0.99),
     }
 }
 
@@ -75,6 +98,42 @@ mod tests {
     fn empty_is_default() {
         let s = summarize(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn quantiles_single_sample() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.p90, 7.0);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn quantiles_with_ties() {
+        let s = summarize(&[2.0, 2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(s.p90, 2.0);
+        assert_eq!(s.p99, 2.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn quantiles_unsorted_input() {
+        // 1..=100 shuffled by stride: p90/p99 must see the sorted order.
+        let samples: Vec<f64> = (0..100).map(|i| ((i * 37) % 100 + 1) as f64).collect();
+        let s = summarize(&samples);
+        // Interpolated at position 0.9·99 = 89.1 → between 90 and 91.
+        assert!((s.p90 - 90.1).abs() < 1e-9, "p90 = {}", s.p90);
+        assert!((s.p99 - 99.01).abs() < 1e-9, "p99 = {}", s.p99);
+        assert!(s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn quantile_sorted_edges() {
+        let sorted = [1.0, 2.0, 3.0];
+        assert_eq!(quantile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&sorted, 1.0), 3.0);
+        assert_eq!(quantile_sorted(&sorted, 0.5), 2.0);
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -257,6 +257,37 @@ fn critical_path_classes_cover_makespan() {
     assert!(json.contains("compute_pct") && json.contains("top_ops"));
 }
 
+/// A trace ring too small for the run must wrap, and the overflow must
+/// surface in the report (and hence the run JSON) as `trace_dropped` —
+/// not just in the Perfetto export's `otherData`.
+#[test]
+fn dropped_events_surface_in_the_report() {
+    let params = AppParams {
+        scale: 0.25,
+        iters: 2,
+    };
+    let mut cfg = traced_cfg(16);
+    cfg.trace.capacity = 4;
+    let (rep, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, cfg);
+    assert!(sink.dropped() > 0, "a 4-slot ring must wrap on a real run");
+    assert_eq!(rep.trace_dropped, sink.dropped(), "report mirrors the sink");
+    let json = rep.to_json().render();
+    assert!(
+        json.contains(&format!("\"trace_dropped\":{}", rep.trace_dropped)),
+        "{json}"
+    );
+
+    // An untraced run reports zero.
+    let (rep, _, _) = run_once_traced(
+        AppId::JacobiStencil,
+        Policy::LatencyHiding,
+        &params,
+        SchedCfg::new(MachineSpec::tiny(), 16),
+    );
+    assert_eq!(rep.trace_dropped, 0);
+}
+
 /// Zero-cost disabled: the same run with tracing off is bit-identical
 /// (same makespan bits, same wait vector bits, same counters) and its
 /// sink holds nothing.
