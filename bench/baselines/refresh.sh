@@ -13,5 +13,7 @@ cargo bench --bench ablation_stream
 cargo bench --bench ablation_deps
 
 for f in BENCH_*.json; do
+    # POSIX sh leaves the literal pattern when nothing matched.
+    [ -e "$f" ] || { echo "no BENCH_*.json found — run the benches first" >&2; exit 1; }
     cp -v "$f" bench/baselines/"$f"
 done

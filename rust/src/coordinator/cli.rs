@@ -406,7 +406,17 @@ fn run(cli: &Cli) -> Result<String, String> {
             } else {
                 outcome.render_text()
             };
-            if n_bad == 0 {
+            if outcome.is_vacuous() {
+                // The baseline gates metrics but the new report matched
+                // none of them: an empty/renamed/truncated artifact
+                // must not sail through the gate looking green.
+                println!("{out}");
+                Err(format!(
+                    "vacuous comparison: '{base_path}' gates {} metric(s) \
+                     but none were found in '{new_path}'",
+                    outcome.baseline_gated
+                ))
+            } else if n_bad == 0 {
                 Ok(out)
             } else {
                 // Print the full report, then fail the process so the
@@ -691,6 +701,13 @@ mod tests {
         // ...unless the threshold is loosened past it.
         let cmd = format!("compare {base} {} --threshold 0.6", bad_p.to_str().unwrap());
         assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
+        // An empty new report gates nothing the baseline gates: that is
+        // a broken bench artifact and must fail, not pass vacuously.
+        let empty_p = dir.join("distnumpy_cmp_empty.json");
+        std::fs::write(&empty_p, "{}").unwrap();
+        let cmd = format!("compare {base} {}", empty_p.to_str().unwrap());
+        let err = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap_err();
+        assert!(err.contains("vacuous"), "{err}");
         // Bad inputs are reported, not panicked on.
         assert!(run(&Cli::parse(&args("compare /no/such.json /no/such.json"))
             .unwrap())

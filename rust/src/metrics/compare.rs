@@ -41,7 +41,10 @@ fn direction(key: &str) -> Option<Direction> {
         | "predicted_stalls" | "lints" | "races" | "trace_dropped" | "wait_p99" => {
             Some(LowerBetter)
         }
-        "speedup" | "overlap_pct" | "utilization" | "events_per_sec" => Some(HigherBetter),
+        "speedup" | "overlap_pct" | "utilization" => Some(HigherBetter),
+        // `events_per_sec` is deliberately absent: it is host wall-clock
+        // throughput and must never be gated, even if it ever appears
+        // outside the skipped `host` subtree.
         _ => None,
     }
 }
@@ -66,6 +69,11 @@ pub struct CompareOutcome {
     /// Numeric leaves present in both reports but not on the gated
     /// whitelist (host wall clock, config identity, unknown fields).
     pub ignored: usize,
+    /// Gated leaves present in the *baseline* alone, whether or not the
+    /// new report matched them. When this is nonzero but `rows` is
+    /// empty, the new report checked nothing the baseline gates — an
+    /// empty/renamed/truncated bench artifact, not a clean pass.
+    pub baseline_gated: usize,
     pub threshold: f64,
 }
 
@@ -76,6 +84,12 @@ impl CompareOutcome {
 
     pub fn n_regressed(&self) -> usize {
         self.regressions().count()
+    }
+
+    /// True when the baseline contains gated metrics but none were
+    /// actually compared — a broken new report must not read as green.
+    pub fn is_vacuous(&self) -> bool {
+        self.baseline_gated > 0 && self.rows.is_empty()
     }
 
     pub fn to_json(&self) -> Json {
@@ -93,6 +107,8 @@ impl CompareOutcome {
         o.push("threshold", self.threshold.into());
         o.push("checked", self.rows.len().into());
         o.push("ignored", self.ignored.into());
+        o.push("baseline_gated", self.baseline_gated.into());
+        o.push("vacuous", self.is_vacuous().into());
         o.push("regressions", self.n_regressed().into());
         o.push("rows", Json::Arr(rows));
         o
@@ -110,6 +126,12 @@ impl CompareOutcome {
                 r.rel * 100.0
             ));
         }
+        if self.is_vacuous() {
+            out.push_str(&format!(
+                "VACUOUS baseline gates {} metric(s) but none were found in the new report\n",
+                self.baseline_gated
+            ));
+        }
         out.push_str(&format!(
             "{} metrics gated, {} ignored, {} regressed (threshold {:.0}%)\n",
             self.rows.len(),
@@ -123,14 +145,35 @@ impl CompareOutcome {
 
 /// Compare two parsed reports. Walks objects by shared key and arrays
 /// by index; leaves present on only one side are skipped (a renamed or
-/// added metric is not a regression).
+/// added metric is not a regression). As a backstop, the outcome is
+/// flagged [`CompareOutcome::is_vacuous`] when the baseline contains
+/// gated metrics but the new report matched none of them.
 pub fn compare(base: &Json, new: &Json, threshold: f64) -> CompareOutcome {
     let mut out = CompareOutcome {
         threshold,
+        baseline_gated: count_gated(base),
         ..Default::default()
     };
     walk(base, new, "", &mut out);
     out
+}
+
+/// Count the gated numeric leaves a report contains on its own,
+/// skipping the never-gated `host` subtree — used to detect a vacuous
+/// comparison where the new report matched none of them.
+fn count_gated(j: &Json) -> usize {
+    match j {
+        Json::Obj(fields) => fields
+            .iter()
+            .filter(|(k, _)| k != "host")
+            .map(|(k, v)| match numeric(v) {
+                Some(_) => usize::from(direction(k).is_some()),
+                None => count_gated(v),
+            })
+            .sum(),
+        Json::Arr(items) => items.iter().map(count_gated).sum(),
+        _ => 0,
+    }
 }
 
 fn numeric(j: &Json) -> Option<f64> {
@@ -282,6 +325,21 @@ mod tests {
     }
 
     #[test]
+    fn events_per_sec_never_gated_even_outside_host() {
+        // Wall-clock throughput is machine-dependent; even if it ever
+        // escapes the skipped `host` subtree it must stay off the gate.
+        let mut base = Json::obj();
+        base.push("events_per_sec", 1e6.into());
+        base.push("wait_pct", 10.0.into());
+        let mut new = Json::obj();
+        new.push("events_per_sec", 1.0.into());
+        new.push("wait_pct", 10.0.into());
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0);
+        assert_eq!(out.ignored, 1);
+    }
+
+    #[test]
     fn near_zero_pairs_pass_but_material_growth_fails() {
         let mut base = Json::obj();
         base.push("wait_at_admission", 0.0.into());
@@ -305,12 +363,43 @@ mod tests {
     }
 
     #[test]
-    fn missing_keys_skipped() {
+    fn missing_keys_skipped_but_flagged_vacuous() {
         let base = report(10.0, 3.0);
         let mut new = Json::obj();
         new.push("something_else", 1.0.into());
         let out = compare(&base, &new, DEFAULT_THRESHOLD);
         assert_eq!(out.n_regressed(), 0);
         assert!(out.rows.is_empty());
+        // The baseline gates wait_pct and speedup yet nothing was
+        // compared: that is a broken artifact, not a clean pass.
+        assert_eq!(out.baseline_gated, 2);
+        assert!(out.is_vacuous());
+        assert!(out.render_text().contains("VACUOUS"));
+    }
+
+    #[test]
+    fn partial_overlap_is_not_vacuous() {
+        // One shared gated metric is enough to make the compare real;
+        // the renamed/missing one is skipped as before.
+        let base = report(10.0, 3.0);
+        let mut row = Json::obj();
+        row.push("wait_pct", 10.0.into());
+        let mut new = Json::obj();
+        new.push("ablation", Json::Arr(vec![row]));
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.rows.len(), 1);
+        assert!(!out.is_vacuous());
+    }
+
+    #[test]
+    fn ungated_baseline_never_vacuous() {
+        // A baseline with no gated leaves (e.g. config identity only)
+        // cannot produce a vacuous verdict.
+        let mut base = Json::obj();
+        base.push("n_epochs", 4u64.into());
+        let empty = Json::obj();
+        let out = compare(&base, &empty, DEFAULT_THRESHOLD);
+        assert_eq!(out.baseline_gated, 0);
+        assert!(!out.is_vacuous());
     }
 }
