@@ -12,8 +12,25 @@ cargo bench --bench ablation_flow
 cargo bench --bench ablation_stream
 cargo bench --bench ablation_deps
 
+# Stamp provenance into each snapshot before committing it: the
+# comparator surfaces `meta.commit` / `meta.date` in every gate report
+# (and `distnumpy diff` in its header), so a regression names the exact
+# baseline it was judged against.
+commit=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
+date=$(date -u +%Y-%m-%dT%H:%M:%SZ)
+
 for f in BENCH_*.json; do
     # POSIX sh leaves the literal pattern when nothing matched.
     [ -e "$f" ] || { echo "no BENCH_*.json found — run the benches first" >&2; exit 1; }
+    python3 - "$f" "$commit" "$date" <<'EOF'
+import json, sys
+path, commit, date = sys.argv[1:4]
+with open(path) as fh:
+    doc = json.load(fh)
+doc["meta"] = {"commit": commit, "date": date}
+with open(path, "w") as fh:
+    json.dump(doc, fh, indent=1)
+    fh.write("\n")
+EOF
     cp -v "$f" bench/baselines/"$f"
 done

@@ -277,6 +277,27 @@ fn main() {
         println!("         -> {:.1} ns/record\n", s.median / N as f64 * 1e9);
     }
 
+    // -- run ledger: the always-on per-epoch accounting ------------------
+    {
+        use distnumpy::metrics::ledger::Ledger;
+        use distnumpy::trace::WaitCause;
+        const N: u64 = 100_000;
+        let s = bench.run("ledger: 100k retire+wait+msg record triples", || {
+            let mut l = Ledger::default();
+            for i in 0..N {
+                let epoch = i / 64;
+                l.record_retire(epoch, i as f64 * 1e-6);
+                l.record_wait(epoch, WaitCause::Barrier, 1e-9);
+                l.record_msg(epoch, 4096);
+            }
+            l.rows.len()
+        });
+        println!("         -> {:.1} ns/triple\n", s.median / N as f64 * 1e9);
+        // The ledger is unconditional (it is the diff alignment
+        // substrate), so its recording rides every DES run above — the
+        // triple must stay in the tens-of-nanoseconds class.
+    }
+
     // -- network post throughput -----------------------------------------
     {
         let spec = MachineSpec::paper();

@@ -1,0 +1,949 @@
+//! Differential run analysis: `distnumpy diff <base.json> <new.json>`.
+//!
+//! The perf gate ([`crate::metrics::compare`]) says *that* a run
+//! regressed; this module says *where* and *why*. Two run reports are
+//! aligned epoch-by-epoch on their ledgers
+//! ([`crate::metrics::ledger`]) — epoch indices are admission-log
+//! positions, comparable across runs of the same program because the
+//! splice renumbering is deterministic — and the makespan delta is
+//! attributed into:
+//!
+//! * **per-epoch deltas** — each row's makespan-advance and per-cause
+//!   wait movement, ranked by magnitude. Because each side's rows
+//!   partition its makespan exactly (`Σ advance + residual ==
+//!   makespan`), the deltas partition the makespan *delta* exactly:
+//!   the reported `coverage` is 1.0 up to float rounding whenever both
+//!   ledgers are intact, and materially below 1.0 only when a report
+//!   was truncated or hand-edited — which is itself a finding.
+//! * **a cause-shift table** — total wait per [`WaitCause`] on each
+//!   side, plus the p50/p90/p99 of the per-cause histograms when the
+//!   reports carry a `dist` section (n=0 quantiles are null).
+//! * **scalar deltas** — every shared numeric metric ranked by
+//!   relative movement, reusing the comparator's walk. This is also
+//!   the fallback when either report predates the ledger (old
+//!   `BENCH_*.json` artifacts): the diff degrades to a ranked scalar
+//!   explanation instead of failing.
+//!
+//! With `--trace` timelines ([`crate::trace::export::perfetto`]) the
+//! diff goes op-by-op: slices are re-aligned by *(rank, kind, sequence
+//! index)* — never by op id, which batch mode recycles per epoch — and
+//! the top divergent ops are named with their source provenance
+//! (`args.desc`, from [`crate::ufunc::OpNode::describe`]). Both
+//! timelines are also re-walked with [`critical::critical_path`] so the
+//! report shows how the critical-path composition drifted.
+//!
+//! Exit discipline (the CLI): a large delta is a *successful* analysis
+//! — only malformed or unalignable inputs are errors.
+
+use crate::metrics::compare;
+use crate::metrics::ledger::{Ledger, LedgerRow};
+use crate::trace::critical::{self, CriticalPath};
+use crate::trace::{OpKind, TraceCfg, TraceSink, WaitCause};
+use crate::types::{OpId, Rank, VTime};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Microseconds per virtual second (the trace-event time unit).
+const US: f64 = 1e6;
+
+/// One epoch's movement between the two runs.
+#[derive(Clone, Debug)]
+pub struct EpochDelta {
+    /// Admission-log index (the alignment key).
+    pub epoch: usize,
+    /// Makespan-advance movement: this epoch's share of the makespan
+    /// delta (s). Signed; the nonzero deltas plus the residual delta
+    /// sum to the makespan delta exactly.
+    pub d_advance: VTime,
+    /// Per-cause wait movement, indexed by [`WaitCause::index`].
+    pub d_wait: [VTime; WaitCause::N],
+    pub d_msgs: i64,
+    pub d_bytes: i64,
+    pub d_ops: i64,
+}
+
+impl EpochDelta {
+    pub fn d_wait_total(&self) -> VTime {
+        self.d_wait.iter().sum()
+    }
+
+    fn is_nonzero(&self) -> bool {
+        self.d_advance != 0.0
+            || self.d_wait.iter().any(|&w| w != 0.0)
+            || self.d_msgs != 0
+            || self.d_bytes != 0
+            || self.d_ops != 0
+    }
+
+    /// Ranking magnitude: the larger of the advance and wait movement.
+    fn weight(&self) -> f64 {
+        self.d_advance.abs().max(self.d_wait_total().abs())
+    }
+}
+
+/// Total wait per cause on each side, with histogram quantiles when the
+/// reports carry them.
+#[derive(Clone, Debug)]
+pub struct CauseShift {
+    pub cause: &'static str,
+    pub base: VTime,
+    pub new: VTime,
+    /// (base, new) per quantile, ordered p50/p90/p99; `None` when the
+    /// side's report has no histogram for the cause (or n=0 → null).
+    pub quantiles: [(Option<f64>, Option<f64>); 3],
+}
+
+impl CauseShift {
+    pub fn delta(&self) -> VTime {
+        self.new - self.base
+    }
+}
+
+/// One aligned op pair whose duration diverged.
+#[derive(Clone, Debug)]
+pub struct OpDelta {
+    pub rank: u32,
+    pub kind: OpKind,
+    /// Sequence index within the (rank, kind) stream — the alignment
+    /// key (op ids recycle across batch epochs and cannot be compared).
+    pub seq: usize,
+    pub base_dur: VTime,
+    pub new_dur: VTime,
+    /// Source provenance (`args.desc`), preferring the new side's.
+    pub desc: String,
+}
+
+impl OpDelta {
+    pub fn delta(&self) -> VTime {
+        self.new_dur - self.base_dur
+    }
+}
+
+/// Op-level alignment of two `--trace` timelines.
+#[derive(Clone, Debug)]
+pub struct TraceDiff {
+    /// Op slices paired by (rank, kind, sequence index).
+    pub matched: usize,
+    /// Base-side op slices with no partner (stream got shorter).
+    pub unmatched_base: usize,
+    /// New-side op slices with no partner (stream got longer).
+    pub unmatched_new: usize,
+    /// Most-divergent pairs, largest |duration delta| first.
+    pub top_ops: Vec<OpDelta>,
+    pub base_cp: CriticalPath,
+    pub new_cp: CriticalPath,
+}
+
+/// The full differential report.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// `NaN` when a side's report carries no numeric `makespan`.
+    pub base_makespan: VTime,
+    pub new_makespan: VTime,
+    /// Whether both sides carried a ledger (epoch attribution ran).
+    pub aligned: bool,
+    /// Diverging epochs, ranked by movement magnitude. Empty on a
+    /// self-diff.
+    pub epochs: Vec<EpochDelta>,
+    /// `Σ epochs.d_advance` — the makespan delta attributed to named
+    /// epochs.
+    pub attributed: VTime,
+    /// Residual movement (trailing joins / final overhead).
+    pub d_residual: VTime,
+    /// One row per [`WaitCause`].
+    pub causes: Vec<CauseShift>,
+    /// Shared numeric metrics ranked by |relative change| (movement
+    /// only), capped — the whole story when `aligned` is false.
+    pub scalars: Vec<compare::Row>,
+    /// Present when `--trace` timelines were supplied.
+    pub trace: Option<TraceDiff>,
+}
+
+impl DiffReport {
+    pub fn d_makespan(&self) -> VTime {
+        self.new_makespan - self.base_makespan
+    }
+
+    /// Share of the makespan delta the epoch attribution explains
+    /// (named epochs + residual). 1.0 up to float rounding when both
+    /// ledgers are intact; 1.0 by convention on a zero-delta self-diff;
+    /// 0.0 when unaligned.
+    pub fn coverage(&self) -> f64 {
+        if !self.aligned {
+            return 0.0;
+        }
+        let d = self.d_makespan();
+        if !d.is_finite() || d.abs() < 1e-12 {
+            return 1.0;
+        }
+        (self.attributed + self.d_residual) / d
+    }
+
+    /// Total wait (all causes) on each side, from the cause table.
+    pub fn wait_totals(&self) -> (VTime, VTime) {
+        let b = self.causes.iter().map(|c| c.base).sum();
+        let n = self.causes.iter().map(|c| c.new).sum();
+        (b, n)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("base_makespan", self.base_makespan.into());
+        o.push("new_makespan", self.new_makespan.into());
+        o.push("d_makespan", self.d_makespan().into());
+        o.push("aligned", self.aligned.into());
+        o.push("coverage", self.coverage().into());
+        o.push("attributed", self.attributed.into());
+        o.push("d_residual", self.d_residual.into());
+        let (bw, nw) = self.wait_totals();
+        o.push("base_wait", bw.into());
+        o.push("new_wait", nw.into());
+        let mut eps = Vec::new();
+        for e in self.epochs.iter().take(50) {
+            let mut j = Json::obj();
+            j.push("epoch", e.epoch.into());
+            j.push("d_advance", e.d_advance.into());
+            j.push("d_wait_total", e.d_wait_total().into());
+            let mut w = Json::obj();
+            for (i, label) in WaitCause::LABELS.iter().enumerate() {
+                if e.d_wait[i] != 0.0 {
+                    w.push(label, e.d_wait[i].into());
+                }
+            }
+            j.push("d_wait", w);
+            j.push("d_msgs", Json::Int(e.d_msgs));
+            j.push("d_bytes", Json::Int(e.d_bytes));
+            j.push("d_ops", Json::Int(e.d_ops));
+            eps.push(j);
+        }
+        o.push("epochs", Json::Arr(eps));
+        o.push("epochs_diverging", self.epochs.len().into());
+        let mut causes = Vec::new();
+        for c in &self.causes {
+            let mut j = Json::obj();
+            j.push("cause", c.cause.into());
+            j.push("base", c.base.into());
+            j.push("new", c.new.into());
+            j.push("delta", c.delta().into());
+            for (qi, q) in ["p50", "p90", "p99"].iter().enumerate() {
+                let (b, n) = c.quantiles[qi];
+                let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+                let mut p = Json::obj();
+                p.push("base", opt(b));
+                p.push("new", opt(n));
+                j.push(q, p);
+            }
+            causes.push(j);
+        }
+        o.push("causes", Json::Arr(causes));
+        let mut sc = Vec::new();
+        for r in &self.scalars {
+            let mut j = Json::obj();
+            j.push("metric", r.path.as_str().into());
+            j.push("base", r.base.into());
+            j.push("new", r.new.into());
+            j.push("rel", r.rel.into());
+            sc.push(j);
+        }
+        o.push("scalars", Json::Arr(sc));
+        if let Some(t) = &self.trace {
+            let mut j = Json::obj();
+            j.push("matched", t.matched.into());
+            j.push("unmatched_base", t.unmatched_base.into());
+            j.push("unmatched_new", t.unmatched_new.into());
+            let mut tops = Vec::new();
+            for op in &t.top_ops {
+                let mut e = Json::obj();
+                e.push("rank", (op.rank as u64).into());
+                e.push("kind", op.kind.label().into());
+                e.push("seq", op.seq.into());
+                e.push("base_dur", op.base_dur.into());
+                e.push("new_dur", op.new_dur.into());
+                e.push("delta", op.delta().into());
+                e.push("desc", op.desc.as_str().into());
+                tops.push(e);
+            }
+            j.push("top_ops", Json::Arr(tops));
+            j.push("base_critical_path", t.base_cp.to_json());
+            j.push("new_critical_path", t.new_cp.to_json());
+            o.push("trace", j);
+        }
+        o
+    }
+
+    /// Human-readable report, regressions-first like the gate's.
+    pub fn render_text(&self) -> String {
+        let mut s = String::from("differential run analysis\n");
+        let d = self.d_makespan();
+        if self.base_makespan.is_finite() && self.new_makespan.is_finite() {
+            let pct = if self.base_makespan.abs() > 1e-12 {
+                100.0 * d / self.base_makespan
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "  makespan {:.6} -> {:.6}  ({:+.6}, {:+.1}%)\n",
+                self.base_makespan, self.new_makespan, d, pct
+            ));
+        }
+        let (bw, nw) = self.wait_totals();
+        s.push_str(&format!(
+            "  wait     {:.6} -> {:.6}  ({:+.6})\n",
+            bw,
+            nw,
+            nw - bw
+        ));
+        if self.aligned {
+            s.push_str(&format!(
+                "epoch attribution ({} diverging epoch(s), coverage {:.1}% of the \
+                 makespan delta):\n",
+                self.epochs.len(),
+                100.0 * self.coverage()
+            ));
+            for e in self.epochs.iter().take(10) {
+                let mut detail = String::new();
+                for (i, label) in WaitCause::LABELS.iter().enumerate() {
+                    if e.d_wait[i] != 0.0 {
+                        detail.push_str(&format!("  {label} {:+.6}", e.d_wait[i]));
+                    }
+                }
+                s.push_str(&format!(
+                    "  epoch {:>5}  advance {:+.6}  wait {:+.6}{}\n",
+                    e.epoch,
+                    e.d_advance,
+                    e.d_wait_total(),
+                    detail
+                ));
+            }
+            if self.epochs.len() > 10 {
+                s.push_str(&format!("  ... {} more\n", self.epochs.len() - 10));
+            }
+            if self.d_residual != 0.0 {
+                s.push_str(&format!("  residual     {:+.6}\n", self.d_residual));
+            }
+        } else {
+            s.push_str(
+                "no per-epoch ledger on both sides — scalar attribution only\n",
+            );
+        }
+        let moved: Vec<&CauseShift> =
+            self.causes.iter().filter(|c| c.delta() != 0.0).collect();
+        if !moved.is_empty() {
+            s.push_str("cause shift:\n");
+            let q = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.2e}"),
+                None => "null".into(),
+            };
+            for c in moved {
+                s.push_str(&format!(
+                    "  {:<11} {:>12.6} -> {:<12.6} ({:+.6})  p50 {}->{}  p90 {}->{}  p99 {}->{}\n",
+                    c.cause,
+                    c.base,
+                    c.new,
+                    c.delta(),
+                    q(c.quantiles[0].0),
+                    q(c.quantiles[0].1),
+                    q(c.quantiles[1].0),
+                    q(c.quantiles[1].1),
+                    q(c.quantiles[2].0),
+                    q(c.quantiles[2].1),
+                ));
+            }
+        }
+        if !self.scalars.is_empty() {
+            s.push_str(&format!(
+                "scalar deltas (top {} by |relative change|):\n",
+                self.scalars.len()
+            ));
+            for r in &self.scalars {
+                s.push_str(&format!(
+                    "  {:<40} {:>13.6e} -> {:<13.6e} ({:+.1}%)\n",
+                    r.path,
+                    r.base,
+                    r.new,
+                    r.rel * 100.0
+                ));
+            }
+        }
+        if let Some(t) = &self.trace {
+            s.push_str(&format!(
+                "trace alignment: {} op pair(s), {} base / {} new unmatched\n",
+                t.matched, t.unmatched_base, t.unmatched_new
+            ));
+            if !t.top_ops.is_empty() {
+                s.push_str("top divergent ops:\n");
+                for op in &t.top_ops {
+                    s.push_str(&format!(
+                        "  p{} {:<7} [{}]  {:.6} -> {:.6}  ({:+.6})  {}\n",
+                        op.rank,
+                        op.kind.label(),
+                        op.seq,
+                        op.base_dur,
+                        op.new_dur,
+                        op.delta(),
+                        op.desc
+                    ));
+                }
+            }
+            let pct = |x: VTime, cp: &CriticalPath| {
+                if cp.makespan > 0.0 {
+                    100.0 * x / cp.makespan
+                } else {
+                    0.0
+                }
+            };
+            s.push_str(&format!(
+                "critical path drift (base -> new, % of makespan):\n  \
+                 compute {:.1} -> {:.1}   comm {:.1} -> {:.1}   \
+                 wait {:.1} -> {:.1}   overhead {:.1} -> {:.1}\n",
+                pct(t.base_cp.compute, &t.base_cp),
+                pct(t.new_cp.compute, &t.new_cp),
+                pct(t.base_cp.comm, &t.base_cp),
+                pct(t.new_cp.comm, &t.new_cp),
+                pct(t.base_cp.wait, &t.base_cp),
+                pct(t.new_cp.wait, &t.new_cp),
+                pct(t.base_cp.overhead, &t.base_cp),
+                pct(t.new_cp.overhead, &t.new_cp),
+            ));
+        }
+        s
+    }
+}
+
+/// A `dist.wait.<label>.<quantile>` lookup; `None` when the report has
+/// no histogram for the cause or the quantile rendered null (n=0).
+fn quantile(report: &Json, label: &str, q: &str) -> Option<f64> {
+    report
+        .get("dist")?
+        .get("wait")?
+        .get(label)?
+        .get(q)
+        .and_then(Json::as_f64)
+}
+
+/// A `dist.wait.<label>.sum` lookup, for the unaligned cause table.
+fn dist_sum(report: &Json, label: &str) -> VTime {
+    report
+        .get("dist")
+        .and_then(|d| d.get("wait"))
+        .and_then(|w| w.get(label))
+        .and_then(|h| h.get("sum"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+/// Align two parsed run reports and attribute their delta. `Err` only
+/// on malformed inputs (a broken `ledger` section) or unalignable ones
+/// (no ledgers *and* no shared numeric metrics).
+pub fn diff_runs(base: &Json, new: &Json) -> Result<DiffReport, String> {
+    let makespan =
+        |j: &Json| j.get("makespan").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let ledger_of = |j: &Json, side: &str| match Ledger::parse_section(j) {
+        None => Ok(None),
+        Some(Ok(v)) => Ok(Some(v)),
+        Some(Err(e)) => Err(format!("{side} report: {e}")),
+    };
+    let bl = ledger_of(base, "base")?;
+    let nl = ledger_of(new, "new")?;
+
+    // Scalar walk (shared with the gate): gated rows + informational
+    // movement, re-ranked here by |relative change|.
+    let cmp = compare::compare(base, new, compare::DEFAULT_THRESHOLD);
+    let had_shared = !cmp.rows.is_empty() || !cmp.ungated.is_empty();
+    let mut scalars: Vec<compare::Row> = cmp
+        .rows
+        .into_iter()
+        .chain(cmp.ungated)
+        .filter(|r| r.base != r.new)
+        .collect();
+    scalars.sort_by(|a, b| {
+        b.rel
+            .abs()
+            .total_cmp(&a.rel.abs())
+            .then_with(|| a.path.cmp(&b.path))
+    });
+    scalars.truncate(20);
+
+    let aligned = bl.is_some() && nl.is_some();
+    if !aligned && !had_shared {
+        return Err(
+            "cannot align: no ledger sections and no shared numeric metrics \
+             between the reports"
+                .into(),
+        );
+    }
+
+    let mut epochs = Vec::new();
+    let mut attributed = 0.0;
+    let mut d_residual = 0.0;
+    let mut base_cause = [0.0; WaitCause::N];
+    let mut new_cause = [0.0; WaitCause::N];
+    if let (Some((brows, bres)), Some((nrows, nres))) = (&bl, &nl) {
+        d_residual = nres - bres;
+        let pad = LedgerRow::default();
+        for i in 0..brows.len().max(nrows.len()) {
+            let b = brows.get(i).unwrap_or(&pad);
+            let n = nrows.get(i).unwrap_or(&pad);
+            let mut d_wait = [0.0; WaitCause::N];
+            for c in 0..WaitCause::N {
+                d_wait[c] = n.wait[c] - b.wait[c];
+                base_cause[c] += b.wait[c];
+                new_cause[c] += n.wait[c];
+            }
+            let e = EpochDelta {
+                epoch: i,
+                d_advance: n.advance - b.advance,
+                d_wait,
+                d_msgs: n.msgs as i64 - b.msgs as i64,
+                d_bytes: n.bytes as i64 - b.bytes as i64,
+                d_ops: n.ops as i64 - b.ops as i64,
+            };
+            attributed += e.d_advance;
+            if e.is_nonzero() {
+                epochs.push(e);
+            }
+        }
+        epochs.sort_by(|a, b| {
+            b.weight()
+                .total_cmp(&a.weight())
+                .then_with(|| a.epoch.cmp(&b.epoch))
+        });
+    } else {
+        // No ledger alignment: fill the cause table from the histogram
+        // sums when the reports carry a `dist` section.
+        for (c, label) in WaitCause::LABELS.iter().enumerate() {
+            base_cause[c] = dist_sum(base, label);
+            new_cause[c] = dist_sum(new, label);
+        }
+    }
+
+    let causes = WaitCause::LABELS
+        .iter()
+        .enumerate()
+        .map(|(c, label)| CauseShift {
+            cause: label,
+            base: base_cause[c],
+            new: new_cause[c],
+            quantiles: [
+                (quantile(base, label, "p50"), quantile(new, label, "p50")),
+                (quantile(base, label, "p90"), quantile(new, label, "p90")),
+                (quantile(base, label, "p99"), quantile(new, label, "p99")),
+            ],
+        })
+        .collect();
+
+    Ok(DiffReport {
+        base_makespan: makespan(base),
+        new_makespan: makespan(new),
+        aligned,
+        epochs,
+        attributed,
+        d_residual,
+        causes,
+        scalars,
+        trace: None,
+    })
+}
+
+/// One op slice pulled from a Perfetto timeline.
+struct OpSlice {
+    rank: u32,
+    kind: OpKind,
+    epoch: u64,
+    bytes: u64,
+    t0: VTime,
+    t1: VTime,
+    desc: String,
+}
+
+/// A parsed `--trace` timeline: op slices (alignment substrate) plus a
+/// reconstructed event sink for the critical-path walk.
+struct ParsedTrace {
+    ops: Vec<OpSlice>,
+    sink: TraceSink,
+    nprocs: usize,
+    makespan: VTime,
+}
+
+fn kind_ix(k: OpKind) -> u8 {
+    match k {
+        OpKind::Compute => 0,
+        OpKind::Send => 1,
+        OpKind::Recv => 2,
+    }
+}
+
+fn parse_wait_cause(name: &str) -> Option<WaitCause> {
+    let rest = name.strip_prefix("wait:")?;
+    if let Some(peer) = rest
+        .strip_prefix("transfer(p")
+        .and_then(|s| s.strip_suffix(')'))
+    {
+        return peer.parse::<u32>().ok().map(|p| WaitCause::Transfer {
+            peer: Rank(p),
+        });
+    }
+    match rest {
+        "collective" => Some(WaitCause::Collective),
+        "barrier" => Some(WaitCause::Barrier),
+        "cone" => Some(WaitCause::Cone),
+        "admission" => Some(WaitCause::Admission),
+        "dependency" => Some(WaitCause::Dependency),
+        _ => None,
+    }
+}
+
+fn parse_trace(doc: &Json) -> Result<ParsedTrace, String> {
+    let evs = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("not a Chrome-trace JSON (no 'traceEvents' array)")?;
+    let mut ops: Vec<OpSlice> = Vec::new();
+    // (rank, cause, epoch, t0, t1) wait intervals for the sink.
+    let mut waits: Vec<(u32, WaitCause, u64, VTime, VTime)> = Vec::new();
+    let mut hi: VTime = 0.0;
+    let mut max_rank: i64 = -1;
+    for ev in evs {
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("");
+        let pid = ev.get("pid").and_then(Json::as_f64).unwrap_or(-1.0);
+        let (Some(ts), Some(dur)) = (
+            ev.get("ts").and_then(Json::as_f64),
+            ev.get("dur").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        if pid < 0.0 || !ts.is_finite() || !dur.is_finite() {
+            continue;
+        }
+        let (t0, t1) = (ts / US, (ts + dur) / US);
+        let rank = pid as u32;
+        let arg = |key: &str| ev.get("args").and_then(|a| a.get(key)).cloned();
+        match cat {
+            "compute" | "send" | "recv" => {
+                let kind = match cat {
+                    "compute" => OpKind::Compute,
+                    "send" => OpKind::Send,
+                    _ => OpKind::Recv,
+                };
+                ops.push(OpSlice {
+                    rank,
+                    kind,
+                    epoch: arg("epoch").and_then(|e| e.as_f64()).unwrap_or(0.0) as u64,
+                    bytes: arg("bytes").and_then(|b| b.as_f64()).unwrap_or(0.0) as u64,
+                    t0,
+                    t1,
+                    desc: arg("desc")
+                        .and_then(|d| d.as_str().map(str::to_string))
+                        .unwrap_or_default(),
+                });
+            }
+            "wait" => {
+                let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+                let Some(cause) = parse_wait_cause(name) else {
+                    continue;
+                };
+                let epoch =
+                    arg("epoch").and_then(|e| e.as_f64()).unwrap_or(0.0) as u64;
+                waits.push((rank, cause, epoch, t0, t1));
+            }
+            _ => continue,
+        }
+        max_rank = max_rank.max(rank as i64);
+        hi = hi.max(t1);
+    }
+    // Sequence order within each (rank, kind) stream is start-time
+    // order — deterministic for the simulator's per-rank clocks.
+    ops.sort_by(|a, b| {
+        (a.rank, kind_ix(a.kind))
+            .cmp(&(b.rank, kind_ix(b.kind)))
+            .then_with(|| a.t0.total_cmp(&b.t0))
+            .then_with(|| a.t1.total_cmp(&b.t1))
+    });
+    let mut sink = TraceSink::new(TraceCfg {
+        enabled: true,
+        capacity: (2 * ops.len() + waits.len()).max(1),
+    });
+    for (i, o) in ops.iter().enumerate() {
+        // Fresh dense ids: the walk pairs start/retire per id, and the
+        // original ids are not unique across batch epochs.
+        let id = OpId(i as u32);
+        sink.op_start(id, Rank(o.rank), o.kind, o.epoch, o.t0);
+        sink.op_retire(id, Rank(o.rank), o.kind, o.bytes, o.epoch, o.t1, o.desc.clone());
+    }
+    for (rank, cause, epoch, t0, t1) in waits {
+        sink.wait(Rank(rank), cause, epoch, t0, t1);
+    }
+    Ok(ParsedTrace {
+        ops,
+        sink,
+        nprocs: (max_rank + 1).max(1) as usize,
+        makespan: hi,
+    })
+}
+
+/// Align two Perfetto timelines op-by-op and re-walk both critical
+/// paths. `Err` only when a document is not a trace.
+pub fn diff_traces(base: &Json, new: &Json) -> Result<TraceDiff, String> {
+    let b = parse_trace(base).map_err(|e| format!("base trace: {e}"))?;
+    let n = parse_trace(new).map_err(|e| format!("new trace: {e}"))?;
+
+    // Group op indices per (rank, kind); `ops` is already stream-sorted
+    // so positions within a group are the sequence indices.
+    let group = |ops: &[OpSlice]| {
+        let mut g: BTreeMap<(u32, u8), Vec<usize>> = BTreeMap::new();
+        for (i, o) in ops.iter().enumerate() {
+            g.entry((o.rank, kind_ix(o.kind))).or_default().push(i);
+        }
+        g
+    };
+    let bg = group(&b.ops);
+    let ng = group(&n.ops);
+
+    let mut deltas: Vec<OpDelta> = Vec::new();
+    let mut matched = 0;
+    let mut unmatched_base = 0;
+    let mut unmatched_new = 0;
+    let keys: std::collections::BTreeSet<(u32, u8)> =
+        bg.keys().chain(ng.keys()).copied().collect();
+    for key in keys {
+        let empty = Vec::new();
+        let bi = bg.get(&key).unwrap_or(&empty);
+        let ni = ng.get(&key).unwrap_or(&empty);
+        let paired = bi.len().min(ni.len());
+        matched += paired;
+        unmatched_base += bi.len() - paired;
+        unmatched_new += ni.len() - paired;
+        for seq in 0..paired {
+            let bo = &b.ops[bi[seq]];
+            let no = &n.ops[ni[seq]];
+            let d = OpDelta {
+                rank: key.0,
+                kind: bo.kind,
+                seq,
+                base_dur: bo.t1 - bo.t0,
+                new_dur: no.t1 - no.t0,
+                desc: if no.desc.is_empty() {
+                    bo.desc.clone()
+                } else {
+                    no.desc.clone()
+                },
+            };
+            if d.delta() != 0.0 {
+                deltas.push(d);
+            }
+        }
+    }
+    deltas.sort_by(|a, b| {
+        b.delta()
+            .abs()
+            .total_cmp(&a.delta().abs())
+            .then_with(|| (a.rank, kind_ix(a.kind), a.seq).cmp(&(b.rank, kind_ix(b.kind), b.seq)))
+    });
+    deltas.truncate(10);
+
+    Ok(TraceDiff {
+        matched,
+        unmatched_base,
+        unmatched_new,
+        top_ops: deltas,
+        base_cp: critical::critical_path(&b.sink, b.nprocs, b.makespan),
+        new_cp: critical::critical_path(&n.sink, n.nprocs, n.makespan),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_json(makespan: f64, ledger: &Ledger) -> Json {
+        let mut o = Json::obj();
+        o.push("makespan", makespan.into());
+        o.push("ledger", ledger.to_json(makespan));
+        o
+    }
+
+    #[test]
+    fn self_diff_attributes_exactly_zero() {
+        let mut l = Ledger::default();
+        l.record_retire(0, 1.0);
+        l.record_wait(0, WaitCause::Barrier, 0.25);
+        l.record_retire(1, 2.5);
+        l.record_msg(1, 4096);
+        let j = run_json(2.5, &l);
+        let d = diff_runs(&j, &j).unwrap();
+        assert!(d.aligned);
+        assert!(d.epochs.is_empty(), "no diverging epochs on a self-diff");
+        assert_eq!(d.attributed, 0.0);
+        assert_eq!(d.d_residual, 0.0);
+        assert_eq!(d.d_makespan(), 0.0);
+        assert_eq!(d.coverage(), 1.0);
+        assert!(d.causes.iter().all(|c| c.delta() == 0.0));
+        assert!(d.scalars.is_empty(), "no scalar moved");
+        let text = d.render_text();
+        assert!(text.contains("coverage 100.0%"), "{text}");
+        let js = d.to_json().render();
+        assert!(js.contains("\"coverage\":1"), "{js}");
+    }
+
+    #[test]
+    fn attributes_delta_to_named_epochs_and_causes() {
+        let mut base = Ledger::default();
+        base.record_retire(0, 1.0);
+        base.record_retire(1, 2.0);
+        let bj = run_json(2.0, &base);
+        let mut new = Ledger::default();
+        new.record_retire(0, 1.0);
+        new.record_retire(1, 3.0);
+        new.record_wait(1, WaitCause::Admission, 0.8);
+        let nj = run_json(3.2, &new);
+
+        let d = diff_runs(&bj, &nj).unwrap();
+        assert!(d.aligned);
+        assert!((d.d_makespan() - 1.2).abs() < 1e-12);
+        assert!((d.attributed - 1.0).abs() < 1e-12, "epoch 1 grew by 1.0");
+        assert!((d.d_residual - 0.2).abs() < 1e-12);
+        // Exact partition: named epochs + residual cover the delta.
+        assert!((d.coverage() - 1.0).abs() < 1e-9, "coverage {}", d.coverage());
+        assert_eq!(d.epochs.len(), 1, "only epoch 1 diverged");
+        assert_eq!(d.epochs[0].epoch, 1);
+        assert!((d.epochs[0].d_advance - 1.0).abs() < 1e-12);
+        let adm = WaitCause::Admission.index();
+        assert!((d.epochs[0].d_wait[adm] - 0.8).abs() < 1e-12);
+        let shift = d
+            .causes
+            .iter()
+            .find(|c| c.cause == "admission")
+            .unwrap();
+        assert!((shift.delta() - 0.8).abs() < 1e-12, "wait moved into admission");
+        let text = d.render_text();
+        assert!(text.contains("epoch     1"), "{text}");
+        assert!(text.contains("admission"), "{text}");
+        let js = d.to_json().render();
+        assert!(js.contains("\"aligned\":true"), "{js}");
+        assert!(js.contains("\"epochs_diverging\":1"), "{js}");
+    }
+
+    #[test]
+    fn scalar_fallback_without_ledgers() {
+        let base = Json::parse(r#"{"makespan":10.0,"wait_pct":20.0}"#).unwrap();
+        let new = Json::parse(r#"{"makespan":12.0,"wait_pct":30.0}"#).unwrap();
+        let d = diff_runs(&base, &new).unwrap();
+        assert!(!d.aligned);
+        assert_eq!(d.coverage(), 0.0, "no epoch attribution without ledgers");
+        assert!(!d.scalars.is_empty());
+        // wait_pct moved 50% vs makespan's 20%: ranked first.
+        assert_eq!(d.scalars[0].path, "wait_pct");
+        let text = d.render_text();
+        assert!(text.contains("scalar attribution only"), "{text}");
+        assert!(text.contains("wait_pct"), "{text}");
+    }
+
+    #[test]
+    fn unalignable_inputs_error() {
+        let a = Json::parse(r#"{"note":"hello"}"#).unwrap();
+        let b = Json::parse(r#"{"other":true}"#).unwrap();
+        let err = diff_runs(&a, &b).unwrap_err();
+        assert!(err.contains("cannot align"), "{err}");
+    }
+
+    #[test]
+    fn malformed_ledger_errors() {
+        let bad = Json::parse(r#"{"makespan":1.0,"ledger":{"epochs":5}}"#).unwrap();
+        let ok = Json::parse(r#"{"makespan":1.0}"#).unwrap();
+        let err = diff_runs(&bad, &ok).unwrap_err();
+        assert!(err.contains("base report"), "{err}");
+        let err = diff_runs(&ok, &bad).unwrap_err();
+        assert!(err.contains("new report"), "{err}");
+    }
+
+    #[test]
+    fn one_sided_ledger_degrades_to_scalars() {
+        let mut l = Ledger::default();
+        l.record_retire(0, 1.0);
+        let with = run_json(1.0, &l);
+        let without = Json::parse(r#"{"makespan":2.0}"#).unwrap();
+        let d = diff_runs(&with, &without).unwrap();
+        assert!(!d.aligned);
+        assert!(d.epochs.is_empty());
+        assert!(d.scalars.iter().any(|r| r.path == "makespan"));
+    }
+
+    fn trace_doc(slices: &[(u32, &str, &str, f64, f64, &str)]) -> Json {
+        // (pid, cat, name, ts_us, dur_us, desc)
+        let evs = slices
+            .iter()
+            .map(|&(pid, cat, name, ts, dur, desc)| {
+                let mut o = Json::obj();
+                o.push("name", name.into());
+                o.push("cat", cat.into());
+                o.push("ph", "X".into());
+                o.push("pid", (pid as u64).into());
+                o.push("tid", 0u64.into());
+                o.push("ts", ts.into());
+                o.push("dur", dur.into());
+                let mut args = Json::obj();
+                if !desc.is_empty() {
+                    args.push("desc", desc.into());
+                }
+                args.push("epoch", 0u64.into());
+                o.push("args", args);
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.push("traceEvents", Json::Arr(evs));
+        root
+    }
+
+    #[test]
+    fn trace_diff_aligns_by_rank_kind_seq_and_names_ops() {
+        let base = trace_doc(&[
+            (0, "compute", "compute #7", 0.0, 1e6, "jacobi: stencil"),
+            (0, "compute", "compute #9", 1e6, 1e6, "jacobi: reduce"),
+        ]);
+        // Same program, second compute 3× slower, plus an extra slice
+        // on a second rank (stream got longer there).
+        let new = trace_doc(&[
+            (0, "compute", "compute #3", 0.0, 1e6, "jacobi: stencil"),
+            (0, "compute", "compute #5", 1e6, 3e6, "jacobi: reduce"),
+            (1, "compute", "compute #6", 0.0, 1e6, "jacobi: stencil"),
+        ]);
+        let t = diff_traces(&base, &new).unwrap();
+        assert_eq!(t.matched, 2, "ids differ but (rank,kind,seq) aligns");
+        assert_eq!(t.unmatched_base, 0);
+        assert_eq!(t.unmatched_new, 1);
+        assert_eq!(t.top_ops.len(), 1, "only the reduce diverged");
+        let top = &t.top_ops[0];
+        assert_eq!((top.rank, top.seq), (0, 1));
+        assert!((top.delta() - 2.0).abs() < 1e-9);
+        assert_eq!(top.desc, "jacobi: reduce", "provenance carried");
+        assert!((t.base_cp.makespan - 2.0).abs() < 1e-9);
+        assert!((t.new_cp.makespan - 4.0).abs() < 1e-9);
+        assert!(t.new_cp.compute > t.base_cp.compute);
+    }
+
+    #[test]
+    fn trace_diff_parses_wait_slices_into_the_walk() {
+        let base = trace_doc(&[(0, "compute", "compute #1", 0.0, 1e6, "")]);
+        let new = trace_doc(&[
+            (0, "compute", "compute #1", 0.0, 1e6, ""),
+            (0, "wait", "wait:transfer(p1)", 1e6, 1e6, ""),
+            (1, "compute", "compute #2", 0.0, 1.5e6, ""),
+        ]);
+        let t = diff_traces(&base, &new).unwrap();
+        // The new timeline ends in a transfer wait: the walk jumps to
+        // the peer and classifies unhidden communication.
+        assert!(t.new_cp.comm > 0.0, "{:?}", t.new_cp);
+        assert_eq!(t.base_cp.comm, 0.0);
+    }
+
+    #[test]
+    fn non_trace_document_errors() {
+        let not = Json::parse(r#"{"makespan":1.0}"#).unwrap();
+        let err = diff_traces(&not, &not).unwrap_err();
+        assert!(err.contains("traceEvents"), "{err}");
+    }
+}

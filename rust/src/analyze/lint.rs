@@ -323,6 +323,8 @@ mod tests {
             record_done: done,
             retired: f64::NAN,
             n_ops: 4,
+            in_flight_at_admit: 1,
+            latency: f64::NAN,
         };
         // Epoch 1 starts 0.5s after epoch 0 finished recording.
         let entries = [e(0.0, 1.0), e(1.5, 2.0)];

@@ -15,6 +15,13 @@
 //!   overlap left on the table (barrier-in-loop, hoistable sends,
 //!   stage leaks, window-starved epochs).
 //!
+//! Plus one *differential* instrument over finished runs rather than
+//! recorded streams: [`diff`] — the regression explainer behind
+//! `distnumpy diff`, which aligns two run reports epoch-by-epoch on
+//! their ledgers ([`crate::metrics::ledger`]) and attributes a
+//! makespan/wait delta to named epochs, causes, and (with `--trace`
+//! timelines) individual ops. The failing perf gate names it.
+//!
 //! Wired three ways: the `distnumpy analyze` CLI subcommand sweeps the
 //! shipped apps (streams captured via `ExecState::capture` +
 //! `harness::captured_streams`), `SchedCfg::verify_deps` re-runs the
@@ -22,10 +29,12 @@
 //! oracle/lint counters surface in the run JSON (`RunReport::{races,
 //! excess_edges, predicted_stalls, lints}`).
 
+pub mod diff;
 pub mod hazards;
 pub mod lint;
 pub mod stalls;
 
+pub use diff::{DiffReport, TraceDiff};
 pub use hazards::{HazardStats, Race};
 pub use lint::{Diag, Severity};
 pub use stalls::StallPrediction;

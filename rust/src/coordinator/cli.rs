@@ -6,6 +6,7 @@
 //!                  [--deps heuristic|dag] [--json]
 //! distnumpy analyze [--app jacobi] [--deps heuristic|dag|both] [--procs 16] [--json]
 //! distnumpy compare baseline.json new.json [--threshold 0.1] [--json]
+//! distnumpy diff   base.json new.json [--trace base_tr.json new_tr.json] [--json]
 //! distnumpy sweep  --app jacobi_stencil [--procs 1,2,4,8,16,32,64,128] [--json]
 //! distnumpy report wait [--procs 16]
 //! distnumpy fig19  [--procs 8,16,32,64,128]
@@ -131,6 +132,16 @@ USAGE:
                        # JSON reports metric-by-metric (whitelisted,
                        # direction-aware) and exits non-zero when any
                        # metric regresses beyond the relative threshold
+  distnumpy diff <base.json> <new.json> [--trace <base_tr.json> <new_tr.json>] [--json]
+                       # regression explainer: aligns two run reports
+                       # epoch-by-epoch on their ledgers and attributes
+                       # the makespan/wait delta into ranked per-epoch
+                       # deltas, a cause-shift table, and scalar deltas;
+                       # with --trace timelines also names the top
+                       # divergent ops and the critical-path drift.
+                       # Exits non-zero only on malformed or
+                       # unalignable inputs — a large delta is a
+                       # successful analysis
   distnumpy sweep  --app <name> [--procs 1,2,4,...] [--scale S] [--iters N] [--json]
   distnumpy pipeline [--procs 1,2,4,...] [--ks 1,2,4,8,16]
                                              # Jacobi staleness/wait trade-off (JSON)
@@ -402,7 +413,17 @@ fn run(cli: &Cli) -> Result<String, String> {
             let outcome = crate::metrics::compare::compare(&base, &new, threshold);
             let n_bad = outcome.n_regressed();
             let out = if cli.flag("json").is_some() {
-                outcome.to_json().render()
+                let mut j = outcome.to_json();
+                if n_bad > 0 {
+                    // Point the gate's consumer at the explainer.
+                    j.push(
+                        "diff_hint",
+                        crate::metrics::compare::diff_hint(base_path, new_path)
+                            .as_str()
+                            .into(),
+                    );
+                }
+                j.render()
             } else {
                 outcome.render_text()
             };
@@ -423,9 +444,56 @@ fn run(cli: &Cli) -> Result<String, String> {
                 // CI perf gate trips on any regressed metric.
                 println!("{out}");
                 Err(format!(
-                    "{n_bad} metric(s) regressed beyond {:.0}% vs {base_path}",
-                    threshold * 100.0
+                    "{n_bad} metric(s) regressed beyond {:.0}% vs {base_path}\n\
+                     attribute it: {}",
+                    threshold * 100.0,
+                    crate::metrics::compare::diff_hint(base_path, new_path)
                 ))
+            }
+        }
+        "diff" => {
+            const USAGE: &str = "usage: distnumpy diff <base.json> <new.json> \
+                 [--trace <base_trace.json> <new_trace.json>] [--json]";
+            let base_path = cli.positional.first().ok_or(USAGE)?;
+            let new_path = cli.positional.get(1).ok_or(USAGE)?;
+            let read = |path: &str| {
+                std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read '{path}': {e}"))
+                    .and_then(|s| {
+                        Json::parse(&s).map_err(|e| format!("cannot parse '{path}': {e}"))
+                    })
+            };
+            let base = read(base_path)?;
+            let new = read(new_path)?;
+            let mut report = crate::analyze::diff::diff_runs(&base, &new)
+                .map_err(|e| format!("diff {base_path} {new_path}: {e}"))?;
+            if let Some(tb) = cli.flag("trace") {
+                // `--trace A B` binds A to the flag and leaves B as the
+                // third positional; `--trace A,B` is also accepted.
+                // Bare `--trace` parses as "true" and is rejected.
+                const TRACE_USAGE: &str = "diff --trace needs two timelines: \
+                     --trace <base_trace.json> <new_trace.json>";
+                if tb == "true" {
+                    return Err(TRACE_USAGE.into());
+                }
+                let (tb, tn) = match tb.split_once(',') {
+                    Some((a, b)) => (a.to_string(), b.to_string()),
+                    None => (
+                        tb.to_string(),
+                        cli.positional.get(2).ok_or(TRACE_USAGE)?.clone(),
+                    ),
+                };
+                let base_tr = read(&tb)?;
+                let new_tr = read(&tn)?;
+                report.trace = Some(
+                    crate::analyze::diff::diff_traces(&base_tr, &new_tr)
+                        .map_err(|e| format!("diff --trace {tb} {tn}: {e}"))?,
+                );
+            }
+            if cli.flag("json").is_some() {
+                Ok(report.to_json().render())
+            } else {
+                Ok(report.render_text())
             }
         }
         "sweep" => {
@@ -694,10 +762,15 @@ mod tests {
         // Small drift within the threshold passes.
         let cmd = format!("compare {base} {}", good_p.to_str().unwrap());
         assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
-        // A >10% wait_pct regression fails the process.
+        // A >10% wait_pct regression fails the process and names the
+        // differential explainer.
         let cmd = format!("compare {base} {}", bad_p.to_str().unwrap());
         let err = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap_err();
         assert!(err.contains("regressed"), "{err}");
+        assert!(err.contains("distnumpy diff "), "{err}");
+        let cmd = format!("compare {base} {} --json", bad_p.to_str().unwrap());
+        let err = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap_err();
+        assert!(err.contains("distnumpy diff "), "{err}");
         // ...unless the threshold is loosened past it.
         let cmd = format!("compare {base} {} --threshold 0.6", bad_p.to_str().unwrap());
         assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
@@ -713,6 +786,74 @@ mod tests {
             .unwrap())
         .is_err());
         assert!(run(&Cli::parse(&args("compare")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn diff_subcommand_explains_runs() {
+        let dir = std::env::temp_dir();
+        let base_p = dir.join("distnumpy_diff_base.json");
+        let new_p = dir.join("distnumpy_diff_new.json");
+        let base = run(&Cli::parse(&args(
+            "run --app jacobi --procs 4 --scale 0.05 --iters 2 --flow sliding:4 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        let new = run(&Cli::parse(&args(
+            "run --app jacobi --procs 4 --scale 0.05 --iters 2 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        std::fs::write(&base_p, &base).unwrap();
+        std::fs::write(&new_p, &new).unwrap();
+        let bp = base_p.to_str().unwrap();
+        let np = new_p.to_str().unwrap();
+        // Self-diff: aligned, full coverage, zero attribution, exit Ok.
+        let cmd = format!("diff {bp} {bp} --json");
+        let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+        assert!(out.contains("\"aligned\":true"), "{out}");
+        assert!(out.contains("\"coverage\":1"), "{out}");
+        assert!(out.contains("\"epochs_diverging\":0"), "{out}");
+        // Cross-diff (sliding vs batch): a large delta is a successful
+        // analysis — exit Ok with a ranked attribution.
+        let cmd = format!("diff {bp} {np}");
+        let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+        assert!(out.contains("differential run analysis"), "{out}");
+        assert!(out.contains("epoch attribution"), "{out}");
+        assert!(out.contains("coverage"), "{out}");
+        // Malformed/missing inputs are errors.
+        assert!(run(&Cli::parse(&args("diff /no/such.json /no/such.json")).unwrap()).is_err());
+        assert!(run(&Cli::parse(&args("diff")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn diff_subcommand_with_traces() {
+        let dir = std::env::temp_dir();
+        let r_p = dir.join("distnumpy_diff_tr_run.json");
+        let t_p = dir.join("distnumpy_diff_tr.json");
+        let cmd = format!(
+            "run --app jacobi --procs 2 --scale 0.05 --iters 1 --trace {} --json",
+            t_p.to_str().unwrap()
+        );
+        let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+        std::fs::write(&r_p, &out).unwrap();
+        let rp = r_p.to_str().unwrap();
+        let tp = t_p.to_str().unwrap();
+        let cmd = format!("diff {rp} {rp} --trace {tp} {tp} --json");
+        let out = run(&Cli::parse(&args(&cmd)).unwrap()).unwrap();
+        assert!(out.contains("\"trace\""), "{out}");
+        assert!(out.contains("\"matched\""), "{out}");
+        assert!(out.contains("base_critical_path"), "{out}");
+        // Identical timelines: nothing unmatched, nothing divergent.
+        assert!(out.contains("\"unmatched_base\":0"), "{out}");
+        assert!(out.contains("\"top_ops\":[]"), "{out}");
+        // The comma form parses too.
+        let cmd = format!("diff {rp} {rp} --trace {tp},{tp}");
+        assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_ok());
+        // Bare --trace and non-trace documents are hard errors.
+        let cmd = format!("diff {rp} {rp} --trace");
+        assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_err());
+        let cmd = format!("diff {rp} {rp} --trace {rp} {rp}");
+        assert!(run(&Cli::parse(&args(&cmd)).unwrap()).is_err());
     }
 
     #[test]

@@ -40,6 +40,12 @@ pub struct EpochEntry {
     pub retired: VTime,
     /// Operations in the epoch (post-aggregation).
     pub n_ops: usize,
+    /// Admission-pipeline depth the moment this epoch was logged (this
+    /// epoch included) — the ledger's per-epoch in-flight annotation.
+    pub in_flight_at_admit: u64,
+    /// The epoch's streamed admission latency (what `latency_hist`
+    /// records); `NaN` for Batch-mode epochs.
+    pub latency: VTime,
 }
 
 /// The continuous admission log: one entry per flush epoch of the whole
@@ -78,23 +84,26 @@ pub struct AdmissionLog {
 impl AdmissionLog {
     /// Log one submitted epoch; returns its index.
     pub fn submitted(&mut self, record_start: VTime, record_done: VTime, n_ops: usize) -> usize {
+        let mut latency = f64::NAN;
         if record_done.is_finite() {
             // Streamed epoch: fold it into the O(1) report aggregates.
-            let latency = record_done - self.last_record_done;
+            latency = record_done - self.last_record_done;
             self.latency_total += latency;
             self.latency_n += 1;
             self.latency_hist.record(latency);
             self.last_record_done = record_done;
         }
+        self.admitted_ops += n_ops as u64;
+        self.in_flight += 1;
+        self.max_in_flight = self.max_in_flight.max(self.in_flight);
         self.epochs.push(EpochEntry {
             record_start,
             record_done,
             retired: f64::NAN,
             n_ops,
+            in_flight_at_admit: self.in_flight,
+            latency,
         });
-        self.admitted_ops += n_ops as u64;
-        self.in_flight += 1;
-        self.max_in_flight = self.max_in_flight.max(self.in_flight);
         self.epochs.len() - 1
     }
 

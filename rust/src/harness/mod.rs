@@ -170,6 +170,23 @@ pub fn run_once_traced(
     (report, baseline, sink)
 }
 
+/// One run rendered the way `distnumpy run --json` emits it: the full
+/// report (ledger included) plus the baseline/speedup scalars. The
+/// substrate `tests/diff.rs` and the CI diff-smoke feed to
+/// [`crate::analyze::diff::diff_runs`] without shelling out.
+pub fn run_json(
+    app: AppId,
+    policy: Policy,
+    params: &AppParams,
+    cfg: SchedCfg,
+) -> (crate::util::json::Json, RunReport, crate::trace::TraceSink) {
+    let (report, baseline, sink) = run_once_traced(app, policy, params, cfg);
+    let mut o = report.to_json();
+    o.push("baseline", baseline.into());
+    o.push("speedup", (baseline / report.makespan.max(1e-12)).into());
+    (o, report, sink)
+}
+
 /// Record `app` under latency-hiding and capture, per scheduler run,
 /// the exact post-aggregation op streams the sessions admitted —
 /// the input feed of the [`crate::analyze`] pass (`distnumpy analyze`)

@@ -75,6 +75,17 @@ pub struct CompareOutcome {
     /// empty/renamed/truncated bench artifact, not a clean pass.
     pub baseline_gated: usize,
     pub threshold: f64,
+    /// Informational context: non-whitelisted *virtual-time* numeric
+    /// leaves that moved by more than the threshold (host subtree and
+    /// wall-clock bench fields still excluded). Never gates — surfaced
+    /// in `--json` so a gate report carries the surrounding movement.
+    pub ungated: Vec<Row>,
+    /// `meta.commit` stamped into the baseline by
+    /// `bench/baselines/refresh.sh`, so a failure names what it gated
+    /// against.
+    pub meta_commit: Option<String>,
+    /// `meta.date` of the baseline refresh.
+    pub meta_date: Option<String>,
 }
 
 impl CompareOutcome {
@@ -110,13 +121,46 @@ impl CompareOutcome {
         o.push("baseline_gated", self.baseline_gated.into());
         o.push("vacuous", self.is_vacuous().into());
         o.push("regressions", self.n_regressed().into());
+        if self.meta_commit.is_some() || self.meta_date.is_some() {
+            let mut m = Json::obj();
+            if let Some(c) = &self.meta_commit {
+                m.push("commit", c.as_str().into());
+            }
+            if let Some(d) = &self.meta_date {
+                m.push("date", d.as_str().into());
+            }
+            o.push("baseline_meta", m);
+        }
         o.push("rows", Json::Arr(rows));
+        // Context, not gate: the largest non-whitelisted movements,
+        // biggest first, capped so a reshaped report can't flood the
+        // gate output.
+        let mut ungated: Vec<&Row> = self.ungated.iter().collect();
+        ungated.sort_by(|a, b| b.rel.abs().total_cmp(&a.rel.abs()));
+        ungated.truncate(50);
+        let mut uj = Vec::new();
+        for r in ungated {
+            let mut u = Json::obj();
+            u.push("metric", r.path.as_str().into());
+            u.push("base", r.base.into());
+            u.push("new", r.new.into());
+            u.push("rel", r.rel.into());
+            uj.push(u);
+        }
+        o.push("ungated", Json::Arr(uj));
         o
     }
 
     /// Human-readable report: regressions first, then the verdict line.
     pub fn render_text(&self) -> String {
         let mut out = String::new();
+        if self.meta_commit.is_some() || self.meta_date.is_some() {
+            out.push_str(&format!(
+                "baseline: commit {} ({})\n",
+                self.meta_commit.as_deref().unwrap_or("unknown"),
+                self.meta_date.as_deref().unwrap_or("undated"),
+            ));
+        }
         for r in self.regressions() {
             out.push_str(&format!(
                 "REGRESSION {:<40} {:>14.6e} -> {:>14.6e}  ({:+.1}%)\n",
@@ -154,8 +198,27 @@ pub fn compare(base: &Json, new: &Json, threshold: f64) -> CompareOutcome {
         baseline_gated: count_gated(base),
         ..Default::default()
     };
+    if let Some(meta) = base.get("meta") {
+        out.meta_commit = meta
+            .get("commit")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        out.meta_date = meta.get("date").and_then(Json::as_str).map(str::to_string);
+    }
     walk(base, new, "", &mut out);
     out
+}
+
+/// The follow-up command a failing gate names: attribute the regression
+/// per epoch/cause with the differential analyzer.
+pub fn diff_hint(base_path: &str, new_path: &str) -> String {
+    format!("distnumpy diff {base_path} {new_path}")
+}
+
+/// Wall-clock bench fields: machine-dependent, excluded from the
+/// informational `ungated` section just like the gate excludes them.
+fn wall_clock(key: &str) -> bool {
+    matches!(key, "secs" | "median" | "stddev" | "events_per_sec")
 }
 
 /// Count the gated numeric leaves a report contains on its own,
@@ -212,6 +275,21 @@ fn walk(base: &Json, new: &Json, path: &str, out: &mut CompareOutcome) {
             let key = path.rsplit('.').next().unwrap_or(path);
             let Some(dir) = direction(key) else {
                 out.ignored += 1;
+                // Informational only: record material movement of
+                // virtual-time leaves the gate doesn't cover (direction
+                // unknown, so `rel` is the raw signed relative change).
+                if !wall_clock(key) && !(b.abs() < ABS_FLOOR && n.abs() < ABS_FLOOR) {
+                    let rel = (n - b) / b.abs().max(ABS_FLOOR);
+                    if rel.abs() > out.threshold {
+                        out.ungated.push(Row {
+                            path: path.to_string(),
+                            base: b,
+                            new: n,
+                            rel,
+                            regressed: false,
+                        });
+                    }
+                }
                 return;
             };
             if b.abs() < ABS_FLOOR && n.abs() < ABS_FLOOR {
@@ -389,6 +467,63 @@ mod tests {
         let out = compare(&base, &new, DEFAULT_THRESHOLD);
         assert_eq!(out.rows.len(), 1);
         assert!(!out.is_vacuous());
+    }
+
+    #[test]
+    fn ungated_section_carries_context_without_gating() {
+        let mut base = Json::obj();
+        base.push("wait_pct", 10.0.into());
+        base.push("n_epochs", 4u64.into()); // not whitelisted
+        base.push("secs", 1.0.into()); // wall clock: excluded
+        let mut new = Json::obj();
+        new.push("wait_pct", 10.0.into());
+        new.push("n_epochs", 400u64.into());
+        new.push("secs", 50.0.into());
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.n_regressed(), 0, "ungated movement never gates");
+        assert_eq!(out.ungated.len(), 1, "n_epochs moved, secs excluded");
+        let u = &out.ungated[0];
+        assert_eq!(u.path, "n_epochs");
+        assert!((u.rel - 99.0).abs() < 1e-9, "raw signed relative change");
+        assert!(!u.regressed);
+        let j = out.to_json().render();
+        assert!(j.contains("\"ungated\""));
+        assert!(j.contains("n_epochs"));
+        assert!(!j.contains("secs"));
+        // Sub-threshold wobble stays out of the section entirely.
+        let mut close = Json::obj();
+        close.push("wait_pct", 10.0.into());
+        close.push("n_epochs", 4u64.into());
+        close.push("secs", 1.0.into());
+        assert!(compare(&base, &close, DEFAULT_THRESHOLD).ungated.is_empty());
+    }
+
+    #[test]
+    fn baseline_meta_surfaces_in_text_and_json() {
+        let mut meta = Json::obj();
+        meta.push("commit", "abc1234".into());
+        meta.push("date", "2026-08-08T00:00:00Z".into());
+        let mut base = report(10.0, 3.0);
+        base.push("meta", meta);
+        let new = report(10.0, 3.0);
+        let out = compare(&base, &new, DEFAULT_THRESHOLD);
+        assert_eq!(out.meta_commit.as_deref(), Some("abc1234"));
+        assert!(out.render_text().contains("baseline: commit abc1234"));
+        let j = out.to_json().render();
+        assert!(j.contains("\"baseline_meta\""));
+        assert!(j.contains("abc1234"));
+        // A meta-less baseline keeps the old output shape.
+        let bare = compare(&new, &new, DEFAULT_THRESHOLD);
+        assert!(bare.meta_commit.is_none());
+        assert!(!bare.render_text().contains("baseline:"));
+        assert!(!bare.to_json().render().contains("baseline_meta"));
+    }
+
+    #[test]
+    fn diff_hint_names_the_command() {
+        let h = diff_hint("bench/baselines/BENCH_flow.json", "BENCH_flow.json");
+        assert!(h.starts_with("distnumpy diff "));
+        assert!(h.contains("bench/baselines/BENCH_flow.json"));
     }
 
     #[test]

@@ -187,16 +187,26 @@ impl Hist {
 
     /// Compact JSON: exact side counters, bucket-resolved quantiles,
     /// and only the non-empty buckets as `[lo_exp, count]` pairs.
+    /// Quantiles of an *empty* histogram render as `null` — a 0.0
+    /// sentinel would read as "measured a zero-length tail" and corrupt
+    /// naive p50/p90/p99 comparisons downstream.
     pub fn to_json(&self) -> Json {
+        let quant = |v: f64| {
+            if self.n == 0 {
+                Json::Null
+            } else {
+                v.into()
+            }
+        };
         let mut o = Json::obj();
         o.push("n", self.n.into());
         o.push("sum", self.sum.into());
         o.push("mean", self.mean().into());
         o.push("min", self.min().into());
         o.push("max", self.max().into());
-        o.push("p50", self.p50().into());
-        o.push("p90", self.p90().into());
-        o.push("p99", self.p99().into());
+        o.push("p50", quant(self.p50()));
+        o.push("p90", quant(self.p90()));
+        o.push("p99", quant(self.p99()));
         let mut buckets = Vec::new();
         for (i, &c) in self.buckets.iter().enumerate() {
             if c > 0 {
@@ -299,6 +309,45 @@ mod tests {
         assert_eq!(h.p99(), 0.0);
         let s = h.to_json().render();
         assert!(!s.contains("inf"), "no infinities leak into JSON: {s}");
+        // n=0 quantiles are *null*, not a 0.0 sentinel; the exact
+        // min/max keep their clean 0.0 (documented empty-value).
+        assert!(s.contains("\"p50\":null"), "{s}");
+        assert!(s.contains("\"p90\":null"), "{s}");
+        assert!(s.contains("\"p99\":null"), "{s}");
+        assert!(s.contains("\"min\":0"), "{s}");
+    }
+
+    #[test]
+    fn merging_empty_hist_does_not_poison_min_max() {
+        let mut a = Hist::default();
+        a.record(2.0);
+        a.record(8.0);
+        // Empty into non-empty: the empty side's ±INF sentinels must not
+        // leak through the comparisons.
+        a.merge(&Hist::default());
+        assert_eq!(a.min(), 2.0);
+        assert_eq!(a.max(), 8.0);
+        assert!(a.min.is_finite() && a.max.is_finite());
+        // Non-empty into empty: the samples' envelope wins outright.
+        let mut b = Hist::default();
+        b.merge(&a);
+        assert_eq!(b.min(), 2.0);
+        assert_eq!(b.max(), 8.0);
+        assert_eq!(b.n(), 2);
+        // Empty into empty stays empty and renders null quantiles.
+        let mut c = Hist::default();
+        c.merge(&Hist::default());
+        assert_eq!(c.n(), 0);
+        assert!(c.to_json().render().contains("\"p50\":null"));
+    }
+
+    #[test]
+    fn nonempty_quantiles_render_as_numbers() {
+        let mut h = Hist::default();
+        h.record(4.0);
+        let s = h.to_json().render();
+        assert!(!s.contains("null"), "no null fields once populated: {s}");
+        assert!(s.contains("\"p50\":4"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! The per-epoch run ledger: the compact always-on accounting that
+//! makes two runs *diffable* (DESIGN.md §12).
+//!
+//! `RunReport` scalars say how much time a run spent waiting; the PR-8
+//! histograms say how that time was distributed; neither says **where
+//! in the schedule** it sat. The ledger adds the missing axis: one row
+//! per flush epoch (admission-log index), recording at the existing
+//! choke points ([`crate::sched::ExecState::charge_wait`],
+//! `gate_admission`, `note_msg_post`, `note_retire`) so every row
+//! reconciles exactly with the scalar accounting:
+//!
+//! * `Σ rows.wait[cause]` = the per-cause histogram sums
+//!   ([`crate::metrics::hist::DistMetrics::wait_by_cause`]);
+//! * `Σ rows.wait[≠admission]` = the per-rank `wait` vector sum;
+//! * `Σ rows.msgs` = `n_messages`; `Σ rows.bytes` =
+//!   `bytes_inter + bytes_intra`; `Σ rows.ops` = `ops_executed`;
+//! * `Σ rows.advance + residual(makespan)` = `makespan` — the row
+//!   *makespan-advance* is how far the retirement high-water mark moved
+//!   while the epoch was the most recently admitted one, so the rows
+//!   partition the makespan and a diff can attribute a makespan delta
+//!   to named epochs.
+//!
+//! Recording is pure bookkeeping — no `VTime` arithmetic is touched —
+//! so the simulated timeline stays bit-identical with the ledger on
+//! (it is always on), exactly like the PR-8 histograms.
+//!
+//! Rows are keyed by the epoch tag current at charge time ("latest
+//! submitted" under pipelined admission — deliberate: execution of
+//! earlier epochs overlaps later recording, and the tag names the
+//! pipeline state the charge happened under; both runs of a diff key
+//! the same way, and the splice renumbering
+//! ([`crate::flow::Splicer`]) is deterministic, so epoch indices are
+//! comparable across runs of the same program).
+
+use crate::flow::AdmissionLog;
+use crate::trace::WaitCause;
+use crate::types::VTime;
+use crate::util::json::Json;
+
+/// One flush epoch's accounting row.
+#[derive(Clone, Debug)]
+pub struct LedgerRow {
+    /// How far the retirement high-water mark advanced while this epoch
+    /// was current — the epoch's share of the makespan (s).
+    pub advance: VTime,
+    /// Wait charged while this epoch was current, per
+    /// [`WaitCause::index`] (admission included — reported separately
+    /// from per-rank wait, same convention as the scalar report).
+    pub wait: [VTime; WaitCause::N],
+    /// Wire messages posted.
+    pub msgs: u64,
+    /// Bytes of those messages.
+    pub bytes: u64,
+    /// Operations retired.
+    pub ops: u64,
+    /// Admission-pipeline depth when the epoch entered the log
+    /// (annotated from [`AdmissionLog`] at snapshot time).
+    pub in_flight: u64,
+    /// The epoch's streamed admission latency; `NaN` (renders null)
+    /// for Batch-mode epochs, which have no recorder clock.
+    pub admit_latency: VTime,
+    /// When the epoch's last operation retired; `NaN` until drained.
+    pub retired: VTime,
+}
+
+impl Default for LedgerRow {
+    fn default() -> Self {
+        LedgerRow {
+            advance: 0.0,
+            wait: [0.0; WaitCause::N],
+            msgs: 0,
+            bytes: 0,
+            ops: 0,
+            in_flight: 0,
+            admit_latency: f64::NAN,
+            retired: f64::NAN,
+        }
+    }
+}
+
+impl LedgerRow {
+    /// Total wait of the row, all causes (admission included).
+    pub fn wait_total(&self) -> VTime {
+        self.wait.iter().sum()
+    }
+
+    /// Total wait excluding the admission gate — the part that also
+    /// lands in the per-rank `wait` vectors.
+    pub fn wait_rank(&self) -> VTime {
+        let adm = WaitCause::Admission.index();
+        self.wait
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != adm)
+            .map(|(_, w)| w)
+            .sum()
+    }
+
+    /// Parse one row back from its JSON form (the `ledger.epochs[i]`
+    /// object) — the read side used by `analyze::diff`.
+    pub fn from_json(j: &Json) -> Result<LedgerRow, String> {
+        let num = |key: &str| j.get(key).and_then(Json::as_f64);
+        let mut row = LedgerRow {
+            advance: num("advance").ok_or("ledger row missing 'advance'")?,
+            msgs: num("msgs").unwrap_or(0.0) as u64,
+            bytes: num("bytes").unwrap_or(0.0) as u64,
+            ops: num("ops").unwrap_or(0.0) as u64,
+            in_flight: num("in_flight").unwrap_or(0.0) as u64,
+            admit_latency: num("admit_latency").unwrap_or(f64::NAN),
+            retired: num("retired").unwrap_or(f64::NAN),
+            ..LedgerRow::default()
+        };
+        if let Some(w) = j.get("wait") {
+            for (i, label) in WaitCause::LABELS.iter().enumerate() {
+                if let Some(v) = w.get(label).and_then(Json::as_f64) {
+                    row.wait[i] = v;
+                }
+            }
+        }
+        Ok(row)
+    }
+
+    fn to_json(&self, epoch: usize) -> Json {
+        let mut o = Json::obj();
+        o.push("epoch", epoch.into());
+        o.push("advance", self.advance.into());
+        let mut w = Json::obj();
+        for (i, label) in WaitCause::LABELS.iter().enumerate() {
+            if self.wait[i] != 0.0 {
+                w.push(label, self.wait[i].into());
+            }
+        }
+        o.push("wait", w);
+        o.push("wait_total", self.wait_total().into());
+        o.push("msgs", self.msgs.into());
+        o.push("bytes", self.bytes.into());
+        o.push("ops", self.ops.into());
+        o.push("in_flight", self.in_flight.into());
+        // NaN renders as null: a Batch epoch has no admission latency
+        // and an undrained epoch has no retirement yet.
+        o.push("admit_latency", self.admit_latency.into());
+        o.push("retired", self.retired.into());
+        o
+    }
+}
+
+/// The per-epoch run ledger, carried on [`crate::sched::ExecState`]
+/// and snapshotted (annotated) into [`crate::metrics::RunReport`].
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub rows: Vec<LedgerRow>,
+    /// Retirement high-water mark: the latest retirement time seen.
+    /// `Σ rows.advance == clock_hi` by construction (the increments
+    /// telescope), so `makespan − clock_hi` is the *residual* — trailing
+    /// joins and final-epoch overhead no retirement covers.
+    clock_hi: VTime,
+}
+
+impl Ledger {
+    fn row_mut(&mut self, epoch: u64) -> &mut LedgerRow {
+        let i = epoch as usize;
+        if self.rows.len() <= i {
+            self.rows.resize_with(i + 1, LedgerRow::default);
+        }
+        &mut self.rows[i]
+    }
+
+    /// Record a wait interval charged while `epoch` was current.
+    #[inline]
+    pub fn record_wait(&mut self, epoch: u64, cause: WaitCause, d: VTime) {
+        self.row_mut(epoch).wait[cause.index()] += d;
+    }
+
+    /// Record one posted wire message.
+    #[inline]
+    pub fn record_msg(&mut self, epoch: u64, bytes: u64) {
+        let row = self.row_mut(epoch);
+        row.msgs += 1;
+        row.bytes += bytes;
+    }
+
+    /// Record one op retirement at time `t`: counts the op and
+    /// attributes any advance of the retirement high-water mark to the
+    /// current epoch.
+    #[inline]
+    pub fn record_retire(&mut self, epoch: u64, t: VTime) {
+        let hi = self.clock_hi;
+        let row = self.row_mut(epoch);
+        row.ops += 1;
+        if t.is_finite() && t > hi {
+            row.advance += t - hi;
+            self.clock_hi = t;
+        }
+    }
+
+    /// The retirement high-water mark (= `Σ rows.advance`).
+    pub fn clock_hi(&self) -> VTime {
+        self.clock_hi
+    }
+
+    /// The share of `makespan` no epoch's advance covers: trailing
+    /// joins / final overhead after the last retirement. Non-negative
+    /// on a real run (retirements drive the clocks).
+    pub fn residual(&self, makespan: VTime) -> VTime {
+        (makespan - self.clock_hi).max(0.0)
+    }
+
+    /// Sum of one cause across all rows — the reconciliation anchor
+    /// against the per-cause histogram sums.
+    pub fn cause_sum(&self, cause: WaitCause) -> VTime {
+        self.rows.iter().map(|r| r.wait[cause.index()]).sum()
+    }
+
+    /// Clone of the ledger with the admission-log annotations filled
+    /// in (pipeline depth at admit, streamed latency, retirement) —
+    /// the snapshot [`crate::sched::ExecState::report`] takes.
+    pub fn annotated(&self, log: &AdmissionLog) -> Ledger {
+        let mut out = self.clone();
+        if out.rows.len() < log.epochs.len() {
+            out.rows.resize_with(log.epochs.len(), LedgerRow::default);
+        }
+        for (row, e) in out.rows.iter_mut().zip(&log.epochs) {
+            row.in_flight = e.in_flight_at_admit;
+            row.admit_latency = e.latency;
+            row.retired = e.retired;
+        }
+        out
+    }
+
+    /// Merge another run's ledger (for [`crate::metrics::RunReport::absorb`]:
+    /// back-to-back independent runs). Rows append — epoch indices
+    /// continue, matching how `n_epochs` and the epoch-wait series add —
+    /// and the high-water marks add because the makespans add.
+    pub fn merge(&mut self, other: &Ledger) {
+        self.rows.extend(other.rows.iter().cloned());
+        self.clock_hi += other.clock_hi;
+    }
+
+    /// The run JSON `ledger` section.
+    pub fn to_json(&self, makespan: VTime) -> Json {
+        let mut o = Json::obj();
+        o.push("clock_hi", self.clock_hi.into());
+        o.push("residual", self.residual(makespan).into());
+        o.push(
+            "epochs",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| r.to_json(i))
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    /// Parse the rows (and residual) back from a run JSON's `ledger`
+    /// section. Returns `None` when the report carries no ledger (e.g.
+    /// a `BENCH_*.json` ablation artifact).
+    pub fn parse_section(report: &Json) -> Option<Result<(Vec<LedgerRow>, VTime), String>> {
+        let sec = report.get("ledger")?;
+        Some((|| {
+            let rows = sec
+                .get("epochs")
+                .and_then(Json::as_arr)
+                .ok_or("ledger section missing 'epochs' array")?
+                .iter()
+                .map(LedgerRow::from_json)
+                .collect::<Result<Vec<_>, String>>()?;
+            let residual = sec
+                .get("residual")
+                .and_then(Json::as_f64)
+                .ok_or("ledger section missing 'residual'")?;
+            Ok((rows, residual))
+        })())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_telescope_to_clock_hi() {
+        let mut l = Ledger::default();
+        l.record_retire(0, 1.0);
+        l.record_retire(0, 0.5); // no rewind
+        l.record_retire(1, 2.5);
+        l.record_retire(2, 2.5); // ties advance nothing
+        assert_eq!(l.clock_hi(), 2.5);
+        let total: f64 = l.rows.iter().map(|r| r.advance).sum();
+        assert!((total - 2.5).abs() < 1e-12);
+        assert_eq!(l.rows[0].ops, 2);
+        assert!((l.rows[0].advance - 1.0).abs() < 1e-12);
+        assert!((l.rows[1].advance - 1.5).abs() < 1e-12);
+        assert_eq!(l.rows[2].advance, 0.0);
+        assert!((l.residual(3.0) - 0.5).abs() < 1e-12);
+        assert_eq!(l.residual(2.0), 0.0, "residual never negative");
+    }
+
+    #[test]
+    fn wait_and_msgs_accumulate_per_epoch() {
+        let mut l = Ledger::default();
+        l.record_wait(0, WaitCause::Barrier, 1.0);
+        l.record_wait(0, WaitCause::Admission, 0.25);
+        l.record_wait(2, WaitCause::Barrier, 0.5);
+        l.record_msg(1, 4096);
+        l.record_msg(1, 1024);
+        assert_eq!(l.rows.len(), 3);
+        assert!((l.cause_sum(WaitCause::Barrier) - 1.5).abs() < 1e-12);
+        assert!((l.rows[0].wait_total() - 1.25).abs() < 1e-12);
+        assert!((l.rows[0].wait_rank() - 1.0).abs() < 1e-12, "admission excluded");
+        assert_eq!(l.rows[1].msgs, 2);
+        assert_eq!(l.rows[1].bytes, 5120);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut l = Ledger::default();
+        l.record_wait(0, WaitCause::Transfer { peer: crate::types::Rank(1) }, 0.75);
+        l.record_msg(0, 512);
+        l.record_retire(0, 1.5);
+        l.record_retire(1, 2.0);
+        let j = l.to_json(2.25);
+        let text = j.render();
+        assert!(text.contains("\"residual\":0.25"), "{text}");
+        let back = Json::parse(&text).unwrap();
+        let mut doc = Json::obj();
+        doc.push("ledger", back);
+        let (rows, residual) = Ledger::parse_section(&doc).unwrap().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].wait[0] - 0.75).abs() < 1e-12);
+        assert_eq!(rows[0].msgs, 1);
+        assert_eq!(rows[0].bytes, 512);
+        assert!((rows[0].advance - 1.5).abs() < 1e-12);
+        assert!((residual - 0.25).abs() < 1e-12);
+        assert!(rows[0].admit_latency.is_nan(), "null parses back to NaN");
+    }
+
+    #[test]
+    fn parse_section_absent_on_plain_reports() {
+        let doc = Json::parse(r#"{"makespan":1.0}"#).unwrap();
+        assert!(Ledger::parse_section(&doc).is_none());
+    }
+
+    #[test]
+    fn merge_appends_rows_and_adds_marks() {
+        let mut a = Ledger::default();
+        a.record_retire(0, 1.0);
+        let mut b = Ledger::default();
+        b.record_retire(0, 2.0);
+        a.merge(&b);
+        assert_eq!(a.rows.len(), 2);
+        assert_eq!(a.clock_hi(), 3.0);
+    }
+}

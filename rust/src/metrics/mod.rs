@@ -6,11 +6,13 @@
 
 pub mod compare;
 pub mod hist;
+pub mod ledger;
 
 use crate::profile::Profiler;
 use crate::types::VTime;
 use crate::util::json::Json;
 use hist::{DistMetrics, Hist};
+use ledger::Ledger;
 
 /// Outcome of executing one flushed batch (or a whole run) on the
 /// simulated cluster.
@@ -118,6 +120,11 @@ pub struct RunReport {
     /// Distribution of the streamed per-epoch admission latencies whose
     /// mean is `admission_latency` ([`crate::flow::AdmissionLog`]).
     pub admission_hist: Hist,
+    /// The per-epoch run ledger ([`ledger::Ledger`]): one accounting
+    /// row per flush epoch, reconciling exactly with the scalars above
+    /// — the alignment substrate `distnumpy diff` attributes regressions
+    /// on. Always populated.
+    pub ledger: Ledger,
     /// Host-side self-profile (`--profile`): phase wall timers and DES
     /// events/sec. `None` unless profiling was enabled.
     pub host: Option<Profiler>,
@@ -208,6 +215,7 @@ impl RunReport {
         self.trace_dropped += other.trace_dropped;
         self.dist.merge(&other.dist);
         self.admission_hist.merge(&other.admission_hist);
+        self.ledger.merge(&other.ledger);
         // Host profiles merge only when both runs carried one; a report
         // without a profile contributes nothing to phase timings.
         match (&mut self.host, &other.host) {
@@ -309,6 +317,7 @@ impl RunReport {
             Json::Arr(self.dist.epoch_wait.iter().map(|&w| w.into()).collect()),
         );
         o.push("dist", dist);
+        o.push("ledger", self.ledger.to_json(self.makespan));
         if let Some(host) = &self.host {
             o.push("host", host.to_json());
         }
@@ -393,6 +402,7 @@ mod tests {
         assert!(s.contains("\"dist\""));
         assert!(s.contains("msg_bytes"));
         assert!(s.contains("epoch_wait"));
+        assert!(s.contains("\"ledger\""));
         assert!(
             !s.contains("\"host\""),
             "no host section unless profiling ran"

@@ -41,6 +41,7 @@ use crate::deps::DepSystem;
 use crate::exec::Backend;
 use crate::flow::AdmissionLog;
 use crate::metrics::hist::DistMetrics;
+use crate::metrics::ledger::Ledger;
 use crate::metrics::RunReport;
 use crate::net::{Network, PostResult};
 use crate::profile::Profiler;
@@ -119,6 +120,13 @@ pub struct ExecState {
     /// the trace sink uses, but unconditionally — recording is pure
     /// bookkeeping and never touches the `VTime` arithmetic.
     pub dist: DistMetrics,
+    /// Always-on per-epoch run ledger ([`crate::metrics::ledger`]):
+    /// one accounting row per flush epoch (makespan-advance, per-cause
+    /// wait, messages, ops), fed at the same choke points as `dist` —
+    /// `charge_wait`, `gate_admission`, `note_msg_post`, `note_retire`
+    /// — so row sums reconcile exactly with the scalar report. Pure
+    /// bookkeeping: never touches the `VTime` arithmetic.
+    pub ledger: Ledger,
     /// Host-side self-profiler (`SchedCfg::profile`): phase-scoped wall
     /// timers and the DES events-processed counter. Free when disabled.
     pub prof: Profiler,
@@ -179,6 +187,7 @@ impl ExecState {
             stages: StageTable::new(),
             trace: TraceSink::new(cfg.trace),
             dist: DistMetrics::default(),
+            ledger: Ledger::default(),
             prof: Profiler::new(cfg.profile),
             ops_executed: 0,
             n_compute: 0,
@@ -221,6 +230,7 @@ impl ExecState {
         self.wait[r] += t1 - t0;
         let ep = self.cur_epoch();
         self.dist.record_wait(cause, ep, t1 - t0);
+        self.ledger.record_wait(ep, cause, t1 - t0);
         if self.trace.on() {
             self.trace.wait(Rank(r as u32), cause, ep, t0, t1);
         }
@@ -294,6 +304,7 @@ impl ExecState {
             self.wait_at_admission += d;
             let ep = self.cur_epoch();
             self.dist.record_wait(WaitCause::Admission, ep, d);
+            self.ledger.record_wait(ep, WaitCause::Admission, d);
             if self.trace.on() {
                 self.trace.wait(r, WaitCause::Admission, ep, t0, gate);
             }
@@ -318,6 +329,7 @@ impl ExecState {
         t: VTime,
     ) -> PostResult {
         self.dist.msg_bytes.record(bytes as f64);
+        self.ledger.record_msg(self.cur_epoch(), bytes);
         if self.trace.on() {
             self.trace.msg_post(tag, from, to, bytes, t);
         }
@@ -368,10 +380,12 @@ impl ExecState {
         if let Some(slot) = self.retire.get_mut(op.id.idx()) {
             *slot = (op.rank, t);
         }
+        let ep = self.cur_epoch();
+        self.ledger.record_retire(ep, t);
         if self.trace.on() {
             let (kind, bytes) = trace::op_kind_bytes(op);
-            let ep = self.cur_epoch();
-            self.trace.op_retire(op.id, op.rank, kind, bytes, ep, t);
+            self.trace
+                .op_retire(op.id, op.rank, kind, bytes, ep, t, op.describe());
         }
         for a in &op.accesses {
             let Loc::Stage(tag) = a.loc else { continue };
@@ -436,6 +450,7 @@ impl ExecState {
         rep.trace_dropped = self.trace.dropped();
         rep.dist = self.dist.clone();
         rep.admission_hist = self.flow_log.latency_hist.clone();
+        rep.ledger = self.ledger.annotated(&self.flow_log);
         if self.prof.on() {
             rep.host = Some(self.prof.clone());
         }

@@ -119,6 +119,7 @@ pub fn perfetto(sink: &TraceSink, nprocs: usize) -> Json {
                 bytes,
                 epoch,
                 t,
+                ref desc,
             } => {
                 let t0 = open.remove(&op.0).unwrap_or(t);
                 if !t0.is_finite() || !t.is_finite() {
@@ -140,6 +141,11 @@ pub fn perfetto(sink: &TraceSink, nprocs: usize) -> Json {
                 args.push("op", Json::from(op.0 as u64));
                 args.push("bytes", Json::from(bytes));
                 args.push("epoch", Json::from(epoch));
+                if !desc.is_empty() {
+                    // Provenance for diff/inspection tooling: what the
+                    // op was in source terms (`OpNode::describe`).
+                    args.push("desc", desc.as_str().into());
+                }
                 s.push("args", args);
                 evs.push(s);
             }

@@ -140,6 +140,10 @@ pub enum TraceEvent {
         bytes: u64,
         epoch: u64,
         t: VTime,
+        /// Human-readable provenance ([`OpNode::describe`]) — carried
+        /// into the Perfetto export (`args.desc`) so `distnumpy diff`
+        /// can name divergent ops in source terms.
+        desc: String,
     },
     /// A message envelope was posted to the network (`post_send`); one
     /// event per `Network::post_send`, so counts reconcile with
@@ -311,6 +315,7 @@ impl TraceSink {
         bytes: u64,
         epoch: u64,
         t: VTime,
+        desc: String,
     ) {
         if !self.enabled {
             return;
@@ -322,6 +327,7 @@ impl TraceSink {
             bytes,
             epoch,
             t,
+            desc,
         });
     }
 

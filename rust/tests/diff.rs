@@ -1,0 +1,294 @@
+//! Integration tests for the per-epoch run ledger and the `distnumpy
+//! diff` regression explainer (ISSUE 9).
+//!
+//! The load-bearing claims, checked end-to-end through real app runs:
+//!
+//! * **Reconciliation** — the ledger is not a parallel estimate but
+//!   the *same* accounting the aggregate [`RunReport`] scalars and the
+//!   PR-8 histograms come from: per-cause row sums match the per-cause
+//!   histogram sums, the non-admission rows sum to the per-rank `wait`
+//!   vector, counters match `n_messages` / bytes / `ops_executed`, and
+//!   the epoch advances plus the residual partition the makespan —
+//!   across all three scheduling policies and all flow modes.
+//! * **Self-diff is zero** — diffing a run JSON against itself
+//!   attributes exactly nothing: no diverging epochs, zero attributed
+//!   advance, zero residual delta, coverage 1.0 by convention.
+//! * **A constructed regression is explained** — the flow-ablation
+//!   workload (pipelined Jacobi, P = 16) diffed sliding:4 → Batch
+//!   yields named epoch deltas whose sum (plus the residual delta)
+//!   covers the makespan delta, and a cause-shift table whose
+//!   admission row equals the `wait_at_admission` scalars exactly.
+//! * **Zero-cost** — the ledger is always on and records pure
+//!   bookkeeping: the simulated timeline is bit-identical whether or
+//!   not the (optional) tracing layer rides along.
+
+use distnumpy::analyze::diff::diff_runs;
+use distnumpy::apps::{record_jacobi_with, AppId, AppParams, Convergence};
+use distnumpy::cluster::MachineSpec;
+use distnumpy::flow::FlowCfg;
+use distnumpy::harness::{run_json, run_once_traced};
+use distnumpy::lazy::Context;
+use distnumpy::metrics::RunReport;
+use distnumpy::sched::{Policy, SchedCfg};
+use distnumpy::trace::WaitCause;
+use distnumpy::util::json::Json;
+
+fn close(a: f64, b: f64, label: &str) {
+    let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+    assert!((a - b).abs() <= tol, "{label}: {a} vs {b}");
+}
+
+fn cfg(p: u32, flow: FlowCfg) -> SchedCfg {
+    let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+    cfg.flow = flow;
+    cfg
+}
+
+/// Check every ledger ↔ report identity the diff engine leans on.
+fn reconcile(rep: &RunReport, label: &str) {
+    let l = &rep.ledger;
+    assert!(!l.rows.is_empty(), "{label}: a completed run must ledger its epochs");
+
+    // Per-cause row sums = per-cause histogram sums.
+    for (i, name) in WaitCause::LABELS.iter().enumerate() {
+        let rows: f64 = l.rows.iter().map(|r| r.wait[i]).sum();
+        close(rows, rep.dist.wait_by_cause[i].sum(), &format!("{label}: wait[{name}]"));
+    }
+
+    // Non-admission rows = the per-rank wait vector; the admission rows
+    // = the separately-reported admission stall.
+    let rank_rows: f64 = l.rows.iter().map(|r| r.wait_rank()).sum();
+    close(rank_rows, rep.wait.iter().sum(), &format!("{label}: rank wait"));
+    let adm = WaitCause::Admission.index();
+    let adm_rows: f64 = l.rows.iter().map(|r| r.wait[adm]).sum();
+    close(adm_rows, rep.wait_at_admission, &format!("{label}: admission wait"));
+
+    // Counters.
+    let msgs: u64 = l.rows.iter().map(|r| r.msgs).sum();
+    assert_eq!(msgs, rep.n_messages, "{label}: msgs");
+    let bytes: u64 = l.rows.iter().map(|r| r.bytes).sum();
+    assert_eq!(bytes, rep.bytes_inter + rep.bytes_intra, "{label}: bytes");
+    let ops: u64 = l.rows.iter().map(|r| r.ops).sum();
+    assert_eq!(ops, rep.ops_executed, "{label}: ops");
+
+    // The advances telescope to the high-water mark, and together with
+    // the residual they partition the makespan.
+    let advance: f64 = l.rows.iter().map(|r| r.advance).sum();
+    close(advance, l.clock_hi(), &format!("{label}: advance telescopes"));
+    assert!(
+        l.clock_hi() <= rep.makespan + 1e-9 * rep.makespan.max(1.0),
+        "{label}: retirements cannot outrun the makespan"
+    );
+    close(
+        advance + l.residual(rep.makespan),
+        rep.makespan,
+        &format!("{label}: advance + residual = makespan"),
+    );
+}
+
+#[test]
+fn ledger_reconciles_for_lh_and_blocking_across_flow_modes() {
+    let params = AppParams { scale: 0.25, iters: 2 };
+    let modes = [
+        ("batch", FlowCfg::default()),
+        ("flow2", FlowCfg::flow(2)),
+        ("sliding4", FlowCfg::sliding(4)),
+    ];
+    for (name, flow) in modes {
+        let (rep, _, _) = run_once_traced(
+            AppId::JacobiStencil,
+            Policy::LatencyHiding,
+            &params,
+            cfg(16, flow),
+        );
+        assert!(rep.n_messages > 0, "lh/{name}: stencil at P=16 must communicate");
+        reconcile(&rep, &format!("lh/{name}/p16"));
+    }
+
+    let params = AppParams { scale: 0.1, iters: 2 };
+    let (rep, _, _) = run_once_traced(
+        AppId::JacobiStencil,
+        Policy::Blocking,
+        &params,
+        cfg(8, FlowCfg::default()),
+    );
+    assert!(rep.n_messages > 0);
+    reconcile(&rep, "blocking/batch/p8");
+}
+
+/// The naive strawman deadlocks on multi-iteration stencils, so it gets
+/// a program it completes (same shape as the tracing tests).
+#[test]
+fn ledger_reconciles_under_naive() {
+    let mut ctx = Context::sim(cfg(4, FlowCfg::default()), Policy::Naive);
+    let x = ctx.zeros(&[64], 4);
+    let y = ctx.zeros(&[64], 4);
+    ctx.add(&y, &x, &x);
+    ctx.sum(&x).expect("flat reduce completes under naive");
+    let rep = ctx.finish().expect("naive run completes");
+    assert!(rep.ops_executed > 0);
+    reconcile(&rep, "naive/add+sum/p4");
+}
+
+#[test]
+fn self_diff_attributes_exactly_zero() {
+    let (doc, rep, _) = run_json(
+        AppId::JacobiStencil,
+        Policy::LatencyHiding,
+        &AppParams { scale: 0.1, iters: 2 },
+        cfg(8, FlowCfg::sliding(4)),
+    );
+    // Round-trip through text, exactly as the CLI consumes run JSONs.
+    let parsed = Json::parse(&doc.render()).expect("run JSON parses back");
+    let d = diff_runs(&parsed, &parsed).expect("self-diff aligns");
+    assert!(d.aligned, "a ledgered run diffs against itself epoch-by-epoch");
+    assert_eq!(d.epochs.len(), 0, "no epoch diverges from itself");
+    assert_eq!(d.attributed, 0.0, "attributed advance is exactly zero");
+    assert_eq!(d.d_residual, 0.0, "residual delta is exactly zero");
+    assert_eq!(d.d_makespan(), 0.0);
+    assert_eq!(d.coverage(), 1.0, "zero delta is fully covered by convention");
+    assert!(d.scalars.is_empty(), "no scalar moves against itself");
+    for c in &d.causes {
+        assert_eq!(c.delta(), 0.0, "cause {} must not shift", c.cause);
+    }
+    close(rep.makespan, d.base_makespan, "makespan survives the round-trip");
+}
+
+/// The flow ablation's constructed regression (`benches/ablation_flow`):
+/// pipelined Jacobi at P = 16 under sliding:4 (base) vs stop-the-world
+/// Batch (new). The diff must attribute the makespan delta to named
+/// epochs with near-total coverage, and its cause table must reproduce
+/// the admission scalars exactly.
+#[test]
+fn constructed_regression_is_attributed_to_epochs_and_causes() {
+    let params = AppParams { scale: 0.25, iters: 8 };
+    let run = |flow: FlowCfg| -> RunReport {
+        let mut cfg = SchedCfg::new(MachineSpec::paper(), 16);
+        cfg.flow = flow;
+        cfg.flush_threshold = 2_000;
+        let mut ctx = Context::sim(cfg, Policy::LatencyHiding);
+        record_jacobi_with(&mut ctx, &params, Convergence::Pipelined { every: 4 });
+        ctx.finish().expect("jacobi completes under latency-hiding")
+    };
+    let base = run(FlowCfg::sliding(4)); // the fast configuration
+    let new = run(FlowCfg::default()); // the regressed (Batch) one
+    reconcile(&base, "regression/base/sliding4");
+    reconcile(&new, "regression/new/batch");
+    assert_eq!(new.wait_at_admission, 0.0, "Batch admits without a gate");
+    assert!(
+        new.wait.iter().sum::<f64>() > base.wait.iter().sum::<f64>(),
+        "the ablation's asserted fact: Batch waits strictly more"
+    );
+
+    let base_doc = Json::parse(&base.to_json().render()).unwrap();
+    let new_doc = Json::parse(&new.to_json().render()).unwrap();
+    let d = diff_runs(&base_doc, &new_doc).expect("two ledgered runs align");
+    assert!(d.aligned);
+
+    // The epoch rows partition each makespan, so the deltas partition
+    // the makespan delta: attributed + residual delta = Δmakespan.
+    let dm = d.d_makespan();
+    close(dm, new.makespan - base.makespan, "Δmakespan survives the round-trip");
+    close(d.attributed + d.d_residual, dm, "epoch deltas partition Δmakespan");
+    if dm.abs() > 1e-9 {
+        assert!(
+            d.coverage() >= 0.9,
+            "attribution must cover ≥90% of the delta, got {:.4}",
+            d.coverage()
+        );
+    }
+    assert!(!d.epochs.is_empty(), "a real regression names diverging epochs");
+    let bound = base.ledger.rows.len().max(new.ledger.rows.len());
+    assert!(bound <= base.n_epochs.max(new.n_epochs) as usize + 1,
+        "ledger rows {} vs {} epochs", bound, base.n_epochs.max(new.n_epochs));
+    for e in &d.epochs {
+        assert!(e.epoch < bound, "epoch {} out of range {bound}", e.epoch);
+    }
+
+    // Cause table = the scalar accounting, exactly.
+    let shift = |name: &str| {
+        d.causes
+            .iter()
+            .find(|c| c.cause == name)
+            .map(|c| c.delta())
+            .unwrap_or_else(|| panic!("cause table missing {name}"))
+    };
+    close(
+        shift("admission"),
+        new.wait_at_admission - base.wait_at_admission,
+        "admission shift = the wait_at_admission scalars",
+    );
+    if base.wait_at_admission > 0.0 {
+        assert!(
+            shift("admission") < 0.0,
+            "wait leaves the admission gate when streaming is turned off"
+        );
+    }
+    // ...and reappears in the rank-visible causes (barrier/transfer/
+    // collective stalls at the stop-the-world epoch tails): the
+    // non-admission shift is exactly the per-rank wait delta, strictly
+    // positive by the flow ablation's asserted fact.
+    let rank_shift: f64 = d
+        .causes
+        .iter()
+        .filter(|c| c.cause != "admission")
+        .map(|c| c.delta())
+        .sum();
+    close(
+        rank_shift,
+        new.wait.iter().sum::<f64>() - base.wait.iter().sum::<f64>(),
+        "non-admission shift = per-rank wait delta",
+    );
+    assert!(rank_shift > 0.0, "wait moves into the rank-visible causes");
+    let (wb, wn) = d.wait_totals();
+    close(
+        wn - wb,
+        (new.wait.iter().sum::<f64>() + new.wait_at_admission)
+            - (base.wait.iter().sum::<f64>() + base.wait_at_admission),
+        "total wait shift matches the report vectors",
+    );
+
+    // The renders carry the attribution.
+    let text = d.render_text();
+    assert!(text.contains("differential run analysis"), "{text}");
+    assert!(text.contains("epoch attribution"), "{text}");
+    assert!(text.contains("cause shift:"), "{text}");
+    let json = d.to_json().render();
+    assert!(json.contains("\"aligned\":true"), "{json}");
+    assert!(json.contains("\"epochs\":["), "{json}");
+}
+
+/// The ledger must never perturb the simulated timeline: it is pure
+/// bookkeeping, always on, and (like the PR-8 histograms) bit-identical
+/// whether or not the optional tracing layer records alongside it.
+#[test]
+fn ledger_is_bitwise_invisible_to_the_timeline() {
+    let params = AppParams { scale: 0.1, iters: 2 };
+    let mut traced = cfg(8, FlowCfg::sliding(2));
+    traced.trace.enabled = true;
+    let (plain, _, _) = run_once_traced(
+        AppId::JacobiStencil,
+        Policy::LatencyHiding,
+        &params,
+        cfg(8, FlowCfg::sliding(2)),
+    );
+    let (with_trace, _, sink) =
+        run_once_traced(AppId::JacobiStencil, Policy::LatencyHiding, &params, traced);
+    assert!(!sink.is_empty(), "the traced twin must actually record");
+    assert_eq!(
+        plain.makespan.to_bits(),
+        with_trace.makespan.to_bits(),
+        "tracing on/off must not move the clocks"
+    );
+    assert_eq!(
+        plain.ledger.clock_hi().to_bits(),
+        with_trace.ledger.clock_hi().to_bits(),
+        "the ledger's high-water mark is part of the deterministic state"
+    );
+    assert_eq!(plain.ledger.rows.len(), with_trace.ledger.rows.len());
+    for (a, b) in plain.ledger.rows.iter().zip(&with_trace.ledger.rows) {
+        assert_eq!(a.advance.to_bits(), b.advance.to_bits());
+        assert_eq!(a.msgs, b.msgs);
+        assert_eq!(a.ops, b.ops);
+    }
+}
