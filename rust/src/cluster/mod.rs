@@ -117,6 +117,16 @@ impl MachineSpec {
         self.nodes * self.cores_per_node
     }
 
+    /// The same machine grown (never shrunk) to hold at least `nprocs`
+    /// ranks, by adding nodes of the same shape. Used by scale studies
+    /// that push P past the paper's 128-core testbed while keeping its
+    /// per-node calibration.
+    pub fn with_capacity(&self, nprocs: u32) -> MachineSpec {
+        let mut s = self.clone();
+        s.nodes = nprocs.div_ceil(s.cores_per_node.max(1)).max(s.nodes);
+        s
+    }
+
     /// Effective memory bandwidth per rank when `ranks_on_node` ranks
     /// share the node (static contention model).
     pub fn mem_bw_per_rank(&self, ranks_on_node: u32) -> f64 {
@@ -203,6 +213,16 @@ mod tests {
     fn paper_machine_capacity() {
         let s = MachineSpec::paper();
         assert_eq!(s.max_ranks(), 128);
+    }
+
+    #[test]
+    fn with_capacity_grows_but_never_shrinks() {
+        let s = MachineSpec::paper();
+        assert_eq!(s.with_capacity(16).nodes, 16, "within capacity: unchanged");
+        assert_eq!(s.with_capacity(4096).nodes, 512);
+        assert!(s.with_capacity(4097).max_ranks() >= 4097);
+        // Placement must accept the grown machine.
+        assert_eq!(Placement::ByNode.assign(4096, &s.with_capacity(4096)).len(), 4096);
     }
 
     #[test]

@@ -103,6 +103,12 @@ pub struct Profiler {
     /// DES events processed — one per op retirement (`note_retire`),
     /// the single choke point every policy's event loop passes through.
     events: u64,
+    /// Per-worker (events, nanos) tallies from the sharded engine's
+    /// worker pool (`--workers N`, N ≥ 2). Empty on serial runs.
+    workers: Vec<(u64, u64)>,
+    /// Actor reassignments made by the deterministic work-stealing
+    /// balancer across the run.
+    steals: u64,
 }
 
 impl Profiler {
@@ -180,6 +186,21 @@ impl Profiler {
         }
     }
 
+    /// Fold one drain's worker-pool tallies (per-worker `(events,
+    /// nanos)` pairs plus the steal count) into the host section. The
+    /// sharded engine hands these over with take semantics, so repeated
+    /// drains of a live session accumulate without double counting.
+    pub fn absorb_pool(&mut self, workers: &[(u64, u64)], steals: u64) {
+        if self.workers.len() < workers.len() {
+            self.workers.resize(workers.len(), (0, 0));
+        }
+        for (a, b) in self.workers.iter_mut().zip(workers) {
+            a.0 += b.0;
+            a.1 += b.1;
+        }
+        self.steals += steals;
+    }
+
     /// Merge another profiler's accumulators (independent runs).
     pub fn merge(&mut self, other: &Profiler) {
         self.enabled |= other.enabled;
@@ -190,6 +211,7 @@ impl Profiler {
             *a += b;
         }
         self.events += other.events;
+        self.absorb_pool(&other.workers, other.steals);
     }
 
     /// The `host` section of the run JSON. Wall-clock numbers are
@@ -211,6 +233,23 @@ impl Profiler {
         o.push("events", self.events.into());
         o.push("sim_secs", self.sim_secs().into());
         o.push("events_per_sec", self.events_per_sec().into());
+        // Sharded runs only: per-worker throughput and the steal count.
+        // Serial runs omit the keys entirely so their host sections are
+        // unchanged from previous releases.
+        if !self.workers.is_empty() {
+            let mut ws = Vec::new();
+            for &(events, nanos) in &self.workers {
+                let secs = nanos as f64 * 1e-9;
+                let mut w = Json::obj();
+                w.push("events", events.into());
+                w.push("pump_secs", secs.into());
+                let eps = if secs > 0.0 { events as f64 / secs } else { 0.0 };
+                w.push("events_per_sec", eps.into());
+                ws.push(w);
+            }
+            o.push("workers", Json::Arr(ws));
+            o.push("steal_count", self.steals.into());
+        }
         o
     }
 }
@@ -276,6 +315,35 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.calls(Phase::Pump), 2);
         assert_eq!(a.events(), 2);
+    }
+
+    #[test]
+    fn absorb_pool_accumulates_and_emits_worker_section() {
+        let mut p = Profiler::new(ProfCfg { enabled: true });
+        // Serial shape: no worker keys at all.
+        assert!(!p.to_json().render().contains("steal_count"));
+        p.absorb_pool(&[(3, 1_000_000_000), (1, 0)], 2);
+        p.absorb_pool(&[(1, 1_000_000_000)], 1);
+        let j = p.to_json();
+        assert_eq!(j.get("steal_count").and_then(Json::as_f64), Some(3.0));
+        let ws = j.get("workers").and_then(Json::as_arr).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].get("events").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(ws[0].get("events_per_sec").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(ws[1].get("events_per_sec").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn merge_carries_worker_tallies() {
+        let mut a = Profiler::new(ProfCfg { enabled: true });
+        let mut b = Profiler::new(ProfCfg { enabled: true });
+        b.absorb_pool(&[(5, 10)], 1);
+        a.merge(&b);
+        a.merge(&b);
+        let j = a.to_json();
+        assert_eq!(j.get("steal_count").and_then(Json::as_f64), Some(2.0));
+        let ws = j.get("workers").and_then(Json::as_arr).unwrap();
+        assert_eq!(ws[0].get("events").and_then(Json::as_f64), Some(10.0));
     }
 
     #[test]

@@ -30,9 +30,7 @@
 //! epoch) boundaries on the same rank — streaming admission buys it the
 //! concurrent recording clock, nothing more.
 
-use std::collections::BinaryHeap;
-
-use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, EventQueue, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::trace::{OpKind, WaitCause};
@@ -61,10 +59,14 @@ pub(crate) struct BlockingSession {
     ptr: Vec<usize>,
     /// Receivers parked on an unposted send.
     parked: FxHashMap<Tag, (Rank, VTime)>,
-    /// Runnable ranks by clock.
-    heap: BinaryHeap<TEvent<Rank>>,
+    /// Parked-receive count per rank — the sharded session's O(1)
+    /// replacement for scanning `parked` in [`Self::is_parked`].
+    parked_by_rank: Vec<u32>,
+    /// Runnable ranks by clock: the seed global heap at `--workers 1`,
+    /// per-rank actor shards beyond ([`crate::sched::queue`]).
+    pub(crate) q: EventQueue<Rank>,
     queued: Vec<bool>,
-    seq: u64,
+    workers: usize,
     pub(crate) executed: u64,
 }
 
@@ -77,15 +79,23 @@ impl BlockingSession {
             program: vec![Vec::new(); n],
             ptr: vec![0; n],
             parked: FxHashMap::default(),
-            heap: BinaryHeap::new(),
+            parked_by_rank: vec![0; n],
+            q: EventQueue::new(n, cfg.workers, cfg.profile.enabled),
             queued: vec![false; n],
-            seq: 0,
+            workers: cfg.workers,
             executed: 0,
         }
     }
 
     fn is_parked(&self, rank: Rank) -> bool {
-        self.parked.values().any(|&(pr, _)| pr == rank)
+        // Identical answers, two shapes: the serial reference keeps the
+        // seed scan verbatim; sharded sessions read the per-actor
+        // counter, so a P-wide activate costs O(P), not O(P × parked).
+        if self.workers > 1 {
+            self.parked_by_rank[rank.idx()] > 0
+        } else {
+            self.parked.values().any(|&(pr, _)| pr == rank)
+        }
     }
 
     /// Splice the tail `ops[lo..]` into the per-rank programs. The
@@ -141,12 +151,7 @@ impl BlockingSession {
         for r in 0..self.program.len() {
             let rank = Rank(r as u32);
             if self.ptr[r] < self.program[r].len() && !self.queued[r] && !self.is_parked(rank) {
-                self.heap.push(TEvent {
-                    t: st.clock[r],
-                    seq: self.seq,
-                    ev: rank,
-                });
-                self.seq += 1;
+                self.q.push(st.clock[r], r, rank);
                 self.queued[r] = true;
             }
         }
@@ -204,18 +209,14 @@ impl BlockingSession {
                     // The matching recv was already blocked: wake it.
                     if let Some((peer_rank, parked_at)) = self.parked.remove(tag) {
                         let pr = peer_rank.idx();
+                        self.parked_by_rank[pr] -= 1;
                         let resume = rd.max(parked_at);
                         st.charge_wait(pr, parked_at, resume, WaitCause::Transfer { peer: rank });
                         st.clock[pr] = resume;
                         st.note_retire(&ops[recv_op.idx()], resume, backend);
                         self.ptr[pr] += 1;
                         self.executed += 1;
-                        self.heap.push(TEvent {
-                            t: st.clock[pr],
-                            seq: self.seq,
-                            ev: peer_rank,
-                        });
-                        self.seq += 1;
+                        self.q.push(st.clock[pr], pr, peer_rank);
                         self.queued[pr] = true;
                     }
                 }
@@ -238,18 +239,15 @@ impl BlockingSession {
                 } else {
                     // Block until the send appears.
                     st.net.post_recv(t0, rank, *tag);
-                    self.parked.insert(*tag, (rank, t0));
+                    if self.parked.insert(*tag, (rank, t0)).is_none() {
+                        self.parked_by_rank[r] += 1;
+                    }
                     return; // don't requeue; the sender wakes us.
                 }
             }
         }
         if self.ptr[r] < self.program[r].len() {
-            self.heap.push(TEvent {
-                t: st.clock[r],
-                seq: self.seq,
-                ev: rank,
-            });
-            self.seq += 1;
+            self.q.push(st.clock[r], r, rank);
             self.queued[r] = true;
         }
     }
@@ -262,8 +260,8 @@ impl BlockingSession {
         backend: &mut dyn Backend,
         until: VTime,
     ) {
-        while self.heap.peek().is_some_and(|e| e.t <= until) {
-            let TEvent { ev: rank, .. } = self.heap.pop().unwrap();
+        while self.q.peek_t().is_some_and(|t| t <= until) {
+            let TEvent { ev: rank, .. } = self.q.pop().unwrap();
             self.queued[rank.idx()] = false;
             self.turn(ops, st, backend, rank);
         }
@@ -276,15 +274,20 @@ impl BlockingSession {
         st: &mut ExecState,
         backend: &mut dyn Backend,
     ) -> Option<VTime> {
-        let TEvent { t, ev: rank, .. } = self.heap.pop()?;
+        let TEvent { t, ev: rank, .. } = self.q.pop()?;
         self.queued[rank.idx()] = false;
         self.turn(ops, st, backend, rank);
         Some(t)
     }
 
     /// Run the loop to quiescence.
-    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
-        while let Some(TEvent { ev: rank, .. }) = self.heap.pop() {
+    pub(crate) fn pump_all(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) {
+        while let Some(TEvent { ev: rank, .. }) = self.q.pop() {
             self.queued[rank.idx()] = false;
             self.turn(ops, st, backend, rank);
         }
@@ -293,10 +296,17 @@ impl BlockingSession {
     /// Verify every injected operation executed.
     pub(crate) fn finish_check(&self, ops: &[OpNode]) -> Result<(), SchedError> {
         if self.executed as usize != ops.len() {
+            // Name the wait chain like the naive engine does (a cyclic
+            // stream — e.g. a mis-aggregated batch — can wedge the
+            // baseline too); empty when nothing was parked.
+            let mut parked: Vec<(Rank, Tag)> =
+                self.parked.iter().map(|(&t, &(r, _))| (r, t)).collect();
+            parked.sort_unstable();
             return Err(SchedError::Deadlock {
                 executed: self.executed,
                 total: ops.len() as u64,
                 blocked_recvs: self.parked.len() as u64,
+                cycle: crate::analyze::stalls::witness_cycle(ops, &parked),
             });
         }
         Ok(())

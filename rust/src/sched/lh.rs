@@ -29,9 +29,9 @@
 //! injects, so a rank idling on an epoch tail picks up the next
 //! epoch's ready fragments the moment the recorder admits them.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
-use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, EventQueue, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::trace::{OpKind, WaitCause};
@@ -68,8 +68,15 @@ pub(crate) struct LhSession {
     ready_comp: Vec<VecDeque<OpId>>,
     remaining: Vec<u64>,
 
-    heap: BinaryHeap<TEvent<Ev>>,
-    seq: u64,
+    /// The event loop's queue: the seed global heap at `--workers 1`,
+    /// per-rank actor shards beyond ([`crate::sched::queue`]).
+    pub(crate) q: EventQueue<Ev>,
+    /// `cfg.workers`, cached: selects the sharded session's O(ready)
+    /// wake-marking in [`LhSession::distribute`].
+    workers: usize,
+    /// Scratch wake bits for the sharded distribute (always false
+    /// between calls).
+    touched: Vec<bool>,
     pub(crate) completed: u64,
     /// Trace attribution for the *next* idle-wait charge: what the event
     /// loop is currently delivering when it wakes an idle rank — a local
@@ -91,8 +98,9 @@ impl LhSession {
             ready_comm: vec![VecDeque::new(); n],
             ready_comp: vec![VecDeque::new(); n],
             remaining: vec![0; n],
-            heap: BinaryHeap::new(),
-            seq: 0,
+            q: EventQueue::new(n, cfg.workers, cfg.profile.enabled),
+            workers: cfg.workers,
+            touched: vec![false; n],
             completed: 0,
             wake: WaitCause::Dependency,
         }
@@ -162,12 +170,12 @@ impl LhSession {
     }
 
     fn push_ev(&mut self, t: VTime, ev: Ev) {
-        self.heap.push(TEvent {
-            t,
-            seq: self.seq,
-            ev,
-        });
-        self.seq += 1;
+        let actor = match ev {
+            Ev::ComputeDone { rank, .. }
+            | Ev::SendDone { rank, .. }
+            | Ev::RecvDone { rank, .. } => rank.idx(),
+        };
+        self.q.push(t, actor, ev);
     }
 
     /// Distribute newly-ready ops into per-rank queues; step idle ranks.
@@ -179,6 +187,7 @@ impl LhSession {
         ready: Vec<OpId>,
         t: VTime,
     ) {
+        let sharded = self.workers > 1;
         let mut affected = Vec::new();
         for id in ready {
             let rank = ops[id.idx()].rank;
@@ -188,8 +197,22 @@ impl LhSession {
             } else {
                 self.ready_comp[r].push_back(id);
             }
-            if !affected.contains(&rank) {
+            // First-touch wake order, two equivalent shapes: the serial
+            // reference keeps the seed membership scan verbatim; sharded
+            // sessions mark the actor's wake bit, so a P-wide inject
+            // costs O(ready) instead of O(ready × P) (DESIGN.md §13).
+            let fresh = if sharded {
+                !std::mem::replace(&mut self.touched[r], true)
+            } else {
+                !affected.contains(&rank)
+            };
+            if fresh {
                 affected.push(rank);
+            }
+        }
+        if sharded {
+            for rank in &affected {
+                self.touched[rank.idx()] = false;
             }
         }
         for r in affected {
@@ -420,8 +443,8 @@ impl LhSession {
         backend: &mut dyn Backend,
         until: VTime,
     ) {
-        while self.heap.peek().is_some_and(|e| e.t <= until) {
-            let TEvent { t, ev, .. } = self.heap.pop().unwrap();
+        while self.q.peek_t().is_some_and(|t| t <= until) {
+            let TEvent { t, ev, .. } = self.q.pop().unwrap();
             self.handle(ops, st, backend, t, ev);
         }
     }
@@ -434,14 +457,19 @@ impl LhSession {
         st: &mut ExecState,
         backend: &mut dyn Backend,
     ) -> Option<VTime> {
-        let TEvent { t, ev, .. } = self.heap.pop()?;
+        let TEvent { t, ev, .. } = self.q.pop()?;
         self.handle(ops, st, backend, t, ev);
         Some(t)
     }
 
     /// Run the loop to quiescence.
-    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
-        while let Some(TEvent { t, ev, .. }) = self.heap.pop() {
+    pub(crate) fn pump_all(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) {
+        while let Some(TEvent { t, ev, .. }) = self.q.pop() {
             self.handle(ops, st, backend, t, ev);
         }
     }
@@ -453,6 +481,9 @@ impl LhSession {
                 executed: self.completed,
                 total: ops.len() as u64,
                 blocked_recvs: st.net.unmatched_recvs() as u64,
+                // The LH engine parks no receives — a wedge here is a
+                // dependency cycle, not a blocked-transfer chain.
+                cycle: String::new(),
             });
         }
         Ok(())

@@ -22,6 +22,7 @@
 mod blocking;
 mod lh;
 mod naive;
+mod queue;
 mod session;
 mod state;
 
@@ -133,6 +134,15 @@ pub struct SchedCfg {
     /// system missed one. Off by default — the verification replay is
     /// O(ops²/64) per wave.
     pub verify_deps: bool,
+    /// Host workers pumping the event loop (CLI `--workers`). `1` (the
+    /// default) is the seed serial engine, byte for byte — the
+    /// reference for every ablation. `N ≥ 2` switches the engines to
+    /// the sharded per-rank actor queue with null-message
+    /// synchronization and deterministic work stealing
+    /// ([`queue`]; DESIGN.md §13): simulated results stay
+    /// bit-identical, only host wall time and the `host` profile
+    /// section change.
+    pub workers: usize,
 }
 
 impl SchedCfg {
@@ -151,6 +161,7 @@ impl SchedCfg {
             trace: crate::trace::TraceCfg::default(),
             profile: crate::profile::ProfCfg::default(),
             verify_deps: false,
+            workers: 1,
         }
     }
 }
@@ -472,59 +483,13 @@ pub(crate) fn primary_block(op: &OpNode) -> Option<(crate::types::BaseId, u64)> 
     })
 }
 
-/// Min-heap event for the DES engines.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub(crate) struct TEvent<E> {
-    pub t: VTime,
-    pub seq: u64,
-    pub ev: E,
-}
-
-impl<E: PartialEq> Eq for TEvent<E> {}
-
-impl<E: PartialEq> Ord for TEvent<E> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap()
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-impl<E: PartialEq> PartialOrd for TEvent<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
+// The engines' shared event queue (global heap or per-rank actor
+// shards — [`queue`] module docs) and its min-heap event key.
+pub(crate) use queue::{EventQueue, TEvent};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn tevent_orders_min_first() {
-        let mut h = std::collections::BinaryHeap::new();
-        h.push(TEvent {
-            t: 2.0,
-            seq: 0,
-            ev: (),
-        });
-        h.push(TEvent {
-            t: 1.0,
-            seq: 1,
-            ev: (),
-        });
-        h.push(TEvent {
-            t: 1.0,
-            seq: 0,
-            ev: (),
-        });
-        assert_eq!(h.pop().unwrap().seq, 0);
-        assert_eq!(h.pop().unwrap().t, 1.0);
-        assert_eq!(h.pop().unwrap().t, 2.0);
-    }
 
     #[test]
     fn policy_parse() {

@@ -22,9 +22,9 @@
 //! lazy context poisons itself on the error, so the torn state is never
 //! resumed.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
-use super::{compute_costs, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
+use super::{compute_costs, EventQueue, ExecState, SchedCfg, SchedError, TEvent, TransferTable};
 use crate::exec::Backend;
 use crate::metrics::RunReport;
 use crate::trace::{OpKind, WaitCause};
@@ -40,9 +40,10 @@ pub(crate) struct NaiveSession {
     /// evaluator draws no distinction between communication and compute.
     fifo: Vec<VecDeque<usize>>,
     parked: FxHashMap<Tag, (Rank, VTime)>,
-    heap: BinaryHeap<TEvent<Rank>>,
+    /// Runnable ranks by clock: the seed global heap at `--workers 1`,
+    /// per-rank actor shards beyond ([`crate::sched::queue`]).
+    pub(crate) q: EventQueue<Rank>,
     queued: Vec<bool>,
-    seq: u64,
     pub(crate) executed: u64,
 }
 
@@ -54,9 +55,8 @@ impl NaiveSession {
             costs: Vec::new(),
             fifo: vec![VecDeque::new(); n],
             parked: FxHashMap::default(),
-            heap: BinaryHeap::new(),
+            q: EventQueue::new(n, cfg.workers, cfg.profile.enabled),
             queued: vec![false; n],
-            seq: 0,
             executed: 0,
         }
     }
@@ -78,12 +78,7 @@ impl NaiveSession {
         let r = rank.idx();
         if !self.queued[r] && !self.fifo[r].is_empty() {
             st.clock[r] = st.clock[r].max(t);
-            self.heap.push(TEvent {
-                t: st.clock[r],
-                seq: self.seq,
-                ev: rank,
-            });
-            self.seq += 1;
+            self.q.push(st.clock[r], r, rank);
             self.queued[r] = true;
         }
     }
@@ -226,8 +221,8 @@ impl NaiveSession {
         backend: &mut dyn Backend,
         until: VTime,
     ) {
-        while self.heap.peek().is_some_and(|e| e.t <= until) {
-            let TEvent { ev: rank, .. } = self.heap.pop().unwrap();
+        while self.q.peek_t().is_some_and(|t| t <= until) {
+            let TEvent { ev: rank, .. } = self.q.pop().unwrap();
             self.queued[rank.idx()] = false;
             self.turn(ops, st, backend, rank);
         }
@@ -240,15 +235,20 @@ impl NaiveSession {
         st: &mut ExecState,
         backend: &mut dyn Backend,
     ) -> Option<VTime> {
-        let TEvent { t, ev: rank, .. } = self.heap.pop()?;
+        let TEvent { t, ev: rank, .. } = self.q.pop()?;
         self.queued[rank.idx()] = false;
         self.turn(ops, st, backend, rank);
         Some(t)
     }
 
     /// Run the loop to quiescence.
-    pub(crate) fn pump_all(&mut self, ops: &[OpNode], st: &mut ExecState, backend: &mut dyn Backend) {
-        while let Some(TEvent { ev: rank, .. }) = self.heap.pop() {
+    pub(crate) fn pump_all(
+        &mut self,
+        ops: &[OpNode],
+        st: &mut ExecState,
+        backend: &mut dyn Backend,
+    ) {
+        while let Some(TEvent { ev: rank, .. }) = self.q.pop() {
             self.queued[rank.idx()] = false;
             self.turn(ops, st, backend, rank);
         }

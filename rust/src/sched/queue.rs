@@ -1,0 +1,431 @@
+//! The shared discrete-event queue of the three policy engines, in two
+//! interchangeable shapes (DESIGN.md §13):
+//!
+//! * **Global** (`--workers 1`, the default) — one `BinaryHeap` over
+//!   all pending events, exactly the seed engines' loop. This is the
+//!   frozen reference path: every existing ablation and baseline runs
+//!   on it unchanged.
+//! * **Sharded** (`--workers N`, N ≥ 2) — one bounded inbox per rank
+//!   actor plus a *frontier index* of null messages, pumped by a
+//!   deterministic work-stealing pool of N cooperative host workers.
+//!
+//! ## Null-message synchronization, degenerate form
+//!
+//! Conservative parallel DES (Chandy–Misra–Bryant) lets an actor
+//! advance to `min` over its neighbors' promised timestamp lower
+//! bounds, delivered as null messages. Our engines have *zero
+//! lookahead* — any event handler may schedule a new event at the very
+//! time it runs (a `RecvDone` can immediately ready a compute on
+//! another rank) — so the safe bound for every actor degenerates to
+//! the global minimum `(t, seq)` key. The frontier index materializes
+//! exactly that: each entry is a null message `(t, seq) -> actor`
+//! announcing one actor's current head, and the heap over them *is*
+//! the min-reduction. Pops therefore commit in the identical global
+//! order the single heap would produce, which is what makes
+//! `--workers N` bit-identical to the serial path by construction
+//! rather than by tolerance.
+//!
+//! Null messages are published lazily: a push announces itself only
+//! when it becomes its actor's head, and a pop re-announces the next
+//! head. Superseded announcements are not retracted — they are
+//! discarded on contact (`settle`), the classic lazy-deletion trick,
+//! bounding the index at ≤ 2 entries per event ever pushed.
+//!
+//! **Invariant:** every non-empty inbox has at least one frontier
+//! entry whose `(t, seq)` equals its current head's. Pushes that
+//! create a new head publish one; pops republish the successor;
+//! `(t, seq)` keys are globally unique (the `seq` draw), so a stale
+//! entry can never *falsely* match. An entry keyed below the global
+//! minimum must reference an already-popped event (anything still
+//! queued below the minimum would contradict minimality), so `settle`
+//! discards it and the surviving top is the true minimum.
+//!
+//! ## The worker pool
+//!
+//! Actors are dealt round-robin to `N` workers; every pop is charged
+//! to the owning worker's event-count credit. When an owner runs
+//! [`STEAL_SLACK`] events ahead of the least-loaded worker, that
+//! worker steals the actor (cf. the nonzero-latency steal model of
+//! arXiv 1805.01768 — the slack amortizes the handoff). Decisions
+//! read **only event counts**, never wall clocks, so the schedule —
+//! and `steal_count` itself — is reproducible across machines. The
+//! per-worker wall timers exist only under `--profile` and are purely
+//! observational ([`PoolStats`] feeds the `host` JSON section, which
+//! the perf-compare gate never reads).
+
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::types::VTime;
+
+/// Min-heap event for the DES engines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct TEvent<E> {
+    pub t: VTime,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E: PartialEq> Eq for TEvent<E> {}
+
+impl<E: PartialEq> Ord for TEvent<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E: PartialEq> PartialOrd for TEvent<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Event-count lead at which the least-loaded worker steals an actor
+/// from its owner. Small enough to react within an epoch, large enough
+/// that a steal amortizes its bookkeeping (arXiv 1805.01768 models the
+/// latency term this slack stands in for).
+const STEAL_SLACK: u64 = 64;
+
+/// One worker's tally since the last [`EventQueue::take_pool_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct WorkerStat {
+    /// Events this worker committed (deterministic).
+    pub events: u64,
+    /// Wall nanoseconds attributed to those events — pop through the
+    /// next pop, so handler time is included. Zero unless profiled.
+    pub nanos: u64,
+}
+
+/// A drained snapshot of the worker pool, folded into the profiler's
+/// `host` section at session drain ([`crate::profile`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub(crate) struct PoolStats {
+    pub workers: Vec<WorkerStat>,
+    /// Actor reassignments taken by an under-loaded worker.
+    pub steals: u64,
+}
+
+/// The deterministic cooperative worker pool: pure event-count
+/// accounting plus optional wall timers.
+struct Pool {
+    /// actor -> owning worker; mutated by steals.
+    assign: Vec<usize>,
+    events: Vec<u64>,
+    nanos: Vec<u64>,
+    steals: u64,
+    timed: bool,
+    /// Last pop's (worker, instant): the next pop closes the interval.
+    last: Option<(usize, Instant)>,
+}
+
+impl Pool {
+    fn new(nactors: usize, workers: usize, timed: bool) -> Self {
+        Pool {
+            assign: (0..nactors).map(|a| a % workers).collect(),
+            events: vec![0; workers],
+            nanos: vec![0; workers],
+            steals: 0,
+            timed,
+            last: None,
+        }
+    }
+
+    /// Charge one committed event against `actor`'s worker, stealing
+    /// the actor first if its owner has run too far ahead. Lowest
+    /// index wins ties, so the choice is a pure function of the event
+    /// counts — wall time never participates.
+    fn account(&mut self, actor: usize) {
+        let owner = self.assign[actor];
+        let (thief, low) = lowest_loaded(&self.events);
+        let w = if thief != owner && self.events[owner] >= low + STEAL_SLACK {
+            self.assign[actor] = thief;
+            self.steals += 1;
+            thief
+        } else {
+            owner
+        };
+        self.events[w] += 1;
+        if self.timed {
+            let now = Instant::now();
+            if let Some((prev, t0)) = self.last.take() {
+                self.nanos[prev] += now.duration_since(t0).as_nanos() as u64;
+            }
+            self.last = Some((w, now));
+        }
+    }
+
+    fn take(&mut self) -> PoolStats {
+        if let Some((prev, t0)) = self.last.take() {
+            self.nanos[prev] += t0.elapsed().as_nanos() as u64;
+        }
+        let workers = self
+            .events
+            .iter()
+            .zip(&self.nanos)
+            .map(|(&events, &nanos)| WorkerStat { events, nanos })
+            .collect();
+        let steals = self.steals;
+        self.events.iter_mut().for_each(|e| *e = 0);
+        self.nanos.iter_mut().for_each(|n| *n = 0);
+        self.steals = 0;
+        PoolStats { workers, steals }
+    }
+}
+
+/// Lowest-loaded worker: (index, events), lowest index breaking ties.
+fn lowest_loaded(events: &[u64]) -> (usize, u64) {
+    let mut w = 0;
+    let mut lo = events[0];
+    for (i, &e) in events.iter().enumerate().skip(1) {
+        if e < lo {
+            lo = e;
+            w = i;
+        }
+    }
+    (w, lo)
+}
+
+/// Per-actor shards: one inbox heap per rank plus the frontier index
+/// of null messages over their heads.
+struct Shards<E: Copy + PartialEq> {
+    inbox: Vec<BinaryHeap<TEvent<E>>>,
+    frontier: BinaryHeap<TEvent<usize>>,
+    pool: Pool,
+}
+
+impl<E: Copy + PartialEq> Shards<E> {
+    /// Discard stale null messages until the top one exactly matches
+    /// its actor's current head. Returns false when drained.
+    fn settle(&mut self) -> bool {
+        while let Some(top) = self.frontier.peek() {
+            match self.inbox[top.ev].peek() {
+                Some(h) if h.t == top.t && h.seq == top.seq => return true,
+                _ => {
+                    self.frontier.pop();
+                }
+            }
+        }
+        false
+    }
+}
+
+enum Inner<E: Copy + PartialEq> {
+    Global { heap: BinaryHeap<TEvent<E>> },
+    Sharded(Shards<E>),
+}
+
+/// The engines' event queue. `workers <= 1` builds the Global shape —
+/// byte-for-byte the seed heap — anything larger builds the sharded
+/// actor shape. Both pop in identical `(t, seq)` order (module docs).
+pub(crate) struct EventQueue<E: Copy + PartialEq> {
+    seq: u64,
+    inner: Inner<E>,
+}
+
+impl<E: Copy + PartialEq> EventQueue<E> {
+    pub(crate) fn new(nactors: usize, workers: usize, timed: bool) -> Self {
+        let inner = if workers <= 1 {
+            Inner::Global {
+                heap: BinaryHeap::new(),
+            }
+        } else {
+            Inner::Sharded(Shards {
+                inbox: (0..nactors.max(1)).map(|_| BinaryHeap::new()).collect(),
+                frontier: BinaryHeap::new(),
+                pool: Pool::new(nactors.max(1), workers, timed),
+            })
+        };
+        EventQueue { seq: 0, inner }
+    }
+
+    /// Schedule `ev` for `actor` (its rank index) at virtual time `t`.
+    pub(crate) fn push(&mut self, t: VTime, actor: usize, ev: E) {
+        let e = TEvent {
+            t,
+            seq: self.seq,
+            ev,
+        };
+        self.seq += 1;
+        match &mut self.inner {
+            Inner::Global { heap } => heap.push(e),
+            Inner::Sharded(s) => {
+                let inbox = &mut s.inbox[actor];
+                // Fresh seq > every queued seq, so this is a new head
+                // iff it is strictly earlier in virtual time.
+                let announces = inbox.peek().is_none_or(|h| e.t < h.t);
+                inbox.push(e);
+                if announces {
+                    s.frontier.push(TEvent {
+                        t: e.t,
+                        seq: e.seq,
+                        ev: actor,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Earliest pending event time, if any.
+    pub(crate) fn peek_t(&mut self) -> Option<VTime> {
+        match &mut self.inner {
+            Inner::Global { heap } => heap.peek().map(|e| e.t),
+            Inner::Sharded(s) => {
+                if s.settle() {
+                    s.frontier.peek().map(|e| e.t)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Commit the globally earliest event (min `(t, seq)`).
+    pub(crate) fn pop(&mut self) -> Option<TEvent<E>> {
+        match &mut self.inner {
+            Inner::Global { heap } => heap.pop(),
+            Inner::Sharded(s) => {
+                if !s.settle() {
+                    return None;
+                }
+                let a = s.frontier.pop().expect("settled frontier").ev;
+                let e = s.inbox[a].pop().expect("matched inbox head");
+                // Republish the successor head's null message.
+                if let Some(h) = s.inbox[a].peek() {
+                    s.frontier.push(TEvent {
+                        t: h.t,
+                        seq: h.seq,
+                        ev: a,
+                    });
+                }
+                s.pool.account(a);
+                Some(e)
+            }
+        }
+    }
+
+    /// Drain the worker-pool tallies (None in Global shape). Take
+    /// semantics: a second call without new pops reads zeros, so
+    /// per-drain folds never double-count.
+    pub(crate) fn take_pool_stats(&mut self) -> Option<PoolStats> {
+        match &mut self.inner {
+            Inner::Global { .. } => None,
+            Inner::Sharded(s) => Some(s.pool.take()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tevent_orders_min_first() {
+        let mut h = std::collections::BinaryHeap::new();
+        h.push(TEvent {
+            t: 2.0,
+            seq: 0,
+            ev: (),
+        });
+        h.push(TEvent {
+            t: 1.0,
+            seq: 1,
+            ev: (),
+        });
+        h.push(TEvent {
+            t: 1.0,
+            seq: 0,
+            ev: (),
+        });
+        assert_eq!(h.pop().unwrap().seq, 0);
+        assert_eq!(h.pop().unwrap().t, 1.0);
+        assert_eq!(h.pop().unwrap().t, 2.0);
+    }
+
+    /// The load-bearing property: under random interleavings of pushes
+    /// and pops — with heavy virtual-time ties, the engines' common
+    /// case — the sharded queue commits the exact event sequence the
+    /// global heap does.
+    #[test]
+    fn sharded_pop_order_matches_global_heap() {
+        let mut rng = Rng::new(0x5A4D);
+        for trial in 0..40u64 {
+            let actors = 1 + rng.below(12) as usize;
+            for workers in [2usize, 3, 8] {
+                let mut global = EventQueue::new(actors, 1, false);
+                let mut sharded = EventQueue::new(actors, workers, false);
+                let mut rng2 = Rng::new(0xE0 + trial);
+                let mut pending = 0u32;
+                for step in 0..400u32 {
+                    if pending > 0 && rng2.chance(0.4) {
+                        let a = global.pop();
+                        let b = sharded.pop();
+                        assert_eq!(a, b, "divergent pop at step {step} (trial {trial})");
+                        pending -= 1;
+                    } else {
+                        // Quantized times force (t, seq) tie-breaks.
+                        let t = rng2.below(8) as f64 * 0.5;
+                        let actor = rng2.below(actors as u64) as usize;
+                        global.push(t, actor, step);
+                        sharded.push(t, actor, step);
+                        pending += 1;
+                    }
+                }
+                while let Some(a) = global.pop() {
+                    assert_eq!(Some(a), sharded.pop(), "divergent drain (trial {trial})");
+                }
+                assert_eq!(sharded.pop(), None, "sharded drained no further");
+            }
+        }
+    }
+
+    /// A single hot actor runs its owner far ahead of the idle worker,
+    /// which must deterministically steal it; tallies are take-once.
+    #[test]
+    fn skewed_load_steals_deterministically() {
+        let n = 4 * STEAL_SLACK;
+        let run = || {
+            let mut q = EventQueue::new(2, 2, false);
+            for i in 0..n {
+                q.push(i as f64, 0, i);
+            }
+            while q.pop().is_some() {}
+            q.take_pool_stats().expect("sharded pool")
+        };
+        let stats = run();
+        assert_eq!(stats.workers.len(), 2);
+        let total: u64 = stats.workers.iter().map(|w| w.events).sum();
+        assert_eq!(total, n, "every event attributed exactly once");
+        assert!(stats.steals >= 1, "idle worker must steal the hot actor");
+        assert!(
+            stats.workers[1].events > 0,
+            "stolen actor pumps on the thief"
+        );
+        // Determinism: counts are a pure function of the pop sequence.
+        assert_eq!(stats, run());
+        // Take semantics: nothing left to drain.
+        let mut q = EventQueue::<u64>::new(2, 2, false);
+        q.push(0.0, 0, 7);
+        q.pop();
+        q.take_pool_stats();
+        let again = q.take_pool_stats().expect("sharded pool");
+        assert_eq!(again.workers.iter().map(|w| w.events).sum::<u64>(), 0);
+        assert_eq!(again.steals, 0);
+    }
+
+    /// The serial shape reports no pool — the profiler's host section
+    /// must not grow worker rows on the reference path.
+    #[test]
+    fn global_shape_has_no_pool() {
+        let mut q = EventQueue::<u32>::new(4, 1, true);
+        q.push(1.0, 0, 9);
+        assert_eq!(q.peek_t(), Some(1.0));
+        assert_eq!(q.pop().map(|e| e.ev), Some(9));
+        assert!(q.take_pool_stats().is_none());
+    }
+}

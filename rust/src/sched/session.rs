@@ -223,19 +223,30 @@ impl SchedSession {
         backend: &mut dyn Backend,
         st: &mut ExecState,
     ) -> Result<(), SchedError> {
-        match &mut self.eng {
+        let pool = match &mut self.eng {
             Engine::Lh(e) => {
                 e.pump_all(&self.ops, st, backend);
                 e.finish_check(&self.ops, st)?;
+                e.q.take_pool_stats()
             }
             Engine::Blocking(e) => {
                 e.pump_all(&self.ops, st, backend);
                 e.finish_check(&self.ops)?;
+                e.q.take_pool_stats()
             }
             Engine::Naive(e) => {
                 e.pump_all(&self.ops, st, backend);
                 e.finish_check(&self.ops)?;
+                e.q.take_pool_stats()
             }
+        };
+        // Sharded sessions (`--workers N`, N ≥ 2): fold the worker
+        // pool's per-drain tallies into the profiler's host section.
+        // Take semantics on the queue side keep repeated drains of one
+        // live session from double-counting.
+        if let Some(ps) = pool {
+            let workers: Vec<(u64, u64)> = ps.workers.iter().map(|w| (w.events, w.nanos)).collect();
+            st.prof.absorb_pool(&workers, ps.steals);
         }
         super::count_epoch_ops(st, &self.ops[self.counted..]);
         self.counted = self.ops.len();

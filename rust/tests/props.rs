@@ -1264,6 +1264,101 @@ fn prop_flow_and_batch_bit_identical() {
     }
 }
 
+/// The sharded engine is pure host-side mechanics: for every policy ×
+/// flow mode (batch, quantized flow, sliding), running the same
+/// halo-exchanging stencil program under `--workers {2, 4}` renders the
+/// exact same run-report JSON as the serial reference engine
+/// (`--workers 1`), and on the native data backend the final grid and
+/// convergence deltas are bit-identical. The hazard oracle stays on
+/// throughout, so the sharded pop order is also re-verified race-free
+/// at every drain.
+#[test]
+fn prop_sharded_workers_bit_identical() {
+    use distnumpy::flow::FlowCfg;
+
+    const ROWS: u64 = 32;
+    const COLS: u64 = 8;
+    const ITERS: u32 = 4;
+    let p = 4u32;
+
+    // One-row blocks: 32 row-actors over 4 ranks, up/down halo traffic
+    // on every interior row, deltas fanning into rank 0 — real
+    // transfers on every path the engines schedule.
+    fn record(ctx: &mut Context) -> (Vec<distnumpy::lazy::ScalarFuture>, ViewSpec) {
+        let g = ctx.zeros(&[ROWS, COLS], 1);
+        let work = ctx.zeros(&[ROWS - 2, COLS - 2], 1);
+        let c = g.slice(&[(1, ROWS - 1), (1, COLS - 1)]);
+        let u = g.slice(&[(0, ROWS - 2), (1, COLS - 1)]);
+        let d = g.slice(&[(2, ROWS), (1, COLS - 1)]);
+        let l = g.slice(&[(1, ROWS - 1), (0, COLS - 2)]);
+        let r = g.slice(&[(1, ROWS - 1), (2, COLS)]);
+        let mut deltas = Vec::new();
+        for it in 0..ITERS {
+            ctx.ufunc(Kernel::Stencil5, &work, &[&c, &u, &d, &l, &r]);
+            if it % 2 == 0 {
+                deltas.push(ctx.sum_absdiff_deferred(&c, &work));
+            }
+            ctx.copy(&c, &work);
+        }
+        ctx.flush();
+        (deltas, g)
+    }
+
+    let report = |policy: Policy, flow: FlowCfg, workers: usize| -> String {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.workers = workers;
+        cfg.flow = flow;
+        cfg.flush_threshold = 16; // several threshold submits per run
+        cfg.verify_deps = true;
+        let mut ctx = Context::sim(cfg, policy);
+        let _ = record(&mut ctx);
+        ctx.finish()
+            .unwrap_or_else(|e| panic!("{policy:?}/{flow:?}/workers={workers}: {e}"))
+            .to_json()
+            .render()
+    };
+
+    for policy in [Policy::LatencyHiding, Policy::Blocking, Policy::Naive] {
+        for flow in [FlowCfg::default(), FlowCfg::flow(2), FlowCfg::sliding(2)] {
+            let want = report(policy, flow, 1);
+            for workers in [2usize, 4] {
+                assert_eq!(
+                    report(policy, flow, workers),
+                    want,
+                    "{policy:?}/{flow:?}: workers={workers} diverged from serial"
+                );
+            }
+        }
+    }
+
+    // Real numerics: the data backend sees the same grid and the same
+    // resolved deltas whichever engine drove it.
+    let data_run = |workers: usize| -> (Vec<f64>, Vec<f32>) {
+        let mut cfg = SchedCfg::new(MachineSpec::tiny(), p);
+        cfg.workers = workers;
+        cfg.verify_deps = true;
+        let mut ctx = Context::new(
+            cfg,
+            Policy::LatencyHiding,
+            Box::new(NativeBackend::new(ClusterStore::new(p))),
+        );
+        let (futures, g) = record(&mut ctx);
+        let deltas = futures
+            .iter()
+            .map(|f| ctx.wait_scalar(f).expect("delta resolves"))
+            .collect();
+        let grid = ctx
+            .gather(g.base)
+            .expect("no deadlock")
+            .expect("data backend");
+        (deltas, grid)
+    };
+    let want = data_run(1);
+    for workers in [2usize, 4] {
+        assert_eq!(data_run(workers), want, "workers={workers}: numerics diverged");
+    }
+}
+
 /// Regression: a future forced while its producing epoch is still *in
 /// flight* — submitted into the flow window, not yet executed — settles
 /// correctly: the force drains the window, reads the right value, and
